@@ -1,0 +1,78 @@
+//! Range-estimator comparison at a glance (a fast, single-seed version of
+//! the paper's Table 1/2/3 protocol) plus the range-trajectory view that
+//! motivates in-hindsight estimation: how each estimator's range state
+//! tracks the true (current min-max) statistics over training.
+//!
+//!   cargo run --release --example estimator_comparison
+
+use anyhow::Result;
+use hindsight::coordinator::{Estimator, TrainConfig, Trainer};
+use hindsight::runtime::Engine;
+use hindsight::util::bench::{env_usize, Table};
+
+fn main() -> Result<()> {
+    hindsight::util::logging::init();
+    let steps = env_usize("HINDSIGHT_CMP_STEPS", 120) as u64;
+    let engine = Engine::new()?;
+
+    let mut table = Table::new(
+        "Estimator comparison (cnn, fully quantized, 1 seed)",
+        &["Method", "Static", "Val acc (%)", "Train s"],
+    );
+    for est in [
+        Estimator::Fp32,
+        Estimator::Current,
+        Estimator::Running,
+        Estimator::Dsgc,
+        Estimator::Hindsight,
+    ] {
+        let mut cfg = TrainConfig::new("cnn").fully_quantized(est);
+        if est == Estimator::Dsgc {
+            // paper: DSGC for gradients, current min-max for activations
+            cfg.act_est = Estimator::Current;
+        }
+        cfg.steps = steps;
+        cfg.n_train = 1024;
+        cfg.n_val = 256;
+        cfg.seed = 3;
+        let rec = Trainer::new(&engine, cfg)?.run()?;
+        table.row(&[
+            est.name().to_string(),
+            if est.enabled() {
+                if est.is_static() { "yes".into() } else { "no".into() }
+            } else {
+                "n.a.".into()
+            },
+            format!("{:.2}", rec.final_val_acc()),
+            format!("{:.1}", rec.train_seconds),
+        ]);
+    }
+    table.print();
+
+    // range trajectory: quantize gradients with hindsight and log how the
+    // EMA state trails the per-step statistics (site 0's grad quantizer)
+    println!("\nrange trajectory (first grad site, in-hindsight vs stats):");
+    let mut cfg = TrainConfig::new("cnn").grad_only(Estimator::Hindsight);
+    cfg.steps = 40;
+    cfg.n_train = 512;
+    let mut t = Trainer::new(&engine, cfg)?;
+    let site = t
+        .ranges
+        .dsgc_sites()
+        .first()
+        .copied()
+        .unwrap_or(1); // any grad site; dsgc_sites is empty for hindsight
+    let site = if t.ranges.n_sites() > 1 { 1 } else { site };
+    for step in 0..40u64 {
+        t.train_step()?;
+        if step % 8 == 0 {
+            let r = t.ranges.row(site);
+            let s = t.ranges.last_stats(site);
+            println!(
+                "  step {step:>3}: range [{:+.4}, {:+.4}]  stats [{:+.4}, {:+.4}]",
+                r[0], r[1], s[0], s[1]
+            );
+        }
+    }
+    Ok(())
+}

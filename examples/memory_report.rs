@@ -1,0 +1,75 @@
+//! Memory-movement report (paper Sec. 6): static vs dynamic quantization
+//! traffic for every conv layer of the full-size ImageNet architectures,
+//! cross-checked against the cycle-approximate MAC-array machine.
+//!
+//!   cargo run --release --example memory_report
+
+use anyhow::Result;
+use hindsight::models;
+use hindsight::simulator::machine::MacArray;
+use hindsight::simulator::traffic::{self, BitWidths};
+use hindsight::util::bench::Table;
+
+fn main() -> Result<()> {
+    let b = BitWidths::default();
+    let mac = MacArray::default();
+
+    for net in ["resnet18", "vgg16", "mobilenet_v2"] {
+        let layers = models::by_name(net).unwrap();
+        let mut t = Table::new(
+            &format!("{net} — per-layer memory movement (b_w=b_a=8, b_acc=32)"),
+            &["Layer", "Geometry", "MACs", "Static KB", "Dynamic KB", "Delta"],
+        );
+        let mut tot_s = 0u64;
+        let mut tot_d = 0u64;
+        let mut worst = (0.0f64, "");
+        for g in &layers {
+            let c = traffic::compare(g, b);
+            // cross-check against the machine-level accounting
+            let ph_s = mac.conv_traffic(g, true);
+            let ph_d = mac.conv_traffic(g, false);
+            assert_eq!(ph_s.total() * 8, c.static_bits);
+            assert_eq!(ph_d.total() * 8, c.dynamic_bits);
+            tot_s += c.static_bits;
+            tot_d += c.dynamic_bits;
+            if c.ratio() > worst.0 {
+                worst = (c.ratio(), g.name);
+            }
+            t.row(&[
+                g.name.to_string(),
+                format!(
+                    "{}x{}x{}, {}x{}{}",
+                    g.cin,
+                    g.w,
+                    g.h,
+                    g.k,
+                    g.k,
+                    if g.depthwise { " dw" } else { "" }
+                ),
+                format!("{:.1}M", g.macs() as f64 / 1e6),
+                format!("{:.0}", c.static_kb()),
+                format!("{:.0}", c.dynamic_kb()),
+                format!("+{:.0}%", c.delta_percent()),
+            ]);
+        }
+        t.print();
+        println!(
+            "  network total: static {:.1} MB, dynamic {:.1} MB (+{:.0}%); worst layer: {} at {:.1}x",
+            tot_s as f64 / 8e6,
+            tot_d as f64 / 8e6,
+            (tot_d as f64 / tot_s as f64 - 1.0) * 100.0,
+            worst.1,
+            worst.0,
+        );
+    }
+
+    println!(
+        "\npaper headline check: max dynamic/static ratio across MobileNetV2 = {:.1}x (paper: up to 8x)",
+        models::by_name("mobilenet_v2")
+            .unwrap()
+            .iter()
+            .map(|g| traffic::compare(g, b).ratio())
+            .fold(0.0, f64::max)
+    );
+    Ok(())
+}

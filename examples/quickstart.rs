@@ -1,0 +1,48 @@
+//! Quickstart: train a small CNN with fully quantized W8/A8/G8 training
+//! using the paper's in-hindsight min-max range estimation.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+//!
+//! The `cnn` artifact lowers its quantizers through the L1 Pallas kernel
+//! (`pallas=all`), so this exercises all three layers of the stack:
+//! Pallas kernel -> JAX graph -> Rust coordinator.
+
+use anyhow::Result;
+use hindsight::coordinator::{Estimator, TrainConfig, Trainer};
+use hindsight::runtime::Engine;
+
+fn main() -> Result<()> {
+    hindsight::util::logging::init();
+
+    let engine = Engine::new()?;
+    let mut cfg = TrainConfig::new("cnn").fully_quantized(Estimator::Hindsight);
+    cfg.steps = 60;
+    cfg.n_train = 1024;
+    cfg.n_val = 256;
+    cfg.lr = 0.05;
+    cfg.seed = 1;
+
+    println!("== hindsight quickstart: cnn, W8/A8/G8, in-hindsight min-max ==");
+    let mut trainer = Trainer::new(&engine, cfg)?;
+    trainer.calibrate()?;
+    for step in 0..60u64 {
+        let (loss, acc) = trainer.train_step()?;
+        if step % 10 == 0 {
+            println!("step {step:>3}  loss {loss:.4}  batch acc {acc:.3}");
+        }
+    }
+    let (val_loss, val_acc) = trainer.evaluate()?;
+    println!("validation: loss {val_loss:.4}  acc {:.1}%", val_acc * 100.0);
+
+    // the in-hindsight state the coordinator carried between steps:
+    println!("\nper-site ranges after training (first 4 sites):");
+    for i in 0..4.min(trainer.ranges.n_sites()) {
+        let r = trainer.ranges.row(i);
+        let s = trainer.ranges.last_stats(i);
+        println!(
+            "  site {i}: range [{:+.3}, {:+.3}]  last stats [{:+.3}, {:+.3}]",
+            r[0], r[1], s[0], s[1]
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): fully quantized W8/A8/G8
+//! training of the ResNet-family model on the SynthTiny workload for a
+//! few hundred steps, with periodic evaluation, a logged loss curve and a
+//! final FP32-vs-quantized comparison — the full three-layer system on a
+//! real small workload.
+//!
+//!   cargo run --release --example train_full
+//!
+//! Env: HINDSIGHT_E2E_STEPS (default 300), HINDSIGHT_E2E_MODEL
+//! (default resnet_tiny).
+
+use anyhow::Result;
+use hindsight::coordinator::{Estimator, Schedule, TrainConfig, Trainer};
+use hindsight::runtime::Engine;
+use hindsight::util::bench::env_usize;
+
+fn cfg(model: &str, steps: u64, est: Estimator) -> TrainConfig {
+    let mut c = TrainConfig::new(model).fully_quantized(est);
+    c.steps = steps;
+    c.n_train = 2048;
+    c.n_val = 512;
+    c.lr = 0.05;
+    c.schedule = Schedule::Cosine;
+    c.eval_every = steps / 4;
+    c.seed = 7;
+    c
+}
+
+fn main() -> Result<()> {
+    hindsight::util::logging::init();
+    let steps = env_usize("HINDSIGHT_E2E_STEPS", 300) as u64;
+    let model = std::env::var("HINDSIGHT_E2E_MODEL")
+        .unwrap_or_else(|_| "resnet_tiny".to_string());
+
+    println!("== end-to-end: {model}, {steps} steps, SynthTiny ==");
+    let engine = Engine::new()?;
+
+    println!("\n-- in-hindsight W8/A8/G8 --");
+    let rec_q = Trainer::new(&engine, cfg(&model, steps, Estimator::Hindsight))?
+        .run()?;
+    println!("\n-- FP32 baseline --");
+    let rec_fp = Trainer::new(&engine, cfg(&model, steps, Estimator::Fp32))?
+        .run()?;
+
+    println!("\nloss curve (quantized run):");
+    let n = rec_q.steps.len();
+    for i in (0..n).step_by((n / 12).max(1)) {
+        let bar = "#".repeat((rec_q.losses[i] * 18.0).min(60.0) as usize);
+        println!("  step {:>4}  {:<7.4} {bar}", rec_q.steps[i], rec_q.losses[i]);
+    }
+    println!("\nevals (quantized): {:?}", rec_q.evals);
+
+    println!("\n== summary ==");
+    println!(
+        "  FP32        : val acc {:.2}%  ({:.1}s)",
+        rec_fp.final_val_acc(),
+        rec_fp.train_seconds
+    );
+    println!(
+        "  in-hindsight: val acc {:.2}%  ({:.1}s)",
+        rec_q.final_val_acc(),
+        rec_q.train_seconds
+    );
+    println!(
+        "  gap: {:+.2}%  (paper: within ~0.5% of FP32)",
+        rec_q.final_val_acc() - rec_fp.final_val_acc()
+    );
+
+    assert!(
+        rec_q.loss_decreased(),
+        "quantized training loss did not decrease — e2e failure"
+    );
+    rec_q.write_csv("runs_e2e_quantized.csv").ok();
+    rec_fp.write_csv("runs_e2e_fp32.csv").ok();
+    println!("\nloss curves: runs_e2e_quantized.csv, runs_e2e_fp32.csv");
+    Ok(())
+}

@@ -1,0 +1,137 @@
+"""Static performance analysis of the AOT artifacts (§Perf, L1/L2).
+
+Because the Pallas kernels run under ``interpret=True`` (CPU correctness
+path), wall-clock is not a TPU proxy; the L1/L2 performance deliverables
+are *structural*:
+
+  * L2 — HLO op census per artifact: convolution/dot counts must match
+    the model's layer count x passes (no duplicate matmuls from the
+    fake-quant select paths), fusion-relevant elementwise volume, and
+    graph size.
+  * L1 — BlockSpec-derived VMEM footprint and MXU-utilization estimates
+    for the kernels at the shapes the models actually use.
+
+Usage:  python -m compile.analyze [--artifacts ../artifacts]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+from collections import Counter
+
+from .kernels import fake_quant as fq
+from .kernels import qmatmul as qm
+
+OPS_OF_INTEREST = (
+    "convolution", "dot", "while", "conditional", "reduce", "rng",
+    "all-reduce", "custom-call", "pad", "select",
+)
+
+
+def hlo_census(path: str) -> Counter:
+    """Count instruction kinds in an HLO text file."""
+    c: Counter = Counter()
+    # `%x = f32[4,4]{1,0} convolution(...)` -> "convolution"
+    op_re = re.compile(r"= [^(=]*?([a-z][a-z0-9-]*)\(")
+    with open(path) as f:
+        for line in f:
+            m = op_re.search(line)
+            if m:
+                c[m.group(1)] += 1
+            c["instructions"] += 1
+    return c
+
+
+def conv_layer_count(manifest, model: str) -> int:
+    """Conv/dense layers per the manifest parameter table (one .w each)."""
+    params = manifest["models"][model]["params"]
+    return sum(1 for p in params if p["name"].endswith(".w"))
+
+
+def analyze_model(art_dir: str, manifest, name: str) -> dict:
+    entry = manifest["models"][name]
+    report = {"model": name, "graphs": {}}
+    for gname, g in entry["graphs"].items():
+        census = hlo_census(os.path.join(art_dir, g["file"]))
+        report["graphs"][gname] = {
+            k: census.get(k, 0) for k in OPS_OF_INTEREST
+        } | {"instructions": census["instructions"]}
+    return report
+
+
+def check_no_duplicate_compute(report, n_layers: int) -> list:
+    """§Perf L2 invariant: conv+dot count in the train graph stays within
+    the expected multiple of layer count (fwd + 2x bwd + weight-quant
+    minmax has no matmuls; factor 4 is generous; beyond it something is
+    being recomputed)."""
+    problems = []
+    train = report["graphs"].get("train")
+    if not train:
+        return problems
+    heavy = train["convolution"] + train["dot"]
+    if heavy > 4 * n_layers:
+        problems.append(
+            f"{report['model']}: {heavy} conv/dot ops for {n_layers} layers "
+            f"(> 4x) — possible recomputation"
+        )
+    return problems
+
+
+def kernel_estimates() -> dict:
+    """§Perf L1: structural VMEM/MXU estimates at the deployed shapes."""
+    shapes = {
+        "fake_quant 32x32x3 batch32 (act site)": (32 * 32 * 32, 3),
+        "fake_quant resnet stage1 fmap": (32 * 32 * 32, 8),
+        "fake_quant classifier grads": (32, 128),
+    }
+    out = {}
+    for label, shape in shapes.items():
+        out[label] = {
+            "vmem_bytes": fq.vmem_bytes(shape),
+            "vmem_ok": fq.vmem_bytes(shape) < 16 * 2**20,
+        }
+    for mkn in [(32, 128, 16), (128, 128, 128), (1024, 512, 256)]:
+        m, k, n = mkn
+        out[f"qmatmul {m}x{k}x{n}"] = {
+            "vmem_bytes": qm.vmem_bytes(),
+            "mxu_utilization": round(qm.mxu_utilization_estimate(m, n, k), 4),
+        }
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="../artifacts")
+    args = ap.parse_args()
+    with open(os.path.join(args.artifacts, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    all_problems = []
+    print(f"{'model':16} {'graph':6} {'instr':>7} {'conv':>5} {'dot':>5} "
+          f"{'while':>6} {'cond':>5} {'select':>7}")
+    for name in manifest["models"]:
+        rep = analyze_model(args.artifacts, manifest, name)
+        for gname, c in rep["graphs"].items():
+            print(f"{name:16} {gname:6} {c['instructions']:>7} "
+                  f"{c['convolution']:>5} {c['dot']:>5} {c['while']:>6} "
+                  f"{c['conditional']:>5} {c['select']:>7}")
+        all_problems += check_no_duplicate_compute(
+            rep, conv_layer_count(manifest, name))
+
+    print("\nL1 kernel structural estimates:")
+    for label, est in kernel_estimates().items():
+        print(f"  {label}: {est}")
+
+    if all_problems:
+        print("\nPROBLEMS:")
+        for p in all_problems:
+            print(f"  {p}")
+        raise SystemExit(1)
+    print("\nno recomputation problems detected.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,194 @@
+"""AOT lowering: L2 graphs -> HLO text + manifest.json (the Rust ABI).
+
+Run once via ``make artifacts``; the Rust binary is self-contained after.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+The manifest records, per model, the flat input/output layout of every
+graph so the Rust runtime can marshal buffers positionally, plus the
+quantizer-site table the coordinator's RangeManager is keyed on.
+
+Artifact matrix (see DESIGN.md §3 for the sizing rationale):
+
+  model           size knobs                     pallas  graphs
+  --------------- ------------------------------ ------- --------------------
+  mlp             8x8x3, 10 classes, bs 32       all     init/train/eval/dump
+  cnn             32x32x3, 16 classes, bs 32     all     init/train/eval/dump
+  resnet_tiny     widths (8,16,32,64), bs 32     none    init/train/eval/dump
+  vgg_tiny        plan ((8,8),(16,16),(32,32))   none    init/train/eval/dump
+  mobilenet_tiny  16x16x3, bs 16                 none    init/train/eval/dump
+  resnet_pallas   = resnet_tiny                  grad    init/train
+
+"pallas none/grad/all" selects which quantizer sites lower through the L1
+Pallas kernel vs the bit-identical jnp oracle (property-tested equal): the
+interpret-mode Pallas path costs ~3x CPU wall-clock per site, so the
+multi-seed table sweeps use the oracle lowering while mlp/cnn (the
+quickstart/e2e artifacts) and resnet_pallas carry the kernel end-to-end.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import models, train, quant_ops as qo
+
+SPECS = {
+    "mlp": dict(builder="mlp", kw=dict(n_classes=10, hw=8), batch=32,
+                pallas="all", graphs=("init", "train", "eval", "dump")),
+    "cnn": dict(builder="cnn", kw=dict(n_classes=16, hw=32), batch=32,
+                pallas="all", graphs=("init", "train", "eval", "dump")),
+    "resnet_tiny": dict(builder="resnet_tiny",
+                        kw=dict(n_classes=16, hw=32, widths=(8, 16, 32, 64),
+                                blocks=(1, 1, 1, 1)),
+                        batch=32, pallas="none",
+                        graphs=("init", "train", "eval", "dump")),
+    "vgg_tiny": dict(builder="vgg_tiny",
+                     kw=dict(n_classes=16, hw=32,
+                             plan=((8, 8), (16, 16), (32, 32))),
+                     batch=32, pallas="none",
+                     graphs=("init", "train", "eval", "dump")),
+    "mobilenet_tiny": dict(builder="mobilenet_tiny",
+                           kw=dict(n_classes=16, hw=16), batch=16,
+                           pallas="none",
+                           graphs=("init", "train", "eval", "dump")),
+    # kernel-at-scale variant for perf/ablation benches
+    "resnet_pallas": dict(builder="resnet_tiny",
+                          kw=dict(n_classes=16, hw=32,
+                                  widths=(8, 16, 32, 64),
+                                  blocks=(1, 1, 1, 1)),
+                          batch=32, pallas="grad", graphs=("init", "train")),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _dt(x):
+    return {"float32": "f32", "int32": "i32"}[str(x.dtype)]
+
+
+def _io_spec(names, arrays):
+    assert len(names) == len(arrays), (len(names), len(arrays))
+    return [{"name": n, "shape": [int(d) for d in a.shape], "dtype": _dt(a)}
+            for n, a in zip(names, arrays)]
+
+
+def _graph_entry(out_dir, tag, fn, example, in_names, out_names):
+    # keep_unused: the manifest ABI is positional — jit must not prune
+    # arguments that a particular graph happens not to read.
+    lowered = jax.jit(fn, keep_unused=True).lower(*example)
+    text = to_hlo_text(lowered)
+    fname = f"{tag}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    outs = jax.eval_shape(fn, *example)
+    outs_flat = list(outs) if isinstance(outs, tuple) else [outs]
+    return {
+        "file": fname,
+        "inputs": _io_spec(in_names, example),
+        "outputs": _io_spec(out_names, outs_flat),
+    }
+
+
+def lower_model(out_dir: str, name: str, spec) -> dict:
+    model = models.build(spec["builder"], **spec["kw"])
+    cfg = qo.QuantConfig(use_pallas=spec["pallas"])
+    bs = spec["batch"]
+    P = [p.name for p in model.reg.params]
+    S = [s.name for s in model.reg.state]
+    gsites = [s for s in model.reg.sites if s.kind == "grad"]
+
+    entry = {
+        "batch_size": bs,
+        "input_shape": list(model.input_shape),
+        "n_classes": model.n_classes,
+        "n_params": int(model.n_params),
+        "pallas": spec["pallas"],
+        "params": [{"name": p.name, "shape": list(p.shape)}
+                   for p in model.reg.params],
+        "state": [{"name": s.name, "shape": list(s.shape)}
+                  for s in model.reg.state],
+        "sites": [{"index": s.index, "name": s.name, "kind": s.kind,
+                   "feature_shape": list(s.feature_shape)}
+                  for s in model.reg.sites],
+        "graphs": {},
+    }
+
+    scalars_train = ["mode_act", "mode_grad", "wq_on", "aq_on", "gq_on",
+                     "eta", "lr", "wd", "seed"]
+
+    if "init" in spec["graphs"]:
+        fn, ex = train.make_init(model)
+        entry["graphs"]["init"] = _graph_entry(
+            out_dir, f"{name}_init", fn, ex, ["seed"],
+            [f"param:{n}" for n in P] + [f"opt:{n}" for n in P]
+            + [f"state:{n}" for n in S])
+
+    if "train" in spec["graphs"]:
+        fn, ex = train.make_train_step(model, bs, cfg)
+        in_names = ([f"param:{n}" for n in P] + [f"opt:{n}" for n in P]
+                    + [f"state:{n}" for n in S]
+                    + ["x", "y", "ranges"] + scalars_train)
+        out_names = ([f"param:{n}" for n in P] + [f"opt:{n}" for n in P]
+                     + [f"state:{n}" for n in S]
+                     + ["loss", "acc", "new_ranges", "stats"])
+        entry["graphs"]["train"] = _graph_entry(
+            out_dir, f"{name}_train", fn, ex, in_names, out_names)
+
+    if "eval" in spec["graphs"]:
+        fn, ex = train.make_eval_step(model, bs, cfg)
+        in_names = ([f"param:{n}" for n in P] + [f"state:{n}" for n in S]
+                    + ["x", "y", "ranges", "mode_act", "wq_on", "aq_on"])
+        entry["graphs"]["eval"] = _graph_entry(
+            out_dir, f"{name}_eval", fn, ex, in_names,
+            ["loss_sum", "correct"])
+
+    if "dump" in spec["graphs"]:
+        fn, ex = train.make_dump_step(model, bs, cfg)
+        in_names = ([f"param:{n}" for n in P] + [f"state:{n}" for n in S]
+                    + ["x", "y", "ranges", "mode_grad", "wq_on", "aq_on",
+                       "gq_on", "eta", "seed"])
+        entry["graphs"]["dump"] = _graph_entry(
+            out_dir, f"{name}_dump", fn, ex, in_names,
+            [f"grad:{s.name}" for s in gsites])
+
+    return entry
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated model subset (for development)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    names = list(SPECS) if args.only is None else args.only.split(",")
+    manifest = {"version": 1, "quant": {"bits_w": 8, "bits_a": 8,
+                                        "bits_g": 8},
+                "models": {}}
+    for name in names:
+        print(f"[aot] lowering {name} ...", flush=True)
+        manifest["models"][name] = lower_model(args.out, name, SPECS[name])
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {args.out}/manifest.json "
+          f"({len(manifest['models'])} models)")
+
+
+if __name__ == "__main__":
+    main()

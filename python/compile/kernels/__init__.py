@@ -1,0 +1,2 @@
+"""L1 Pallas kernels (build-time only; lowered into the AOT artifacts)."""
+from . import fake_quant, qmatmul, ref  # noqa: F401

@@ -1,0 +1,147 @@
+"""L1 Pallas kernel: fused fake-quant + online min/max statistics.
+
+This is the kernel-level realization of the paper's Fig. 3: the tensor is
+quantized **statically** with pre-computed ranges while, in the same pass,
+min/max statistics of the unquantized values are collected "at the
+accumulator" — i.e. in VMEM scratch, never via a second traversal of HBM.
+
+TPU mapping (see DESIGN.md §4.3): the grid walks row-blocks of the
+flattened tensor; each block is one HBM→VMEM tile.  The statistics output
+is a (1, 2) block revisited by every grid step, which on TPU lives in VMEM
+for the whole kernel — the software analogue of the accumulator-side
+min/max registers the paper asks the hardware for.
+
+``interpret=True`` always: the CPU PJRT client cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that the Rust runtime
+runs unmodified.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default row-block: sized so a f32 block of (BLOCK_ROWS, <=1024) columns
+# stays well under a 16 MiB VMEM budget together with its noise operand and
+# output tile (3 live tiles * 4 B * 256 * 1024 = 3 MiB).
+BLOCK_ROWS = 256
+
+def _kernel(x_ref, range_ref, noise_ref, out_ref, stats_ref, *, bits, stochastic):
+    """One grid step: quantize a row-block, fold its min/max into stats."""
+    x = x_ref[...]
+
+    qmin = jnp.minimum(range_ref[0, 0], 0.0)
+    qmax = jnp.maximum(range_ref[0, 1], 0.0)
+    n_levels = float((1 << bits) - 1)
+    scale = jnp.maximum((qmax - qmin) / n_levels, 1e-12)
+    zp = jnp.round(-qmin / scale)
+
+    t = x / scale + zp
+    if stochastic:
+        t = jnp.floor(t + noise_ref[...])
+    else:
+        t = jnp.round(t)
+    t = jnp.clip(t, 0.0, n_levels)
+    out_ref[...] = (t - zp) * scale
+
+    # Online statistics: initialized on the first grid step, folded on every
+    # step.  The (1, 2) stats block maps to the same output tile for all i,
+    # so the running value is carried in VMEM across steps.
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        stats_ref[0, 0] = float("inf")
+        stats_ref[0, 1] = float("-inf")
+
+    stats_ref[0, 0] = jnp.minimum(stats_ref[0, 0], jnp.min(x))
+    stats_ref[0, 1] = jnp.maximum(stats_ref[0, 1], jnp.max(x))
+
+
+def _pad_rows(x2, block_rows, pad_value):
+    rows = x2.shape[0]
+    rem = rows % block_rows
+    if rem == 0:
+        return x2, rows
+    pad = block_rows - rem
+    x2 = jnp.pad(x2, ((0, pad), (0, 0)), constant_values=pad_value)
+    return x2, rows
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_rows"))
+def fake_quant_with_stats(x, ranges, noise=None, *, bits: int = 8,
+                          block_rows: int = BLOCK_ROWS):
+    """Fused static fake-quant + pre-quant min/max stats (Pallas).
+
+    Args:
+      x:       any-shape f32 tensor.
+      ranges:  shape (2,) = (qmin, qmax), the *pre-computed* quantization
+               range (in-hindsight: the EMA state from previous steps).
+      noise:   optional uniform-[0,1) tensor of x's shape -> stochastic
+               rounding (used for gradients); None -> nearest rounding.
+      bits:    grid bit-width.
+
+    Returns ``(x_q, stats)`` — quantized tensor of x's shape and the (2,)
+    min/max of the unquantized input, matching ``ref.fake_quant_with_stats``.
+    """
+    stochastic = noise is not None
+    orig_shape = x.shape
+    x2 = x.reshape(-1, orig_shape[-1]) if x.ndim > 1 else x.reshape(1, -1)
+    cols = x2.shape[1]
+
+    # Padding rows must not perturb the statistics: pad with the first
+    # element so min/max are unchanged.
+    pad_value = 0.0
+    x2 = x2.astype(jnp.float32)
+    if x2.shape[0] % block_rows != 0:
+        pad_value = x2[0, 0]
+    x2p, valid_rows = _pad_rows(x2, block_rows, pad_value)
+    if stochastic:
+        n2 = noise.reshape(x2.shape).astype(jnp.float32)
+        n2p, _ = _pad_rows(n2, block_rows, 0.5)
+    else:
+        n2p = jnp.zeros((block_rows, cols), jnp.float32)  # dummy operand
+
+    grid = (x2p.shape[0] // block_rows,)
+    ranges2 = ranges.reshape(1, 2).astype(jnp.float32)
+
+    kernel = functools.partial(_kernel, bits=bits, stochastic=stochastic)
+    out, stats = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+            (pl.BlockSpec((block_rows, cols), lambda i: (i, 0))
+             if stochastic else pl.BlockSpec((block_rows, cols), lambda i: (0, 0))),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x2p.shape, jnp.float32),
+            jax.ShapeDtypeStruct((1, 2), jnp.float32),
+        ],
+        interpret=True,
+    )(x2p, ranges2, n2p)
+
+    out = out[:valid_rows].reshape(orig_shape)
+    return out, stats.reshape(2)
+
+
+def vmem_bytes(shape, *, bits: int = 8, block_rows: int = BLOCK_ROWS,
+               stochastic: bool = False) -> int:
+    """Static VMEM footprint estimate for the kernel at a given shape.
+
+    Used by the §Perf analysis (interpret-mode wallclock is not a TPU
+    proxy; the structural budget is).  Counts the live f32 tiles: input
+    block, output block, optional noise block, ranges and stats.
+    """
+    cols = shape[-1] if len(shape) > 1 else int(jnp.prod(jnp.array(shape)))
+    tile = block_rows * cols * 4
+    tiles = 2 + (1 if stochastic else 0)
+    return tiles * tile + 2 * 4 + 2 * 4

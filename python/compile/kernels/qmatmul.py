@@ -1,0 +1,152 @@
+"""L1 Pallas kernel: tiled matmul with quantize-at-accumulator epilogue.
+
+The kernel-level realization of the paper's Fig. 2 (static path): the MAC
+array computes the output in (bm, bn) slices accumulated over K in a f32
+tile (the 32-bit accumulator).  On the *last* K step the tile is (a) folded
+into the online min/max statistics and (b) statically quantized with the
+pre-computed ranges before it is written back — so only low-bit-sized data
+ever leaves the accumulator, which is exactly the memory-traffic argument
+of eq. (4) vs eq. (5) in the paper.
+
+TPU mapping: grid (M/bm, N/bn, K/bk); A and B tiles stream HBM→VMEM; the
+accumulator tile is the revisited output block (VMEM-resident across the K
+loop); the MXU consumes the (bm, bk) x (bk, bn) tiles.  interpret=True for
+CPU-PJRT executability (see fake_quant.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: MXU-friendly 128x128 output tiles, 128-deep K slices.
+# VMEM per step: A + B + acc/out tiles = 3 * 128*128*4 B = 192 KiB « 16 MiB.
+BM, BN, BK = 128, 128, 128
+
+
+def _kernel(a_ref, b_ref, range_ref, out_ref, stats_ref, *, bits, n_k):
+    """Grid step (i, j, k): out += A[i,k] @ B[k,j]; epilogue on last k.
+
+    ``out_ref`` doubles as the f32 accumulator: its index map ignores k, so
+    the same block stays resident across the K loop (VMEM on TPU).
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        y = out_ref[...]
+
+        # Online accumulator statistics (Fig. 3 logic): init on the first
+        # output tile, fold the tile min/max on every completed tile.
+        @pl.when(jnp.logical_and(i == 0, j == 0))
+        def _init():
+            stats_ref[0, 0] = float("inf")
+            stats_ref[0, 1] = float("-inf")
+
+        stats_ref[0, 0] = jnp.minimum(stats_ref[0, 0], jnp.min(y))
+        stats_ref[0, 1] = jnp.maximum(stats_ref[0, 1], jnp.max(y))
+
+        # Static quantization of the accumulator tile (pre-computed range),
+        # nearest rounding (activation path).
+        qmin = jnp.minimum(range_ref[0, 0], 0.0)
+        qmax = jnp.maximum(range_ref[0, 1], 0.0)
+        n_levels = float((1 << bits) - 1)
+        scale = jnp.maximum((qmax - qmin) / n_levels, 1e-12)
+        zp = jnp.round(-qmin / scale)
+        t = jnp.clip(jnp.round(y / scale + zp), 0.0, n_levels)
+        out_ref[...] = (t - zp) * scale
+
+
+def _pad_to(x, m0, m1):
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bm", "bn", "bk"))
+def qmatmul(a, b, ranges, *, bits: int = 8, bm: int = BM, bn: int = BN,
+            bk: int = BK):
+    """``fake_quant(a @ b)`` with fused accumulator min/max statistics.
+
+    Args:
+      a: (M, K) f32.    b: (K, N) f32.
+      ranges: (2,) pre-computed (qmin, qmax) for the output quantizer.
+
+    Returns ``(y_q, stats)`` matching ``ref.qmatmul``.
+
+    Shapes are zero-padded to tile multiples internally.  Padded lanes
+    contribute exact zeros to the accumulator, so the statistics fold can
+    only widen the observed range to include 0 — and the paper's asymmetric
+    grid *always* contains 0 (``ref.quant_params`` clamps the range around
+    it), so padding never changes the quantization grid.
+    """
+    m, kdim = a.shape
+    _, n = b.shape
+    bm_ = min(bm, _round_up(m, 8))
+    bn_ = min(bn, _round_up(n, 8))
+    bk_ = min(bk, _round_up(kdim, 8))
+    ap = _pad_to(a.astype(jnp.float32), bm_, bk_)
+    bp = _pad_to(b.astype(jnp.float32), bk_, bn_)
+    grid = (ap.shape[0] // bm_, bp.shape[1] // bn_, ap.shape[1] // bk_)
+    ranges2 = ranges.reshape(1, 2).astype(jnp.float32)
+
+    kernel = functools.partial(_kernel, bits=bits, n_k=grid[2])
+    out, stats = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, 2), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),
+            pl.BlockSpec((1, 2), lambda i, j, k: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((ap.shape[0], bp.shape[1]), jnp.float32),
+            jax.ShapeDtypeStruct((1, 2), jnp.float32),
+        ],
+        interpret=True,
+    )(ap, bp, ranges2)
+
+    return out[:m, :n], stats.reshape(2)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def mxu_utilization_estimate(m: int, n: int, k: int, *, bm: int = BM,
+                             bn: int = BN, bk: int = BK) -> float:
+    """Fraction of MXU-issued MACs that are useful (non-padding) work.
+
+    §Perf structural estimate: padded tile lanes waste MXU cycles; this is
+    useful_macs / issued_macs for the chosen tiling.
+    """
+    bm_ = min(bm, _round_up(m, 8))
+    bn_ = min(bn, _round_up(n, 8))
+    bk_ = min(bk, _round_up(k, 8))
+    gm, gn, gk = math.ceil(m / bm_), math.ceil(n / bn_), math.ceil(k / bk_)
+    issued = gm * bm_ * gn * bn_ * gk * bk_
+    return (m * n * k) / issued
+
+
+def vmem_bytes(*, bm: int = BM, bn: int = BN, bk: int = BK) -> int:
+    """Live VMEM bytes for one grid step (A, B, acc/out tiles, f32)."""
+    return 4 * (bm * bk + bk * bn + bm * bn) + 16

@@ -1,0 +1,102 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness ground truth).
+
+Everything here mirrors the paper's quantization spec (Sec. 5.2):
+
+* asymmetric uniform quantization on a ``2**bits - 1``-step grid,
+* the grid always contains zero (required so that zero-padding / ReLU zeros
+  and zero gradients are exactly representable),
+* nearest rounding for weights/activations, *stochastic* rounding for
+  gradients (Gupta et al. 2015), driven by externally supplied uniform noise
+  so that the Pallas kernel and this oracle are bit-identical,
+* ``min``/``max`` statistics of the *pre-quantization* tensor are returned
+  alongside — they model the accumulator-level statistics logic of Fig. 3.
+
+These functions are used (a) by pytest/hypothesis as the oracle for the
+Pallas kernels and (b) by the L2 model as the plain-XLA fallback path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Threshold below which a quantization range is considered degenerate.  A
+# degenerate (all-zero) tensor quantizes to all zeros; we guard the scale so
+# that no Inf/NaN can be produced on the hot path.
+EPS_SCALE = 1e-12
+
+
+def quant_params(qmin, qmax, bits: int):
+    """Asymmetric-uniform grid parameters for range ``[qmin, qmax]``.
+
+    Returns ``(scale, zero_point, n_levels)`` where the integer grid is
+    ``{0, ..., n_levels}`` and ``dequant(v) = (v - zero_point) * scale``.
+    The range is first widened to contain 0 (paper Sec. 5.2 / standard
+    asymmetric quantization), and the zero-point is rounded to an integer so
+    that 0.0 is exactly representable.
+    """
+    qmin = jnp.minimum(jnp.asarray(qmin, jnp.float32), 0.0)
+    qmax = jnp.maximum(jnp.asarray(qmax, jnp.float32), 0.0)
+    n_levels = (1 << bits) - 1
+    scale = (qmax - qmin) / n_levels
+    scale = jnp.maximum(scale, EPS_SCALE)
+    zero_point = jnp.round(-qmin / scale)
+    return scale, zero_point, n_levels
+
+
+def fake_quant(x, qmin, qmax, bits: int = 8, noise=None):
+    """Simulated (fake) asymmetric uniform quantization of ``x``.
+
+    ``noise`` — if given, uniform-[0,1) tensor of ``x``'s shape enabling
+    stochastic rounding (``floor(t + u)``); otherwise round-to-nearest.
+    Values outside ``[qmin, qmax]`` saturate to the grid edges.
+    """
+    scale, zp, n = quant_params(qmin, qmax, bits)
+    t = x / scale + zp
+    if noise is None:
+        t = jnp.round(t)
+    else:
+        t = jnp.floor(t + noise)
+    t = jnp.clip(t, 0.0, float(n))
+    return (t - zp) * scale
+
+
+def minmax(x):
+    """Per-tensor (min, max) — the accumulator statistics of Fig. 3."""
+    return jnp.stack([jnp.min(x), jnp.max(x)])
+
+
+def fake_quant_with_stats(x, ranges, bits: int = 8, noise=None):
+    """Fused fake-quant + pre-quant min/max stats (oracle for the L1 kernel).
+
+    ``ranges`` — shape ``(2,)`` = (qmin, qmax) used for quantization.
+    Returns ``(x_q, stats)`` with ``stats`` shape ``(2,)`` holding the
+    min/max of the *input* tensor (not of the quantized output).
+    """
+    xq = fake_quant(x, ranges[0], ranges[1], bits=bits, noise=noise)
+    return xq, minmax(x)
+
+
+def qmatmul(a, b, ranges, bits: int = 8, noise=None):
+    """Oracle for the quantize-at-accumulator matmul kernel.
+
+    Computes ``y = a @ b`` in f32 (the 32-bit accumulator), collects
+    min/max of ``y`` (accumulator statistics), and emits the statically
+    quantized output — the static-quantization dataflow of Fig. 2 (left).
+    Returns ``(y_q, stats)``.
+    """
+    y = jnp.matmul(a, b, preferred_element_type=jnp.float32)
+    return fake_quant_with_stats(y, ranges, bits=bits, noise=noise)
+
+
+def saturation_ratio(x, qmin, qmax):
+    """Fraction of elements outside the quantization grid (paper footnote 1)."""
+    out = jnp.logical_or(x < qmin, x > qmax)
+    return jnp.mean(out.astype(jnp.float32))
+
+
+def ema_update(prev_ranges, stats, eta):
+    """In-hindsight / running min-max EMA (paper eqs. 2-3).
+
+    ``new = (1 - eta) * stats + eta * prev``, per component.
+    """
+    return (1.0 - eta) * stats + eta * prev_ranges

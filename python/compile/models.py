@@ -1,0 +1,223 @@
+"""L2 model zoo: the paper's three architecture families, width-reduced.
+
+Paper (Sec. 5): modified ResNet18, VGG16 and MobileNetV2 on Tiny ImageNet.
+We keep each family's structural signature — basic residual blocks for
+ResNet, plain conv stacks for VGG, inverted residuals with depthwise +
+pointwise convs for MobileNetV2 (whose 1x1 convs are the 8x worst case of
+Table 5) — at widths sized for CPU-PJRT training (see DESIGN.md §3).
+
+Quantizer placement (Fig. 1): an activation quantizer after each
+conv→BN→act chain (the feature map written to memory), a gradient
+quantizer on each conv/dense *input* (the G_X it propagates backwards).
+The first layer has no gradient site (no preceding layer to propagate to);
+all layers are otherwise quantized, including first and last (Sec. 5.2).
+"""
+
+from __future__ import annotations
+
+from . import nn
+
+
+def build_mlp(n_classes: int = 10, hw: int = 8, cin: int = 3) -> nn.Model:
+    """Small MLP used by unit/integration tests and the quickstart."""
+    reg = nn.Registry()
+    d_in = hw * hw * cin
+    layers = [
+        nn.flatten(),
+        nn.dense(reg, "fc1", d_in, 64, grad_site=False),
+        nn.relu(),
+        nn.act_quant(reg, "fc1", (64,)),
+        nn.dense(reg, "fc2", 64, n_classes),
+    ]
+    top = nn.sequential(layers)
+    return nn.finalize("mlp", reg, top, (hw, hw, cin), n_classes)
+
+
+def build_cnn(n_classes: int = 16, hw: int = 32) -> nn.Model:
+    """Two-conv CNN (quickstart-scale)."""
+    reg = nn.Registry()
+    layers = [
+        nn.conv2d(reg, "conv1", 3, 16, 3, grad_site=False,
+                  feature_hw=(hw, hw)),
+        nn.batchnorm(reg, "bn1", 16),
+        nn.relu(),
+        nn.act_quant(reg, "conv1", (hw, hw, 16)),
+        nn.maxpool(),
+        nn.conv2d(reg, "conv2", 16, 32, 3, feature_hw=(hw // 2, hw // 2)),
+        nn.batchnorm(reg, "bn2", 32),
+        nn.relu(),
+        nn.act_quant(reg, "conv2", (hw // 2, hw // 2, 32)),
+        nn.maxpool(),
+        nn.flatten(),
+        nn.dense(reg, "fc", (hw // 4) * (hw // 4) * 32, n_classes),
+    ]
+    top = nn.sequential(layers)
+    return nn.finalize("cnn", reg, top, (hw, hw, 3), n_classes)
+
+
+def _basic_block(reg, name, cin, cout, stride, hw_in):
+    """ResNet basic block: conv-BN-ReLU-AQ-conv-BN (+shortcut) -ReLU-AQ."""
+    hw_out = hw_in // stride
+    branch = nn.sequential([
+        nn.conv2d(reg, f"{name}.conv1", cin, cout, 3, stride=stride,
+                  feature_hw=(hw_in, hw_in)),
+        nn.batchnorm(reg, f"{name}.bn1", cout),
+        nn.relu(),
+        nn.act_quant(reg, f"{name}.conv1", (hw_out, hw_out, cout)),
+        nn.conv2d(reg, f"{name}.conv2", cout, cout, 3,
+                  feature_hw=(hw_out, hw_out)),
+        nn.batchnorm(reg, f"{name}.bn2", cout),
+    ])
+    shortcut = None
+    if stride != 1 or cin != cout:
+        shortcut = nn.sequential([
+            nn.conv2d(reg, f"{name}.down", cin, cout, 1, stride=stride,
+                      feature_hw=(hw_in, hw_in)),
+            nn.batchnorm(reg, f"{name}.bn_down", cout),
+        ])
+    return nn.sequential([
+        nn.residual(branch, shortcut),
+        nn.relu(),
+        nn.act_quant(reg, f"{name}.out", (hw_out, hw_out, cout)),
+    ]), hw_out
+
+
+def build_resnet_tiny(n_classes: int = 16, hw: int = 32,
+                      widths=(16, 32, 64, 128),
+                      blocks=(2, 2, 2, 2)) -> nn.Model:
+    """Modified-ResNet18 family member: 3x3 stem (no maxpool, per the Tiny
+    ImageNet modification the paper cites), 4 stages of basic blocks.
+
+    ``blocks`` counts basic blocks per stage — (2,2,2,2) is the ResNet18
+    layout; the shipped artifacts use (1,1,1,1) (a ResNet-10 layout)
+    because the runtime's XLA 0.5.1 compile time is superlinear in conv
+    count (388s for the 18-layer train graph vs ~60s for 10 layers); see
+    DESIGN.md §3."""
+    reg = nn.Registry()
+    layers = [
+        nn.conv2d(reg, "stem", 3, widths[0], 3, grad_site=False,
+                  feature_hw=(hw, hw)),
+        nn.batchnorm(reg, "bn_stem", widths[0]),
+        nn.relu(),
+        nn.act_quant(reg, "stem", (hw, hw, widths[0])),
+    ]
+    cin, cur = widths[0], hw
+    for si, c in enumerate(widths):
+        for bi in range(blocks[si]):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            block, cur = _basic_block(reg, f"s{si}b{bi}", cin, c, stride, cur)
+            layers.append(block)
+            cin = c
+    layers += [
+        nn.avgpool_global(),
+        nn.dense(reg, "fc", widths[-1], n_classes),
+    ]
+    top = nn.sequential(layers)
+    return nn.finalize("resnet_tiny", reg, top, (hw, hw, 3), n_classes)
+
+
+def build_vgg_tiny(n_classes: int = 16, hw: int = 32,
+                   plan=((16, 16), (32, 32), (64, 64))) -> nn.Model:
+    """VGG16 family member: plain conv stacks + maxpool + FC head."""
+    reg = nn.Registry()
+    layers = []
+    cin, cur = 3, hw
+    first = True
+    for gi, group in enumerate(plan):
+        for ci, c in enumerate(group):
+            name = f"g{gi}c{ci}"
+            layers += [
+                nn.conv2d(reg, name, cin, c, 3, grad_site=not first,
+                          feature_hw=(cur, cur)),
+                nn.batchnorm(reg, f"bn_{name}", c),
+                nn.relu(),
+                nn.act_quant(reg, name, (cur, cur, c)),
+            ]
+            cin = c
+            first = False
+        layers.append(nn.maxpool())
+        cur //= 2
+    layers += [
+        nn.flatten(),
+        nn.dense(reg, "fc1", cur * cur * cin, 128),
+        nn.relu(),
+        nn.act_quant(reg, "fc1", (128,)),
+        nn.dense(reg, "fc2", 128, n_classes),
+    ]
+    top = nn.sequential(layers)
+    return nn.finalize("vgg_tiny", reg, top, (hw, hw, 3), n_classes)
+
+
+def _inverted_residual(reg, name, cin, cout, stride, expand, hw_in):
+    """MobileNetV2 block: 1x1 expand → 3x3 depthwise → 1x1 project."""
+    mid = cin * expand
+    hw_out = hw_in // stride
+    layers = []
+    if expand != 1:
+        layers += [
+            nn.conv2d(reg, f"{name}.expand", cin, mid, 1, use_bias=False,
+                      feature_hw=(hw_in, hw_in)),
+            nn.batchnorm(reg, f"{name}.bn_e", mid),
+            nn.relu6(),
+            nn.act_quant(reg, f"{name}.expand", (hw_in, hw_in, mid)),
+        ]
+    layers += [
+        nn.conv2d(reg, f"{name}.dw", mid, mid, 3, stride=stride,
+                  depthwise=True, use_bias=False, feature_hw=(hw_in, hw_in)),
+        nn.batchnorm(reg, f"{name}.bn_d", mid),
+        nn.relu6(),
+        nn.act_quant(reg, f"{name}.dw", (hw_out, hw_out, mid)),
+        nn.conv2d(reg, f"{name}.project", mid, cout, 1, use_bias=False,
+                  feature_hw=(hw_out, hw_out)),
+        nn.batchnorm(reg, f"{name}.bn_p", cout),
+        # linear bottleneck: quantize the projection output (no ReLU)
+        nn.act_quant(reg, f"{name}.project", (hw_out, hw_out, cout)),
+    ]
+    branch = nn.sequential(layers)
+    if stride == 1 and cin == cout:
+        return nn.residual(branch, None), hw_out
+    return branch, hw_out
+
+
+def build_mobilenet_tiny(n_classes: int = 16, hw: int = 32) -> nn.Model:
+    """MobileNetV2 family member: inverted residuals, ReLU6, linear
+    bottlenecks; includes the pointwise-conv shapes Table 5 highlights."""
+    reg = nn.Registry()
+    layers = [
+        nn.conv2d(reg, "stem", 3, 16, 3, grad_site=False,
+                  feature_hw=(hw, hw)),
+        nn.batchnorm(reg, "bn_stem", 16),
+        nn.relu6(),
+        nn.act_quant(reg, "stem", (hw, hw, 16)),
+    ]
+    plan = [  # (expand, cout, stride) — compile-budget-reduced block count
+        (1, 16, 1), (4, 24, 2), (4, 32, 2), (4, 64, 2),
+    ]
+    cin, cur = 16, hw
+    for i, (t, c, s) in enumerate(plan):
+        block, cur = _inverted_residual(reg, f"b{i}", cin, c, s, t, cur)
+        layers.append(block)
+        cin = c
+    layers += [
+        nn.conv2d(reg, "head", cin, 128, 1, feature_hw=(cur, cur)),
+        nn.batchnorm(reg, "bn_head", 128),
+        nn.relu6(),
+        nn.act_quant(reg, "head", (cur, cur, 128)),
+        nn.avgpool_global(),
+        nn.dense(reg, "fc", 128, n_classes),
+    ]
+    top = nn.sequential(layers)
+    return nn.finalize("mobilenet_tiny", reg, top, (hw, hw, 3), n_classes)
+
+
+BUILDERS = {
+    "mlp": build_mlp,
+    "cnn": build_cnn,
+    "resnet_tiny": build_resnet_tiny,
+    "vgg_tiny": build_vgg_tiny,
+    "mobilenet_tiny": build_mobilenet_tiny,
+}
+
+
+def build(name: str, **kw) -> nn.Model:
+    return BUILDERS[name](**kw)

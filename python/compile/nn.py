@@ -1,0 +1,276 @@
+"""L2 mini layer framework with explicit flat parameter layout.
+
+The Rust runtime marshals parameters as a *flat ordered list* of arrays
+described by the manifest, so layers declare their parameters explicitly
+(name, shape, initializer) instead of relying on pytree introspection.
+
+Conventions:
+  * data layout NHWC, weights HWIO (lax.conv_general_dilated defaults for
+    these strings);
+  * ``params``   — trainable leaves (SGD + momentum applied in-graph);
+  * ``state``    — non-trainable leaves (BatchNorm running stats), updated
+    by the forward pass during training;
+  * quantizer *sites* are registered at model-construction time so the
+    (Q, 2) range-state tensor has a static layout the coordinator knows.
+
+Per the paper (Sec. 3.1 / 5.2): weight quantization uses current min-max
+with nearest rounding; activation quantizers sit on the feature map a layer
+writes to memory; gradient quantizers sit on the input-gradient G_X each
+layer propagates backwards; BatchNorm and the weight update stay FP32.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import quant_ops as qo
+
+
+class ParamSpec(NamedTuple):
+    name: str
+    shape: Tuple[int, ...]
+    init: Callable  # (key, shape) -> array
+
+
+class SiteSpec(NamedTuple):
+    index: int
+    name: str
+    kind: str          # "act" | "grad"
+    # activation shape at the site (batch-independent part), for reporting
+    feature_shape: Tuple[int, ...]
+
+
+class Registry:
+    """Collects parameter/state/site specs while a model is constructed."""
+
+    def __init__(self):
+        self.params: List[ParamSpec] = []
+        self.state: List[ParamSpec] = []
+        self.sites: List[SiteSpec] = []
+
+    def add_param(self, name, shape, init) -> int:
+        self.params.append(ParamSpec(name, tuple(int(s) for s in shape), init))
+        return len(self.params) - 1
+
+    def add_state(self, name, shape, init) -> int:
+        self.state.append(ParamSpec(name, tuple(int(s) for s in shape), init))
+        return len(self.state) - 1
+
+    def add_site(self, name, kind, feature_shape) -> int:
+        idx = len(self.sites)
+        self.sites.append(SiteSpec(idx, name, kind,
+                                   tuple(int(s) for s in feature_shape)))
+        return idx
+
+
+def _he_normal(fan_in):
+    std = math.sqrt(2.0 / fan_in)
+
+    def init(key, shape):
+        return jax.random.normal(key, shape) * std
+    return init
+
+
+def _zeros(key, shape):
+    del key
+    return jnp.zeros(shape, jnp.float32)
+
+
+def _ones(key, shape):
+    del key
+    return jnp.ones(shape, jnp.float32)
+
+
+class Apply(NamedTuple):
+    """Closure bundle returned by layer constructors."""
+    fn: Callable  # (params, state, x, ctx, train, taps) -> (y, state_updates)
+
+
+class Model(NamedTuple):
+    name: str
+    reg: Registry
+    apply: Callable   # (pv, sv, x, ctx, train, dummies, collect) -> (logits, new_sv)
+    input_shape: Tuple[int, int, int]   # (H, W, C)
+    n_classes: int
+
+    @property
+    def n_params(self):
+        return sum(int(jnp.prod(jnp.array(p.shape))) for p in self.reg.params)
+
+
+class Collector:
+    """Accumulates per-site forward stats/new-ranges during apply."""
+
+    def __init__(self, n_sites):
+        self.stats = [None] * n_sites
+        self.new_ranges = [None] * n_sites
+
+    def record(self, site, stats, new_range):
+        self.stats[site] = stats
+        self.new_ranges[site] = new_range
+
+
+# ---------------------------------------------------------------------------
+# Layers.  Each constructor registers params/state/sites on `reg` and
+# returns an apply closure over the *indices* it registered.
+# ---------------------------------------------------------------------------
+
+def conv2d(reg: Registry, name: str, cin: int, cout: int, k: int,
+           stride: int = 1, depthwise: bool = False, use_bias: bool = True,
+           grad_site: bool = True, feature_hw: Tuple[int, int] = (0, 0)):
+    """Quantized conv layer: weight fake-quant (current min-max) + optional
+    gradient tap on its input (quantizes the G_X it back-propagates)."""
+    groups = cin if depthwise else 1
+    wshape = (k, k, cin // groups, cout)
+    wi = reg.add_param(f"{name}.w", wshape, _he_normal(k * k * cin // groups))
+    bi = reg.add_param(f"{name}.b", (cout,), _zeros) if use_bias else None
+    gsite = (reg.add_site(f"{name}.grad", "grad", (feature_hw[0], feature_hw[1], cin))
+             if grad_site else None)
+
+    def fn(pv, sv, x, ctx, train, dummies, collect):
+        w = qo.weight_quant(pv[wi], ctx)
+        if gsite is not None and train:
+            x = ctx.tap(x, dummies[gsite], gsite, ctx)
+        y = lax.conv_general_dilated(
+            x, w, window_strides=(stride, stride), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=groups)
+        if bi is not None:
+            y = y + pv[bi]
+        return y, []
+    return Apply(fn)
+
+
+def dense(reg: Registry, name: str, cin: int, cout: int,
+          grad_site: bool = True):
+    wi = reg.add_param(f"{name}.w", (cin, cout), _he_normal(cin))
+    bi = reg.add_param(f"{name}.b", (cout,), _zeros)
+    gsite = reg.add_site(f"{name}.grad", "grad", (cin,)) if grad_site else None
+
+    def fn(pv, sv, x, ctx, train, dummies, collect):
+        w = qo.weight_quant(pv[wi], ctx)
+        if gsite is not None and train:
+            x = ctx.tap(x, dummies[gsite], gsite, ctx)
+        return jnp.matmul(x, w) + pv[bi], []
+    return Apply(fn)
+
+
+def batchnorm(reg: Registry, name: str, c: int, momentum: float = 0.9):
+    """FP32 BatchNorm (paper keeps BN out of the quantized path).
+
+    Running stats live in ``state`` and are EMA-updated during training;
+    eval uses the running stats.
+    """
+    gi = reg.add_param(f"{name}.gamma", (c,), _ones)
+    bi = reg.add_param(f"{name}.beta", (c,), _zeros)
+    mi = reg.add_state(f"{name}.mean", (c,), _zeros)
+    vi = reg.add_state(f"{name}.var", (c,), _ones)
+
+    def fn(pv, sv, x, ctx, train, dummies, collect):
+        axes = tuple(range(x.ndim - 1))
+        if train:
+            mean = jnp.mean(x, axis=axes)
+            var = jnp.var(x, axis=axes)
+            new_mean = momentum * sv[mi] + (1 - momentum) * mean
+            new_var = momentum * sv[vi] + (1 - momentum) * var
+            updates = [(mi, new_mean), (vi, new_var)]
+        else:
+            mean, var = sv[mi], sv[vi]
+            updates = []
+        xn = (x - mean) / jnp.sqrt(var + 1e-5)
+        return xn * pv[gi] + pv[bi], updates
+    return Apply(fn)
+
+
+def relu():
+    def fn(pv, sv, x, ctx, train, dummies, collect):
+        return jax.nn.relu(x), []
+    return Apply(fn)
+
+
+def relu6():
+    def fn(pv, sv, x, ctx, train, dummies, collect):
+        return jnp.clip(x, 0.0, 6.0), []
+    return Apply(fn)
+
+
+def act_quant(reg: Registry, name: str, feature_shape):
+    """Activation quantizer site (the Q_Y the paper estimates ranges for)."""
+    site = reg.add_site(f"{name}.act", "act", feature_shape)
+
+    def fn(pv, sv, x, ctx, train, dummies, collect):
+        y, stats, new_range = qo.act_quant(x, site, ctx)
+        collect.record(site, stats, new_range)
+        return y, []
+    return Apply(fn)
+
+
+def maxpool(k: int = 2, stride: int = 2):
+    def fn(pv, sv, x, ctx, train, dummies, collect):
+        return lax.reduce_window(
+            x, -jnp.inf, lax.max, (1, k, k, 1), (1, stride, stride, 1),
+            "VALID"), []
+    return Apply(fn)
+
+
+def avgpool_global():
+    def fn(pv, sv, x, ctx, train, dummies, collect):
+        return jnp.mean(x, axis=(1, 2)), []
+    return Apply(fn)
+
+
+def flatten():
+    def fn(pv, sv, x, ctx, train, dummies, collect):
+        return x.reshape(x.shape[0], -1), []
+    return Apply(fn)
+
+
+def sequential(layers):
+    def fn(pv, sv, x, ctx, train, dummies, collect):
+        updates = []
+        for layer in layers:
+            x, u = layer.fn(pv, sv, x, ctx, train, dummies, collect)
+            updates.extend(u)
+        return x, updates
+    return Apply(fn)
+
+
+def residual(branch: Apply, shortcut: Optional[Apply] = None):
+    """y = branch(x) + shortcut(x) (identity shortcut if None)."""
+    def fn(pv, sv, x, ctx, train, dummies, collect):
+        y, u1 = branch.fn(pv, sv, x, ctx, train, dummies, collect)
+        if shortcut is None:
+            s, u2 = x, []
+        else:
+            s, u2 = shortcut.fn(pv, sv, x, ctx, train, dummies, collect)
+        return y + s, u1 + u2
+    return Apply(fn)
+
+
+# ---------------------------------------------------------------------------
+# Model assembly helpers
+# ---------------------------------------------------------------------------
+
+def finalize(name, reg, top: Apply, input_shape, n_classes) -> Model:
+    def apply(pv, sv, x, ctx, train, dummies, collect):
+        logits, updates = top.fn(pv, sv, x, ctx, train, dummies, collect)
+        new_sv = list(sv)
+        for idx, val in updates:
+            new_sv[idx] = val
+        return logits, new_sv
+    return Model(name, reg, apply, input_shape, n_classes)
+
+
+def init_params(model: Model, key):
+    """Materialize params/state per the registry (used by the init graph)."""
+    pv = []
+    for i, spec in enumerate(model.reg.params):
+        pv.append(spec.init(jax.random.fold_in(key, i), spec.shape))
+    sv = [spec.init(jax.random.fold_in(key, 10_000 + i), spec.shape)
+          for i, spec in enumerate(model.reg.state)]
+    return pv, sv

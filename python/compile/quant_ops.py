@@ -1,0 +1,238 @@
+"""L2 quantization operations: estimator mode-switching, STE, gradient taps.
+
+This module wires the L1 kernels into the training graph and implements the
+paper's range-estimation semantics *in-graph*, selected by a runtime scalar
+so a single AOT artifact serves every estimator:
+
+  mode 0 — current min-max   (dynamic): quantize with minmax(G^t)
+  mode 1 — running min-max   (dynamic): quantize with
+                                        (1-eta)*minmax(G^t) + eta*range^{t-1}
+  mode 2 — in-hindsight      (static) : quantize with range^{t-1}  (paper)
+
+For every mode the graph also emits, per quantizer site,
+
+  stats[q]      = minmax of the *pre-quantization* tensor at step t
+                  (the accumulator statistics of Fig. 3), and
+  new_ranges[q] = the range state to carry to step t+1:
+                  current   -> stats
+                  running   -> (1-eta)*stats + eta*prev   (blended, = used)
+                  hindsight -> (1-eta)*stats + eta*prev   (paper eqs. 2-3)
+
+Note running and hindsight share the state-update rule; they differ only in
+whether the *current* step's quantizer gets to see the current statistics
+(dynamic) or not (static).  DSGC runs as mode 2 with the coordinator
+overriding the range state from its periodic golden-section search.
+
+Gradient quantization happens inside the backward pass, where a functional
+graph cannot emit extra primal outputs.  We use the *dummy-cotangent trick*:
+each gradient site takes a zero (2,2) dummy input whose custom-VJP cotangent
+is defined to be [stats; new_ranges] — ``jax.grad`` w.r.t. the dummies then
+delivers the backward-pass statistics as ordinary outputs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import fake_quant as fq_kernel
+from .kernels import ref
+
+MODE_CURRENT = 0
+MODE_RUNNING = 1
+MODE_HINDSIGHT = 2
+
+MODE_NAMES = {"current": MODE_CURRENT, "running": MODE_RUNNING,
+              "hindsight": MODE_HINDSIGHT}
+
+
+class QuantConfig(NamedTuple):
+    """Static quantization configuration baked into a model graph."""
+    bits_w: int = 8
+    bits_a: int = 8
+    bits_g: int = 8
+    # which sites go through the Pallas kernel ("all" | "grad" | "none");
+    # the others use the jnp oracle (identical numerics, cheaper HLO).
+    use_pallas: str = "all"
+
+
+class QuantCtx(NamedTuple):
+    """Runtime quantization inputs threaded through ``apply``.
+
+    All fields are traced values (graph inputs); ``ranges`` is the (Q, 2)
+    range state, modes/enables are f32 scalars (f32 so that custom-VJP
+    cotangent types stay uniform).
+    """
+    ranges: jax.Array       # (Q, 2)
+    mode_act: jax.Array     # f32 scalar in {0,1,2}
+    mode_grad: jax.Array    # f32 scalar in {0,1,2}
+    wq_on: jax.Array        # f32 scalar in {0,1}
+    aq_on: jax.Array
+    gq_on: jax.Array
+    eta: jax.Array          # EMA momentum (paper: 0.9)
+    key: jax.Array          # PRNG key for stochastic rounding
+    cfg: QuantConfig        # static
+    tap: object = None      # grad_tap (train) or dump_tap (DSGC dump graph)
+
+
+def _resolve_ranges(mode_i32, prev, stats, eta):
+    """Range used *now* per estimator mode (see module docstring).
+
+    Arithmetic select rather than ``lax.switch``: the statistics are
+    computed unconditionally anyway (they are a graph output for every
+    mode), the candidates are 2-element tensors, and conditionals at
+    ~200 sites made ancient XLA versions' compile times explode (347s ->
+    seconds on the runtime's xla_extension 0.5.1).
+    """
+    blended = ref.ema_update(prev, stats, eta)
+    return jnp.where(mode_i32 == 0, stats,
+                     jnp.where(mode_i32 == 1, blended, prev))
+
+
+def _next_ranges(mode_i32, prev, stats, eta):
+    """Range state carried to the next step per estimator mode."""
+    blended = ref.ema_update(prev, stats, eta)
+    # current min-max keeps no real state; running/hindsight: eqs. 2-3
+    return jnp.where(mode_i32 == 0, stats, blended)
+
+
+def _fake_quant(x, ranges, bits, noise, via_pallas):
+    if via_pallas:
+        return fq_kernel.fake_quant_with_stats(x, ranges, noise, bits=bits)
+    return ref.fake_quant_with_stats(x, ranges, bits=bits, noise=noise)
+
+
+def weight_quant(w, ctx: QuantCtx):
+    """Paper Sec. 5.2: weights always use *current* min-max, nearest
+    rounding, straight-through estimator; gated by ``wq_on``."""
+    w_sg = lax.stop_gradient(w)
+    r = ref.minmax(w_sg)
+    # the kernel sees only stop_gradient'ed values: pallas_call has no JVP
+    # rule, and the STE below re-injects the identity gradient anyway.
+    wq, _ = _fake_quant(w_sg, r, ctx.cfg.bits_w, None,
+                        ctx.cfg.use_pallas == "all")
+    wq = jnp.where(ctx.wq_on > 0.5, wq, w_sg)
+    return w + lax.stop_gradient(wq - w)
+
+
+def act_quant(x, site: int, ctx: QuantCtx):
+    """Activation quantizer site (forward; the Q_Y of Fig. 1).
+
+    Returns ``(x_q, stats, new_range)``; straight-through gradient.
+    """
+    prev = ctx.ranges[site]
+    mode = ctx.mode_act.astype(jnp.int32)
+    x_sg = lax.stop_gradient(x)
+    stats = ref.minmax(x_sg)
+    used = _resolve_ranges(mode, prev, stats, ctx.eta)
+    xq, _ = _fake_quant(x_sg, used, ctx.cfg.bits_a, None,
+                        ctx.cfg.use_pallas == "all")
+    xq = jnp.where(ctx.aq_on > 0.5, xq, x_sg)
+    out = x + lax.stop_gradient(xq - x)
+    new_range = _next_ranges(mode, prev, stats, ctx.eta)
+    return out, stats, new_range
+
+
+# ---------------------------------------------------------------------------
+# Gradient tap: quantize the input-gradient G_X inside the backward pass.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _grad_tap(bits_and_pallas, x, dummy, prev, mode_f, eta, gq_on, noise):
+    """Identity on ``x``; backward quantizes the cotangent (G_X).
+
+    ``dummy`` is a (2, 2) zeros input; its cotangent is defined as
+    ``[stats; new_ranges]`` so the caller can extract backward statistics
+    via ``jax.grad``.  ``noise`` (x-shaped uniforms) drives stochastic
+    rounding (paper Sec. 5.2 quantizes gradients stochastically).
+    """
+    del dummy, prev, mode_f, eta, gq_on, noise
+    return x
+
+
+def _grad_tap_fwd(bits_and_pallas, x, dummy, prev, mode_f, eta, gq_on, noise):
+    del dummy
+    return x, (prev, mode_f, eta, gq_on, noise)
+
+
+def _grad_tap_bwd(bits_and_pallas, res, g):
+    bits, via_pallas = bits_and_pallas
+    prev, mode_f, eta, gq_on, noise = res
+    mode = mode_f.astype(jnp.int32)
+
+    stats = ref.minmax(g)
+    used = _resolve_ranges(mode, prev, stats, eta)
+    gq, _ = _fake_quant(g, used, bits, noise, via_pallas)
+    gq = jnp.where(gq_on > 0.5, gq, g)
+    new_range = _next_ranges(mode, prev, stats, eta)
+
+    packed = jnp.stack([stats, new_range])  # (2, 2) -> dummy cotangent
+    zeros2 = jnp.zeros(2, jnp.float32)
+    zf = jnp.zeros((), jnp.float32)
+    return (gq, packed, zeros2, zf, zf, zf, jnp.zeros_like(noise))
+
+
+_grad_tap.defvjp(_grad_tap_fwd, _grad_tap_bwd)
+
+
+def grad_tap(x, dummy, site: int, ctx: QuantCtx):
+    """Place a gradient quantizer (Q_G of Fig. 1) on tensor ``x``.
+
+    Forward identity; the cotangent flowing back through ``x`` — the input
+    gradient G_X propagated to the preceding layer — is quantized per
+    ``ctx.mode_grad``.  ``dummy`` must be ``jnp.zeros((2, 2))``; its
+    gradient carries ``[stats; new_ranges]`` for this site.
+    """
+    noise = jax.random.uniform(jax.random.fold_in(ctx.key, site), x.shape)
+    via_pallas = ctx.cfg.use_pallas in ("all", "grad")
+    return _grad_tap((ctx.cfg.bits_g, via_pallas), x, dummy,
+                     ctx.ranges[site], ctx.mode_grad, ctx.eta, ctx.gq_on,
+                     noise)
+
+
+# ---------------------------------------------------------------------------
+# Dump tap: DSGC support — emit the raw FP gradient tensor of a site.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _dump_tap(bits_and_pallas, x, dummy, prev, mode_f, eta, gq_on, noise):
+    """Like ``_grad_tap`` but ``dummy`` is x-shaped and its cotangent is the
+    *raw* (pre-quantization) gradient tensor — the expensive full-tensor
+    readback DSGC's periodic range search requires (paper Sec. 5.1)."""
+    del dummy, prev, mode_f, eta, gq_on, noise
+    return x
+
+
+def _dump_tap_fwd(bits_and_pallas, x, dummy, prev, mode_f, eta, gq_on, noise):
+    del dummy
+    return x, (prev, mode_f, eta, gq_on, noise)
+
+
+def _dump_tap_bwd(bits_and_pallas, res, g):
+    bits, via_pallas = bits_and_pallas
+    prev, mode_f, eta, gq_on, noise = res
+    mode = mode_f.astype(jnp.int32)
+    stats = ref.minmax(g)
+    used = _resolve_ranges(mode, prev, stats, eta)
+    gq, _ = _fake_quant(g, used, bits, noise, via_pallas)
+    gq = jnp.where(gq_on > 0.5, gq, g)
+    zeros2 = jnp.zeros(2, jnp.float32)
+    zf = jnp.zeros((), jnp.float32)
+    return (gq, g, zeros2, zf, zf, zf, jnp.zeros_like(noise))
+
+
+_dump_tap.defvjp(_dump_tap_fwd, _dump_tap_bwd)
+
+
+def dump_tap(x, dummy, site: int, ctx: QuantCtx):
+    """DSGC variant of ``grad_tap``: ``dummy`` is x-shaped; its gradient is
+    the raw G_X tensor (quantization still applied to the propagated path)."""
+    noise = jax.random.uniform(jax.random.fold_in(ctx.key, site), x.shape)
+    via_pallas = ctx.cfg.use_pallas in ("all", "grad")
+    return _dump_tap((ctx.cfg.bits_g, via_pallas), x, dummy,
+                     ctx.ranges[site], ctx.mode_grad, ctx.eta, ctx.gq_on,
+                     noise)

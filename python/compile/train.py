@@ -1,0 +1,205 @@
+"""L2 training/eval/init graph builders with a flat, manifest-friendly ABI.
+
+Everything the Rust coordinator varies at runtime is a graph *input*
+(estimator modes, enables, ranges, eta, lr, weight decay, seed); everything
+per-step state is a graph *output* (params, momentum, BN state, range
+state, accumulator statistics).  Python is never on the step path.
+
+Graph ABIs (flat argument order == manifest order):
+
+  init (seed:i32)
+      -> params..., opt..., state...
+
+  train (params..., opt..., state..., x, y:i32,
+         ranges[Q,2], mode_act, mode_grad, wq_on, aq_on, gq_on,
+         eta, lr, wd, seed:i32)
+      -> new_params..., new_opt..., new_state...,
+         loss, acc, new_ranges[Q,2], stats[Q,2]
+
+  eval (params..., state..., x, y:i32, ranges[Q,2], mode_act, wq_on, aq_on)
+      -> loss_sum, correct_count
+
+  dump (params..., state..., x, y:i32, ranges[Q,2], mode_grad, wq_on,
+        aq_on, gq_on, eta, seed:i32)
+      -> grads per grad-site (raw FP G_X tensors, DSGC's expensive readback)
+
+The optimizer is SGD with momentum 0.9 and coupled weight decay, matching
+the paper's setup; the weight update itself stays FP32 (Sec. 3.1).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import nn, quant_ops as qo
+
+MOMENTUM = 0.9
+
+
+def _xent(logits, y):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+
+
+def _make_ctx(model, ranges, mode_act, mode_grad, wq_on, aq_on, gq_on,
+              eta, seed, cfg, tap):
+    key = jax.random.PRNGKey(seed)
+    return qo.QuantCtx(ranges=ranges, mode_act=mode_act, mode_grad=mode_grad,
+                       wq_on=wq_on, aq_on=aq_on, gq_on=gq_on, eta=eta,
+                       key=key, cfg=cfg, tap=tap)
+
+
+def _grad_sites(model):
+    return [s for s in model.reg.sites if s.kind == "grad"]
+
+
+def _assemble_site_outputs(model, collect: nn.Collector, dummy_grads):
+    """Merge fwd (act) and bwd (grad) site stats into global (Q,2) arrays."""
+    stats, new_ranges = [], []
+    for s in model.reg.sites:
+        if s.kind == "act":
+            stats.append(collect.stats[s.index])
+            new_ranges.append(collect.new_ranges[s.index])
+        else:
+            packed = dummy_grads[s.index]       # (2,2): [stats; new_range]
+            stats.append(packed[0])
+            new_ranges.append(packed[1])
+    return jnp.stack(stats), jnp.stack(new_ranges)
+
+
+def make_train_step(model: nn.Model, batch_size: int, cfg: qo.QuantConfig):
+    """Returns (fn, example_args) for the train graph."""
+    P, S = len(model.reg.params), len(model.reg.state)
+    Q = len(model.reg.sites)
+
+    def fn(*flat):
+        pv = list(flat[:P])
+        ov = list(flat[P:2 * P])
+        sv = list(flat[2 * P:2 * P + S])
+        (x, y, ranges, mode_act, mode_grad, wq_on, aq_on, gq_on, eta, lr,
+         wd, seed) = flat[2 * P + S:]
+
+        ctx = _make_ctx(model, ranges, mode_act, mode_grad, wq_on, aq_on,
+                        gq_on, eta, seed, cfg, qo.grad_tap)
+        dummies = {s.index: jnp.zeros((2, 2), jnp.float32)
+                   for s in _grad_sites(model)}
+
+        def loss_fn(pv, dummies):
+            collect = nn.Collector(Q)
+            logits, new_sv = model.apply(pv, sv, x, ctx, True, dummies,
+                                         collect)
+            loss = _xent(logits, y)
+            return loss, (logits, new_sv, collect)
+
+        (loss, (logits, new_sv, collect)), (grads, dgrads) = (
+            jax.value_and_grad(loss_fn, argnums=(0, 1), has_aux=True)(
+                pv, dummies))
+
+        acc = jnp.mean((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+        stats, new_ranges = _assemble_site_outputs(model, collect, dgrads)
+
+        # SGD + momentum, coupled weight decay, FP32 update (paper Sec. 3.1)
+        new_pv, new_ov = [], []
+        for p, o, g in zip(pv, ov, grads):
+            g = g + wd * p
+            buf = MOMENTUM * o + g
+            new_pv.append(p - lr * buf)
+            new_ov.append(buf)
+
+        return tuple(new_pv) + tuple(new_ov) + tuple(new_sv) + (
+            loss, acc, new_ranges, stats)
+
+    example = _example_params(model) * 2 + _example_state(model) + (
+        jnp.zeros((batch_size, *model.input_shape), jnp.float32),
+        jnp.zeros((batch_size,), jnp.int32),
+        jnp.zeros((Q, 2), jnp.float32),
+        jnp.float32(0), jnp.float32(0), jnp.float32(0), jnp.float32(0),
+        jnp.float32(0), jnp.float32(0.9), jnp.float32(0.1), jnp.float32(0),
+        jnp.int32(0),
+    )
+    return fn, example
+
+
+def make_eval_step(model: nn.Model, batch_size: int, cfg: qo.QuantConfig):
+    P, S = len(model.reg.params), len(model.reg.state)
+    Q = len(model.reg.sites)
+
+    def fn(*flat):
+        pv = list(flat[:P])
+        sv = list(flat[P:P + S])
+        x, y, ranges, mode_act, wq_on, aq_on = flat[P + S:]
+        ctx = _make_ctx(model, ranges, mode_act, jnp.float32(0), wq_on,
+                        aq_on, jnp.float32(0), jnp.float32(0.9), 0, cfg,
+                        qo.grad_tap)
+        collect = nn.Collector(Q)
+        logits, _ = model.apply(pv, sv, x, ctx, False, {}, collect)
+        loss_sum = _xent(logits, y) * x.shape[0]
+        correct = jnp.sum((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+        return loss_sum, correct
+
+    example = _example_params(model) + _example_state(model) + (
+        jnp.zeros((batch_size, *model.input_shape), jnp.float32),
+        jnp.zeros((batch_size,), jnp.int32),
+        jnp.zeros((Q, 2), jnp.float32),
+        jnp.float32(2), jnp.float32(0), jnp.float32(0),
+    )
+    return fn, example
+
+
+def make_dump_step(model: nn.Model, batch_size: int, cfg: qo.QuantConfig):
+    """DSGC support graph: returns the raw FP gradient tensor per grad site
+    (ordered by site index).  Deliberately expensive — this is the
+    full-tensor memory readback the paper's Sec. 6 accounting charges
+    dynamic quantization for."""
+    P, S = len(model.reg.params), len(model.reg.state)
+    Q = len(model.reg.sites)
+    gsites = _grad_sites(model)
+
+    def fn(*flat):
+        pv = list(flat[:P])
+        sv = list(flat[P:P + S])
+        (x, y, ranges, mode_grad, wq_on, aq_on, gq_on, eta, seed) = (
+            flat[P + S:])
+        ctx = _make_ctx(model, ranges, jnp.float32(qo.MODE_HINDSIGHT),
+                        mode_grad, wq_on, aq_on, gq_on, eta, seed, cfg,
+                        qo.dump_tap)
+        dummies = {s.index: jnp.zeros((batch_size, *s.feature_shape),
+                                      jnp.float32) for s in gsites}
+
+        def loss_fn(dummies):
+            collect = nn.Collector(Q)
+            logits, _ = model.apply(pv, sv, x, ctx, True, dummies, collect)
+            return _xent(logits, y)
+
+        dgrads = jax.grad(loss_fn)(dummies)
+        return tuple(dgrads[s.index] for s in gsites)
+
+    example = _example_params(model) + _example_state(model) + (
+        jnp.zeros((batch_size, *model.input_shape), jnp.float32),
+        jnp.zeros((batch_size,), jnp.int32),
+        jnp.zeros((Q, 2), jnp.float32),
+        jnp.float32(2), jnp.float32(0), jnp.float32(0), jnp.float32(0),
+        jnp.float32(0.9), jnp.int32(0),
+    )
+    return fn, example
+
+
+def make_init(model: nn.Model):
+    """Init graph: seed -> params, opt(zeros), state."""
+    def fn(seed):
+        key = jax.random.PRNGKey(seed)
+        pv, sv = nn.init_params(model, key)
+        ov = [jnp.zeros_like(p) for p in pv]
+        return tuple(pv) + tuple(ov) + tuple(sv)
+    return fn, (jnp.int32(0),)
+
+
+def _example_params(model) -> Tuple:
+    return tuple(jnp.zeros(p.shape, jnp.float32) for p in model.reg.params)
+
+
+def _example_state(model) -> Tuple:
+    return tuple(jnp.zeros(p.shape, jnp.float32) for p in model.reg.state)

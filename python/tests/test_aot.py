@@ -1,0 +1,97 @@
+"""Manifest/artifact invariants: the Rust ABI contract, checked from the
+Python side (fast — no tracing, no jit)."""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_all_hlo_files_exist(manifest):
+    for name, m in manifest["models"].items():
+        for gname, g in m["graphs"].items():
+            path = os.path.join(ART, g["file"])
+            assert os.path.exists(path), f"{name}/{gname}: missing {g['file']}"
+            assert os.path.getsize(path) > 1000
+
+
+def test_site_indices_are_dense_and_ordered(manifest):
+    for name, m in manifest["models"].items():
+        idx = [s["index"] for s in m["sites"]]
+        assert idx == list(range(len(idx))), name
+        kinds = {s["kind"] for s in m["sites"]}
+        assert kinds <= {"act", "grad"}
+
+
+def test_train_graph_abi_shape(manifest):
+    """inputs = 2P + S + (x, y, ranges) + 9 scalars; outputs = 2P + S + 4."""
+    for name, m in manifest["models"].items():
+        if "train" not in m["graphs"]:
+            continue
+        g = m["graphs"]["train"]
+        P, S, Q = len(m["params"]), len(m["state"]), len(m["sites"])
+        assert len(g["inputs"]) == 2 * P + S + 3 + 9, name
+        assert len(g["outputs"]) == 2 * P + S + 4, name
+        names = [io["name"] for io in g["inputs"]]
+        ranges = g["inputs"][names.index("ranges")]
+        assert ranges["shape"] == [Q, 2], name
+        stats = g["outputs"][-1]
+        assert stats["name"] == "stats" and stats["shape"] == [Q, 2], name
+        # x matches batch/input_shape, y is i32
+        x = g["inputs"][names.index("x")]
+        assert x["shape"] == [m["batch_size"]] + m["input_shape"], name
+        y = g["inputs"][names.index("y")]
+        assert y["dtype"] == "i32", name
+
+
+def test_dump_graph_matches_grad_sites(manifest):
+    for name, m in manifest["models"].items():
+        if "dump" not in m["graphs"]:
+            continue
+        g = m["graphs"]["dump"]
+        gsites = [s for s in m["sites"] if s["kind"] == "grad"]
+        assert len(g["outputs"]) == len(gsites), name
+        for out, site in zip(g["outputs"], gsites):
+            assert out["shape"] == [m["batch_size"]] + site["feature_shape"], (
+                name, site["name"])
+
+
+def test_param_shapes_consistent_between_init_and_train(manifest):
+    for name, m in manifest["models"].items():
+        if "train" not in m["graphs"] or "init" not in m["graphs"]:
+            continue
+        init_out = m["graphs"]["init"]["outputs"]
+        train_in = m["graphs"]["train"]["inputs"]
+        n_carry = len(init_out)
+        for a, b in zip(init_out, train_in[:n_carry]):
+            assert a["name"] == b["name"], name
+            assert a["shape"] == b["shape"], (name, a["name"])
+
+
+def test_quant_spec_is_paper_w8a8g8(manifest):
+    q = manifest["quant"]
+    assert (q["bits_w"], q["bits_a"], q["bits_g"]) == (8, 8, 8)
+
+
+def test_pallas_placement_matrix(manifest):
+    """The quickstart/e2e artifacts carry the Pallas kernel; the table
+    sweep artifacts use the oracle lowering (DESIGN.md §3)."""
+    m = manifest["models"]
+    assert m["mlp"]["pallas"] == "all"
+    assert m["cnn"]["pallas"] == "all"
+    assert m["resnet_pallas"]["pallas"] == "grad"
+    for name in ("resnet_tiny", "vgg_tiny", "mobilenet_tiny"):
+        assert m[name]["pallas"] == "none"

@@ -1,0 +1,188 @@
+"""L2 model/train-graph tests: shapes, ABI arity, training dynamics and
+estimator-mode equivalences at the whole-graph level."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import models, train, quant_ops as qo
+
+CFG = qo.QuantConfig(use_pallas="none")
+
+
+def build_args(model, fn_ex, bs, *, mode=2.0, enables=(1.0, 1.0, 1.0),
+               lr=0.1, seed=0, ranges_val=1.0):
+    fn, ex = fn_ex
+    P, S, Q = len(model.reg.params), len(model.reg.state), len(model.reg.sites)
+    init_fn, _ = train.make_init(model)
+    carry = jax.jit(init_fn)(jnp.int32(seed))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                          (bs, *model.input_shape))
+    y = jax.random.randint(jax.random.PRNGKey(seed + 2), (bs,), 0,
+                           model.n_classes).astype(jnp.int32)
+    ranges = jnp.tile(jnp.array([[-ranges_val, ranges_val]]), (Q, 1))
+    wq, aq, gq = enables
+    args = tuple(carry) + (x, y, ranges,
+                           jnp.float32(mode), jnp.float32(mode),
+                           jnp.float32(wq), jnp.float32(aq), jnp.float32(gq),
+                           jnp.float32(0.9), jnp.float32(lr),
+                           jnp.float32(1e-4), jnp.int32(seed))
+    return fn, args, (P, S, Q)
+
+
+@pytest.mark.parametrize("name,kw,bs", [
+    ("mlp", dict(), 4),
+    ("cnn", dict(hw=16), 4),
+    ("resnet_tiny", dict(hw=16, widths=(4, 8, 8, 8)), 2),
+    ("vgg_tiny", dict(hw=16, plan=((4,), (8,))), 2),
+    ("mobilenet_tiny", dict(hw=16), 2),
+])
+def test_all_models_train_step_shapes(name, kw, bs):
+    model = models.build(name, **kw)
+    fn_ex = train.make_train_step(model, bs, CFG)
+    fn, args, (P, S, Q) = build_args(model, fn_ex, bs)
+    out = jax.jit(fn)(*args)
+    assert len(out) == 2 * P + S + 4
+    loss, acc = out[2 * P + S], out[2 * P + S + 1]
+    assert jnp.isfinite(loss) and 0.0 <= float(acc) <= 1.0
+    new_ranges, stats = out[2 * P + S + 2], out[2 * P + S + 3]
+    assert new_ranges.shape == (Q, 2) and stats.shape == (Q, 2)
+    # stats rows are ordered (min <= max)
+    assert bool(jnp.all(stats[:, 0] <= stats[:, 1] + 1e-6))
+
+
+def test_param_count_bookkeeping():
+    model = models.build("resnet_tiny", hw=32, widths=(8, 16, 32, 64))
+    total = sum(int(np.prod(p.shape)) for p in model.reg.params)
+    assert model.n_params == total
+    # 4 stages x 2 blocks + stem + fc and BN params all registered
+    assert len(model.reg.params) > 40
+    # every grad site has a matching param layer upstream
+    assert len([s for s in model.reg.sites if s.kind == "grad"]) >= 17
+
+
+def test_training_reduces_loss_mlp():
+    model = models.build("mlp")
+    fn_ex = train.make_train_step(model, 8, CFG)
+    fn, args, (P, S, Q) = build_args(model, fn_ex, 8, lr=0.2)
+    jfn = jax.jit(fn)
+    args = list(args)
+    first = last = None
+    for step in range(40):
+        out = jfn(*args)
+        loss = float(out[2 * P + S])
+        first = loss if first is None else first
+        last = loss
+        # thread state + ranges
+        args[:2 * P + S] = out[:2 * P + S]
+        args[2 * P + S + 2] = out[2 * P + S + 2]
+    assert last < first * 0.7, f"{first} -> {last}"
+
+
+def test_quant_disabled_equals_across_modes():
+    """With all enables off the estimator mode must not affect the step."""
+    model = models.build("mlp")
+    fn_ex = train.make_train_step(model, 4, CFG)
+    outs = []
+    for mode in (0.0, 1.0, 2.0):
+        fn, args, (P, S, Q) = build_args(model, fn_ex, 4,
+                                         mode=mode, enables=(0, 0, 0))
+        outs.append(jax.jit(fn)(*args))
+    # compare params/opt/state/loss/acc and stats; `new_ranges` (index
+    # 2P+S+2) legitimately differs across modes — its state-update rule is
+    # mode-dependent even when quantization is disabled.
+    model0 = models.build("mlp")
+    P, S = len(model0.reg.params), len(model0.reg.state)
+    skip = 2 * P + S + 2
+    for other in (outs[1], outs[2]):
+        for i, (a, b) in enumerate(zip(outs[0], other)):
+            if i == skip:
+                continue
+            np.testing.assert_allclose(a, b, atol=0)
+
+
+def test_quant_enabled_changes_the_math():
+    model = models.build("mlp")
+    fn_ex = train.make_train_step(model, 4, CFG)
+    fn, args_on, (P, S, _) = build_args(model, fn_ex, 4, enables=(1, 1, 1))
+    _, args_off, _ = build_args(model, fn_ex, 4, enables=(0, 0, 0))
+    on = jax.jit(fn)(*args_on)
+    off = jax.jit(fn)(*args_off)
+    diffs = sum(
+        float(jnp.abs(a - b).max()) for a, b in zip(on[:P], off[:P]))
+    assert diffs > 0.0, "quantization had no effect on the update"
+
+
+def test_hindsight_mode_ranges_follow_eqs23():
+    model = models.build("mlp")
+    fn_ex = train.make_train_step(model, 4, CFG)
+    fn, args, (P, S, Q) = build_args(model, fn_ex, 4, mode=2.0)
+    out = jax.jit(fn)(*args)
+    new_ranges = np.asarray(out[2 * P + S + 2])
+    stats = np.asarray(out[2 * P + S + 3])
+    prev = np.tile([[-1.0, 1.0]], (Q, 1)).astype(np.float32)
+    np.testing.assert_allclose(new_ranges, 0.1 * stats + 0.9 * prev,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_eval_graph_counts_correct():
+    model = models.build("mlp")
+    bs = 8
+    fn, ex = train.make_eval_step(model, bs, CFG)
+    init_fn, _ = train.make_init(model)
+    carry = jax.jit(init_fn)(jnp.int32(0))
+    P, S, Q = len(model.reg.params), len(model.reg.state), len(model.reg.sites)
+    x = jax.random.normal(jax.random.PRNGKey(5), (bs, *model.input_shape))
+    y = jnp.zeros((bs,), jnp.int32)
+    ranges = jnp.tile(jnp.array([[-1.0, 1.0]]), (Q, 1))
+    loss_sum, correct = jax.jit(fn)(
+        *carry[:P], *carry[2 * P:], x, y, ranges,
+        jnp.float32(2), jnp.float32(0), jnp.float32(0))
+    assert float(loss_sum) > 0.0
+    assert 0 <= float(correct) <= bs
+
+
+def test_dump_graph_returns_grad_tensors():
+    model = models.build("mlp")
+    bs = 4
+    fn, ex = train.make_dump_step(model, bs, CFG)
+    init_fn, _ = train.make_init(model)
+    carry = jax.jit(init_fn)(jnp.int32(0))
+    P = len(model.reg.params)
+    gsites = [s for s in model.reg.sites if s.kind == "grad"]
+    x = jax.random.normal(jax.random.PRNGKey(6), (bs, *model.input_shape))
+    y = jnp.zeros((bs,), jnp.int32)
+    Q = len(model.reg.sites)
+    ranges = jnp.tile(jnp.array([[-1.0, 1.0]]), (Q, 1))
+    outs = jax.jit(fn)(*carry[:P], x, y, ranges, jnp.float32(2),
+                       jnp.float32(1), jnp.float32(1), jnp.float32(1),
+                       jnp.float32(0.9), jnp.int32(0))
+    assert len(outs) == len(gsites)
+    for g, site in zip(outs, gsites):
+        assert g.shape == (bs, *site.feature_shape)
+        assert bool(jnp.any(g != 0.0)), "gradient tensor is all zeros"
+
+
+def test_batchnorm_state_updates_in_train_only():
+    model = models.build("cnn", hw=16)
+    fn_ex = train.make_train_step(model, 4, CFG)
+    fn, args, (P, S, Q) = build_args(model, fn_ex, 4)
+    out = jax.jit(fn)(*args)
+    state_in = args[2 * P:2 * P + S]
+    state_out = out[2 * P:2 * P + S]
+    moved = sum(float(jnp.abs(a - b).max()) for a, b in zip(state_in, state_out))
+    assert moved > 0.0, "BN running stats did not update during training"
+
+
+def test_stochastic_rounding_seed_sensitivity():
+    """Different seeds give different quantized-gradient trajectories."""
+    model = models.build("mlp")
+    fn_ex = train.make_train_step(model, 4, CFG)
+    fn, args1, (P, S, _) = build_args(model, fn_ex, 4)
+    args2 = list(args1)
+    args2[-1] = jnp.int32(99)  # different stochastic-rounding seed
+    o1 = jax.jit(fn)(*args1)
+    o2 = jax.jit(fn)(*args2)
+    diff = sum(float(jnp.abs(a - b).max()) for a, b in zip(o1[:P], o2[:P]))
+    assert diff > 0.0

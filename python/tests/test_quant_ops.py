@@ -1,0 +1,210 @@
+"""L2 quantization-op semantics: estimator mode switching, STE, gradient
+taps, and the dummy-cotangent statistics channel."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import quant_ops as qo
+from compile.kernels import ref
+
+CFG = qo.QuantConfig(use_pallas="none")
+CFG_PALLAS = qo.QuantConfig(use_pallas="all")
+
+
+def make_ctx(ranges, mode_act=2, mode_grad=2, aq=1.0, gq=1.0, wq=1.0,
+             eta=0.9, seed=0, cfg=CFG):
+    return qo.QuantCtx(
+        ranges=jnp.asarray(ranges, jnp.float32),
+        mode_act=jnp.float32(mode_act),
+        mode_grad=jnp.float32(mode_grad),
+        wq_on=jnp.float32(wq),
+        aq_on=jnp.float32(aq),
+        gq_on=jnp.float32(gq),
+        eta=jnp.float32(eta),
+        key=jax.random.PRNGKey(seed),
+        cfg=cfg,
+        tap=qo.grad_tap,
+    )
+
+
+# ---------------------------------------------------------------------------
+# act_quant: mode semantics
+# ---------------------------------------------------------------------------
+
+def test_act_quant_hindsight_uses_prev_ranges():
+    """Static mode quantizes with the *input* ranges: values beyond them
+    saturate even though current stats are wider."""
+    x = jnp.array([[-5.0, 0.0, 5.0]])
+    ctx = make_ctx([[-1.0, 1.0]], mode_act=qo.MODE_HINDSIGHT)
+    y, stats, new_range = qo.act_quant(x, 0, ctx)
+    assert float(y.max()) <= 1.01  # saturated at the stale range
+    np.testing.assert_allclose(stats, [-5.0, 5.0])  # stats see the truth
+    # eqs. 2-3: new = 0.1 * stats + 0.9 * prev
+    np.testing.assert_allclose(new_range, [0.1 * -5.0 + 0.9 * -1.0,
+                                           0.1 * 5.0 + 0.9 * 1.0], rtol=1e-5)
+
+
+def test_act_quant_current_uses_current_stats():
+    x = jnp.array([[-5.0, 0.0, 5.0]])
+    ctx = make_ctx([[-1.0, 1.0]], mode_act=qo.MODE_CURRENT)
+    y, _, new_range = qo.act_quant(x, 0, ctx)
+    assert float(jnp.abs(y - x).max()) < 0.05  # no saturation
+    np.testing.assert_allclose(new_range, [-5.0, 5.0])
+
+
+def test_act_quant_running_blends_before_quantizing():
+    x = jnp.array([[-5.0, 0.0, 5.0]])
+    ctx = make_ctx([[-1.0, 1.0]], mode_act=qo.MODE_RUNNING, eta=0.5)
+    y, _, new_range = qo.act_quant(x, 0, ctx)
+    # blended range = 0.5*stats + 0.5*prev = [-3, 3]: mild saturation
+    assert 2.9 <= float(y.max()) <= 3.05
+    np.testing.assert_allclose(new_range, [-3.0, 3.0], rtol=1e-6)
+
+
+def test_act_quant_disabled_is_identity():
+    x = jnp.array([[-5.0, 0.2, 5.0]])
+    ctx = make_ctx([[-1.0, 1.0]], aq=0.0)
+    y, _, _ = qo.act_quant(x, 0, ctx)
+    np.testing.assert_allclose(y, x)
+
+
+def test_act_quant_straight_through_gradient():
+    def f(x):
+        ctx = make_ctx([[-1.0, 1.0]])
+        y, _, _ = qo.act_quant(x, 0, ctx)
+        return jnp.sum(y * 3.0)
+
+    g = jax.grad(f)(jnp.ones((2, 2)) * 0.3)
+    np.testing.assert_allclose(g, 3.0 * jnp.ones((2, 2)))  # STE: identity
+
+
+# ---------------------------------------------------------------------------
+# weight_quant
+# ---------------------------------------------------------------------------
+
+def test_weight_quant_current_minmax_ste():
+    w = jnp.array([-0.31, 0.17, 0.49])
+    ctx = make_ctx([[0.0, 0.0]])
+    wq = qo.weight_quant(w, ctx)
+    wq_ref = ref.fake_quant(w, w.min(), w.max(), bits=8)
+    np.testing.assert_allclose(wq, wq_ref, atol=1e-6)
+    g = jax.grad(lambda w: jnp.sum(qo.weight_quant(w, ctx)))(w)
+    np.testing.assert_allclose(g, jnp.ones(3))
+
+
+def test_weight_quant_gated_off():
+    w = jnp.array([-0.31, 0.17, 0.49])
+    ctx = make_ctx([[0.0, 0.0]], wq=0.0)
+    np.testing.assert_allclose(qo.weight_quant(w, ctx), w)
+
+
+# ---------------------------------------------------------------------------
+# grad_tap: backward quantization + dummy-cotangent stats channel
+# ---------------------------------------------------------------------------
+
+def tap_loss(site, ctx):
+    """loss = 0.5*sum(tap(x)^2) so dL/dx (pre-tap) = quantize(x)."""
+    def f(x, dummy):
+        y = qo.grad_tap(x, dummy, site, ctx)
+        return 0.5 * jnp.sum(y * y)
+    return f
+
+
+def test_grad_tap_quantizes_cotangent():
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 8)) * 2
+    ctx = make_ctx([[-3.0, 3.0]], mode_grad=qo.MODE_HINDSIGHT, seed=5)
+    dummy = jnp.zeros((2, 2))
+    gx, gd = jax.grad(tap_loss(0, ctx), argnums=(0, 1))(x, dummy)
+    # cotangent is x itself quantized stochastically on the [-3,3] grid
+    noise = jax.random.uniform(jax.random.fold_in(ctx.key, 0), x.shape)
+    gx_ref = ref.fake_quant(x, jnp.float32(-3.0), jnp.float32(3.0), bits=8,
+                            noise=noise)
+    np.testing.assert_allclose(gx, gx_ref, atol=1e-5)
+    # dummy cotangent row 0 = stats (minmax of raw gradient = x)
+    np.testing.assert_allclose(gd[0], [x.min(), x.max()], rtol=1e-6)
+    # row 1 = EMA state update
+    np.testing.assert_allclose(
+        gd[1],
+        ref.ema_update(jnp.array([-3.0, 3.0]), gd[0], 0.9),
+        rtol=1e-5,
+    )
+
+
+def test_grad_tap_mode_current_no_saturation():
+    x = jax.random.normal(jax.random.PRNGKey(2), (16,)) * 10
+    ctx = make_ctx([[-0.1, 0.1]], mode_grad=qo.MODE_CURRENT)
+    gx, _ = jax.grad(tap_loss(0, ctx), argnums=(0, 1))(x, jnp.zeros((2, 2)))
+    # current mode re-ranges: max error is one step of the wide grid
+    step = (float(x.max()) - min(float(x.min()), 0.0)) / 255
+    assert float(jnp.abs(gx - x).max()) <= step * 1.1 + 1e-5
+
+
+def test_grad_tap_mode_hindsight_saturates_on_stale_range():
+    x = jnp.array([10.0, -10.0, 0.5])
+    ctx = make_ctx([[-1.0, 1.0]], mode_grad=qo.MODE_HINDSIGHT)
+    gx, _ = jax.grad(tap_loss(0, ctx), argnums=(0, 1))(x, jnp.zeros((2, 2)))
+    assert float(jnp.abs(gx).max()) <= 1.01
+
+
+def test_grad_tap_disabled_passes_raw_gradient():
+    x = jnp.array([10.0, -10.0, 0.5])
+    ctx = make_ctx([[-1.0, 1.0]], gq=0.0)
+    gx, _ = jax.grad(tap_loss(0, ctx), argnums=(0, 1))(x, jnp.zeros((2, 2)))
+    np.testing.assert_allclose(gx, x)
+
+
+def test_grad_tap_forward_is_identity():
+    x = jnp.arange(6.0).reshape(2, 3)
+    ctx = make_ctx([[-1.0, 1.0]])
+    y = qo.grad_tap(x, jnp.zeros((2, 2)), 0, ctx)
+    np.testing.assert_allclose(y, x)
+
+
+def test_grad_tap_stochastic_rounding_unbiased():
+    x = jnp.full((4,), 0.31)
+    acc = np.zeros(4)
+    n = 120
+    for seed in range(n):
+        ctx = make_ctx([[0.0, 1.0]], mode_grad=qo.MODE_HINDSIGHT, seed=seed,
+                       cfg=qo.QuantConfig(bits_g=3, use_pallas="none"))
+        gx, _ = jax.grad(tap_loss(0, ctx), argnums=(0, 1))(x, jnp.zeros((2, 2)))
+        acc += np.asarray(gx)
+    np.testing.assert_allclose(acc / n, np.asarray(x), atol=0.04)
+
+
+# ---------------------------------------------------------------------------
+# dump_tap: DSGC's raw-gradient channel
+# ---------------------------------------------------------------------------
+
+def test_dump_tap_returns_raw_gradient():
+    x = jax.random.normal(jax.random.PRNGKey(3), (5, 4)) * 7
+    ctx = make_ctx([[-1.0, 1.0]], mode_grad=qo.MODE_HINDSIGHT)
+
+    def f(x, dummy):
+        y = qo.dump_tap(x, dummy, 0, ctx)
+        return 0.5 * jnp.sum(y * y)
+
+    gx, gd = jax.grad(f, argnums=(0, 1))(x, jnp.zeros_like(x))
+    np.testing.assert_allclose(gd, x, rtol=1e-6)  # raw (pre-quant) gradient
+    assert float(jnp.abs(gx).max()) <= 1.01  # propagated path quantized
+
+
+# ---------------------------------------------------------------------------
+# pallas/jnp path equivalence inside the ops
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", [0, 1, 2])
+def test_act_quant_pallas_matches_jnp(mode):
+    x = jax.random.normal(jax.random.PRNGKey(4), (32, 16)) * 2
+    for cfg in (CFG, CFG_PALLAS):
+        ctx = make_ctx([[-2.0, 2.0]], mode_act=mode, cfg=cfg)
+        y, s, r = qo.act_quant(x, 0, ctx)
+        if cfg is CFG:
+            y0, s0, r0 = y, s, r
+    np.testing.assert_allclose(y, y0, atol=1e-5)
+    np.testing.assert_allclose(s, s0, rtol=1e-6)
+    np.testing.assert_allclose(r, r0, rtol=1e-6)

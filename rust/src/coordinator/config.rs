@@ -1,0 +1,247 @@
+//! Training configuration, mirroring the paper's Sec. 5 setup.
+
+use anyhow::{bail, Result};
+
+/// Range-estimation method for a tensor class (paper Sec. 5.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Estimator {
+    /// no quantization of this tensor class (FP32 baseline rows)
+    Fp32,
+    /// current min-max — dynamic, ranges from the current tensor
+    Current,
+    /// running min-max — dynamic, EMA blended including current stats
+    Running,
+    /// in-hindsight min-max — static, the paper's method (eqs. 2-3)
+    Hindsight,
+    /// direction-sensitive gradient clipping — static between periodic
+    /// golden-section searches (gradients only in the paper)
+    Dsgc,
+}
+
+impl Estimator {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "fp32" => Self::Fp32,
+            "current" => Self::Current,
+            "running" => Self::Running,
+            "hindsight" => Self::Hindsight,
+            "dsgc" => Self::Dsgc,
+            other => bail!(
+                "unknown estimator '{other}' \
+                 (fp32|current|running|hindsight|dsgc)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Fp32 => "FP32",
+            Self::Current => "Current min-max",
+            Self::Running => "Running min-max",
+            Self::Hindsight => "In-hindsight min-max",
+            Self::Dsgc => "DSGC",
+        }
+    }
+
+    /// Graph `mode` scalar (see `python/compile/quant_ops.py`).
+    /// DSGC runs the graph in static (hindsight) mode; the coordinator
+    /// owns its range state.  FP32's mode is irrelevant (enable is off) —
+    /// static keeps the dead branch cheapest.
+    pub fn mode(&self) -> f32 {
+        match self {
+            Self::Current => 0.0,
+            Self::Running => 1.0,
+            Self::Fp32 | Self::Hindsight | Self::Dsgc => 2.0,
+        }
+    }
+
+    /// Whether this estimator quantizes its tensor class at all.
+    pub fn enabled(&self) -> bool {
+        !matches!(self, Self::Fp32)
+    }
+
+    /// Is the step-path quantization static (paper Table 1 "Static" col)?
+    pub fn is_static(&self) -> bool {
+        matches!(self, Self::Hindsight | Self::Dsgc | Self::Fp32)
+    }
+}
+
+/// Learning-rate schedule (paper: step decay for ResNet/VGG, cosine for
+/// MobileNetV2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// /10 at 1/3 and 2/3 of training (the paper's 90-epoch recipe scaled)
+    Step,
+    /// cosine annealing to `final_lr`
+    Cosine,
+    Constant,
+}
+
+impl Schedule {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "step" => Self::Step,
+            "cosine" => Self::Cosine,
+            "constant" => Self::Constant,
+            other => bail!("unknown schedule '{other}' (step|cosine|constant)"),
+        })
+    }
+
+    /// LR at `step` of `total`.
+    pub fn lr_at(&self, base: f32, final_lr: f32, step: u64, total: u64) -> f32 {
+        let frac = step as f32 / total.max(1) as f32;
+        match self {
+            Self::Constant => base,
+            Self::Step => {
+                if frac < 1.0 / 3.0 {
+                    base
+                } else if frac < 2.0 / 3.0 {
+                    base * 0.1
+                } else {
+                    base * 0.01
+                }
+            }
+            Self::Cosine => {
+                final_lr
+                    + 0.5 * (base - final_lr) * (1.0 + (std::f32::consts::PI * frac).cos())
+            }
+        }
+    }
+}
+
+/// Full training configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub model: String,
+    pub steps: u64,
+    pub grad_est: Estimator,
+    pub act_est: Estimator,
+    /// quantize weights (current min-max, per the paper)
+    pub quant_weights: bool,
+    /// EMA momentum for running/in-hindsight (paper: 0.9)
+    pub eta: f32,
+    pub lr: f32,
+    pub final_lr: f32,
+    pub schedule: Schedule,
+    pub weight_decay: f32,
+    /// calibration batches before training (paper Sec. 5.2)
+    pub calib_batches: usize,
+    /// DSGC update interval in steps (paper: 100)
+    pub dsgc_period: u64,
+    /// golden-section refinement iterations per DSGC update
+    pub dsgc_iters: u32,
+    pub seed: u64,
+    pub n_train: usize,
+    pub n_val: usize,
+    pub eval_every: u64,
+    pub log_every: u64,
+}
+
+impl TrainConfig {
+    /// Paper-shaped defaults at testbed scale (see DESIGN.md §3).
+    pub fn new(model: &str) -> Self {
+        Self {
+            model: model.to_string(),
+            steps: 300,
+            grad_est: Estimator::Hindsight,
+            act_est: Estimator::Hindsight,
+            quant_weights: true,
+            eta: 0.9,
+            lr: 0.05,
+            final_lr: 1e-5,
+            schedule: Schedule::Step,
+            weight_decay: 1e-4,
+            calib_batches: 4,
+            dsgc_period: 100,
+            dsgc_iters: 10,
+            seed: 0,
+            n_train: 4096,
+            n_val: 512,
+            eval_every: 0, // 0 => only at the end
+            log_every: 10,
+        }
+    }
+
+    /// Configure the paper's "fully quantized" W8/A8/G8 setting.
+    pub fn fully_quantized(mut self, est: Estimator) -> Self {
+        self.grad_est = est;
+        self.act_est = est;
+        self.quant_weights = est.enabled();
+        self
+    }
+
+    /// Gradient-quantization-only study (paper Table 1).
+    pub fn grad_only(mut self, est: Estimator) -> Self {
+        self.grad_est = est;
+        self.act_est = Estimator::Fp32;
+        self.quant_weights = false;
+        self
+    }
+
+    /// Activation-quantization-only study (paper Table 2).
+    pub fn act_only(mut self, est: Estimator) -> Self {
+        self.act_est = est;
+        self.grad_est = Estimator::Fp32;
+        self.quant_weights = false;
+        self
+    }
+
+    pub fn tag(&self) -> String {
+        format!(
+            "{}-g:{}-a:{}-w:{}-s{}",
+            self.model,
+            self.grad_est.name(),
+            self.act_est.name(),
+            self.quant_weights,
+            self.seed
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn estimator_parse_and_props() {
+        assert_eq!(Estimator::parse("hindsight").unwrap(), Estimator::Hindsight);
+        assert!(Estimator::parse("bogus").is_err());
+        assert!(Estimator::Hindsight.is_static());
+        assert!(!Estimator::Current.is_static());
+        assert!(Estimator::Dsgc.is_static());
+        assert!(!Estimator::Fp32.enabled());
+        assert_eq!(Estimator::Current.mode(), 0.0);
+        assert_eq!(Estimator::Running.mode(), 1.0);
+        assert_eq!(Estimator::Hindsight.mode(), 2.0);
+    }
+
+    #[test]
+    fn schedules() {
+        let s = Schedule::Step;
+        assert_eq!(s.lr_at(0.1, 0.0, 0, 90), 0.1);
+        assert!((s.lr_at(0.1, 0.0, 45, 90) - 0.01).abs() < 1e-7);
+        assert!((s.lr_at(0.1, 0.0, 89, 90) - 0.001).abs() < 1e-7);
+        let c = Schedule::Cosine;
+        assert!((c.lr_at(0.1, 1e-5, 0, 100) - 0.1).abs() < 1e-6);
+        assert!(c.lr_at(0.1, 1e-5, 99, 100) < 0.001);
+        // monotone decreasing
+        let mut prev = f32::INFINITY;
+        for step in 0..100 {
+            let lr = c.lr_at(0.1, 1e-5, step, 100);
+            assert!(lr <= prev);
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn config_presets() {
+        let c = TrainConfig::new("resnet_tiny").grad_only(Estimator::Dsgc);
+        assert_eq!(c.grad_est, Estimator::Dsgc);
+        assert_eq!(c.act_est, Estimator::Fp32);
+        assert!(!c.quant_weights);
+        let f = TrainConfig::new("cnn").fully_quantized(Estimator::Running);
+        assert!(f.quant_weights);
+        let fp = TrainConfig::new("cnn").fully_quantized(Estimator::Fp32);
+        assert!(!fp.quant_weights);
+    }
+}

@@ -1,0 +1,21 @@
+//! Training coordination — the paper's contribution as runtime logic.
+//!
+//! * [`ranges`] — the range-estimation state machine: per-quantizer range
+//!   state, estimator semantics (FP32 / current / running / in-hindsight /
+//!   DSGC), and the graph-ABI scalar encoding.
+//! * [`config`] — training configuration (mirrors the paper's Sec. 5
+//!   experimental setup).
+//! * [`trainer`] — the step loop: batch marshalling, the compiled train /
+//!   eval / dump graphs, calibration, LR schedules, metrics.
+//! * [`sweep`] — multi-seed, multi-estimator sweeps producing the paper's
+//!   table rows (mean ± std over seeds).
+
+pub mod config;
+pub mod ranges;
+pub mod sweep;
+pub mod trainer;
+
+pub use config::{Estimator, Schedule, TrainConfig};
+pub use ranges::RangeManager;
+pub use sweep::{sweep_row, SweepOutcome};
+pub use trainer::Trainer;

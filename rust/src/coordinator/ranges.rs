@@ -1,0 +1,290 @@
+//! The range-estimation state machine (paper Sec. 4, realized).
+//!
+//! The compiled graph takes the (Q, 2) range state as an *input* and
+//! returns two (Q, 2) tensors: `new_ranges` (the state-update each
+//! estimator mode prescribes, computed in-graph) and `stats` (the raw
+//! accumulator min/max of the step — paper Fig. 3).  This module owns
+//! what happens *between* steps:
+//!
+//! * current / running / hindsight rows adopt `new_ranges` verbatim
+//!   (the graph applied exactly eqs. 2-3 / the dynamic rules);
+//! * DSGC gradient rows **ignore** the EMA update and hold their last
+//!   searched range until the next periodic golden-section search — the
+//!   hybrid static scheme of the paper's Sec. 5.1;
+//! * FP32 rows keep whatever they had (quantization disabled).
+
+use crate::coordinator::config::Estimator;
+use crate::runtime::manifest::{ModelSpec, SiteKind};
+use crate::runtime::tensor::Tensor;
+
+/// Per-quantizer range state + estimator semantics.
+#[derive(Debug, Clone)]
+pub struct RangeManager {
+    /// (Q, 2) rows: [qmin, qmax] per site, indexed by site index
+    ranges: Vec<[f32; 2]>,
+    kinds: Vec<SiteKind>,
+    pub act_est: Estimator,
+    pub grad_est: Estimator,
+    /// last raw stats observed (diagnostics, saturation tracking)
+    last_stats: Vec<[f32; 2]>,
+    calibrated: bool,
+}
+
+impl RangeManager {
+    pub fn new(model: &ModelSpec, act_est: Estimator, grad_est: Estimator) -> Self {
+        let kinds = model.sites.iter().map(|s| s.kind).collect::<Vec<_>>();
+        // neutral init: a generous symmetric range; calibration and/or the
+        // first-step stats (paper: q^0 = minmax(G^0)) replace it
+        let ranges = vec![[-1.0, 1.0]; kinds.len()];
+        Self {
+            last_stats: vec![[0.0, 0.0]; kinds.len()],
+            ranges,
+            kinds,
+            act_est,
+            grad_est,
+            calibrated: false,
+        }
+    }
+
+    pub fn n_sites(&self) -> usize {
+        self.kinds.len()
+    }
+
+    pub fn estimator_for(&self, i: usize) -> Estimator {
+        match self.kinds[i] {
+            SiteKind::Act => self.act_est,
+            SiteKind::Grad => self.grad_est,
+        }
+    }
+
+    /// The (Q, 2) tensor fed to the graph this step.
+    pub fn as_tensor(&self) -> Tensor {
+        let mut data = Vec::with_capacity(self.ranges.len() * 2);
+        for r in &self.ranges {
+            data.extend_from_slice(r);
+        }
+        Tensor::from_f32(&[self.ranges.len(), 2], data)
+    }
+
+    pub fn row(&self, i: usize) -> [f32; 2] {
+        self.ranges[i]
+    }
+
+    pub fn set_row(&mut self, i: usize, r: [f32; 2]) {
+        self.ranges[i] = r;
+    }
+
+    pub fn last_stats(&self, i: usize) -> [f32; 2] {
+        self.last_stats[i]
+    }
+
+    /// Scalar ABI values for the train graph.
+    pub fn mode_act(&self) -> f32 {
+        self.act_est.mode()
+    }
+
+    pub fn mode_grad(&self) -> f32 {
+        self.grad_est.mode()
+    }
+
+    pub fn aq_on(&self) -> f32 {
+        self.act_est.enabled() as u32 as f32
+    }
+
+    pub fn gq_on(&self) -> f32 {
+        self.grad_est.enabled() as u32 as f32
+    }
+
+    /// Absorb one training step's outputs.
+    ///
+    /// `first_step` implements the paper's initialization
+    /// `q^0 = minmax(G^0)` for sites that were never calibrated.
+    pub fn update(&mut self, new_ranges: &Tensor, stats: &Tensor, first_step: bool) {
+        let nr = new_ranges.as_f32().expect("new_ranges f32");
+        let st = stats.as_f32().expect("stats f32");
+        assert_eq!(nr.len(), self.ranges.len() * 2);
+        for i in 0..self.ranges.len() {
+            self.last_stats[i] = [st[2 * i], st[2 * i + 1]];
+            let est = self.estimator_for(i);
+            match est {
+                Estimator::Fp32 => {}
+                Estimator::Dsgc => {
+                    // hold the searched range; but bootstrap from the first
+                    // observation so training can start before search #1
+                    if first_step && !self.calibrated {
+                        self.ranges[i] = self.last_stats[i];
+                    }
+                }
+                _ => {
+                    if first_step && !self.calibrated {
+                        // q^0 = minmax of the first batch (paper Sec. 4.1)
+                        self.ranges[i] = self.last_stats[i];
+                    } else {
+                        self.ranges[i] = [nr[2 * i], nr[2 * i + 1]];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Absorb one *calibration* batch (paper Sec. 5.2: feed a few batches
+    /// through the network before training to set activation ranges).
+    /// First batch seeds the ranges with raw stats, later batches EMA in.
+    pub fn calibrate(&mut self, stats: &Tensor, eta: f32) {
+        let st = stats.as_f32().expect("stats f32");
+        for i in 0..self.ranges.len() {
+            let s = [st[2 * i], st[2 * i + 1]];
+            self.ranges[i] = if self.calibrated {
+                crate::quant::ema_update(self.ranges[i], s, eta)
+            } else {
+                s
+            };
+            self.last_stats[i] = s;
+        }
+        self.calibrated = true;
+    }
+
+    pub fn is_calibrated(&self) -> bool {
+        self.calibrated
+    }
+
+    /// Site indices that DSGC must search (gradient sites, when the grad
+    /// estimator is DSGC).
+    pub fn dsgc_sites(&self) -> Vec<usize> {
+        if self.grad_est != Estimator::Dsgc {
+            return vec![];
+        }
+        (0..self.kinds.len())
+            .filter(|&i| self.kinds[i] == SiteKind::Grad)
+            .collect()
+    }
+
+    /// Mean saturation headroom diagnostic: how much of the last stats
+    /// interval the current ranges cover (1.0 = fully covered).
+    pub fn coverage(&self) -> f64 {
+        let mut acc = 0.0;
+        let mut n = 0;
+        for i in 0..self.ranges.len() {
+            let w_stats = self.last_stats[i][1] - self.last_stats[i][0];
+            if w_stats <= 0.0 {
+                continue;
+            }
+            let lo = self.ranges[i][0].max(self.last_stats[i][0]);
+            let hi = self.ranges[i][1].min(self.last_stats[i][1]);
+            acc += ((hi - lo).max(0.0) / w_stats) as f64;
+            n += 1;
+        }
+        if n == 0 {
+            1.0
+        } else {
+            acc / n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{LeafSpec, ModelSpec, SiteSpec};
+
+    fn model(n_act: usize, n_grad: usize) -> ModelSpec {
+        let mut sites = Vec::new();
+        for i in 0..n_act + n_grad {
+            sites.push(SiteSpec {
+                index: i,
+                name: format!("s{i}"),
+                kind: if i < n_act { SiteKind::Act } else { SiteKind::Grad },
+                feature_shape: vec![4],
+            });
+        }
+        ModelSpec {
+            name: "m".into(),
+            batch_size: 2,
+            input_shape: vec![2, 2, 3],
+            n_classes: 4,
+            n_params: 10,
+            pallas: "none".into(),
+            params: vec![LeafSpec { name: "w".into(), shape: vec![2] }],
+            state: vec![],
+            sites,
+            graphs: vec![],
+        }
+    }
+
+    fn t(q: usize, vals: &[f32]) -> Tensor {
+        Tensor::from_f32(&[q, 2], vals.to_vec())
+    }
+
+    #[test]
+    fn first_step_adopts_raw_stats() {
+        let m = model(1, 1);
+        let mut rm = RangeManager::new(&m, Estimator::Hindsight, Estimator::Hindsight);
+        let nr = t(2, &[-0.5, 0.5, -0.1, 0.1]);
+        let st = t(2, &[-2.0, 3.0, -4.0, 5.0]);
+        rm.update(&nr, &st, true);
+        assert_eq!(rm.row(0), [-2.0, 3.0]);
+        assert_eq!(rm.row(1), [-4.0, 5.0]);
+        // subsequent steps adopt the graph's EMA output
+        rm.update(&nr, &st, false);
+        assert_eq!(rm.row(0), [-0.5, 0.5]);
+    }
+
+    #[test]
+    fn fp32_rows_frozen() {
+        let m = model(1, 1);
+        let mut rm = RangeManager::new(&m, Estimator::Fp32, Estimator::Hindsight);
+        let before = rm.row(0);
+        rm.update(&t(2, &[9.0, 9.0, -1.0, 1.0]), &t(2, &[0.0, 1.0, 0.0, 1.0]), false);
+        assert_eq!(rm.row(0), before); // act site untouched (FP32)
+        assert_eq!(rm.row(1), [-1.0, 1.0]); // grad site updated
+        assert_eq!(rm.aq_on(), 0.0);
+        assert_eq!(rm.gq_on(), 1.0);
+    }
+
+    #[test]
+    fn dsgc_rows_held_between_searches() {
+        let m = model(1, 2);
+        let mut rm = RangeManager::new(&m, Estimator::Current, Estimator::Dsgc);
+        rm.set_row(1, [-7.0, 7.0]); // pretend a search happened
+        rm.calibrate(&t(3, &[0.0; 6]), 0.9); // mark calibrated
+        rm.set_row(1, [-7.0, 7.0]);
+        rm.update(
+            &t(3, &[0.0, 1.0, -1.0, 1.0, -1.0, 1.0]),
+            &t(3, &[0.0, 2.0, -2.0, 2.0, -2.0, 2.0]),
+            false,
+        );
+        assert_eq!(rm.row(1), [-7.0, 7.0]); // held
+        assert_eq!(rm.dsgc_sites(), vec![1, 2]);
+        // act sites are not DSGC sites
+        let rm2 = RangeManager::new(&m, Estimator::Dsgc, Estimator::Current);
+        assert!(rm2.dsgc_sites().is_empty());
+    }
+
+    #[test]
+    fn calibration_seeds_then_emas() {
+        let m = model(2, 0);
+        let mut rm = RangeManager::new(&m, Estimator::Hindsight, Estimator::Fp32);
+        rm.calibrate(&t(2, &[-1.0, 1.0, -2.0, 2.0]), 0.5);
+        assert_eq!(rm.row(0), [-1.0, 1.0]);
+        rm.calibrate(&t(2, &[-3.0, 3.0, -2.0, 2.0]), 0.5);
+        assert_eq!(rm.row(0), [-2.0, 2.0]); // 0.5 blend
+        assert!(rm.is_calibrated());
+    }
+
+    #[test]
+    fn tensor_roundtrip_and_coverage() {
+        let m = model(1, 0);
+        let mut rm = RangeManager::new(&m, Estimator::Hindsight, Estimator::Fp32);
+        rm.set_row(0, [-1.0, 1.0]);
+        let t = rm.as_tensor();
+        assert_eq!(t.shape, vec![1, 2]);
+        assert_eq!(t.as_f32().unwrap(), &[-1.0, 1.0]);
+        // stats wider than range => coverage < 1
+        rm.update(
+            &Tensor::from_f32(&[1, 2], vec![-1.0, 1.0]),
+            &Tensor::from_f32(&[1, 2], vec![-2.0, 2.0]),
+            false,
+        );
+        assert!(rm.coverage() < 1.0);
+    }
+}

@@ -1,0 +1,79 @@
+//! Multi-seed sweeps: run one configuration across seeds and aggregate
+//! into the paper's "mean ± std" table rows.  A whole estimator sweep
+//! shares a single Engine, so each model compiles exactly once.
+
+use anyhow::Result;
+
+use crate::coordinator::config::TrainConfig;
+use crate::coordinator::trainer::Trainer;
+use crate::metrics::{RunRecord, SeedAggregate};
+use crate::runtime::engine::Engine;
+
+/// Aggregated outcome of one table row.
+#[derive(Debug, Clone)]
+pub struct SweepOutcome {
+    pub label: String,
+    pub agg: SeedAggregate,
+    pub runs: Vec<RunRecord>,
+    /// mean seconds per training step (perf reporting)
+    pub sec_per_step: f64,
+}
+
+impl SweepOutcome {
+    pub fn cell(&self) -> String {
+        self.agg.cell()
+    }
+}
+
+/// Run `cfg` across `seeds`, returning the aggregate row.
+pub fn sweep_row(
+    engine: &Engine,
+    base: &TrainConfig,
+    label: &str,
+    seeds: &[u64],
+) -> Result<SweepOutcome> {
+    let mut runs = Vec::with_capacity(seeds.len());
+    for &seed in seeds {
+        let mut cfg = base.clone();
+        cfg.seed = seed;
+        log::info!("[sweep:{label}] seed {seed} ...");
+        let rec = Trainer::new(engine, cfg)?.run()?;
+        runs.push(rec);
+    }
+    let agg = SeedAggregate::from_runs(label, &runs);
+    let total_steps: f64 = runs.iter().map(|r| r.steps.len() as f64).sum();
+    let total_secs: f64 = runs.iter().map(|r| r.train_seconds).sum();
+    Ok(SweepOutcome {
+        label: label.to_string(),
+        agg,
+        runs,
+        sec_per_step: total_secs / total_steps.max(1.0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::Estimator;
+    use crate::runtime::manifest::Manifest;
+
+    #[test]
+    fn sweep_aggregates_across_seeds() {
+        if !Manifest::default_dir().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let engine = Engine::new().unwrap();
+        let mut cfg = TrainConfig::new("mlp").fully_quantized(Estimator::Hindsight);
+        cfg.steps = 6;
+        cfg.n_train = 64;
+        cfg.n_val = 32;
+        cfg.calib_batches = 1;
+        let out = sweep_row(&engine, &cfg, "hindsight", &[1, 2]).unwrap();
+        assert_eq!(out.runs.len(), 2);
+        assert!(out.agg.accs.iter().all(|a| a.is_finite()));
+        assert!(out.sec_per_step > 0.0);
+        // one engine, one train-graph compile across both seeds
+        assert!(engine.stats().compiles <= 3); // init + train + eval
+    }
+}

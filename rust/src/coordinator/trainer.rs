@@ -1,0 +1,461 @@
+//! The training driver: marshals batches into the compiled train graph,
+//! threads the range state between steps, runs calibration, periodic
+//! DSGC searches, LR schedules, evaluation and metrics.
+//!
+//! Everything on the step path is Rust + one compiled XLA executable;
+//! the per-step coordinator work is a handful of slice copies and the
+//! O(Q) range-state update (paper Sec. 4: "minimal hardware support").
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::config::{Estimator, TrainConfig};
+use crate::coordinator::ranges::RangeManager;
+use crate::data::{Batcher, SynthSpec, SynthVision};
+use crate::metrics::RunRecord;
+use crate::quant::dsgc;
+use crate::runtime::engine::{Engine, Graph};
+use crate::runtime::manifest::ModelSpec;
+use crate::runtime::tensor::Tensor;
+
+/// One model + one configuration training session.
+pub struct Trainer<'e> {
+    engine: &'e Engine,
+    pub model: ModelSpec,
+    pub cfg: TrainConfig,
+    g_train: Graph,
+    g_eval: Option<Graph>,
+    g_dump: Option<Graph>,
+    /// params ++ opt ++ state, in manifest order (graph I/O prefix)
+    pub carry: Vec<Tensor>,
+    pub ranges: RangeManager,
+    data: SynthVision,
+    batcher: Batcher,
+    // preallocated batch staging
+    x_buf: Tensor,
+    y_buf: Tensor,
+    pub record: RunRecord,
+    step: u64,
+    /// cumulative DSGC objective evaluations (cost accounting)
+    pub dsgc_evals: u64,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(engine: &'e Engine, cfg: TrainConfig) -> Result<Self> {
+        let model = engine.manifest.model(&cfg.model)?.clone();
+        let g_train = engine.graph(&cfg.model, "train")?;
+        let g_eval = if model.has_graph("eval") {
+            Some(engine.graph(&cfg.model, "eval")?)
+        } else {
+            None
+        };
+        let g_dump = if cfg.grad_est == Estimator::Dsgc {
+            Some(
+                engine
+                    .graph(&cfg.model, "dump")
+                    .context("DSGC requires the dump graph")?,
+            )
+        } else {
+            None
+        };
+
+        // init params on-device from the seed
+        let g_init = engine.graph(&cfg.model, "init")?;
+        let carry = engine.run(&g_init, &[Tensor::scalar_i32(cfg.seed as i32)])?;
+
+        let ranges = RangeManager::new(&model, cfg.act_est, cfg.grad_est);
+        let mut spec = SynthSpec::tiny(
+            model.n_classes,
+            model.input_shape[0],
+            cfg.seed ^ 0x5EED_DA7A,
+        );
+        spec.n_train = cfg.n_train;
+        spec.n_val = cfg.n_val;
+        let data = SynthVision::new(spec);
+        let batcher = Batcher::new(cfg.n_train, model.batch_size, cfg.seed);
+
+        let bs = model.batch_size;
+        let img: usize = model.input_shape.iter().product();
+        let x_buf = Tensor::from_f32(
+            &[bs, model.input_shape[0], model.input_shape[1], model.input_shape[2]],
+            vec![0.0; bs * img],
+        );
+        let y_buf = Tensor::from_i32(&[bs], vec![0; bs]);
+        let record = RunRecord::new(&cfg.tag());
+
+        Ok(Self {
+            engine,
+            model,
+            cfg,
+            g_train,
+            g_eval,
+            g_dump,
+            carry,
+            ranges,
+            data,
+            batcher,
+            x_buf,
+            y_buf,
+            record,
+            step: 0,
+            dsgc_evals: 0,
+        })
+    }
+
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
+    fn fill_next_batch(&mut self) {
+        let idx = self.batcher.next_batch().to_vec();
+        self.data.fill_batch(
+            &idx,
+            false,
+            self.x_buf.as_f32_mut().unwrap(),
+            match &mut self.y_buf.data {
+                crate::runtime::tensor::Payload::I32(v) => v,
+                _ => unreachable!(),
+            },
+        );
+    }
+
+    /// Calibration pass (paper Sec. 5.2): feed batches with lr = 0 and
+    /// quantization disabled, absorbing the observed statistics into the
+    /// range state.  Params are bit-identical afterwards (lr = 0).
+    pub fn calibrate(&mut self) -> Result<()> {
+        let n = self.cfg.calib_batches;
+        for _ in 0..n {
+            self.fill_next_batch();
+            let out = self.run_train_graph(0.0, 0.0, true)?;
+            let stats = &out[out.len() - 1];
+            self.ranges.calibrate(stats, self.cfg.eta);
+        }
+        if n > 0 {
+            log::debug!(
+                "calibrated {} sites over {n} batches (coverage {:.3})",
+                self.ranges.n_sites(),
+                self.ranges.coverage()
+            );
+        }
+        Ok(())
+    }
+
+    /// Assemble inputs and run the train graph.  Returns the raw outputs.
+    /// `disable_quant` forces all enables off (calibration).
+    fn run_train_graph(&self, lr: f32, wd: f32, disable_quant: bool) -> Result<Vec<Tensor>> {
+        let ranges_t = self.ranges.as_tensor();
+        let (mode_a, mode_g, wq, aq, gq) = if disable_quant {
+            (2.0, 2.0, 0.0, 0.0, 0.0)
+        } else {
+            // paper Sec. 4.1 initialization: q^0 = minmax(G^0) — when no
+            // calibration seeded the state, the very first step runs the
+            // stateful estimators in current-min-max mode so their grid is
+            // the first batch's statistics, not the neutral init.
+            let bootstrap = self.step == 0 && !self.ranges.is_calibrated();
+            let boot = |est: crate::coordinator::config::Estimator, m: f32| {
+                if bootstrap && matches!(est, Estimator::Running | Estimator::Hindsight) {
+                    0.0
+                } else {
+                    m
+                }
+            };
+            (
+                boot(self.cfg.act_est, self.ranges.mode_act()),
+                boot(self.cfg.grad_est, self.ranges.mode_grad()),
+                self.cfg.quant_weights as u32 as f32,
+                self.ranges.aq_on(),
+                self.ranges.gq_on(),
+            )
+        };
+        let scal = [
+            Tensor::scalar_f32(mode_a),
+            Tensor::scalar_f32(mode_g),
+            Tensor::scalar_f32(wq),
+            Tensor::scalar_f32(aq),
+            Tensor::scalar_f32(gq),
+            Tensor::scalar_f32(self.cfg.eta),
+            Tensor::scalar_f32(lr),
+            Tensor::scalar_f32(wd),
+            Tensor::scalar_i32((self.cfg.seed as i32) ^ (self.step as i32)),
+        ];
+        let mut inputs: Vec<&Tensor> = Vec::with_capacity(self.carry.len() + 12);
+        inputs.extend(self.carry.iter());
+        inputs.push(&self.x_buf);
+        inputs.push(&self.y_buf);
+        inputs.push(&ranges_t);
+        inputs.extend(scal.iter());
+        self.engine.run_refs(&self.g_train, &inputs)
+    }
+
+    /// One optimization step; returns (loss, train-batch accuracy).
+    pub fn train_step(&mut self) -> Result<(f32, f32)> {
+        // periodic DSGC range search (step 0 bootstraps the ranges)
+        if self.cfg.grad_est == Estimator::Dsgc
+            && self.step % self.cfg.dsgc_period == 0
+        {
+            self.dsgc_update()?;
+        }
+
+        self.fill_next_batch();
+        let lr = self
+            .cfg
+            .schedule
+            .lr_at(self.cfg.lr, self.cfg.final_lr, self.step, self.cfg.steps);
+        let out = self.run_train_graph(lr, self.cfg.weight_decay, false)?;
+
+        let n_carry = self.carry.len();
+        let loss = out[n_carry].item_f32()?;
+        let acc = out[n_carry + 1].item_f32()?;
+        let new_ranges = &out[n_carry + 2];
+        let stats = &out[n_carry + 3];
+        self.ranges
+            .update(new_ranges, stats, self.step == 0);
+        // adopt new params/opt/state
+        let mut out = out;
+        out.truncate(n_carry);
+        self.carry = out;
+
+        if self.cfg.log_every > 0 && self.step % self.cfg.log_every == 0 {
+            log::debug!(
+                "step {:>5} lr {lr:.4} loss {loss:.4} acc {acc:.3}",
+                self.step
+            );
+        }
+        self.record.log_step(self.step, loss, acc);
+        self.step += 1;
+        Ok((loss, acc))
+    }
+
+    /// Periodic DSGC golden-section search over dumped gradient tensors.
+    pub fn dsgc_update(&mut self) -> Result<()> {
+        let g_dump = self.g_dump.clone().context("no dump graph")?;
+        self.fill_next_batch();
+        let ranges_t = self.ranges.as_tensor();
+        let scal = [
+            Tensor::scalar_f32(2.0), // mode_grad: static while dumping
+            Tensor::scalar_f32(self.cfg.quant_weights as u32 as f32),
+            Tensor::scalar_f32(self.ranges.aq_on()),
+            Tensor::scalar_f32(self.ranges.gq_on()),
+            Tensor::scalar_f32(self.cfg.eta),
+            Tensor::scalar_i32(self.cfg.seed as i32 ^ self.step as i32),
+        ];
+        let p = self.model.params.len();
+        let s = self.model.state.len();
+        let mut inputs: Vec<&Tensor> = Vec::with_capacity(p + s + 9);
+        // dump ABI: params..., state..., x, y, ranges, scalars
+        inputs.extend(self.carry[..p].iter()); // params
+        inputs.extend(self.carry[2 * p..2 * p + s].iter()); // state
+        inputs.push(&self.x_buf);
+        inputs.push(&self.y_buf);
+        inputs.push(&ranges_t);
+        inputs.extend(scal.iter());
+        let grads = self.engine.run_refs(&g_dump, &inputs)?;
+
+        let sites = self.ranges.dsgc_sites();
+        assert_eq!(grads.len(), sites.len(), "dump arity vs grad sites");
+        for (g, &site) in grads.iter().zip(&sites) {
+            let r = dsgc::search_range(
+                g.as_f32()?,
+                self.engine.manifest.bits_g,
+                self.cfg.dsgc_iters,
+            );
+            self.ranges.set_row(site, [r.qmin, r.qmax]);
+            self.dsgc_evals += r.evals as u64;
+        }
+        log::debug!(
+            "dsgc update at step {}: {} sites, {} evals total",
+            self.step,
+            sites.len(),
+            self.dsgc_evals
+        );
+        Ok(())
+    }
+
+    /// Full-validation evaluation; returns (loss, accuracy).
+    pub fn evaluate(&mut self) -> Result<(f32, f32)> {
+        let g_eval = self.g_eval.clone().context("model has no eval graph")?;
+        let bs = self.model.batch_size;
+        let n_batches = (self.cfg.n_val / bs).max(1);
+        let p = self.model.params.len();
+        let s = self.model.state.len();
+        let ranges_t = self.ranges.as_tensor();
+        // eval act-quant follows the configured estimator: static ranges
+        // for hindsight/dsgc, current for the dynamic methods.
+        let scal = [
+            Tensor::scalar_f32(self.ranges.mode_act()),
+            Tensor::scalar_f32(self.cfg.quant_weights as u32 as f32),
+            Tensor::scalar_f32(self.ranges.aq_on()),
+        ];
+        let mut loss_sum = 0f64;
+        let mut correct = 0f64;
+        let mut x = self.x_buf.clone();
+        let mut y = self.y_buf.clone();
+        for b in 0..n_batches {
+            let idx: Vec<usize> = (b * bs..(b + 1) * bs)
+                .map(|i| i % self.data.len(true))
+                .collect();
+            self.data.fill_batch(
+                &idx,
+                true,
+                x.as_f32_mut().unwrap(),
+                match &mut y.data {
+                    crate::runtime::tensor::Payload::I32(v) => v,
+                    _ => unreachable!(),
+                },
+            );
+            let mut inputs: Vec<&Tensor> = Vec::with_capacity(p + s + 6);
+            inputs.extend(self.carry[..p].iter());
+            inputs.extend(self.carry[2 * p..2 * p + s].iter());
+            inputs.push(&x);
+            inputs.push(&y);
+            inputs.push(&ranges_t);
+            inputs.extend(scal.iter());
+            let out = self.engine.run_refs(&g_eval, &inputs)?;
+            loss_sum += out[0].item_f32()? as f64;
+            correct += out[1].item_f32()? as f64;
+        }
+        let n = (n_batches * bs) as f64;
+        let (l, a) = ((loss_sum / n) as f32, (correct / n) as f32);
+        self.record.log_eval(self.step, l, a);
+        Ok((l, a))
+    }
+
+    /// Full schedule: calibrate, train `cfg.steps`, evaluate periodically
+    /// and at the end.  Returns the run record.
+    pub fn run(mut self) -> Result<RunRecord> {
+        // paper Sec. 5.2: running/hindsight quantizers benefit from an
+        // initial calibration pass; apply it whenever either tensor class
+        // uses a stateful estimator (it also seeds the gradient ranges,
+        // subsuming the q^0 = minmax(G^0) bootstrap).
+        let stateful = |e: Estimator| matches!(e, Estimator::Running | Estimator::Hindsight);
+        if (stateful(self.cfg.act_est) || stateful(self.cfg.grad_est))
+            && self.cfg.calib_batches > 0
+        {
+            self.calibrate()?;
+        }
+        let t0 = Instant::now();
+        for _ in 0..self.cfg.steps {
+            self.train_step()?;
+            if self.cfg.eval_every > 0
+                && self.step % self.cfg.eval_every == 0
+                && self.g_eval.is_some()
+            {
+                let (l, a) = self.evaluate()?;
+                log::info!("eval @ step {}: loss {l:.4} acc {a:.3}", self.step);
+            }
+        }
+        self.record.train_seconds = t0.elapsed().as_secs_f64();
+        if self.g_eval.is_some() {
+            let (l, a) = self.evaluate()?;
+            log::info!(
+                "[{}] final eval: loss {l:.4} acc {a:.3} ({:.1}s train)",
+                self.record.name,
+                self.record.train_seconds
+            );
+        }
+        self.record
+            .extra
+            .insert("dsgc_evals".into(), self.dsgc_evals as f64);
+        self.record
+            .extra
+            .insert("coverage".into(), self.ranges.coverage());
+        Ok(self.record)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn engine() -> Option<Engine> {
+        if !Manifest::default_dir().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Engine::new().unwrap())
+    }
+
+    fn quick_cfg(model: &str) -> TrainConfig {
+        let mut c = TrainConfig::new(model);
+        c.steps = 12;
+        c.n_train = 128;
+        c.n_val = 64;
+        c.calib_batches = 2;
+        c.lr = 0.05;
+        c
+    }
+
+    #[test]
+    fn mlp_trains_and_loss_decreases() {
+        let Some(e) = engine() else { return };
+        let cfg = quick_cfg("mlp");
+        let mut t = Trainer::new(&e, cfg).unwrap();
+        let mut first = f32::NAN;
+        let mut last = f32::NAN;
+        for i in 0..30 {
+            let (l, _) = t.train_step().unwrap();
+            if i == 0 {
+                first = l;
+            }
+            last = l;
+        }
+        assert!(last < first, "loss did not decrease: {first} -> {last}");
+    }
+
+    #[test]
+    fn calibration_does_not_touch_params() {
+        let Some(e) = engine() else { return };
+        let mut t = Trainer::new(&e, quick_cfg("mlp")).unwrap();
+        let before = t.carry[0].clone();
+        t.calibrate().unwrap();
+        assert_eq!(t.carry[0], before);
+        assert!(t.ranges.is_calibrated());
+    }
+
+    #[test]
+    fn estimators_update_ranges_differently() {
+        let Some(e) = engine() else { return };
+        for est in [Estimator::Current, Estimator::Running, Estimator::Hindsight] {
+            let cfg = quick_cfg("mlp").fully_quantized(est);
+            let mut t = Trainer::new(&e, cfg).unwrap();
+            for _ in 0..3 {
+                t.train_step().unwrap();
+            }
+            // ranges must have moved off the neutral init
+            assert_ne!(t.ranges.row(0), [-1.0, 1.0], "{est:?}");
+        }
+    }
+
+    #[test]
+    fn dsgc_runs_periodic_search() {
+        let Some(e) = engine() else { return };
+        let mut cfg = quick_cfg("mlp").grad_only(Estimator::Dsgc);
+        cfg.dsgc_period = 4;
+        cfg.dsgc_iters = 5;
+        let mut t = Trainer::new(&e, cfg).unwrap();
+        for _ in 0..5 {
+            t.train_step().unwrap();
+        }
+        assert!(t.dsgc_evals > 0, "no dsgc search ran");
+    }
+
+    #[test]
+    fn evaluation_returns_sane_numbers() {
+        let Some(e) = engine() else { return };
+        let mut t = Trainer::new(&e, quick_cfg("mlp")).unwrap();
+        let (l, a) = t.evaluate().unwrap();
+        assert!(l.is_finite() && l > 0.0);
+        assert!((0.0..=1.0).contains(&a));
+    }
+
+    #[test]
+    fn full_run_produces_record() {
+        let Some(e) = engine() else { return };
+        let r = Trainer::new(&e, quick_cfg("mlp")).unwrap().run().unwrap();
+        assert_eq!(r.steps.len(), 12);
+        assert!(!r.evals.is_empty());
+        assert!(r.train_seconds > 0.0);
+    }
+}

@@ -1,0 +1,309 @@
+//! Synthetic vision datasets — the Tiny ImageNet / ImageNet stand-in
+//! (DESIGN.md §3 documents the substitution).
+//!
+//! `SynthVision` draws, per class, a smooth random "prototype" field
+//! (sum of low-frequency 2-D sinusoids per channel) and renders samples
+//! as affine-jittered, noise-perturbed views of their class prototype.
+//! The task is learnable but non-trivial (classes overlap through jitter
+//! and shared frequency bands), produces activation/gradient
+//! distributions that drift as training sharpens features, and is fully
+//! deterministic from a seed — which is what the paper's range-estimator
+//! comparison actually needs from the data.
+
+use crate::util::rng::Pcg32;
+
+/// Dataset configuration.
+#[derive(Debug, Clone)]
+pub struct SynthSpec {
+    pub n_classes: usize,
+    pub hw: usize,
+    pub channels: usize,
+    pub n_train: usize,
+    pub n_val: usize,
+    pub seed: u64,
+    /// per-sample additive noise amplitude
+    pub noise: f32,
+    /// max translation jitter in pixels
+    pub jitter: usize,
+}
+
+impl SynthSpec {
+    /// Defaults matched to the table-bench artifacts (32x32x3, 16-way).
+    pub fn tiny(n_classes: usize, hw: usize, seed: u64) -> Self {
+        Self {
+            n_classes,
+            hw,
+            channels: 3,
+            n_train: 4096,
+            n_val: 1024,
+            seed,
+            noise: 0.30,
+            jitter: 2,
+        }
+    }
+}
+
+/// One class's prototype: per-channel sinusoid mixture coefficients.
+#[derive(Debug, Clone)]
+struct Prototype {
+    // per channel: (ax, ay, phase, amplitude) x n_waves
+    waves: Vec<Vec<(f32, f32, f32, f32)>>,
+    // per-channel DC bias (class colour signature; anchors same-class
+    // correlation under affine jitter)
+    bias: Vec<f32>,
+}
+
+/// Deterministic synthetic dataset (images in NHWC, labels in i32).
+#[derive(Debug, Clone)]
+pub struct SynthVision {
+    pub spec: SynthSpec,
+    protos: Vec<Prototype>,
+}
+
+impl SynthVision {
+    pub fn new(spec: SynthSpec) -> Self {
+        let n_waves = 4;
+        let protos = (0..spec.n_classes)
+            .map(|c| {
+                let mut rng = Pcg32::fold(spec.seed, "proto", c as u64);
+                let waves = (0..spec.channels)
+                    .map(|_| {
+                        (0..n_waves)
+                            .map(|_| {
+                                (
+                                    rng.range(0.5, 2.2), // x frequency
+                                    rng.range(0.5, 2.2), // y frequency
+                                    rng.range(0.0, std::f32::consts::TAU),
+                                    rng.range(0.4, 1.0), // amplitude
+                                )
+                            })
+                            .collect()
+                    })
+                    .collect();
+                let bias = (0..spec.channels).map(|_| rng.range(-0.9, 0.9)).collect();
+                Prototype { waves, bias }
+            })
+            .collect();
+        Self { spec, protos }
+    }
+
+    /// Total samples in the split.
+    pub fn len(&self, val: bool) -> usize {
+        if val {
+            self.spec.n_val
+        } else {
+            self.spec.n_train
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spec.n_train == 0
+    }
+
+    /// Label of sample `idx` (stratified round-robin).
+    pub fn label(&self, idx: usize) -> i32 {
+        (idx % self.spec.n_classes) as i32
+    }
+
+    /// Render sample `idx` of the split into `out` (len hw*hw*c, NHWC).
+    pub fn render(&self, idx: usize, val: bool, out: &mut [f32]) {
+        let s = &self.spec;
+        assert_eq!(out.len(), s.hw * s.hw * s.channels);
+        let split = if val { 1u64 << 40 } else { 0 };
+        let mut rng = Pcg32::fold(s.seed, "sample", split + idx as u64);
+        let class = self.label(idx) as usize;
+        let proto = &self.protos[class];
+
+        // affine jitter: translation + small scale
+        let dx = rng.range(-(s.jitter as f32), s.jitter as f32);
+        let dy = rng.range(-(s.jitter as f32), s.jitter as f32);
+        let zoom = rng.range(0.93, 1.07);
+        let gain = rng.range(0.8, 1.2);
+
+        let inv = 1.0 / s.hw as f32;
+        for y in 0..s.hw {
+            for x in 0..s.hw {
+                let u = ((x as f32 + dx) * zoom) * inv * std::f32::consts::TAU;
+                let v = ((y as f32 + dy) * zoom) * inv * std::f32::consts::TAU;
+                for c in 0..s.channels {
+                    let mut val = 0.0;
+                    for &(fx, fy, ph, amp) in &proto.waves[c] {
+                        val += amp * (fx * u + fy * v + ph).sin();
+                    }
+                    let noise = rng.normal() * s.noise;
+                    out[(y * s.hw + x) * s.channels + c] =
+                        gain * (val + proto.bias[c]) + noise;
+                }
+            }
+        }
+    }
+
+    /// Fill a whole batch; returns labels. `epoch_perm` supplies the
+    /// shuffled order (see [`Batcher`]).
+    pub fn fill_batch(
+        &self,
+        indices: &[usize],
+        val: bool,
+        x_out: &mut [f32],
+        y_out: &mut [i32],
+    ) {
+        let s = &self.spec;
+        let img = s.hw * s.hw * s.channels;
+        assert_eq!(x_out.len(), indices.len() * img);
+        assert_eq!(y_out.len(), indices.len());
+        for (bi, &idx) in indices.iter().enumerate() {
+            self.render(idx, val, &mut x_out[bi * img..(bi + 1) * img]);
+            y_out[bi] = self.label(idx);
+        }
+    }
+}
+
+/// Epoch-shuffled batch index iterator.
+#[derive(Debug)]
+pub struct Batcher {
+    n: usize,
+    batch: usize,
+    perm: Vec<usize>,
+    cursor: usize,
+    epoch: u64,
+    seed: u64,
+}
+
+impl Batcher {
+    pub fn new(n: usize, batch: usize, seed: u64) -> Self {
+        let mut b = Self {
+            n,
+            batch,
+            perm: (0..n).collect(),
+            cursor: 0,
+            epoch: 0,
+            seed,
+        };
+        b.reshuffle();
+        b
+    }
+
+    fn reshuffle(&mut self) {
+        let mut rng = Pcg32::fold(self.seed, "batcher", self.epoch);
+        rng.shuffle(&mut self.perm);
+    }
+
+    /// Next batch of indices (wraps across epochs, reshuffling).
+    pub fn next_batch(&mut self) -> &[usize] {
+        if self.cursor + self.batch > self.n {
+            self.epoch += 1;
+            self.cursor = 0;
+            self.reshuffle();
+        }
+        let s = &self.perm[self.cursor..self.cursor + self.batch];
+        self.cursor += self.batch;
+        s
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ds() -> SynthVision {
+        SynthVision::new(SynthSpec::tiny(8, 16, 42))
+    }
+
+    #[test]
+    fn deterministic_rendering() {
+        let d = ds();
+        let mut a = vec![0f32; 16 * 16 * 3];
+        let mut b = vec![0f32; 16 * 16 * 3];
+        d.render(5, false, &mut a);
+        d.render(5, false, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn train_val_differ_and_classes_differ() {
+        let d = ds();
+        let mut a = vec![0f32; 16 * 16 * 3];
+        let mut b = vec![0f32; 16 * 16 * 3];
+        d.render(5, false, &mut a);
+        d.render(5, true, &mut b);
+        assert_ne!(a, b);
+        // same class, different sample index: similar but not equal
+        d.render(5, false, &mut a);
+        d.render(13, false, &mut b); // 13 % 8 == 5
+        assert_eq!(d.label(5), d.label(13));
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn class_signal_exceeds_noise() {
+        // same-class samples must correlate more than cross-class ones
+        let d = ds();
+        let img = 16 * 16 * 3;
+        let n_per = 8;
+        let sample = |idx: usize| {
+            let mut v = vec![0f32; img];
+            d.render(idx, false, &mut v);
+            v
+        };
+        let cos = crate::quant::cosine_similarity;
+        let mut same = 0.0;
+        let mut diff = 0.0;
+        let mut cnt = 0;
+        for i in 0..n_per {
+            let a = sample(i * 8); // class 0
+            let b = sample((i + 1) * 8); // class 0
+            let c = sample(i * 8 + 1); // class 1
+            same += cos(&a, &b);
+            diff += cos(&a, &c);
+            cnt += 1;
+        }
+        assert!(
+            same / cnt as f32 > diff / cnt as f32 + 0.2,
+            "same {} diff {}",
+            same / cnt as f32,
+            diff / cnt as f32
+        );
+    }
+
+    #[test]
+    fn batcher_covers_all_indices_each_epoch() {
+        let mut b = Batcher::new(100, 10, 1);
+        let mut seen = vec![0; 100];
+        for _ in 0..10 {
+            for &i in b.next_batch().to_vec().iter() {
+                seen[i] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+        let _ = b.next_batch();
+        assert_eq!(b.epoch(), 1);
+    }
+
+    #[test]
+    fn fill_batch_layout() {
+        let d = ds();
+        let img = 16 * 16 * 3;
+        let idx = [0usize, 1, 2];
+        let mut x = vec![0f32; 3 * img];
+        let mut y = vec![0i32; 3];
+        d.fill_batch(&idx, false, &mut x, &mut y);
+        assert_eq!(y, vec![0, 1, 2]);
+        let mut single = vec![0f32; img];
+        d.render(1, false, &mut single);
+        assert_eq!(&x[img..2 * img], &single[..]);
+    }
+
+    #[test]
+    fn values_are_bounded() {
+        let d = ds();
+        let mut v = vec![0f32; 16 * 16 * 3];
+        for i in 0..16 {
+            d.render(i, false, &mut v);
+            assert!(v.iter().all(|x| x.is_finite() && x.abs() < 10.0));
+        }
+    }
+}

@@ -1,0 +1,40 @@
+//! # hindsight
+//!
+//! Production-grade reproduction of *In-Hindsight Quantization Range
+//! Estimation for Quantized Training* (Fournarakis & Nagel, 2021) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! The Rust crate is the entire runtime: it loads AOT-compiled XLA
+//! artifacts (HLO text produced once by `python/compile/aot.py`), drives
+//! quantized training end-to-end, owns the paper's range-estimation state
+//! machine, and ships the substrates the paper's evaluation depends on
+//! (synthetic datasets, a fixed-point accelerator model, the architecture
+//! zoo, metrics and reporting).  Python never runs on the step path.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`util`] — hand-rolled substrates: JSON, CLI, PRNG, logging, stats,
+//!   a property-test kit and a bench harness (no external deps).
+//! * [`quant`] — bit-exact quantization math mirroring the L1 kernels;
+//!   DSGC's golden-section range search lives here.
+//! * [`simulator`] — fixed-point accelerator model: MAC-array execution
+//!   and the static-vs-dynamic memory-traffic accounting of paper §6.
+//! * [`models`] — architecture geometry zoo (full-size ResNet18 / VGG16 /
+//!   MobileNetV2 for Table 5, plus the reduced training variants).
+//! * [`data`] — deterministic synthetic vision datasets (the Tiny
+//!   ImageNet stand-in; DESIGN.md §3 documents the substitution).
+//! * [`metrics`] — run records, seed aggregation, table emitters.
+//! * [`runtime`] — PJRT engine: manifest-driven marshalling, executable
+//!   cache, device-resident parameter state.
+//! * [`coordinator`] — the paper's contribution as runtime logic: range
+//!   estimators (current / running / in-hindsight / DSGC), calibration,
+//!   the training driver and multi-seed sweeps.
+
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod models;
+pub mod quant;
+pub mod runtime;
+pub mod simulator;
+pub mod util;

@@ -1,0 +1,269 @@
+//! `hindsight` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   train       train one model/estimator configuration end to end
+//!   sweep       multi-seed, multi-estimator table rows (paper Tables 1-4)
+//!   mem-report  static-vs-dynamic memory traffic (paper Table 5 / Sec. 6)
+//!   inspect     print a model's manifest ABI and quantizer sites
+//!   bench-step  time the train-step hot path for one model
+//!
+//! Examples:
+//!   hindsight train --model cnn --steps 300 --grad-est hindsight
+//!   hindsight sweep --model resnet_tiny --mode grad --seeds 1,2,3
+//!   hindsight mem-report --network mobilenet_v2
+
+use anyhow::{bail, Result};
+
+use hindsight::coordinator::{sweep_row, Estimator, Schedule, TrainConfig, Trainer};
+use hindsight::models;
+use hindsight::runtime::Engine;
+use hindsight::simulator::traffic::{self, BitWidths};
+use hindsight::util::bench::Table;
+use hindsight::util::cli::Args;
+use hindsight::util::logging;
+
+fn main() {
+    logging::init();
+    let args = Args::from_env();
+    let code = match run(args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(mut args: Args) -> Result<()> {
+    match args.subcommand.clone().as_deref() {
+        Some("train") => cmd_train(&mut args),
+        Some("sweep") => cmd_sweep(&mut args),
+        Some("mem-report") => cmd_mem_report(&mut args),
+        Some("inspect") => cmd_inspect(&mut args),
+        Some("bench-step") => cmd_bench_step(&mut args),
+        Some(other) => bail!("unknown subcommand '{other}'"),
+        None => {
+            eprintln!(
+                "usage: hindsight <train|sweep|mem-report|inspect|bench-step> [--flags]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn parse_cfg(args: &mut Args) -> Result<TrainConfig> {
+    let model = args.str_or("model", "cnn");
+    let mut cfg = TrainConfig::new(&model);
+    cfg.steps = args.u64_or("steps", cfg.steps);
+    cfg.grad_est = Estimator::parse(&args.str_or("grad-est", "hindsight"))?;
+    cfg.act_est = Estimator::parse(&args.str_or("act-est", "hindsight"))?;
+    cfg.quant_weights = args.bool_or("quant-weights", cfg.quant_weights);
+    cfg.eta = args.f32_or("eta", cfg.eta);
+    cfg.lr = args.f32_or("lr", cfg.lr);
+    cfg.schedule = Schedule::parse(&args.str_or("schedule", "step"))?;
+    cfg.weight_decay = args.f32_or("weight-decay", cfg.weight_decay);
+    cfg.calib_batches = args.usize_or("calib-batches", cfg.calib_batches);
+    cfg.dsgc_period = args.u64_or("dsgc-period", cfg.dsgc_period);
+    cfg.dsgc_iters = args.usize_or("dsgc-iters", cfg.dsgc_iters as usize) as u32;
+    cfg.seed = args.u64_or("seed", cfg.seed);
+    cfg.n_train = args.usize_or("n-train", cfg.n_train);
+    cfg.n_val = args.usize_or("n-val", cfg.n_val);
+    cfg.eval_every = args.u64_or("eval-every", cfg.eval_every);
+    cfg.log_every = args.u64_or("log-every", cfg.log_every);
+    Ok(cfg)
+}
+
+fn cmd_train(args: &mut Args) -> Result<()> {
+    let cfg = parse_cfg(args)?;
+    let csv = args.get("csv");
+    args.finish().map_err(anyhow::Error::msg)?;
+    let engine = Engine::new()?;
+    let record = Trainer::new(&engine, cfg)?.run()?;
+    println!(
+        "final: val acc {:.2}%  tail loss {:.4}  {:.1}s train ({:.0} ms/step)",
+        record.final_val_acc(),
+        record.tail_loss(10),
+        record.train_seconds,
+        record.train_seconds / record.steps.len().max(1) as f64 * 1e3,
+    );
+    if let Some(path) = csv {
+        record.write_csv(&path)?;
+        println!("loss curve written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &mut Args) -> Result<()> {
+    let base = parse_cfg(args)?;
+    let mode = args.str_or("mode", "full"); // grad | act | full
+    let seeds: Vec<u64> = args
+        .list_or("seeds", &["1", "2", "3"])
+        .iter()
+        .map(|s| s.parse().unwrap())
+        .collect();
+    let estimators = args.list_or(
+        "estimators",
+        &["fp32", "current", "running", "dsgc", "hindsight"],
+    );
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    let engine = Engine::new()?;
+    let mut table = Table::new(
+        &format!(
+            "{} on SynthTiny ({} mode, {} seeds)",
+            base.model,
+            mode,
+            seeds.len()
+        ),
+        &["Method", "Static", "Val. Acc. (%)", "ms/step"],
+    );
+    for est_name in &estimators {
+        let est = Estimator::parse(est_name)?;
+        if est == Estimator::Dsgc && mode == "act" {
+            continue; // the paper applies DSGC to gradients only
+        }
+        let cfg = match mode.as_str() {
+            "grad" => base.clone().grad_only(est),
+            "act" => base.clone().act_only(est),
+            "full" => base.clone().fully_quantized(est),
+            other => bail!("unknown --mode '{other}' (grad|act|full)"),
+        };
+        let out = sweep_row(&engine, &cfg, est.name(), &seeds)?;
+        table.row(&[
+            est.name().to_string(),
+            if est.enabled() {
+                if est.is_static() {
+                    "yes".into()
+                } else {
+                    "no".into()
+                }
+            } else {
+                "n.a.".into()
+            },
+            out.cell(),
+            format!("{:.0}", out.sec_per_step * 1e3),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_mem_report(args: &mut Args) -> Result<()> {
+    let network = args.str_or("network", "table5");
+    let b = BitWidths {
+        b_w: args.usize_or("bits-w", 8) as u64,
+        b_a: args.usize_or("bits-a", 8) as u64,
+        b_acc: args.usize_or("bits-acc", 32) as u64,
+    };
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    let layers = if network == "table5" {
+        traffic::table5_layers()
+    } else {
+        models::by_name(&network).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown network '{network}' (table5|resnet18|vgg16|mobilenet_v2)"
+            )
+        })?
+    };
+    let mut table = Table::new(
+        &format!("Memory movement, static vs dynamic quantization ({network})"),
+        &["Layer", "Cin", "Cout", "WxH", "Static", "Dynamic", "Delta"],
+    );
+    let mut tot_s = 0u64;
+    let mut tot_d = 0u64;
+    for g in &layers {
+        let c = traffic::compare(g, b);
+        tot_s += c.static_bits;
+        tot_d += c.dynamic_bits;
+        table.row(&[
+            g.name.to_string(),
+            g.cin.to_string(),
+            g.cout.to_string(),
+            format!("{}x{}", g.w, g.h),
+            format!("{:.0} KB", c.static_kb()),
+            format!("{:.0} KB", c.dynamic_kb()),
+            format!("+{:.0}%", c.delta_percent()),
+        ]);
+    }
+    table.row(&[
+        "TOTAL".into(),
+        "".into(),
+        "".into(),
+        "".into(),
+        format!("{:.0} KB", tot_s as f64 / 8.0 / 1024.0),
+        format!("{:.0} KB", tot_d as f64 / 8.0 / 1024.0),
+        format!("+{:.0}%", (tot_d as f64 / tot_s as f64 - 1.0) * 100.0),
+    ]);
+    table.print();
+    Ok(())
+}
+
+fn cmd_inspect(args: &mut Args) -> Result<()> {
+    let model = args.str_or("model", "cnn");
+    args.finish().map_err(anyhow::Error::msg)?;
+    let engine = Engine::new()?;
+    let spec = engine.manifest.model(&model)?;
+    println!(
+        "model {} — {} params in {} leaves, batch {}, input {:?}, {} classes, pallas={}",
+        spec.name,
+        spec.n_params,
+        spec.params.len(),
+        spec.batch_size,
+        spec.input_shape,
+        spec.n_classes,
+        spec.pallas,
+    );
+    let mut t = Table::new(
+        "Quantizer sites (Fig. 1 wiring)",
+        &["#", "Site", "Kind", "Feature shape"],
+    );
+    for s in &spec.sites {
+        t.row(&[
+            s.index.to_string(),
+            s.name.clone(),
+            format!("{:?}", s.kind),
+            format!("{:?}", s.feature_shape),
+        ]);
+    }
+    t.print();
+    let mut g = Table::new("Graphs", &["Graph", "Inputs", "Outputs", "File"]);
+    for (name, spec) in &spec.graphs {
+        g.row(&[
+            name.clone(),
+            spec.inputs.len().to_string(),
+            spec.outputs.len().to_string(),
+            spec.file.clone(),
+        ]);
+    }
+    g.print();
+    Ok(())
+}
+
+fn cmd_bench_step(args: &mut Args) -> Result<()> {
+    let mut cfg = parse_cfg(args)?;
+    let iters = args.u64_or("iters", 20);
+    cfg.steps = iters;
+    cfg.calib_batches = 0;
+    args.finish().map_err(anyhow::Error::msg)?;
+    let engine = Engine::new()?;
+    let mut trainer = Trainer::new(&engine, cfg.clone())?;
+    for _ in 0..3 {
+        trainer.train_step()?;
+    }
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        trainer.train_step()?;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let es = engine.stats();
+    println!(
+        "{}: {:.1} ms/step over {iters} steps (graph execute {:.1} ms, marshal {:.2} ms per call)",
+        cfg.model,
+        dt / iters as f64 * 1e3,
+        es.execute_seconds / es.executions as f64 * 1e3,
+        es.marshal_seconds / es.executions as f64 * 1e3,
+    );
+    Ok(())
+}

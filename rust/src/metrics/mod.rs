@@ -1,0 +1,167 @@
+//! Run records and aggregation: loss curves, eval accuracy, per-seed
+//! aggregation into the paper's "mean ± std" rows, CSV export.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+
+use crate::util::stats;
+
+/// Metrics of a single training run (one seed, one configuration).
+#[derive(Debug, Clone, Default)]
+pub struct RunRecord {
+    pub name: String,
+    pub steps: Vec<u64>,
+    pub losses: Vec<f32>,
+    pub accs: Vec<f32>,
+    /// (step, val_loss, val_acc) from periodic evaluations
+    pub evals: Vec<(u64, f32, f32)>,
+    /// wall-clock seconds of the step loop (excl. compilation)
+    pub train_seconds: f64,
+    /// extra scalar outcomes (e.g. final ranges, dsgc evals)
+    pub extra: BTreeMap<String, f64>,
+}
+
+impl RunRecord {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn log_step(&mut self, step: u64, loss: f32, acc: f32) {
+        self.steps.push(step);
+        self.losses.push(loss);
+        self.accs.push(acc);
+    }
+
+    pub fn log_eval(&mut self, step: u64, loss: f32, acc: f32) {
+        self.evals.push((step, loss, acc));
+    }
+
+    /// Final validation accuracy (%, the paper's headline number).
+    pub fn final_val_acc(&self) -> f64 {
+        self.evals.last().map(|e| e.2 as f64 * 100.0).unwrap_or(f64::NAN)
+    }
+
+    /// Best validation accuracy over the run (%).
+    pub fn best_val_acc(&self) -> f64 {
+        self.evals
+            .iter()
+            .map(|e| e.2 as f64 * 100.0)
+            .fold(f64::NAN, f64::max)
+    }
+
+    /// Mean training loss over the last `k` logged steps.
+    pub fn tail_loss(&self, k: usize) -> f64 {
+        let n = self.losses.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        let s = n.saturating_sub(k);
+        stats::mean(&self.losses[s..].iter().map(|&x| x as f64).collect::<Vec<_>>())
+    }
+
+    /// True if the loss curve actually went down (e2e sanity check).
+    pub fn loss_decreased(&self) -> bool {
+        if self.losses.len() < 10 {
+            return false;
+        }
+        let head = stats::mean(
+            &self.losses[..5].iter().map(|&x| x as f64).collect::<Vec<_>>(),
+        );
+        self.tail_loss(5) < head
+    }
+
+    /// Write the loss curve as CSV.
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "step,loss,acc")?;
+        for i in 0..self.steps.len() {
+            writeln!(f, "{},{},{}", self.steps[i], self.losses[i], self.accs[i])?;
+        }
+        Ok(())
+    }
+}
+
+/// Aggregate of several seeds of the same configuration.
+#[derive(Debug, Clone)]
+pub struct SeedAggregate {
+    pub name: String,
+    pub accs: Vec<f64>,
+}
+
+impl SeedAggregate {
+    pub fn from_runs(name: &str, runs: &[RunRecord]) -> Self {
+        Self {
+            name: name.to_string(),
+            accs: runs.iter().map(|r| r.final_val_acc()).collect(),
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.accs)
+    }
+
+    pub fn std(&self) -> f64 {
+        stats::std(&self.accs)
+    }
+
+    /// "59.46 ± 0.71"-style cell.
+    pub fn cell(&self) -> String {
+        format!("{:.2} ± {:.2}", self.mean(), self.std())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_with(evals: &[(u64, f32, f32)], losses: &[f32]) -> RunRecord {
+        let mut r = RunRecord::new("t");
+        for (i, &l) in losses.iter().enumerate() {
+            r.log_step(i as u64, l, 0.5);
+        }
+        for &(s, l, a) in evals {
+            r.log_eval(s, l, a);
+        }
+        r
+    }
+
+    #[test]
+    fn final_and_best_acc() {
+        let r = run_with(&[(10, 1.0, 0.50), (20, 0.9, 0.62), (30, 1.1, 0.58)], &[]);
+        assert!((r.final_val_acc() - 58.0).abs() < 1e-4);
+        assert!((r.best_val_acc() - 62.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn loss_decrease_detection() {
+        let down: Vec<f32> = (0..50).map(|i| 3.0 - 0.05 * i as f32).collect();
+        let flat: Vec<f32> = (0..50).map(|_| 3.0).collect();
+        assert!(run_with(&[], &down).loss_decreased());
+        assert!(!run_with(&[], &flat).loss_decreased());
+    }
+
+    #[test]
+    fn aggregate_cells() {
+        let runs: Vec<RunRecord> = [0.59f32, 0.60, 0.58]
+            .iter()
+            .map(|&a| run_with(&[(1, 1.0, a)], &[]))
+            .collect();
+        let agg = SeedAggregate::from_runs("hindsight", &runs);
+        assert!((agg.mean() - 59.0).abs() < 1e-3);
+        assert!(agg.cell().contains("±"));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let r = run_with(&[], &[1.0, 0.5]);
+        let p = std::env::temp_dir().join("hindsight_metrics_test.csv");
+        r.write_csv(p.to_str().unwrap()).unwrap();
+        let txt = std::fs::read_to_string(&p).unwrap();
+        assert!(txt.starts_with("step,loss,acc"));
+        assert_eq!(txt.lines().count(), 3);
+        let _ = std::fs::remove_file(p);
+    }
+}

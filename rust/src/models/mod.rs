@@ -1,0 +1,174 @@
+//! Architecture geometry zoo.
+//!
+//! Full-size ImageNet-scale layer geometries for ResNet18, VGG16 and
+//! MobileNetV2 — used by the traffic simulator (Table 5, the
+//! memory_report example and fig4 bench).  The *training* variants are
+//! defined on the Python side and described by the artifact manifest;
+//! this module is about the memory-movement analysis, which the paper
+//! performs at full ImageNet scale.
+
+use crate::simulator::Conv2dGeom;
+
+/// All conv layers of ResNet18 at 224x224 input (output-map sizes).
+pub fn resnet18() -> Vec<Conv2dGeom> {
+    let mut v = vec![Conv2dGeom::new("conv1 7x7/2", 3, 64, 7, 112, 112, false)];
+    // layer1: 2 basic blocks @ 64ch, 56x56
+    for i in 0..4 {
+        v.push(Conv2dGeom::new(
+            match i {
+                0 => "layer1 3x3 a",
+                1 => "layer1 3x3 b",
+                2 => "layer1 3x3 c",
+                _ => "layer1 3x3 d",
+            },
+            64,
+            64,
+            3,
+            56,
+            56,
+            false,
+        ));
+    }
+    // layer2: downsample to 128ch, 28x28
+    v.push(Conv2dGeom::new("layer2 3x3/2", 64, 128, 3, 28, 28, false));
+    v.push(Conv2dGeom::new("layer2 1x1/2 (sc)", 64, 128, 1, 28, 28, false));
+    for _ in 0..3 {
+        v.push(Conv2dGeom::new("layer2 3x3", 128, 128, 3, 28, 28, false));
+    }
+    // layer3: 256ch, 14x14
+    v.push(Conv2dGeom::new("layer3 3x3/2", 128, 256, 3, 14, 14, false));
+    v.push(Conv2dGeom::new("layer3 1x1/2 (sc)", 128, 256, 1, 14, 14, false));
+    for _ in 0..3 {
+        v.push(Conv2dGeom::new("layer3 3x3", 256, 256, 3, 14, 14, false));
+    }
+    // layer4: 512ch, 7x7
+    v.push(Conv2dGeom::new("layer4 3x3/2", 256, 512, 3, 7, 7, false));
+    v.push(Conv2dGeom::new("layer4 1x1/2 (sc)", 256, 512, 1, 7, 7, false));
+    for _ in 0..3 {
+        v.push(Conv2dGeom::new("layer4 3x3", 512, 512, 3, 7, 7, false));
+    }
+    v
+}
+
+/// All conv layers of VGG16 at 224x224 input.
+pub fn vgg16() -> Vec<Conv2dGeom> {
+    let plan: &[(&'static str, u64, u64, u64)] = &[
+        ("block1 conv1", 3, 64, 224),
+        ("block1 conv2", 64, 64, 224),
+        ("block2 conv1", 64, 128, 112),
+        ("block2 conv2", 128, 128, 112),
+        ("block3 conv1", 128, 256, 56),
+        ("block3 conv2", 256, 256, 56),
+        ("block3 conv3", 256, 256, 56),
+        ("block4 conv1", 256, 512, 28),
+        ("block4 conv2", 512, 512, 28),
+        ("block4 conv3", 512, 512, 28),
+        ("block5 conv1", 512, 512, 14),
+        ("block5 conv2", 512, 512, 14),
+        ("block5 conv3", 512, 512, 14),
+    ];
+    plan.iter()
+        .map(|&(name, cin, cout, hw)| Conv2dGeom::new(name, cin, cout, 3, hw, hw, false))
+        .collect()
+}
+
+/// All conv layers of MobileNetV2 at 224x224 input (expand/depthwise/
+/// project per inverted-residual block, t=6).
+pub fn mobilenet_v2() -> Vec<Conv2dGeom> {
+    let mut v = vec![Conv2dGeom::new("conv 3x3/2", 3, 32, 3, 112, 112, false)];
+    // (t, cin, cout, n, first-stride, in_hw)
+    let blocks: &[(u64, u64, u64, u64, u64, u64)] = &[
+        (1, 32, 16, 1, 1, 112),
+        (6, 16, 24, 2, 2, 112),
+        (6, 24, 32, 3, 2, 56),
+        (6, 32, 64, 4, 2, 28),
+        (6, 64, 96, 3, 1, 14),
+        (6, 96, 160, 3, 2, 14),
+        (6, 160, 320, 1, 1, 7),
+    ];
+    for &(t, cin0, cout, n, s0, hw_in) in blocks {
+        let mut cin = cin0;
+        let mut hw = hw_in;
+        for i in 0..n {
+            let stride = if i == 0 { s0 } else { 1 };
+            let hw_out = hw / stride;
+            let mid = cin * t;
+            if t != 1 {
+                v.push(Conv2dGeom::new("expand 1x1", cin, mid, 1, hw, hw, false));
+            }
+            // depthwise geometry recorded at its *input* resolution, the
+            // convention of the paper's Table 5 (96ch DW at 112x112)
+            v.push(Conv2dGeom::new("dw 3x3", mid, mid, 3, hw, hw, true));
+            v.push(Conv2dGeom::new("project 1x1", mid, cout, 1, hw_out, hw_out, false));
+            cin = cout;
+            hw = hw_out;
+        }
+    }
+    v.push(Conv2dGeom::new("conv 1x1", 320, 1280, 1, 7, 7, false));
+    v
+}
+
+/// Named lookup used by the CLI / memory_report example.
+pub fn by_name(name: &str) -> Option<Vec<Conv2dGeom>> {
+    match name {
+        "resnet18" => Some(resnet18()),
+        "vgg16" => Some(vgg16()),
+        "mobilenet_v2" => Some(mobilenet_v2()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_has_expected_structure() {
+        let layers = resnet18();
+        // 1 stem + 4*4 basic-block convs + 3 downsample 1x1 = 20
+        assert_eq!(layers.len(), 20);
+        // paper Table 5 rows exist in the zoo
+        assert!(layers
+            .iter()
+            .any(|g| g.cin == 64 && g.cout == 64 && g.w == 56 && g.k == 3));
+        assert!(layers
+            .iter()
+            .any(|g| g.cin == 256 && g.cout == 256 && g.w == 14 && g.k == 3));
+    }
+
+    #[test]
+    fn vgg16_has_13_convs() {
+        assert_eq!(vgg16().len(), 13);
+    }
+
+    #[test]
+    fn mobilenet_structure() {
+        let layers = mobilenet_v2();
+        // 17 inverted residual blocks: 16 with expand (3 convs) + 1 without
+        // (2 convs) + stem + head = 1 + 16*3 + 2 + 1 = 52
+        assert_eq!(layers.len(), 52);
+        // paper Table 5's 96-channel 112x112 depthwise exists
+        assert!(layers
+            .iter()
+            .any(|g| g.depthwise && g.cin == 96 && g.w == 112));
+        // depthwise layers never mix channels
+        for g in &layers {
+            if g.depthwise {
+                assert_eq!(g.cin, g.cout);
+            }
+        }
+    }
+
+    #[test]
+    fn macs_are_imagenet_scale() {
+        let total: u64 = resnet18().iter().map(|g| g.macs()).sum();
+        // ResNet18 is ~1.8 GMACs; conv-only accounting lands close
+        assert!(total > 1_500_000_000 && total < 2_200_000_000, "{total}");
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("resnet18").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,288 @@
+//! Quantization math — the Rust mirror of the L1 kernels' semantics.
+//!
+//! Shares the exact conventions of `python/compile/kernels/ref.py`
+//! (asymmetric uniform grid containing zero, f32 arithmetic, 1e-12 scale
+//! guard) so the coordinator-side computations (DSGC search, calibration
+//! checks, the accelerator simulator's requantization) agree with what
+//! the compiled graphs do.  Property tests enforce the invariants; the
+//! integration suite cross-checks against artifact outputs.
+
+pub mod dsgc;
+
+/// Asymmetric uniform quantizer parameters for a `[qmin, qmax]` range.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    pub scale: f32,
+    pub zero_point: f32,
+    pub n_levels: u32,
+    pub bits: u32,
+}
+
+impl QuantParams {
+    /// Mirrors `ref.quant_params`: widen the range to contain 0, guard the
+    /// scale, round the zero-point to an integer grid index.
+    pub fn from_range(qmin: f32, qmax: f32, bits: u32) -> Self {
+        let qmin = qmin.min(0.0);
+        let qmax = qmax.max(0.0);
+        let n_levels = (1u32 << bits) - 1;
+        let scale = ((qmax - qmin) / n_levels as f32).max(1e-12);
+        let zero_point = (-qmin / scale).round();
+        Self {
+            scale,
+            zero_point,
+            n_levels,
+            bits,
+        }
+    }
+
+    /// Real-value edges of the representable grid.
+    pub fn grid_edges(&self) -> (f32, f32) {
+        (
+            (0.0 - self.zero_point) * self.scale,
+            (self.n_levels as f32 - self.zero_point) * self.scale,
+        )
+    }
+
+    /// Quantize one value to its integer grid index (nearest rounding).
+    #[inline]
+    pub fn index_of(&self, x: f32) -> u32 {
+        let t = (x / self.scale + self.zero_point).round();
+        t.clamp(0.0, self.n_levels as f32) as u32
+    }
+
+    /// Dequantize a grid index.
+    #[inline]
+    pub fn value_of(&self, idx: u32) -> f32 {
+        (idx as f32 - self.zero_point) * self.scale
+    }
+
+    /// Fake-quantize one value (nearest rounding).
+    #[inline]
+    pub fn fq(&self, x: f32) -> f32 {
+        self.value_of(self.index_of(x))
+    }
+
+    /// Fake-quantize with stochastic rounding given uniform noise in [0,1).
+    #[inline]
+    pub fn fq_stochastic(&self, x: f32, u: f32) -> f32 {
+        let t = (x / self.scale + self.zero_point + u).floor();
+        let idx = t.clamp(0.0, self.n_levels as f32);
+        (idx - self.zero_point) * self.scale
+    }
+}
+
+/// Per-tensor (min, max) — the accumulator statistics of paper Fig. 3.
+pub fn minmax(xs: &[f32]) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in xs {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    (lo, hi)
+}
+
+/// Fake-quantize a tensor in place (nearest rounding).
+pub fn fake_quant_slice(xs: &mut [f32], qmin: f32, qmax: f32, bits: u32) {
+    let qp = QuantParams::from_range(qmin, qmax, bits);
+    for x in xs.iter_mut() {
+        *x = qp.fq(*x);
+    }
+}
+
+/// Fake-quantize into a new buffer (used by DSGC candidate evaluation).
+pub fn fake_quant(xs: &[f32], qmin: f32, qmax: f32, bits: u32) -> Vec<f32> {
+    let qp = QuantParams::from_range(qmin, qmax, bits);
+    xs.iter().map(|&x| qp.fq(x)).collect()
+}
+
+/// Cosine similarity between two tensors (DSGC's objective; paper Sec. 5.1:
+/// maximize cos(FP32 grad, quantized grad)).  Returns 1.0 for two zero
+/// vectors and 0.0 when exactly one is zero.
+pub fn cosine_similarity(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let (mut dot, mut na, mut nb) = (0f64, 0f64, 0f64);
+    for (&x, &y) in a.iter().zip(b) {
+        dot += x as f64 * y as f64;
+        na += x as f64 * x as f64;
+        nb += y as f64 * y as f64;
+    }
+    if na == 0.0 && nb == 0.0 {
+        return 1.0;
+    }
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    (dot / (na.sqrt() * nb.sqrt())) as f32
+}
+
+/// Fraction of values outside `[qmin, qmax]` (paper footnote 1).
+pub fn saturation_ratio(xs: &[f32], qmin: f32, qmax: f32) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let out = xs.iter().filter(|&&x| x < qmin || x > qmax).count();
+    out as f32 / xs.len() as f32
+}
+
+/// EMA range update (paper eqs. 2-3):
+/// `new = (1 - eta) * stats + eta * prev` per component.
+pub fn ema_update(prev: [f32; 2], stats: [f32; 2], eta: f32) -> [f32; 2] {
+    [
+        (1.0 - eta) * stats[0] + eta * prev[0],
+        (1.0 - eta) * stats[1] + eta * prev[1],
+    ]
+}
+
+/// Mean squared quantization error for a range candidate (diagnostics).
+pub fn mse(xs: &[f32], qmin: f32, qmax: f32, bits: u32) -> f64 {
+    let qp = QuantParams::from_range(qmin, qmax, bits);
+    let mut acc = 0f64;
+    for &x in xs {
+        let e = (qp.fq(x) - x) as f64;
+        acc += e * e;
+    }
+    acc / xs.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::{forall, gens};
+
+    #[test]
+    fn zero_always_representable() {
+        forall(
+            128,
+            "zero-representable",
+            |rng| (gens::range(rng), gens::bits(rng)),
+            |((lo, hi), bits)| {
+                let qp = QuantParams::from_range(*lo, *hi, *bits);
+                qp.fq(0.0) == 0.0
+            },
+        );
+    }
+
+    #[test]
+    fn output_on_grid_and_clipped() {
+        forall(
+            128,
+            "on-grid",
+            |rng| {
+                let (lo, hi) = gens::range(rng);
+                let bits = gens::bits(rng);
+                let xs = gens::tensor(rng, 256);
+                (lo, hi, bits, xs)
+            },
+            |(lo, hi, bits, xs)| {
+                let qp = QuantParams::from_range(*lo, *hi, *bits);
+                let (glo, ghi) = qp.grid_edges();
+                xs.iter().all(|&x| {
+                    let q = qp.fq(x);
+                    let idx = q / qp.scale + qp.zero_point;
+                    (idx - idx.round()).abs() < 1e-3 && q >= glo - 1e-6 && q <= ghi + 1e-6
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn quantization_error_bounded_by_step() {
+        // inside the grid the error is <= scale/2 (nearest rounding)
+        forall(
+            128,
+            "error-bound",
+            |rng| {
+                let (lo, hi) = gens::range(rng);
+                let bits = gens::bits(rng);
+                let xs = gens::tensor(rng, 128);
+                (lo, hi, bits, xs)
+            },
+            |(lo, hi, bits, xs)| {
+                let qp = QuantParams::from_range(*lo, *hi, *bits);
+                let (glo, ghi) = qp.grid_edges();
+                xs.iter()
+                    .filter(|&&x| x >= glo && x <= ghi)
+                    .all(|&x| (qp.fq(x) - x).abs() <= qp.scale * 0.5001 + 1e-6)
+            },
+        );
+    }
+
+    #[test]
+    fn stochastic_rounding_unbiased() {
+        let qp = QuantParams::from_range(0.0, 1.0, 2);
+        let mut rng = crate::util::rng::Pcg32::new(3, 1);
+        let x = 0.3f32;
+        let n = 40_000;
+        let mean: f64 = (0..n)
+            .map(|_| qp.fq_stochastic(x, rng.uniform()) as f64)
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - x as f64).abs() < 5e-3, "mean {mean}");
+    }
+
+    #[test]
+    fn degenerate_range_is_finite_zero() {
+        let qp = QuantParams::from_range(0.0, 0.0, 8);
+        assert!(qp.fq(123.0).is_finite());
+        assert_eq!(qp.fq(0.0), 0.0);
+    }
+
+    #[test]
+    fn cosine_similarity_cases() {
+        assert!((cosine_similarity(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-6);
+        assert!((cosine_similarity(&[1.0, 0.0], &[0.0, 1.0])).abs() < 1e-6);
+        assert!((cosine_similarity(&[1.0, 2.0], &[-1.0, -2.0]) + 1.0).abs() < 1e-6);
+        assert_eq!(cosine_similarity(&[0.0], &[0.0]), 1.0);
+        assert_eq!(cosine_similarity(&[0.0], &[1.0]), 0.0);
+    }
+
+    #[test]
+    fn quantized_tensor_has_high_cosine_with_original() {
+        forall(
+            64,
+            "cosine-after-quant",
+            |rng| gens::tensor(rng, 512),
+            |xs| {
+                if xs.iter().all(|&x| x == 0.0) {
+                    return true;
+                }
+                let (lo, hi) = minmax(xs);
+                let q = fake_quant(xs, lo, hi, 8);
+                cosine_similarity(xs, &q) > 0.995
+            },
+        );
+    }
+
+    #[test]
+    fn ema_update_matches_paper() {
+        let out = ema_update([-1.0, 2.0], [-3.0, 1.0], 0.9);
+        assert!((out[0] - (0.9 * -1.0 + 0.1 * -3.0)).abs() < 1e-6);
+        assert!((out[1] - (0.9 * 2.0 + 0.1 * 1.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn saturation_ratio_cases() {
+        let xs = [-2.0, -0.5, 0.5, 3.0];
+        assert!((saturation_ratio(&xs, -1.0, 1.0) - 0.5).abs() < 1e-6);
+        assert_eq!(saturation_ratio(&[], -1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn minmax_range_quantization_never_saturates() {
+        forall(
+            64,
+            "minmax-no-saturation",
+            |rng| gens::tensor(rng, 256),
+            |xs| {
+                let (lo, hi) = minmax(xs);
+                let q = fake_quant(xs, lo, hi, 8);
+                // max error within half step of an 8-bit grid over [lo,hi]
+                let qp = QuantParams::from_range(lo, hi, 8);
+                xs.iter()
+                    .zip(&q)
+                    .all(|(&x, &qx)| (x - qx).abs() <= qp.scale * 0.5001 + 1e-6)
+            },
+        );
+    }
+}

@@ -1,0 +1,378 @@
+//! Artifact manifest: the ABI contract between `python/compile/aot.py`
+//! and the Rust runtime.  Marshalling is positional — the manifest's
+//! input/output orders *are* the flat argument orders of the HLO graphs.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::tensor::Dtype;
+use crate::util::json::{self, Value};
+
+/// One graph input/output slot.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+/// One lowered graph (HLO text file + ABI).
+#[derive(Debug, Clone)]
+pub struct GraphSpec {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl GraphSpec {
+    /// Index of a named input (panics are avoided; marshalling code uses
+    /// this for the scalar tail of the argument list).
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|io| io.name == name)
+            .ok_or_else(|| anyhow!("graph has no input '{name}'"))
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|io| io.name == name)
+            .ok_or_else(|| anyhow!("graph has no output '{name}'"))
+    }
+}
+
+/// Quantizer-site kind (which estimator mode scalar applies).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SiteKind {
+    Act,
+    Grad,
+}
+
+/// One quantizer site (row of the range-state tensor).
+#[derive(Debug, Clone)]
+pub struct SiteSpec {
+    pub index: usize,
+    pub name: String,
+    pub kind: SiteKind,
+    pub feature_shape: Vec<usize>,
+}
+
+/// Parameter/state leaf descriptor.
+#[derive(Debug, Clone)]
+pub struct LeafSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// One model's artifact bundle.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub batch_size: usize,
+    pub input_shape: Vec<usize>,
+    pub n_classes: usize,
+    pub n_params: usize,
+    pub pallas: String,
+    pub params: Vec<LeafSpec>,
+    pub state: Vec<LeafSpec>,
+    pub sites: Vec<SiteSpec>,
+    pub graphs: Vec<(String, GraphSpec)>,
+}
+
+impl ModelSpec {
+    pub fn graph(&self, name: &str) -> Result<&GraphSpec> {
+        self.graphs
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, g)| g)
+            .ok_or_else(|| anyhow!("model {} has no graph '{name}'", self.name))
+    }
+
+    pub fn has_graph(&self, name: &str) -> bool {
+        self.graphs.iter().any(|(n, _)| n == name)
+    }
+
+    pub fn n_sites(&self) -> usize {
+        self.sites.len()
+    }
+
+    pub fn grad_sites(&self) -> Vec<&SiteSpec> {
+        self.sites
+            .iter()
+            .filter(|s| s.kind == SiteKind::Grad)
+            .collect()
+    }
+
+    pub fn act_sites(&self) -> Vec<&SiteSpec> {
+        self.sites
+            .iter()
+            .filter(|s| s.kind == SiteKind::Act)
+            .collect()
+    }
+}
+
+/// The whole artifact bundle.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub bits_w: u32,
+    pub bits_a: u32,
+    pub bits_g: u32,
+    pub models: Vec<ModelSpec>,
+}
+
+impl Manifest {
+    /// Default artifact location: `$HINDSIGHT_ARTIFACTS` or `artifacts/`
+    /// relative to the current dir (falling back to the crate root, so
+    /// tests/benches work from any cwd).
+    pub fn default_dir() -> PathBuf {
+        if let Ok(p) = std::env::var("HINDSIGHT_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        for cand in ["artifacts", concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")] {
+            let p = PathBuf::from(cand);
+            if p.join("manifest.json").exists() {
+                return p;
+            }
+        }
+        PathBuf::from("artifacts")
+    }
+
+    pub fn load_default() -> Result<Self> {
+        Self::load(&Self::default_dir())
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = json::parse(&text).context("parsing manifest.json")?;
+        Self::from_value(dir, &root)
+    }
+
+    fn from_value(dir: &Path, root: &Value) -> Result<Self> {
+        let quant = root.req("quant")?;
+        let models_v = root
+            .req("models")?
+            .as_object()
+            .ok_or_else(|| anyhow!("models is not an object"))?;
+        let mut models = Vec::new();
+        for (name, mv) in models_v {
+            models.push(parse_model(name, mv)?);
+        }
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            bits_w: req_usize(quant, "bits_w")? as u32,
+            bits_a: req_usize(quant, "bits_a")? as u32,
+            bits_g: req_usize(quant, "bits_g")? as u32,
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no model '{name}' in manifest (have: {})",
+                    self.models
+                        .iter()
+                        .map(|m| m.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+
+    pub fn hlo_path(&self, g: &GraphSpec) -> PathBuf {
+        self.dir.join(&g.file)
+    }
+}
+
+fn req_usize(v: &Value, key: &str) -> Result<usize> {
+    v.req(key)?
+        .as_usize()
+        .ok_or_else(|| anyhow!("'{key}' is not a number"))
+}
+
+fn req_str<'a>(v: &'a Value, key: &str) -> Result<&'a str> {
+    v.req(key)?
+        .as_str()
+        .ok_or_else(|| anyhow!("'{key}' is not a string"))
+}
+
+fn parse_io(v: &Value) -> Result<IoSpec> {
+    Ok(IoSpec {
+        name: req_str(v, "name")?.to_string(),
+        shape: v
+            .req("shape")?
+            .as_usize_vec()
+            .ok_or_else(|| anyhow!("shape is not an array"))?,
+        dtype: Dtype::parse(req_str(v, "dtype")?)?,
+    })
+}
+
+fn parse_leaf(v: &Value) -> Result<LeafSpec> {
+    Ok(LeafSpec {
+        name: req_str(v, "name")?.to_string(),
+        shape: v
+            .req("shape")?
+            .as_usize_vec()
+            .ok_or_else(|| anyhow!("shape is not an array"))?,
+    })
+}
+
+fn parse_model(name: &str, v: &Value) -> Result<ModelSpec> {
+    let arr = |key: &str| -> Result<&[Value]> {
+        v.req(key)?
+            .as_array()
+            .ok_or_else(|| anyhow!("'{key}' is not an array"))
+    };
+    let params = arr("params")?.iter().map(parse_leaf).collect::<Result<_>>()?;
+    let state = arr("state")?.iter().map(parse_leaf).collect::<Result<_>>()?;
+    let sites = arr("sites")?
+        .iter()
+        .map(|s| {
+            let kind = match req_str(s, "kind")? {
+                "act" => SiteKind::Act,
+                "grad" => SiteKind::Grad,
+                other => bail!("unknown site kind '{other}'"),
+            };
+            Ok(SiteSpec {
+                index: req_usize(s, "index")?,
+                name: req_str(s, "name")?.to_string(),
+                kind,
+                feature_shape: s
+                    .req("feature_shape")?
+                    .as_usize_vec()
+                    .ok_or_else(|| anyhow!("feature_shape is not an array"))?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let graphs_v = v
+        .req("graphs")?
+        .as_object()
+        .ok_or_else(|| anyhow!("graphs is not an object"))?;
+    let mut graphs = Vec::new();
+    for (gname, gv) in graphs_v {
+        let inputs = gv
+            .req("inputs")?
+            .as_array()
+            .ok_or_else(|| anyhow!("inputs is not an array"))?
+            .iter()
+            .map(parse_io)
+            .collect::<Result<_>>()?;
+        let outputs = gv
+            .req("outputs")?
+            .as_array()
+            .ok_or_else(|| anyhow!("outputs is not an array"))?
+            .iter()
+            .map(parse_io)
+            .collect::<Result<_>>()?;
+        graphs.push((
+            gname.clone(),
+            GraphSpec {
+                file: req_str(gv, "file")?.to_string(),
+                inputs,
+                outputs,
+            },
+        ));
+    }
+    Ok(ModelSpec {
+        name: name.to_string(),
+        batch_size: req_usize(v, "batch_size")?,
+        input_shape: v
+            .req("input_shape")?
+            .as_usize_vec()
+            .ok_or_else(|| anyhow!("input_shape is not an array"))?,
+        n_classes: req_usize(v, "n_classes")?,
+        n_params: req_usize(v, "n_params")?,
+        pallas: req_str(v, "pallas")?.to_string(),
+        params,
+        state,
+        sites,
+        graphs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "quant": {"bits_w": 8, "bits_a": 8, "bits_g": 8},
+      "models": {
+        "mlp": {
+          "batch_size": 32, "input_shape": [8, 8, 3], "n_classes": 10,
+          "n_params": 100, "pallas": "all",
+          "params": [{"name": "fc1.w", "shape": [192, 64]}],
+          "state": [],
+          "sites": [
+            {"index": 0, "name": "fc1.act", "kind": "act", "feature_shape": [64]},
+            {"index": 1, "name": "fc2.grad", "kind": "grad", "feature_shape": [64]}
+          ],
+          "graphs": {
+            "train": {
+              "file": "mlp_train.hlo.txt",
+              "inputs": [{"name": "param:fc1.w", "shape": [192, 64], "dtype": "f32"},
+                         {"name": "seed", "shape": [], "dtype": "i32"}],
+              "outputs": [{"name": "loss", "shape": [], "dtype": "f32"}]
+            }
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let v = json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_value(Path::new("/tmp"), &v).unwrap();
+        assert_eq!(m.bits_g, 8);
+        let model = m.model("mlp").unwrap();
+        assert_eq!(model.batch_size, 32);
+        assert_eq!(model.sites.len(), 2);
+        assert_eq!(model.grad_sites().len(), 1);
+        let g = model.graph("train").unwrap();
+        assert_eq!(g.input_index("seed").unwrap(), 1);
+        assert!(g.input_index("nope").is_err());
+        assert!(model.graph("eval").is_err());
+    }
+
+    #[test]
+    fn missing_model_error_lists_names() {
+        let v = json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_value(Path::new("/tmp"), &v).unwrap();
+        let err = m.model("resnet").unwrap_err().to_string();
+        assert!(err.contains("mlp"), "{err}");
+    }
+
+    /// Parses the real manifest when artifacts are built.
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.model("mlp").is_ok());
+        let resnet = m.model("resnet_tiny").unwrap();
+        // train graph ABI: params*2 + state + x,y,ranges + 9 scalars
+        let g = resnet.graph("train").unwrap();
+        let expected =
+            resnet.params.len() * 2 + resnet.state.len() + 3 + 9;
+        assert_eq!(g.inputs.len(), expected);
+        // outputs: params*2 + state + loss, acc, new_ranges, stats
+        assert_eq!(
+            g.outputs.len(),
+            resnet.params.len() * 2 + resnet.state.len() + 4
+        );
+        // the ranges input is (Q, 2)
+        let ri = g.input_index("ranges").unwrap();
+        assert_eq!(g.inputs[ri].shape, vec![resnet.n_sites(), 2]);
+    }
+}

