@@ -1,7 +1,9 @@
 //! Range-estimator comparison at a glance (a fast, single-seed version of
-//! the paper's Table 1/2/3 protocol) plus the range-trajectory view that
-//! motivates in-hindsight estimation: how each estimator's range state
-//! tracks the true (current min-max) statistics over training.
+//! the paper's Table 1/2/3 protocol) over the *whole* estimator registry
+//! — the paper's five plus the literature plugins (max-history, sampled
+//! min-max) — plus the range-trajectory view that motivates in-hindsight
+//! estimation: how each estimator's range state tracks the true (current
+//! min-max) statistics over training.
 //!
 //!   cargo run --release --example estimator_comparison
 
@@ -16,21 +18,13 @@ fn main() -> Result<()> {
     let engine = Engine::new()?;
 
     let mut table = Table::new(
-        "Estimator comparison (cnn, fully quantized, 1 seed)",
+        "Estimator comparison (cnn, fully quantized, 1 seed, full registry)",
         &["Method", "Static", "Val acc (%)", "Train s"],
     );
-    for est in [
-        Estimator::Fp32,
-        Estimator::Current,
-        Estimator::Running,
-        Estimator::Dsgc,
-        Estimator::Hindsight,
-    ] {
+    for est in Estimator::all() {
+        // fully_quantized applies the search-estimator act fallback
+        // (gradients searched, activations current min-max)
         let mut cfg = TrainConfig::new("cnn").fully_quantized(est);
-        if est == Estimator::Dsgc {
-            // paper: DSGC for gradients, current min-max for activations
-            cfg.act_est = Estimator::Current;
-        }
         cfg.steps = steps;
         cfg.n_train = 1024;
         cfg.n_val = 256;
@@ -52,16 +46,16 @@ fn main() -> Result<()> {
     // range trajectory: quantize gradients with hindsight and log how the
     // EMA state trails the per-step statistics (site 0's grad quantizer)
     println!("\nrange trajectory (first grad site, in-hindsight vs stats):");
-    let mut cfg = TrainConfig::new("cnn").grad_only(Estimator::Hindsight);
+    let mut cfg = TrainConfig::new("cnn").grad_only(Estimator::HINDSIGHT);
     cfg.steps = 40;
     cfg.n_train = 512;
     let mut t = Trainer::new(&engine, cfg)?;
     let site = t
         .ranges
-        .dsgc_sites()
+        .search_sites()
         .first()
         .copied()
-        .unwrap_or(1); // any grad site; dsgc_sites is empty for hindsight
+        .unwrap_or(1); // any grad site; search_sites is empty for hindsight
     let site = if t.ranges.n_sites() > 1 { 1 } else { site };
     for step in 0..40u64 {
         t.train_step()?;

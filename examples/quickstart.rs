@@ -15,7 +15,7 @@ fn main() -> Result<()> {
     hindsight::util::logging::init();
 
     let engine = Engine::new()?;
-    let mut cfg = TrainConfig::new("cnn").fully_quantized(Estimator::Hindsight);
+    let mut cfg = TrainConfig::new("cnn").fully_quantized(Estimator::HINDSIGHT);
     cfg.steps = 60;
     cfg.n_train = 1024;
     cfg.n_val = 256;

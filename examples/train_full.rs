@@ -36,10 +36,10 @@ fn main() -> Result<()> {
     let engine = Engine::new()?;
 
     println!("\n-- in-hindsight W8/A8/G8 --");
-    let rec_q = Trainer::new(&engine, cfg(&model, steps, Estimator::Hindsight))?
+    let rec_q = Trainer::new(&engine, cfg(&model, steps, Estimator::HINDSIGHT))?
         .run()?;
     println!("\n-- FP32 baseline --");
-    let rec_fp = Trainer::new(&engine, cfg(&model, steps, Estimator::Fp32))?
+    let rec_fp = Trainer::new(&engine, cfg(&model, steps, Estimator::FP32))?
         .run()?;
 
     println!("\nloss curve (quantized run):");

@@ -18,7 +18,7 @@ fn main() {
         "Ablation — activation-quantizer calibration (cnn, A8 only)",
         &["Method", "Calib batches", "Val. Acc. (%)"],
     );
-    for est in [Estimator::Running, Estimator::Hindsight] {
+    for est in [Estimator::RUNNING, Estimator::HINDSIGHT] {
         for calib in [0usize, 4] {
             let mut cfg = common::base_cfg("cnn", &s).act_only(est);
             cfg.calib_batches = calib;

@@ -19,7 +19,7 @@ fn main() {
     );
     let mut accs = Vec::new();
     for eta in [0.0f32, 0.5, 0.9, 0.99] {
-        let mut cfg = common::base_cfg("cnn", &s).fully_quantized(Estimator::Hindsight);
+        let mut cfg = common::base_cfg("cnn", &s).fully_quantized(Estimator::HINDSIGHT);
         cfg.eta = eta;
         let out = sweep_row(&engine, &cfg, &format!("eta={eta}"), &s.seeds).unwrap();
         accs.push(out.agg.mean());

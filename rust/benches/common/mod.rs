@@ -70,24 +70,19 @@ pub fn estimator_table(
         title,
         &["Method", "Static", "Val. Acc. (%)", "paper (TinyImageNet)", "ms/step"],
     );
-    for est in [
-        Estimator::Fp32,
-        Estimator::Current,
-        Estimator::Running,
-        Estimator::Dsgc,
-        Estimator::Hindsight,
-    ] {
-        if est == Estimator::Dsgc && mode == Mode::ActOnly {
-            continue; // paper applies DSGC to gradients only
+    // the whole registry: the paper's five rows plus the literature
+    // estimators ride along with "-" in the paper column
+    for est in Estimator::all() {
+        if est.needs_search() && mode == Mode::ActOnly {
+            continue; // search estimators apply to gradients only
         }
-        let mut cfg = match mode {
+        let cfg = match mode {
             Mode::GradOnly => base_cfg(model, &s).grad_only(est),
             Mode::ActOnly => base_cfg(model, &s).act_only(est),
+            // fully_quantized applies the paper-Table-3 act fallback for
+            // search estimators
             Mode::Full => base_cfg(model, &s).fully_quantized(est),
         };
-        if mode == Mode::Full && est == Estimator::Dsgc {
-            cfg.act_est = Estimator::Current; // paper Table 3 DSGC row
-        }
         let out = sweep_row(&engine, &cfg, est.name(), &s.seeds)
             .expect("sweep row");
         let paper_cell = paper

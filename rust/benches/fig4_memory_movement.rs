@@ -5,7 +5,9 @@
 //!   cargo bench --bench fig4_memory_movement
 
 use hindsight::quant::QuantParams;
+use hindsight::simulator::backward::{self, BwdBits};
 use hindsight::simulator::machine::{MacArray, Policy};
+use hindsight::simulator::traffic;
 use hindsight::util::bench::Table;
 use hindsight::util::rng::Pcg32;
 
@@ -49,4 +51,22 @@ fn main() {
     let cos = hindsight::quant::cosine_similarity(&st.output, &dy.output);
     println!("cosine(static output, dynamic output) = {cos:.5}");
     assert!(cos > 0.995);
+
+    // backward leg (paper: "the backwards pass follows analogously"):
+    // quantize-and-store G_X through the fused single-pass kernel and tie
+    // the bytes moved back to the closed-form bwd accounting
+    let geom = traffic::table5_layers()[0];
+    let bits = BwdBits::default();
+    let gx_elems = (geom.cin * geom.w * geom.h) as usize;
+    let mut gx: Vec<f32> = (0..gx_elems).map(|_| rng.normal() * 0.01).collect();
+    let (stats, bits_moved) = backward::store_gx_static(&mut gx, -0.04, 0.04, bits);
+    println!(
+        "backward G_X store ({}, fused single pass): stats [{:+.4}, {:+.4}], \
+         {:.0} KB moved == the closed-form G_X store term",
+        geom.name,
+        stats.0,
+        stats.1,
+        bits_moved as f64 / 8.0 / 1024.0,
+    );
+    assert_eq!(bits_moved, geom.cin * geom.w * geom.h * bits.b_g);
 }

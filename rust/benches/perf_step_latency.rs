@@ -24,10 +24,10 @@ fn main() {
     for model in ["cnn", "resnet_tiny"] {
         let mut hindsight_ms = f64::NAN;
         for est in [
-            Estimator::Hindsight,
-            Estimator::Current,
-            Estimator::Running,
-            Estimator::Fp32,
+            Estimator::HINDSIGHT,
+            Estimator::CURRENT,
+            Estimator::RUNNING,
+            Estimator::FP32,
         ] {
             let s = common::scale();
             let mut cfg = common::base_cfg(model, &s).fully_quantized(est);
@@ -43,7 +43,7 @@ fn main() {
                 t.train_step().unwrap();
             }
             let ms = t0.elapsed().as_secs_f64() / iters as f64 * 1e3;
-            if est == Estimator::Hindsight {
+            if est == Estimator::HINDSIGHT {
                 hindsight_ms = ms;
             }
             table.row(&[

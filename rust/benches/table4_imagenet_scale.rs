@@ -29,10 +29,10 @@ fn main() {
         &["Method", "Static", "Val. Acc. (%)", "paper (ImageNet)", "ms/step"],
     );
     for est in [
-        Estimator::Fp32,
-        Estimator::Current,
-        Estimator::Running,
-        Estimator::Hindsight,
+        Estimator::FP32,
+        Estimator::CURRENT,
+        Estimator::RUNNING,
+        Estimator::HINDSIGHT,
     ] {
         let mut cfg = common::base_cfg("resnet_tiny", &s).fully_quantized(est);
         cfg.steps = steps;

@@ -1,70 +1,13 @@
 //! Training configuration, mirroring the paper's Sec. 5 setup.
+//!
+//! The range-estimation method for a tensor class used to be a closed
+//! enum here; it is now the registry-backed [`Estimator`] handle from
+//! `crate::estimator` (re-exported for the existing import paths), so a
+//! config can name any registered estimator.
 
 use anyhow::{bail, Result};
 
-/// Range-estimation method for a tensor class (paper Sec. 5.1).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Estimator {
-    /// no quantization of this tensor class (FP32 baseline rows)
-    Fp32,
-    /// current min-max — dynamic, ranges from the current tensor
-    Current,
-    /// running min-max — dynamic, EMA blended including current stats
-    Running,
-    /// in-hindsight min-max — static, the paper's method (eqs. 2-3)
-    Hindsight,
-    /// direction-sensitive gradient clipping — static between periodic
-    /// golden-section searches (gradients only in the paper)
-    Dsgc,
-}
-
-impl Estimator {
-    pub fn parse(s: &str) -> Result<Self> {
-        Ok(match s {
-            "fp32" => Self::Fp32,
-            "current" => Self::Current,
-            "running" => Self::Running,
-            "hindsight" => Self::Hindsight,
-            "dsgc" => Self::Dsgc,
-            other => bail!(
-                "unknown estimator '{other}' \
-                 (fp32|current|running|hindsight|dsgc)"
-            ),
-        })
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            Self::Fp32 => "FP32",
-            Self::Current => "Current min-max",
-            Self::Running => "Running min-max",
-            Self::Hindsight => "In-hindsight min-max",
-            Self::Dsgc => "DSGC",
-        }
-    }
-
-    /// Graph `mode` scalar (see `python/compile/quant_ops.py`).
-    /// DSGC runs the graph in static (hindsight) mode; the coordinator
-    /// owns its range state.  FP32's mode is irrelevant (enable is off) —
-    /// static keeps the dead branch cheapest.
-    pub fn mode(&self) -> f32 {
-        match self {
-            Self::Current => 0.0,
-            Self::Running => 1.0,
-            Self::Fp32 | Self::Hindsight | Self::Dsgc => 2.0,
-        }
-    }
-
-    /// Whether this estimator quantizes its tensor class at all.
-    pub fn enabled(&self) -> bool {
-        !matches!(self, Self::Fp32)
-    }
-
-    /// Is the step-path quantization static (paper Table 1 "Static" col)?
-    pub fn is_static(&self) -> bool {
-        matches!(self, Self::Hindsight | Self::Dsgc | Self::Fp32)
-    }
-}
+pub use crate::estimator::Estimator;
 
 /// Learning-rate schedule (paper: step decay for ResNet/VGG, cosine for
 /// MobileNetV2).
@@ -143,8 +86,8 @@ impl TrainConfig {
         Self {
             model: model.to_string(),
             steps: 300,
-            grad_est: Estimator::Hindsight,
-            act_est: Estimator::Hindsight,
+            grad_est: Estimator::HINDSIGHT,
+            act_est: Estimator::HINDSIGHT,
             quant_weights: true,
             eta: 0.9,
             lr: 0.05,
@@ -163,9 +106,14 @@ impl TrainConfig {
     }
 
     /// Configure the paper's "fully quantized" W8/A8/G8 setting.
+    ///
+    /// Search-based estimators (DSGC-style `needs_search`) apply to
+    /// gradients only; their activation side falls back to current
+    /// min-max (paper Table 3's DSGC row).  Centralized here so sweeps,
+    /// benches and examples don't each re-encode the rule.
     pub fn fully_quantized(mut self, est: Estimator) -> Self {
         self.grad_est = est;
-        self.act_est = est;
+        self.act_est = if est.needs_search() { Estimator::CURRENT } else { est };
         self.quant_weights = est.enabled();
         self
     }
@@ -173,7 +121,7 @@ impl TrainConfig {
     /// Gradient-quantization-only study (paper Table 1).
     pub fn grad_only(mut self, est: Estimator) -> Self {
         self.grad_est = est;
-        self.act_est = Estimator::Fp32;
+        self.act_est = Estimator::FP32;
         self.quant_weights = false;
         self
     }
@@ -181,7 +129,7 @@ impl TrainConfig {
     /// Activation-quantization-only study (paper Table 2).
     pub fn act_only(mut self, est: Estimator) -> Self {
         self.act_est = est;
-        self.grad_est = Estimator::Fp32;
+        self.grad_est = Estimator::FP32;
         self.quant_weights = false;
         self
     }
@@ -204,15 +152,15 @@ mod tests {
 
     #[test]
     fn estimator_parse_and_props() {
-        assert_eq!(Estimator::parse("hindsight").unwrap(), Estimator::Hindsight);
+        assert_eq!(Estimator::parse("hindsight").unwrap(), Estimator::HINDSIGHT);
         assert!(Estimator::parse("bogus").is_err());
-        assert!(Estimator::Hindsight.is_static());
-        assert!(!Estimator::Current.is_static());
-        assert!(Estimator::Dsgc.is_static());
-        assert!(!Estimator::Fp32.enabled());
-        assert_eq!(Estimator::Current.mode(), 0.0);
-        assert_eq!(Estimator::Running.mode(), 1.0);
-        assert_eq!(Estimator::Hindsight.mode(), 2.0);
+        assert!(Estimator::HINDSIGHT.is_static());
+        assert!(!Estimator::CURRENT.is_static());
+        assert!(Estimator::DSGC.is_static());
+        assert!(!Estimator::FP32.enabled());
+        assert_eq!(Estimator::CURRENT.mode(), 0.0);
+        assert_eq!(Estimator::RUNNING.mode(), 1.0);
+        assert_eq!(Estimator::HINDSIGHT.mode(), 2.0);
     }
 
     #[test]
@@ -235,13 +183,17 @@ mod tests {
 
     #[test]
     fn config_presets() {
-        let c = TrainConfig::new("resnet_tiny").grad_only(Estimator::Dsgc);
-        assert_eq!(c.grad_est, Estimator::Dsgc);
-        assert_eq!(c.act_est, Estimator::Fp32);
+        let c = TrainConfig::new("resnet_tiny").grad_only(Estimator::DSGC);
+        assert_eq!(c.grad_est, Estimator::DSGC);
+        assert_eq!(c.act_est, Estimator::FP32);
         assert!(!c.quant_weights);
-        let f = TrainConfig::new("cnn").fully_quantized(Estimator::Running);
+        let f = TrainConfig::new("cnn").fully_quantized(Estimator::RUNNING);
         assert!(f.quant_weights);
-        let fp = TrainConfig::new("cnn").fully_quantized(Estimator::Fp32);
+        let fp = TrainConfig::new("cnn").fully_quantized(Estimator::FP32);
         assert!(!fp.quant_weights);
+        // search estimators quantize gradients; acts fall back to current
+        let d = TrainConfig::new("cnn").fully_quantized(Estimator::DSGC);
+        assert_eq!(d.grad_est, Estimator::DSGC);
+        assert_eq!(d.act_est, Estimator::CURRENT);
     }
 }

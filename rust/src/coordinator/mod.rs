@@ -1,10 +1,10 @@
 //! Training coordination — the paper's contribution as runtime logic.
 //!
 //! * [`ranges`] — the range-estimation state machine: per-quantizer range
-//!   state, estimator semantics (FP32 / current / running / in-hindsight /
-//!   DSGC), and the graph-ABI scalar encoding.
+//!   state and the graph-ABI scalar encoding; estimator semantics are
+//!   delegated to per-site `crate::estimator` trait objects.
 //! * [`config`] — training configuration (mirrors the paper's Sec. 5
-//!   experimental setup).
+//!   experimental setup); estimators are named registry entries.
 //! * [`trainer`] — the step loop: batch marshalling, the compiled train /
 //!   eval / dump graphs, calibration, LR schedules, metrics.
 //! * [`sweep`] — multi-seed, multi-estimator sweeps producing the paper's

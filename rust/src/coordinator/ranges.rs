@@ -4,20 +4,21 @@
 //! returns two (Q, 2) tensors: `new_ranges` (the state-update each
 //! estimator mode prescribes, computed in-graph) and `stats` (the raw
 //! accumulator min/max of the step — paper Fig. 3).  This module owns
-//! what happens *between* steps:
-//!
-//! * current / running / hindsight rows adopt `new_ranges` verbatim
-//!   (the graph applied exactly eqs. 2-3 / the dynamic rules);
-//! * DSGC gradient rows **ignore** the EMA update and hold their last
-//!   searched range until the next periodic golden-section search — the
-//!   hybrid static scheme of the paper's Sec. 5.1;
-//! * FP32 rows keep whatever they had (quantization disabled).
+//! what happens *between* steps — but no longer knows any estimator's
+//! semantics: each quantizer site carries a boxed
+//! [`RangeEstimator`](crate::estimator::RangeEstimator) instantiated
+//! from the registry, and `RangeManager` just routes the graph outputs
+//! through the per-site `absorb_step` / `absorb_calibration` hooks and
+//! the periodic `search` hook for estimators that declare
+//! `needs_search` (DSGC, sampled min-max).  The (Q, 2) tensor ABI to
+//! the compiled graph is unchanged.
 
 use crate::coordinator::config::Estimator;
+use crate::estimator::{RangeEstimator, StepCtx};
 use crate::runtime::manifest::{ModelSpec, SiteKind};
 use crate::runtime::tensor::Tensor;
 
-/// Per-quantizer range state + estimator semantics.
+/// Per-quantizer range state + delegated estimator semantics.
 #[derive(Debug, Clone)]
 pub struct RangeManager {
     /// (Q, 2) rows: [qmin, qmax] per site, indexed by site index
@@ -25,6 +26,8 @@ pub struct RangeManager {
     kinds: Vec<SiteKind>,
     pub act_est: Estimator,
     pub grad_est: Estimator,
+    /// one estimator instance per site (owns any per-site state)
+    sites: Vec<Box<dyn RangeEstimator>>,
     /// last raw stats observed (diagnostics, saturation tracking)
     last_stats: Vec<[f32; 2]>,
     calibrated: bool,
@@ -33,28 +36,27 @@ pub struct RangeManager {
 impl RangeManager {
     pub fn new(model: &ModelSpec, act_est: Estimator, grad_est: Estimator) -> Self {
         let kinds = model.sites.iter().map(|s| s.kind).collect::<Vec<_>>();
-        // neutral init: a generous symmetric range; calibration and/or the
-        // first-step stats (paper: q^0 = minmax(G^0)) replace it
-        let ranges = vec![[-1.0, 1.0]; kinds.len()];
+        let sites: Vec<Box<dyn RangeEstimator>> = kinds
+            .iter()
+            .map(|k| match k {
+                SiteKind::Act => act_est.instantiate(),
+                SiteKind::Grad => grad_est.instantiate(),
+            })
+            .collect();
+        let ranges = sites.iter().map(|e| e.init()).collect();
         Self {
             last_stats: vec![[0.0, 0.0]; kinds.len()],
             ranges,
             kinds,
             act_est,
             grad_est,
+            sites,
             calibrated: false,
         }
     }
 
     pub fn n_sites(&self) -> usize {
         self.kinds.len()
-    }
-
-    pub fn estimator_for(&self, i: usize) -> Estimator {
-        match self.kinds[i] {
-            SiteKind::Act => self.act_est,
-            SiteKind::Grad => self.grad_est,
-        }
     }
 
     /// The (Q, 2) tensor fed to the graph this step.
@@ -95,50 +97,37 @@ impl RangeManager {
         self.grad_est.enabled() as u32 as f32
     }
 
-    /// Absorb one training step's outputs.
+    /// Absorb one training step's outputs: each site's estimator sees
+    /// `{current row, raw stats, in-graph update}` and returns the row
+    /// the next step quantizes with.
     ///
-    /// `first_step` implements the paper's initialization
-    /// `q^0 = minmax(G^0)` for sites that were never calibrated.
+    /// `first_step` lets uncalibrated estimators implement the paper's
+    /// initialization `q^0 = minmax(G^0)`.
     pub fn update(&mut self, new_ranges: &Tensor, stats: &Tensor, first_step: bool) {
         let nr = new_ranges.as_f32().expect("new_ranges f32");
         let st = stats.as_f32().expect("stats f32");
         assert_eq!(nr.len(), self.ranges.len() * 2);
         for i in 0..self.ranges.len() {
             self.last_stats[i] = [st[2 * i], st[2 * i + 1]];
-            let est = self.estimator_for(i);
-            match est {
-                Estimator::Fp32 => {}
-                Estimator::Dsgc => {
-                    // hold the searched range; but bootstrap from the first
-                    // observation so training can start before search #1
-                    if first_step && !self.calibrated {
-                        self.ranges[i] = self.last_stats[i];
-                    }
-                }
-                _ => {
-                    if first_step && !self.calibrated {
-                        // q^0 = minmax of the first batch (paper Sec. 4.1)
-                        self.ranges[i] = self.last_stats[i];
-                    } else {
-                        self.ranges[i] = [nr[2 * i], nr[2 * i + 1]];
-                    }
-                }
-            }
+            let ctx = StepCtx {
+                current: self.ranges[i],
+                stats: self.last_stats[i],
+                new_ranges: [nr[2 * i], nr[2 * i + 1]],
+                first_step,
+                calibrated: self.calibrated,
+            };
+            self.ranges[i] = self.sites[i].absorb_step(ctx);
         }
     }
 
     /// Absorb one *calibration* batch (paper Sec. 5.2: feed a few batches
     /// through the network before training to set activation ranges).
-    /// First batch seeds the ranges with raw stats, later batches EMA in.
     pub fn calibrate(&mut self, stats: &Tensor, eta: f32) {
         let st = stats.as_f32().expect("stats f32");
         for i in 0..self.ranges.len() {
             let s = [st[2 * i], st[2 * i + 1]];
-            self.ranges[i] = if self.calibrated {
-                crate::quant::ema_update(self.ranges[i], s, eta)
-            } else {
-                s
-            };
+            self.ranges[i] =
+                self.sites[i].absorb_calibration(self.ranges[i], s, eta, !self.calibrated);
             self.last_stats[i] = s;
         }
         self.calibrated = true;
@@ -148,15 +137,23 @@ impl RangeManager {
         self.calibrated
     }
 
-    /// Site indices that DSGC must search (gradient sites, when the grad
-    /// estimator is DSGC).
-    pub fn dsgc_sites(&self) -> Vec<usize> {
-        if self.grad_est != Estimator::Dsgc {
+    /// Site indices the periodic search pass must visit: gradient sites
+    /// whose estimator declares `needs_search` (DSGC, sampled min-max).
+    pub fn search_sites(&self) -> Vec<usize> {
+        if !self.grad_est.needs_search() {
             return vec![];
         }
         (0..self.kinds.len())
             .filter(|&i| self.kinds[i] == SiteKind::Grad)
             .collect()
+    }
+
+    /// Run one site's tensor-level search and adopt the resulting range.
+    /// Returns the search's cost in tensor traversals.
+    pub fn search_site(&mut self, i: usize, tensor: &[f32], bits: u32, iters: u32) -> u32 {
+        let out = self.sites[i].search(tensor, bits, iters);
+        self.ranges[i] = out.range;
+        out.evals
     }
 
     /// Mean saturation headroom diagnostic: how much of the last stats
@@ -185,7 +182,10 @@ impl RangeManager {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::ema_update;
     use crate::runtime::manifest::{LeafSpec, ModelSpec, SiteSpec};
+    use crate::util::rng::Pcg32;
+    use crate::util::testkit::forall;
 
     fn model(n_act: usize, n_grad: usize) -> ModelSpec {
         let mut sites = Vec::new();
@@ -218,7 +218,7 @@ mod tests {
     #[test]
     fn first_step_adopts_raw_stats() {
         let m = model(1, 1);
-        let mut rm = RangeManager::new(&m, Estimator::Hindsight, Estimator::Hindsight);
+        let mut rm = RangeManager::new(&m, Estimator::HINDSIGHT, Estimator::HINDSIGHT);
         let nr = t(2, &[-0.5, 0.5, -0.1, 0.1]);
         let st = t(2, &[-2.0, 3.0, -4.0, 5.0]);
         rm.update(&nr, &st, true);
@@ -232,7 +232,7 @@ mod tests {
     #[test]
     fn fp32_rows_frozen() {
         let m = model(1, 1);
-        let mut rm = RangeManager::new(&m, Estimator::Fp32, Estimator::Hindsight);
+        let mut rm = RangeManager::new(&m, Estimator::FP32, Estimator::HINDSIGHT);
         let before = rm.row(0);
         rm.update(&t(2, &[9.0, 9.0, -1.0, 1.0]), &t(2, &[0.0, 1.0, 0.0, 1.0]), false);
         assert_eq!(rm.row(0), before); // act site untouched (FP32)
@@ -244,7 +244,7 @@ mod tests {
     #[test]
     fn dsgc_rows_held_between_searches() {
         let m = model(1, 2);
-        let mut rm = RangeManager::new(&m, Estimator::Current, Estimator::Dsgc);
+        let mut rm = RangeManager::new(&m, Estimator::CURRENT, Estimator::DSGC);
         rm.set_row(1, [-7.0, 7.0]); // pretend a search happened
         rm.calibrate(&t(3, &[0.0; 6]), 0.9); // mark calibrated
         rm.set_row(1, [-7.0, 7.0]);
@@ -254,16 +254,28 @@ mod tests {
             false,
         );
         assert_eq!(rm.row(1), [-7.0, 7.0]); // held
-        assert_eq!(rm.dsgc_sites(), vec![1, 2]);
-        // act sites are not DSGC sites
-        let rm2 = RangeManager::new(&m, Estimator::Dsgc, Estimator::Current);
-        assert!(rm2.dsgc_sites().is_empty());
+        assert_eq!(rm.search_sites(), vec![1, 2]);
+        // act sites are never search sites
+        let rm2 = RangeManager::new(&m, Estimator::DSGC, Estimator::CURRENT);
+        assert!(rm2.search_sites().is_empty());
+    }
+
+    #[test]
+    fn search_site_adopts_the_searched_range() {
+        let m = model(0, 1);
+        let mut rm = RangeManager::new(&m, Estimator::CURRENT, Estimator::SAMPLED_MINMAX);
+        assert_eq!(rm.search_sites(), vec![0]);
+        let g: Vec<f32> = (0..4096).map(|i| ((i % 513) as f32 / 256.0) - 1.0).collect();
+        let evals = rm.search_site(0, &g, 8, 0);
+        assert_eq!(evals, 1);
+        let r = rm.row(0);
+        assert!(r[0] <= -0.9 && r[1] >= 0.9, "{r:?}");
     }
 
     #[test]
     fn calibration_seeds_then_emas() {
         let m = model(2, 0);
-        let mut rm = RangeManager::new(&m, Estimator::Hindsight, Estimator::Fp32);
+        let mut rm = RangeManager::new(&m, Estimator::HINDSIGHT, Estimator::FP32);
         rm.calibrate(&t(2, &[-1.0, 1.0, -2.0, 2.0]), 0.5);
         assert_eq!(rm.row(0), [-1.0, 1.0]);
         rm.calibrate(&t(2, &[-3.0, 3.0, -2.0, 2.0]), 0.5);
@@ -274,7 +286,7 @@ mod tests {
     #[test]
     fn tensor_roundtrip_and_coverage() {
         let m = model(1, 0);
-        let mut rm = RangeManager::new(&m, Estimator::Hindsight, Estimator::Fp32);
+        let mut rm = RangeManager::new(&m, Estimator::HINDSIGHT, Estimator::FP32);
         rm.set_row(0, [-1.0, 1.0]);
         let t = rm.as_tensor();
         assert_eq!(t.shape, vec![1, 2]);
@@ -286,5 +298,127 @@ mod tests {
             false,
         );
         assert!(rm.coverage() < 1.0);
+    }
+
+    #[test]
+    fn maxhist_rows_track_the_window_hull() {
+        let m = model(1, 1);
+        let mut rm = RangeManager::new(&m, Estimator::MAX_HISTORY, Estimator::MAX_HISTORY);
+        rm.update(&t(2, &[0.0; 4]), &t(2, &[-1.0, 1.0, -2.0, 2.0]), true);
+        assert_eq!(rm.row(0), [-1.0, 1.0]);
+        rm.update(&t(2, &[0.0; 4]), &t(2, &[-0.5, 3.0, -1.0, 1.0]), false);
+        // hull over both observations, not an EMA
+        assert_eq!(rm.row(0), [-1.0, 3.0]);
+        assert_eq!(rm.row(1), [-2.0, 2.0]);
+    }
+
+    // ------------------------------------------------------------------
+    // Golden parity: the trait impls must reproduce the pre-refactor
+    // enum-branch semantics of `RangeManager::update` / `calibrate`
+    // bit-for-bit for the five legacy estimators.
+    // ------------------------------------------------------------------
+
+    /// The seed's `RangeManager::update` match, verbatim.
+    fn legacy_step(
+        est: Estimator,
+        cur: [f32; 2],
+        stats: [f32; 2],
+        nr: [f32; 2],
+        first_step: bool,
+        calibrated: bool,
+    ) -> [f32; 2] {
+        if est == Estimator::FP32 {
+            cur
+        } else if est == Estimator::DSGC {
+            if first_step && !calibrated {
+                stats
+            } else {
+                cur
+            }
+        } else if first_step && !calibrated {
+            stats
+        } else {
+            nr
+        }
+    }
+
+    /// The seed's `RangeManager::calibrate` body, verbatim.
+    fn legacy_calibrate(cur: [f32; 2], stats: [f32; 2], eta: f32, calibrated: bool) -> [f32; 2] {
+        if calibrated {
+            ema_update(cur, stats, eta)
+        } else {
+            stats
+        }
+    }
+
+    fn rand_rows(rng: &mut Pcg32, q: usize) -> Vec<f32> {
+        (0..2 * q).map(|_| rng.range(-20.0, 20.0)).collect()
+    }
+
+    #[test]
+    fn trait_impls_match_legacy_enum_semantics() {
+        for est in [
+            Estimator::FP32,
+            Estimator::CURRENT,
+            Estimator::RUNNING,
+            Estimator::HINDSIGHT,
+            Estimator::DSGC,
+        ] {
+            forall(
+                48,
+                &format!("legacy-parity-{}", est.key()),
+                |rng| {
+                    let n_act = 1 + rng.below(2);
+                    let n_grad = 1 + rng.below(2);
+                    let q = n_act + n_grad;
+                    let calib: Vec<Vec<f32>> =
+                        (0..rng.below(3)).map(|_| rand_rows(rng, q)).collect();
+                    let steps: Vec<(Vec<f32>, Vec<f32>)> = (0..1 + rng.below(5))
+                        .map(|_| (rand_rows(rng, q), rand_rows(rng, q)))
+                        .collect();
+                    let eta = rng.range(0.0, 1.0);
+                    (n_act, n_grad, calib, steps, eta)
+                },
+                |(n_act, n_grad, calib, steps, eta)| {
+                    let m = model(*n_act, *n_grad);
+                    let q = n_act + n_grad;
+                    let mut rm = RangeManager::new(&m, est, est);
+                    // legacy mirror state
+                    let mut rows = vec![[-1.0f32, 1.0]; q];
+                    let mut calibrated = false;
+                    for st in calib {
+                        for (i, row) in rows.iter_mut().enumerate() {
+                            *row = legacy_calibrate(
+                                *row,
+                                [st[2 * i], st[2 * i + 1]],
+                                *eta,
+                                calibrated,
+                            );
+                        }
+                        calibrated = true;
+                        rm.calibrate(&t(q, st), *eta);
+                    }
+                    for (step, (nr, st)) in steps.iter().enumerate() {
+                        rm.update(&t(q, nr), &t(q, st), step == 0);
+                        for (i, row) in rows.iter_mut().enumerate() {
+                            *row = legacy_step(
+                                est,
+                                *row,
+                                [st[2 * i], st[2 * i + 1]],
+                                [nr[2 * i], nr[2 * i + 1]],
+                                step == 0,
+                                calibrated,
+                            );
+                        }
+                        for i in 0..q {
+                            if rm.row(i) != rows[i] {
+                                return false;
+                            }
+                        }
+                    }
+                    true
+                },
+            );
+        }
     }
 }

@@ -57,6 +57,24 @@ mod tests {
     use crate::coordinator::config::Estimator;
     use crate::runtime::manifest::Manifest;
 
+    /// Registry round-trip, no engine needed: every registered name
+    /// resolves through config parsing into a sweepable configuration.
+    #[test]
+    fn registry_names_round_trip_through_configs() {
+        for est in Estimator::all() {
+            let parsed = Estimator::parse(est.key()).unwrap();
+            assert_eq!(parsed, est);
+            let full = TrainConfig::new("mlp").fully_quantized(parsed);
+            assert_eq!(full.quant_weights, parsed.enabled());
+            assert!(full.tag().contains(parsed.name()), "{}", full.tag());
+            let _ = TrainConfig::new("mlp").grad_only(parsed);
+            let _ = TrainConfig::new("mlp").act_only(parsed);
+            // per-site instances are constructible for every name
+            let _ = parsed.instantiate();
+        }
+        assert!(Estimator::parse("not-an-estimator").is_err());
+    }
+
     #[test]
     fn sweep_aggregates_across_seeds() {
         if !Manifest::default_dir().join("manifest.json").exists() {
@@ -64,7 +82,7 @@ mod tests {
             return;
         }
         let engine = Engine::new().unwrap();
-        let mut cfg = TrainConfig::new("mlp").fully_quantized(Estimator::Hindsight);
+        let mut cfg = TrainConfig::new("mlp").fully_quantized(Estimator::HINDSIGHT);
         cfg.steps = 6;
         cfg.n_train = 64;
         cfg.n_val = 32;

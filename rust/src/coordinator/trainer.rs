@@ -1,6 +1,7 @@
 //! The training driver: marshals batches into the compiled train graph,
-//! threads the range state between steps, runs calibration, periodic
-//! DSGC searches, LR schedules, evaluation and metrics.
+//! threads the range state between steps, runs calibration, the periodic
+//! search pass for `needs_search` estimators (DSGC, sampled min-max),
+//! LR schedules, evaluation and metrics.
 //!
 //! Everything on the step path is Rust + one compiled XLA executable;
 //! the per-step coordinator work is a handful of slice copies and the
@@ -14,7 +15,6 @@ use crate::coordinator::config::{Estimator, TrainConfig};
 use crate::coordinator::ranges::RangeManager;
 use crate::data::{Batcher, SynthSpec, SynthVision};
 use crate::metrics::RunRecord;
-use crate::quant::dsgc;
 use crate::runtime::engine::{Engine, Graph};
 use crate::runtime::manifest::ModelSpec;
 use crate::runtime::tensor::Tensor;
@@ -37,8 +37,9 @@ pub struct Trainer<'e> {
     y_buf: Tensor,
     pub record: RunRecord,
     step: u64,
-    /// cumulative DSGC objective evaluations (cost accounting)
-    pub dsgc_evals: u64,
+    /// cumulative search-pass tensor traversals (cost accounting; DSGC
+    /// objective evaluations, sampled-min-max subsample passes)
+    pub search_evals: u64,
 }
 
 impl<'e> Trainer<'e> {
@@ -50,12 +51,10 @@ impl<'e> Trainer<'e> {
         } else {
             None
         };
-        let g_dump = if cfg.grad_est == Estimator::Dsgc {
-            Some(
-                engine
-                    .graph(&cfg.model, "dump")
-                    .context("DSGC requires the dump graph")?,
-            )
+        let g_dump = if cfg.grad_est.needs_search() {
+            Some(engine.graph(&cfg.model, "dump").with_context(|| {
+                format!("estimator '{}' requires the dump graph", cfg.grad_est.key())
+            })?)
         } else {
             None
         };
@@ -99,7 +98,7 @@ impl<'e> Trainer<'e> {
             y_buf,
             record,
             step: 0,
-            dsgc_evals: 0,
+            search_evals: 0,
         })
     }
 
@@ -153,8 +152,8 @@ impl<'e> Trainer<'e> {
             // stateful estimators in current-min-max mode so their grid is
             // the first batch's statistics, not the neutral init.
             let bootstrap = self.step == 0 && !self.ranges.is_calibrated();
-            let boot = |est: crate::coordinator::config::Estimator, m: f32| {
-                if bootstrap && matches!(est, Estimator::Running | Estimator::Hindsight) {
+            let boot = |est: Estimator, m: f32| {
+                if bootstrap && est.bootstrap_dynamic() {
                     0.0
                 } else {
                     m
@@ -190,11 +189,10 @@ impl<'e> Trainer<'e> {
 
     /// One optimization step; returns (loss, train-batch accuracy).
     pub fn train_step(&mut self) -> Result<(f32, f32)> {
-        // periodic DSGC range search (step 0 bootstraps the ranges)
-        if self.cfg.grad_est == Estimator::Dsgc
-            && self.step % self.cfg.dsgc_period == 0
-        {
-            self.dsgc_update()?;
+        // periodic tensor-level range search for estimators that need it
+        // (step 0 bootstraps the ranges)
+        if self.cfg.grad_est.needs_search() && self.step % self.cfg.dsgc_period == 0 {
+            self.search_update()?;
         }
 
         self.fill_next_batch();
@@ -227,8 +225,11 @@ impl<'e> Trainer<'e> {
         Ok((loss, acc))
     }
 
-    /// Periodic DSGC golden-section search over dumped gradient tensors.
-    pub fn dsgc_update(&mut self) -> Result<()> {
+    /// Periodic range search over dumped gradient tensors: every grad
+    /// site whose estimator declares `needs_search` gets handed the raw
+    /// tensor (DSGC runs its golden-section search, sampled min-max a
+    /// strided subsample pass).
+    pub fn search_update(&mut self) -> Result<()> {
         let g_dump = self.g_dump.clone().context("no dump graph")?;
         self.fill_next_batch();
         let ranges_t = self.ranges.as_tensor();
@@ -252,22 +253,22 @@ impl<'e> Trainer<'e> {
         inputs.extend(scal.iter());
         let grads = self.engine.run_refs(&g_dump, &inputs)?;
 
-        let sites = self.ranges.dsgc_sites();
+        let sites = self.ranges.search_sites();
         assert_eq!(grads.len(), sites.len(), "dump arity vs grad sites");
         for (g, &site) in grads.iter().zip(&sites) {
-            let r = dsgc::search_range(
+            let evals = self.ranges.search_site(
+                site,
                 g.as_f32()?,
                 self.engine.manifest.bits_g,
                 self.cfg.dsgc_iters,
             );
-            self.ranges.set_row(site, [r.qmin, r.qmax]);
-            self.dsgc_evals += r.evals as u64;
+            self.search_evals += evals as u64;
         }
         log::debug!(
-            "dsgc update at step {}: {} sites, {} evals total",
+            "search update at step {}: {} sites, {} evals total",
             self.step,
             sites.len(),
-            self.dsgc_evals
+            self.search_evals
         );
         Ok(())
     }
@@ -324,12 +325,11 @@ impl<'e> Trainer<'e> {
     /// Full schedule: calibrate, train `cfg.steps`, evaluate periodically
     /// and at the end.  Returns the run record.
     pub fn run(mut self) -> Result<RunRecord> {
-        // paper Sec. 5.2: running/hindsight quantizers benefit from an
-        // initial calibration pass; apply it whenever either tensor class
-        // uses a stateful estimator (it also seeds the gradient ranges,
-        // subsuming the q^0 = minmax(G^0) bootstrap).
-        let stateful = |e: Estimator| matches!(e, Estimator::Running | Estimator::Hindsight);
-        if (stateful(self.cfg.act_est) || stateful(self.cfg.grad_est))
+        // paper Sec. 5.2: stateful estimators (running / hindsight /
+        // max-history) benefit from an initial calibration pass; apply it
+        // whenever either tensor class uses one (it also seeds the
+        // gradient ranges, subsuming the q^0 = minmax(G^0) bootstrap).
+        if (self.cfg.act_est.stateful() || self.cfg.grad_est.stateful())
             && self.cfg.calib_batches > 0
         {
             self.calibrate()?;
@@ -356,7 +356,7 @@ impl<'e> Trainer<'e> {
         }
         self.record
             .extra
-            .insert("dsgc_evals".into(), self.dsgc_evals as f64);
+            .insert("search_evals".into(), self.search_evals as f64);
         self.record
             .extra
             .insert("coverage".into(), self.ranges.coverage());
@@ -417,7 +417,7 @@ mod tests {
     #[test]
     fn estimators_update_ranges_differently() {
         let Some(e) = engine() else { return };
-        for est in [Estimator::Current, Estimator::Running, Estimator::Hindsight] {
+        for est in [Estimator::CURRENT, Estimator::RUNNING, Estimator::HINDSIGHT] {
             let cfg = quick_cfg("mlp").fully_quantized(est);
             let mut t = Trainer::new(&e, cfg).unwrap();
             for _ in 0..3 {
@@ -429,16 +429,18 @@ mod tests {
     }
 
     #[test]
-    fn dsgc_runs_periodic_search() {
+    fn search_estimators_run_periodic_search() {
         let Some(e) = engine() else { return };
-        let mut cfg = quick_cfg("mlp").grad_only(Estimator::Dsgc);
-        cfg.dsgc_period = 4;
-        cfg.dsgc_iters = 5;
-        let mut t = Trainer::new(&e, cfg).unwrap();
-        for _ in 0..5 {
-            t.train_step().unwrap();
+        for est in [Estimator::DSGC, Estimator::SAMPLED_MINMAX] {
+            let mut cfg = quick_cfg("mlp").grad_only(est);
+            cfg.dsgc_period = 4;
+            cfg.dsgc_iters = 5;
+            let mut t = Trainer::new(&e, cfg).unwrap();
+            for _ in 0..5 {
+                t.train_step().unwrap();
+            }
+            assert!(t.search_evals > 0, "{}: no search ran", est.key());
         }
-        assert!(t.dsgc_evals > 0, "no dsgc search ran");
     }
 
     #[test]

@@ -1,0 +1,183 @@
+//! The five estimators of the paper's comparison (Tables 1-4), as trait
+//! impls.  Each reproduces the corresponding branch of the pre-refactor
+//! `RangeManager::update` enum `match` bit-for-bit (golden parity tests
+//! in `coordinator::ranges` enforce this).
+
+use super::{hold_between_searches, RangeEstimator, SearchOutcome, StepCtx};
+use crate::quant::dsgc;
+
+/// Shared absorb rule for the estimators whose state update is computed
+/// in-graph: adopt `new_ranges` verbatim, except on an uncalibrated first
+/// step, which seeds from raw stats (paper Sec. 4.1, `q^0 = minmax(G^0)`).
+fn graph_delegated(ctx: StepCtx) -> [f32; 2] {
+    if ctx.bootstrap() {
+        ctx.stats
+    } else {
+        ctx.new_ranges
+    }
+}
+
+/// No quantization of this tensor class: the row is frozen.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Fp32;
+
+impl RangeEstimator for Fp32 {
+    fn name(&self) -> &'static str {
+        "fp32"
+    }
+
+    fn absorb_step(&mut self, ctx: StepCtx) -> [f32; 2] {
+        ctx.current
+    }
+
+    fn clone_box(&self) -> Box<dyn RangeEstimator> {
+        Box::new(*self)
+    }
+}
+
+/// Current min-max — dynamic; the graph computes ranges from the current
+/// tensor, the coordinator just adopts them.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Current;
+
+impl RangeEstimator for Current {
+    fn name(&self) -> &'static str {
+        "current"
+    }
+
+    fn absorb_step(&mut self, ctx: StepCtx) -> [f32; 2] {
+        graph_delegated(ctx)
+    }
+
+    fn clone_box(&self) -> Box<dyn RangeEstimator> {
+        Box::new(*self)
+    }
+}
+
+/// Running min-max — dynamic EMA blended *including* the current stats.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Running;
+
+impl RangeEstimator for Running {
+    fn name(&self) -> &'static str {
+        "running"
+    }
+
+    fn absorb_step(&mut self, ctx: StepCtx) -> [f32; 2] {
+        graph_delegated(ctx)
+    }
+
+    fn clone_box(&self) -> Box<dyn RangeEstimator> {
+        Box::new(*self)
+    }
+}
+
+/// In-hindsight min-max — static; the paper's method (eqs. 2-3).  The
+/// EMA update itself runs in-graph; the coordinator adopts its output
+/// *after* the step quantized with the previous range.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Hindsight;
+
+impl RangeEstimator for Hindsight {
+    fn name(&self) -> &'static str {
+        "hindsight"
+    }
+
+    fn absorb_step(&mut self, ctx: StepCtx) -> [f32; 2] {
+        graph_delegated(ctx)
+    }
+
+    fn clone_box(&self) -> Box<dyn RangeEstimator> {
+        Box::new(*self)
+    }
+}
+
+/// Direction-sensitive gradient clipping [Zhu et al. 2019] — static
+/// between periodic golden-section searches (paper Sec. 5.1).  The step
+/// absorb *holds* the last searched range; the range only moves in
+/// [`RangeEstimator::search`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Dsgc;
+
+impl RangeEstimator for Dsgc {
+    fn name(&self) -> &'static str {
+        "dsgc"
+    }
+
+    fn absorb_step(&mut self, ctx: StepCtx) -> [f32; 2] {
+        hold_between_searches(ctx)
+    }
+
+    fn needs_search(&self) -> bool {
+        true
+    }
+
+    fn search(&mut self, tensor: &[f32], bits: u32, iters: u32) -> SearchOutcome {
+        let r = dsgc::search_range(tensor, bits, iters);
+        SearchOutcome {
+            range: [r.qmin, r.qmax],
+            evals: r.evals,
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn RangeEstimator> {
+        Box::new(*self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(first_step: bool, calibrated: bool) -> StepCtx {
+        StepCtx {
+            current: [-7.0, 7.0],
+            stats: [-2.0, 3.0],
+            new_ranges: [-0.5, 0.5],
+            first_step,
+            calibrated,
+        }
+    }
+
+    #[test]
+    fn fp32_freezes_rows() {
+        let mut e = Fp32;
+        assert_eq!(e.absorb_step(ctx(true, false)), [-7.0, 7.0]);
+        assert_eq!(e.absorb_step(ctx(false, true)), [-7.0, 7.0]);
+    }
+
+    #[test]
+    fn graph_delegated_bootstrap_then_adopt() {
+        for mut e in [
+            Box::new(Current) as Box<dyn RangeEstimator>,
+            Box::new(Running),
+            Box::new(Hindsight),
+        ] {
+            assert_eq!(e.absorb_step(ctx(true, false)), [-2.0, 3.0], "{e:?}");
+            assert_eq!(e.absorb_step(ctx(true, true)), [-0.5, 0.5], "{e:?}");
+            assert_eq!(e.absorb_step(ctx(false, false)), [-0.5, 0.5], "{e:?}");
+        }
+    }
+
+    #[test]
+    fn dsgc_holds_between_searches() {
+        let mut e = Dsgc;
+        assert!(e.needs_search());
+        assert_eq!(e.absorb_step(ctx(true, false)), [-2.0, 3.0]); // bootstrap
+        assert_eq!(e.absorb_step(ctx(false, false)), [-7.0, 7.0]); // held
+        assert_eq!(e.absorb_step(ctx(true, true)), [-7.0, 7.0]); // held
+        // the search delegates to the golden-section module
+        let g: Vec<f32> = (0..512).map(|i| (i as f32 / 256.0) - 1.0).collect();
+        let out = e.search(&g, 8, 10);
+        assert_eq!(out.evals, 13);
+        assert!(out.range[0] < 0.0 && out.range[1] > 0.0);
+    }
+
+    #[test]
+    fn default_calibration_seeds_then_emas() {
+        let mut e = Hindsight;
+        assert_eq!(e.absorb_calibration([-1.0, 1.0], [-3.0, 3.0], 0.5, true), [-3.0, 3.0]);
+        let blended = e.absorb_calibration([-3.0, 3.0], [-1.0, 1.0], 0.5, false);
+        assert_eq!(blended, [-2.0, 2.0]);
+    }
+}

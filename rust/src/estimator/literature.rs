@@ -1,0 +1,243 @@
+//! Comparison estimators from the wider quantized-training literature,
+//! added through the same trait the paper's five estimators use — the
+//! "drop-in replacement" claim exercised in the other direction.
+//!
+//! * [`MaxHistory`] — window max-history: the range is the elementwise
+//!   hull (min of mins, max of maxes) of the last `W` steps' statistics.
+//!   A static scheme in the paper's sense: the range used at step `t`
+//!   was computed from steps `< t` only.  This is the windowed variant
+//!   of the max-averaging range trackers used by Jain et al. (TQT) and
+//!   Choi et al. as baselines — hindsight's EMA replaced by a hard
+//!   window, so one outlier step stops mattering after `W` steps instead
+//!   of decaying geometrically.
+//! * [`SampledMinMax`] — sample-based range estimation in the spirit of
+//!   Banner et al., "Scalable Methods for 8-bit Training of Neural
+//!   Networks": statistics are estimated from a small deterministic
+//!   subsample of the tensor instead of a full reduction.  Realized
+//!   through the `needs_search` hook (like DSGC it periodically sees the
+//!   raw gradient tensors and holds its range in between) — but where
+//!   DSGC spends `iters + 3` full fake-quant + cosine passes per search,
+//!   a sampled search is one pass over ~`budget` elements.
+
+use std::collections::VecDeque;
+
+use super::{hold_between_searches, RangeEstimator, SearchOutcome, StepCtx};
+
+/// Default window length for [`MaxHistory`].
+pub const DEFAULT_WINDOW: usize = 8;
+
+/// Window max-history estimator: range = hull of the last `W` stats.
+#[derive(Debug, Clone)]
+pub struct MaxHistory {
+    window: usize,
+    hist: VecDeque<[f32; 2]>,
+}
+
+impl MaxHistory {
+    pub fn new(window: usize) -> Self {
+        assert!(window > 0, "MaxHistory window must be positive");
+        Self {
+            window,
+            hist: VecDeque::with_capacity(window),
+        }
+    }
+
+    fn push(&mut self, stats: [f32; 2]) {
+        if self.hist.len() == self.window {
+            self.hist.pop_front();
+        }
+        self.hist.push_back(stats);
+    }
+
+    fn hull(&self) -> [f32; 2] {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for s in &self.hist {
+            lo = lo.min(s[0]);
+            hi = hi.max(s[1]);
+        }
+        [lo, hi]
+    }
+}
+
+impl Default for MaxHistory {
+    fn default() -> Self {
+        Self::new(DEFAULT_WINDOW)
+    }
+}
+
+impl RangeEstimator for MaxHistory {
+    fn name(&self) -> &'static str {
+        "maxhist"
+    }
+
+    fn absorb_step(&mut self, ctx: StepCtx) -> [f32; 2] {
+        self.push(ctx.stats);
+        // on an uncalibrated first step the window holds exactly the
+        // first batch's stats, so the hull *is* q^0 = minmax(G^0)
+        self.hull()
+    }
+
+    fn absorb_calibration(
+        &mut self,
+        _current: [f32; 2],
+        stats: [f32; 2],
+        _eta: f32,
+        _first_batch: bool,
+    ) -> [f32; 2] {
+        // calibration batches enter the same window; the hull replaces
+        // the EMA blend (window semantics are the whole point here)
+        self.push(stats);
+        self.hull()
+    }
+
+    fn clone_box(&self) -> Box<dyn RangeEstimator> {
+        Box::new(self.clone())
+    }
+}
+
+/// Default per-search sample budget for [`SampledMinMax`].
+pub const DEFAULT_BUDGET: usize = 2048;
+
+/// Sample-based min-max: periodic strided subsample of the gradient
+/// tensor, hull widened by a small pad for the unseen tail, held
+/// statically between searches.
+#[derive(Debug, Clone)]
+pub struct SampledMinMax {
+    budget: usize,
+    /// completed searches; rotates the stride offset so successive
+    /// searches see different residue classes of the tensor
+    calls: u64,
+}
+
+impl SampledMinMax {
+    pub fn new(budget: usize) -> Self {
+        assert!(budget > 0, "SampledMinMax budget must be positive");
+        Self { budget, calls: 0 }
+    }
+}
+
+impl Default for SampledMinMax {
+    fn default() -> Self {
+        Self::new(DEFAULT_BUDGET)
+    }
+}
+
+impl RangeEstimator for SampledMinMax {
+    fn name(&self) -> &'static str {
+        "sampled"
+    }
+
+    fn absorb_step(&mut self, ctx: StepCtx) -> [f32; 2] {
+        hold_between_searches(ctx)
+    }
+
+    fn needs_search(&self) -> bool {
+        true
+    }
+
+    fn search(&mut self, tensor: &[f32], _bits: u32, _iters: u32) -> SearchOutcome {
+        if tensor.is_empty() {
+            return SearchOutcome {
+                range: [0.0, 0.0],
+                evals: 0,
+            };
+        }
+        let stride = (tensor.len() / self.budget).max(1);
+        let offset = (self.calls as usize) % stride;
+        self.calls += 1;
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &x in tensor.iter().skip(offset).step_by(stride) {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        debug_assert!(lo <= hi, "offset < stride <= len, so the sample is nonempty");
+        // widen by 2.5% of the observed span: the sample hull is a biased
+        // (under-)estimate of the true extrema; the pad covers the tail
+        // the stride skipped (Banner et al. handle this with analytic
+        // sub-sampling corrections; a fixed pad keeps it one pass)
+        let pad = (hi - lo) * 0.025;
+        SearchOutcome {
+            range: [lo - pad, hi + pad],
+            // one (subsampled) tensor traversal — contrast DSGC's
+            // iters + 3 full passes
+            evals: 1,
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn RangeEstimator> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(stats: [f32; 2]) -> StepCtx {
+        StepCtx {
+            current: [-9.0, 9.0],
+            stats,
+            new_ranges: [0.0, 0.0],
+            first_step: false,
+            calibrated: true,
+        }
+    }
+
+    #[test]
+    fn maxhist_tracks_window_hull() {
+        let mut e = MaxHistory::new(2);
+        assert_eq!(e.absorb_step(ctx([-1.0, 1.0])), [-1.0, 1.0]);
+        assert_eq!(e.absorb_step(ctx([-3.0, 0.5])), [-3.0, 1.0]);
+        // the first observation ages out of the 2-window
+        assert_eq!(e.absorb_step(ctx([-0.5, 2.0])), [-3.0, 2.0]);
+        assert_eq!(e.absorb_step(ctx([-0.5, 0.5])), [-0.5, 2.0]);
+    }
+
+    #[test]
+    fn maxhist_calibration_enters_the_window() {
+        let mut e = MaxHistory::new(4);
+        assert_eq!(e.absorb_calibration([-1.0, 1.0], [-2.0, 2.0], 0.9, true), [-2.0, 2.0]);
+        // not an EMA: the hull keeps the widest observation
+        assert_eq!(e.absorb_calibration([-2.0, 2.0], [-1.0, 1.0], 0.9, false), [-2.0, 2.0]);
+    }
+
+    #[test]
+    fn sampled_holds_between_searches_and_bootstraps() {
+        let mut e = SampledMinMax::default();
+        assert!(e.needs_search());
+        let boot = StepCtx {
+            first_step: true,
+            calibrated: false,
+            ..ctx([-2.0, 3.0])
+        };
+        assert_eq!(e.absorb_step(boot), [-2.0, 3.0]);
+        assert_eq!(e.absorb_step(ctx([-2.0, 3.0])), [-9.0, 9.0]); // held
+    }
+
+    #[test]
+    fn sampled_search_covers_the_bulk() {
+        let mut e = SampledMinMax::new(256);
+        let g: Vec<f32> = (0..65_536).map(|i| ((i % 1013) as f32 / 506.5) - 1.0).collect();
+        let out = e.search(&g, 8, 0);
+        assert_eq!(out.evals, 1);
+        // the subsample hull (plus pad) must cover most of the true span
+        assert!(out.range[0] <= -0.9 && out.range[1] >= 0.9, "{:?}", out.range);
+        // successive searches rotate the offset (deterministic but not
+        // identical state)
+        let out2 = e.search(&g, 8, 0);
+        assert_eq!(out2.evals, 1);
+    }
+
+    #[test]
+    fn sampled_search_small_and_empty_tensors() {
+        let mut e = SampledMinMax::default();
+        let out = e.search(&[], 8, 0);
+        assert_eq!(out.range, [0.0, 0.0]);
+        assert_eq!(out.evals, 0);
+        // tensor smaller than the budget: stride 1, exact hull (pad only)
+        let out = e.search(&[-1.0, 2.0], 8, 0);
+        assert!(out.range[0] <= -1.0 && out.range[1] >= 2.0);
+    }
+}

@@ -1,0 +1,185 @@
+//! The pluggable range-estimator subsystem.
+//!
+//! The paper's core claim is that in-hindsight range estimation is a
+//! *drop-in replacement* for any range estimator.  This module makes that
+//! literal: estimator semantics live behind the [`RangeEstimator`] trait
+//! (one boxed instance per quantizer site, owning any per-site state),
+//! and estimators are resolved from a string-keyed [`registry`] — the
+//! coordinator, the CLI, sweeps and benches never branch on a closed
+//! enum.  Adding an estimator is: implement the trait, add a registry
+//! entry.
+//!
+//! The split of responsibilities mirrors the paper's Fig. 3 runtime
+//! contract:
+//!
+//! * the compiled graph computes, per step, the raw accumulator
+//!   statistics `stats` and the in-graph state update `new_ranges`
+//!   (eqs. 2-3 / the dynamic rules) for every site;
+//! * between steps, each site's estimator *absorbs* those outputs and
+//!   decides the range row the next step quantizes with
+//!   ([`RangeEstimator::absorb_step`]);
+//! * estimators that cannot be expressed as an O(1) absorb — DSGC's
+//!   golden-section search, sample-based estimation — declare
+//!   [`RangeEstimator::needs_search`] and get handed the raw gradient
+//!   tensors on a period, via the dump graph
+//!   ([`RangeEstimator::search`]).
+//!
+//! Submodules: [`classic`] carries the five estimators of the paper's
+//! comparison (FP32 / current / running / in-hindsight / DSGC);
+//! [`literature`] adds comparison estimators from the wider literature
+//! (window max-history, Banner et al.-style sampled min-max);
+//! [`registry`] owns the name table and the [`Estimator`] handle.
+
+pub mod classic;
+pub mod literature;
+pub mod registry;
+
+pub use classic::{Current, Dsgc, Fp32, Hindsight, Running};
+pub use literature::{MaxHistory, SampledMinMax};
+pub use registry::{Estimator, EstimatorInfo, REGISTRY};
+
+/// Everything one site's estimator sees from one training step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepCtx {
+    /// the range row the step just quantized with
+    pub current: [f32; 2],
+    /// raw accumulator min/max of the step (paper Fig. 3)
+    pub stats: [f32; 2],
+    /// the in-graph state update (eqs. 2-3 / dynamic rules)
+    pub new_ranges: [f32; 2],
+    /// first training step of the run
+    pub first_step: bool,
+    /// a calibration pass already seeded the range state
+    pub calibrated: bool,
+}
+
+impl StepCtx {
+    /// Paper Sec. 4.1 initialization `q^0 = minmax(G^0)`: does this step
+    /// seed a never-calibrated range state from raw statistics?
+    pub fn bootstrap(&self) -> bool {
+        self.first_step && !self.calibrated
+    }
+}
+
+/// Shared absorb rule for search-based (`needs_search`) estimators: hold
+/// the last searched range; bootstrap from the first observation so
+/// training can start before search #1.
+pub(crate) fn hold_between_searches(ctx: StepCtx) -> [f32; 2] {
+    if ctx.bootstrap() {
+        ctx.stats
+    } else {
+        ctx.current
+    }
+}
+
+/// Result of one periodic tensor-level range search.
+#[derive(Debug, Clone, Copy)]
+pub struct SearchOutcome {
+    pub range: [f32; 2],
+    /// tensor traversals spent (DSGC: full objective evaluations;
+    /// subsampled passes count as one) — cost accounting
+    pub evals: u32,
+}
+
+/// Per-site range-estimation semantics.
+///
+/// One boxed instance exists per quantizer site, so implementations may
+/// carry per-site state (EMA history, sliding windows, search phase).
+/// All hooks are pure coordinator-side math: the (Q, 2) tensor ABI to
+/// the compiled graph is owned by `RangeManager` and never changes.
+pub trait RangeEstimator: std::fmt::Debug + Send {
+    /// Registry key (stable string id, e.g. `"hindsight"`).
+    fn name(&self) -> &'static str;
+
+    /// Initial range row before calibration or the first observation.
+    fn init(&self) -> [f32; 2] {
+        // neutral symmetric range; calibration and/or the first-step
+        // stats (paper: q^0 = minmax(G^0)) replace it
+        [-1.0, 1.0]
+    }
+
+    /// Absorb one training step's graph outputs; returns the next row.
+    fn absorb_step(&mut self, ctx: StepCtx) -> [f32; 2];
+
+    /// Absorb one calibration batch (paper Sec. 5.2).  Default: first
+    /// batch seeds the row with raw stats, later batches EMA in.
+    fn absorb_calibration(
+        &mut self,
+        current: [f32; 2],
+        stats: [f32; 2],
+        eta: f32,
+        first_batch: bool,
+    ) -> [f32; 2] {
+        if first_batch {
+            stats
+        } else {
+            crate::quant::ema_update(current, stats, eta)
+        }
+    }
+
+    /// Whether this estimator requires the periodic tensor-level search
+    /// pass (the dump graph + [`RangeEstimator::search`]).
+    fn needs_search(&self) -> bool {
+        false
+    }
+
+    /// Periodic tensor-level range search.  Only invoked on sites whose
+    /// estimator declares [`RangeEstimator::needs_search`].
+    fn search(&mut self, _tensor: &[f32], _bits: u32, _iters: u32) -> SearchOutcome {
+        panic!("estimator '{}' has no tensor-level search", self.name())
+    }
+
+    /// Boxed clone (lets `RangeManager` derive `Clone`).
+    fn clone_box(&self) -> Box<dyn RangeEstimator>;
+}
+
+impl Clone for Box<dyn RangeEstimator> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_ctx_bootstrap_predicate() {
+        let mut ctx = StepCtx {
+            current: [-1.0, 1.0],
+            stats: [-2.0, 2.0],
+            new_ranges: [-0.5, 0.5],
+            first_step: true,
+            calibrated: false,
+        };
+        assert!(ctx.bootstrap());
+        ctx.calibrated = true;
+        assert!(!ctx.bootstrap());
+        ctx.calibrated = false;
+        ctx.first_step = false;
+        assert!(!ctx.bootstrap());
+    }
+
+    #[test]
+    fn boxed_estimators_clone() {
+        let mut a: Box<dyn RangeEstimator> = Box::new(MaxHistory::new(2));
+        let ctx = |stats| StepCtx {
+            current: [-1.0, 1.0],
+            stats,
+            new_ranges: [0.0, 0.0],
+            first_step: false,
+            calibrated: true,
+        };
+        a.absorb_step(ctx([-3.0, 3.0]));
+        let mut b = a.clone();
+        // the clone carries the window state: same next result
+        assert_eq!(a.absorb_step(ctx([-1.0, 1.0])), b.absorb_step(ctx([-1.0, 1.0])));
+    }
+
+    #[test]
+    #[should_panic(expected = "no tensor-level search")]
+    fn searchless_estimators_reject_search() {
+        let mut e: Box<dyn RangeEstimator> = Box::new(Hindsight);
+        e.search(&[1.0], 8, 4);
+    }
+}

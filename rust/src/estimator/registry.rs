@@ -1,0 +1,330 @@
+//! The string-keyed estimator registry and the [`Estimator`] handle.
+//!
+//! Every estimator the system knows is one [`EstimatorInfo`] row: its
+//! registry key, display name, the graph-ABI metadata (mode scalar,
+//! enable bit, static/dynamic classification), the coordinator hooks it
+//! needs (periodic search, calibration statefulness, first-step
+//! bootstrap mode) and a factory for its per-site trait object.
+//! `config`, `sweep`, the CLI and the benches resolve estimators by name
+//! through [`Estimator::parse`] / [`Estimator::all`] — nothing outside
+//! this file enumerates estimators.
+//!
+//! [`Estimator`] itself is a `Copy` handle (a reference into the
+//! registry) so `TrainConfig` stays cheap to clone and call sites read
+//! like the old enum: `Estimator::HINDSIGHT`, `est == Estimator::DSGC`.
+
+use anyhow::{bail, Result};
+
+use super::classic::{Current, Dsgc, Fp32, Hindsight, Running};
+use super::literature::{MaxHistory, SampledMinMax};
+use super::RangeEstimator;
+
+/// One registry row: estimator metadata + per-site factory.
+pub struct EstimatorInfo {
+    /// stable string id used by the CLI, configs and sweeps
+    pub key: &'static str,
+    /// display name (the paper's table row labels)
+    pub display: &'static str,
+    /// graph `mode` scalar (see `python/compile/quant_ops.py`):
+    /// 0 = current, 1 = running, 2 = static.  Estimators whose range
+    /// state lives coordinator-side run the graph in static mode.
+    pub mode: f32,
+    /// whether this estimator quantizes its tensor class at all
+    pub enabled: bool,
+    /// step-path quantization is static (paper Table 1 "Static" column)
+    pub is_static: bool,
+    /// requires the periodic dump-graph search pass
+    pub needs_search: bool,
+    /// benefits from the initial calibration pass (paper Sec. 5.2) /
+    /// carries range state across steps
+    pub stateful: bool,
+    /// run an uncalibrated first step in current-min-max mode so the
+    /// first grid is the first batch's statistics (paper Sec. 4.1)
+    pub bootstrap_dynamic: bool,
+    /// per-site trait-object factory
+    pub make: fn() -> Box<dyn RangeEstimator>,
+}
+
+fn make_fp32() -> Box<dyn RangeEstimator> {
+    Box::new(Fp32)
+}
+fn make_current() -> Box<dyn RangeEstimator> {
+    Box::new(Current)
+}
+fn make_running() -> Box<dyn RangeEstimator> {
+    Box::new(Running)
+}
+fn make_hindsight() -> Box<dyn RangeEstimator> {
+    Box::new(Hindsight)
+}
+fn make_dsgc() -> Box<dyn RangeEstimator> {
+    Box::new(Dsgc)
+}
+fn make_maxhist() -> Box<dyn RangeEstimator> {
+    Box::new(MaxHistory::default())
+}
+fn make_sampled() -> Box<dyn RangeEstimator> {
+    Box::new(SampledMinMax::default())
+}
+
+const FP32_INFO: EstimatorInfo = EstimatorInfo {
+    key: "fp32",
+    display: "FP32",
+    mode: 2.0, // enable is off; static keeps the dead branch cheapest
+    enabled: false,
+    is_static: true,
+    needs_search: false,
+    stateful: false,
+    bootstrap_dynamic: false,
+    make: make_fp32,
+};
+
+const CURRENT_INFO: EstimatorInfo = EstimatorInfo {
+    key: "current",
+    display: "Current min-max",
+    mode: 0.0,
+    enabled: true,
+    is_static: false,
+    needs_search: false,
+    stateful: false,
+    bootstrap_dynamic: false,
+    make: make_current,
+};
+
+const RUNNING_INFO: EstimatorInfo = EstimatorInfo {
+    key: "running",
+    display: "Running min-max",
+    mode: 1.0,
+    enabled: true,
+    is_static: false,
+    needs_search: false,
+    stateful: true,
+    bootstrap_dynamic: true,
+    make: make_running,
+};
+
+const HINDSIGHT_INFO: EstimatorInfo = EstimatorInfo {
+    key: "hindsight",
+    display: "In-hindsight min-max",
+    mode: 2.0,
+    enabled: true,
+    is_static: true,
+    needs_search: false,
+    stateful: true,
+    bootstrap_dynamic: true,
+    make: make_hindsight,
+};
+
+const DSGC_INFO: EstimatorInfo = EstimatorInfo {
+    key: "dsgc",
+    display: "DSGC",
+    mode: 2.0,
+    enabled: true,
+    is_static: true,
+    needs_search: true,
+    stateful: false,
+    bootstrap_dynamic: false,
+    make: make_dsgc,
+};
+
+const MAX_HISTORY_INFO: EstimatorInfo = EstimatorInfo {
+    key: "maxhist",
+    display: "Max-history min-max",
+    mode: 2.0,
+    enabled: true,
+    is_static: true,
+    needs_search: false,
+    stateful: true,
+    bootstrap_dynamic: true,
+    make: make_maxhist,
+};
+
+const SAMPLED_INFO: EstimatorInfo = EstimatorInfo {
+    key: "sampled",
+    display: "Sampled min-max",
+    mode: 2.0,
+    enabled: true,
+    is_static: true,
+    needs_search: true,
+    stateful: false,
+    bootstrap_dynamic: false,
+    make: make_sampled,
+};
+
+/// Every registered estimator, in presentation order (the paper's five,
+/// then the literature additions).
+pub static REGISTRY: &[&EstimatorInfo] = &[
+    &FP32_INFO,
+    &CURRENT_INFO,
+    &RUNNING_INFO,
+    &HINDSIGHT_INFO,
+    &DSGC_INFO,
+    &MAX_HISTORY_INFO,
+    &SAMPLED_INFO,
+];
+
+/// Cheap `Copy` handle to one registry row.
+#[derive(Clone, Copy)]
+pub struct Estimator(&'static EstimatorInfo);
+
+impl Estimator {
+    pub const FP32: Self = Self(&FP32_INFO);
+    pub const CURRENT: Self = Self(&CURRENT_INFO);
+    pub const RUNNING: Self = Self(&RUNNING_INFO);
+    pub const HINDSIGHT: Self = Self(&HINDSIGHT_INFO);
+    pub const DSGC: Self = Self(&DSGC_INFO);
+    pub const MAX_HISTORY: Self = Self(&MAX_HISTORY_INFO);
+    pub const SAMPLED_MINMAX: Self = Self(&SAMPLED_INFO);
+
+    /// Resolve a registry key (the CLI / config string form).
+    pub fn parse(s: &str) -> Result<Self> {
+        for info in REGISTRY {
+            if info.key == s {
+                return Ok(Self(info));
+            }
+        }
+        bail!("unknown estimator '{s}' ({})", Self::keys().join("|"))
+    }
+
+    /// Iterate every registered estimator, in registry order.
+    pub fn all() -> impl Iterator<Item = Estimator> {
+        REGISTRY.iter().copied().map(Estimator)
+    }
+
+    /// Every registry key, in registry order.
+    pub fn keys() -> Vec<&'static str> {
+        REGISTRY.iter().map(|i| i.key).collect()
+    }
+
+    /// The stable string id (`"hindsight"`, ...).
+    pub fn key(&self) -> &'static str {
+        self.0.key
+    }
+
+    /// Display name (the paper's table row labels).
+    pub fn name(&self) -> &'static str {
+        self.0.display
+    }
+
+    /// Graph `mode` scalar (see `python/compile/quant_ops.py`).
+    pub fn mode(&self) -> f32 {
+        self.0.mode
+    }
+
+    /// Whether this estimator quantizes its tensor class at all.
+    pub fn enabled(&self) -> bool {
+        self.0.enabled
+    }
+
+    /// Is the step-path quantization static (paper Table 1 "Static")?
+    pub fn is_static(&self) -> bool {
+        self.0.is_static
+    }
+
+    /// Requires the periodic dump-graph search pass (DSGC-style).
+    pub fn needs_search(&self) -> bool {
+        self.0.needs_search
+    }
+
+    /// Benefits from the initial calibration pass (paper Sec. 5.2).
+    pub fn stateful(&self) -> bool {
+        self.0.stateful
+    }
+
+    /// Run an uncalibrated first step in current-min-max mode.
+    pub fn bootstrap_dynamic(&self) -> bool {
+        self.0.bootstrap_dynamic
+    }
+
+    /// Build the per-site trait object.
+    pub fn instantiate(&self) -> Box<dyn RangeEstimator> {
+        (self.0.make)()
+    }
+}
+
+// identity is the registry key: const-promotion may duplicate the
+// underlying &'static EstimatorInfo, so pointer equality is not reliable
+impl PartialEq for Estimator {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.key == other.0.key
+    }
+}
+
+impl Eq for Estimator {}
+
+impl std::fmt::Debug for Estimator {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Estimator({})", self.0.key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn unknown_name_errors_and_lists_keys() {
+        let err = Estimator::parse("bogus").unwrap_err().to_string();
+        assert!(err.contains("unknown estimator 'bogus'"), "{err}");
+        for key in Estimator::keys() {
+            assert!(err.contains(key), "error must list '{key}': {err}");
+        }
+    }
+
+    #[test]
+    fn every_registered_name_round_trips() {
+        for est in Estimator::all() {
+            let parsed = Estimator::parse(est.key()).unwrap();
+            assert_eq!(parsed, est);
+            assert_eq!(parsed.name(), est.name());
+            // the factory's instance agrees with the registry row
+            let inst = est.instantiate();
+            assert_eq!(inst.name(), est.key());
+            assert_eq!(inst.needs_search(), est.needs_search());
+        }
+    }
+
+    #[test]
+    fn keys_and_display_names_are_unique() {
+        let keys: BTreeSet<_> = Estimator::keys().into_iter().collect();
+        assert_eq!(keys.len(), REGISTRY.len());
+        let names: BTreeSet<_> = Estimator::all().map(|e| e.name()).collect();
+        assert_eq!(names.len(), REGISTRY.len());
+    }
+
+    #[test]
+    fn legacy_metadata_is_pinned() {
+        // the graph ABI the seed shipped with must not drift
+        assert_eq!(Estimator::CURRENT.mode(), 0.0);
+        assert_eq!(Estimator::RUNNING.mode(), 1.0);
+        assert_eq!(Estimator::HINDSIGHT.mode(), 2.0);
+        assert_eq!(Estimator::DSGC.mode(), 2.0);
+        assert!(!Estimator::FP32.enabled());
+        assert!(Estimator::HINDSIGHT.is_static());
+        assert!(Estimator::DSGC.is_static());
+        assert!(!Estimator::CURRENT.is_static());
+        assert!(!Estimator::RUNNING.is_static());
+        assert!(Estimator::DSGC.needs_search());
+        assert_eq!(Estimator::HINDSIGHT.name(), "In-hindsight min-max");
+        assert_eq!(Estimator::DSGC.name(), "DSGC");
+    }
+
+    #[test]
+    fn new_estimators_are_static_plugins() {
+        for est in [Estimator::MAX_HISTORY, Estimator::SAMPLED_MINMAX] {
+            assert!(est.enabled());
+            assert!(est.is_static());
+            assert_eq!(est.mode(), 2.0);
+        }
+        assert!(Estimator::SAMPLED_MINMAX.needs_search());
+        assert!(!Estimator::MAX_HISTORY.needs_search());
+        assert!(Estimator::MAX_HISTORY.stateful());
+    }
+
+    #[test]
+    fn equality_is_by_key_not_address() {
+        assert_eq!(Estimator::HINDSIGHT, Estimator::parse("hindsight").unwrap());
+        assert_ne!(Estimator::HINDSIGHT, Estimator::RUNNING);
+    }
+}

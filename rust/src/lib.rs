@@ -16,7 +16,11 @@
 //! * [`util`] — hand-rolled substrates: JSON, CLI, PRNG, logging, stats,
 //!   a property-test kit and a bench harness (no external deps).
 //! * [`quant`] — bit-exact quantization math mirroring the L1 kernels;
-//!   DSGC's golden-section range search lives here.
+//!   the fused single-pass kernels (`quant::kernel`) and DSGC's
+//!   golden-section range search live here.
+//! * [`estimator`] — the pluggable range-estimator subsystem: the
+//!   `RangeEstimator` trait, the string-keyed registry, the paper's five
+//!   estimators and the literature additions (max-history, sampled).
 //! * [`simulator`] — fixed-point accelerator model: MAC-array execution
 //!   and the static-vs-dynamic memory-traffic accounting of paper §6.
 //! * [`models`] — architecture geometry zoo (full-size ResNet18 / VGG16 /
@@ -26,12 +30,13 @@
 //! * [`metrics`] — run records, seed aggregation, table emitters.
 //! * [`runtime`] — PJRT engine: manifest-driven marshalling, executable
 //!   cache, device-resident parameter state.
-//! * [`coordinator`] — the paper's contribution as runtime logic: range
-//!   estimators (current / running / in-hindsight / DSGC), calibration,
-//!   the training driver and multi-seed sweeps.
+//! * [`coordinator`] — the paper's contribution as runtime logic: the
+//!   range-state machine delegating to the estimator subsystem,
+//!   calibration, the training driver and multi-seed sweeps.
 
 pub mod coordinator;
 pub mod data;
+pub mod estimator;
 pub mod metrics;
 pub mod models;
 pub mod quant;

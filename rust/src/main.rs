@@ -3,13 +3,19 @@
 //! Subcommands:
 //!   train       train one model/estimator configuration end to end
 //!   sweep       multi-seed, multi-estimator table rows (paper Tables 1-4)
+//!   estimators  list the range-estimator registry
 //!   mem-report  static-vs-dynamic memory traffic (paper Table 5 / Sec. 6)
 //!   inspect     print a model's manifest ABI and quantizer sites
 //!   bench-step  time the train-step hot path for one model
 //!
+//! Estimator names (`--grad-est`, `--act-est`, `--estimators`) resolve
+//! through the registry in `hindsight::estimator` — `hindsight
+//! estimators` prints what is available.
+//!
 //! Examples:
 //!   hindsight train --model cnn --steps 300 --grad-est hindsight
 //!   hindsight sweep --model resnet_tiny --mode grad --seeds 1,2,3
+//!   hindsight sweep --model cnn --estimators hindsight,maxhist,sampled
 //!   hindsight mem-report --network mobilenet_v2
 
 use anyhow::{bail, Result};
@@ -39,13 +45,14 @@ fn run(mut args: Args) -> Result<()> {
     match args.subcommand.clone().as_deref() {
         Some("train") => cmd_train(&mut args),
         Some("sweep") => cmd_sweep(&mut args),
+        Some("estimators") => cmd_estimators(&mut args),
         Some("mem-report") => cmd_mem_report(&mut args),
         Some("inspect") => cmd_inspect(&mut args),
         Some("bench-step") => cmd_bench_step(&mut args),
         Some(other) => bail!("unknown subcommand '{other}'"),
         None => {
             eprintln!(
-                "usage: hindsight <train|sweep|mem-report|inspect|bench-step> [--flags]"
+                "usage: hindsight <train|sweep|estimators|mem-report|inspect|bench-step> [--flags]"
             );
             Ok(())
         }
@@ -102,10 +109,10 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
         .iter()
         .map(|s| s.parse().unwrap())
         .collect();
-    let estimators = args.list_or(
-        "estimators",
-        &["fp32", "current", "running", "dsgc", "hindsight"],
-    );
+    // default: the whole registry (the paper's five plus the literature
+    // additions)
+    let default_keys = Estimator::keys();
+    let estimators = args.list_or("estimators", &default_keys);
     args.finish().map_err(anyhow::Error::msg)?;
 
     let engine = Engine::new()?;
@@ -120,12 +127,13 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
     );
     for est_name in &estimators {
         let est = Estimator::parse(est_name)?;
-        if est == Estimator::Dsgc && mode == "act" {
-            continue; // the paper applies DSGC to gradients only
+        if est.needs_search() && mode == "act" {
+            continue; // search estimators apply to gradients only
         }
         let cfg = match mode.as_str() {
             "grad" => base.clone().grad_only(est),
             "act" => base.clone().act_only(est),
+            // fully_quantized applies the search-estimator act fallback
             "full" => base.clone().fully_quantized(est),
             other => bail!("unknown --mode '{other}' (grad|act|full)"),
         };
@@ -143,6 +151,30 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
             },
             out.cell(),
             format!("{:.0}", out.sec_per_step * 1e3),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_estimators(args: &mut Args) -> Result<()> {
+    args.finish().map_err(anyhow::Error::msg)?;
+    fn yn(b: bool) -> String {
+        let s = if b { "yes" } else { "no" };
+        s.to_string()
+    }
+    let mut table = Table::new(
+        "Range-estimator registry",
+        &["Key", "Method", "Static", "Quantizes", "Needs search", "Calibrates"],
+    );
+    for est in Estimator::all() {
+        table.row(&[
+            est.key().to_string(),
+            est.name().to_string(),
+            yn(est.is_static()),
+            yn(est.enabled()),
+            yn(est.needs_search()),
+            yn(est.stateful()),
         ]);
     }
     table.print();

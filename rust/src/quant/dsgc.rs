@@ -9,12 +9,16 @@
 //! use **golden-section search** over a scalar `alpha ∈ (0, 1]` that
 //! scales the tensor's min-max range: `range(alpha) = alpha * minmax(G)`.
 //!
-//! The search evaluates the objective (full fake-quantization + cosine)
-//! at every probe — deliberately expensive, which is exactly the overhead
-//! the target paper charges DSGC with ("the update step can be very
-//! expensive"); `perf_estimator_overhead` measures it.
+//! The search evaluates the objective (fake-quantization + cosine) at
+//! every probe — inherently expensive, which is exactly the overhead the
+//! target paper charges DSGC with ("the update step can be very
+//! expensive"); `perf_estimator_overhead` measures it.  Each probe is
+//! one fused [`kernel::fq_cosine`] pass (no allocation, no materialized
+//! quantized tensor), so the measured cost is the O(n · evals) floor of
+//! the method, not implementation overhead.
 
-use super::{cosine_similarity, fake_quant, minmax};
+use super::kernel;
+use super::minmax;
 
 /// Result of one DSGC range update.
 #[derive(Debug, Clone, Copy)]
@@ -83,8 +87,7 @@ pub fn search_range(g: &[f32], bits: u32, iters: u32) -> DsgcResult {
     }
     let objective = |alpha: f64| -> f64 {
         let a = alpha as f32;
-        let q = fake_quant(g, a * gmin, a * gmax, bits);
-        cosine_similarity(g, &q) as f64
+        kernel::fq_cosine(g, a * gmin, a * gmax, bits) as f64
     };
     // alpha in (0, 1]: clipping tighter than min-max can *increase* cosine
     // because it shrinks the grid step over the bulk of the distribution.
@@ -102,6 +105,7 @@ pub fn search_range(g: &[f32], bits: u32, iters: u32) -> DsgcResult {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::{cosine_similarity, fake_quant};
     use crate::util::rng::Pcg32;
 
     fn heavy_tailed(n: usize, seed: u64) -> Vec<f32> {

@@ -1,0 +1,144 @@
+//! Fused single-pass quantization kernels — the paper's Fig. 3
+//! accelerator contract as coordinator-side code.
+//!
+//! The in-hindsight argument for hardware is that a *static* quantizer
+//! can requantize the accumulator output on the way to memory while
+//! folding the pre-quantization extrema into online statistics
+//! registers: one traversal, no 32-bit round trip.  The scalar
+//! `quant::minmax` + `quant::fake_quant_slice` pair walks the tensor
+//! twice (three times when the output must not alias the input); these
+//! kernels do the same work in one traversal, chunked so each
+//! cache-resident block is reduced and rounded before the next block
+//! streams in.
+//!
+//! Numerics are bit-exact with the scalar path: every kernel rounds
+//! through [`QuantParams::fq`] and folds min/max in the same sequential
+//! order, so the property tests can require equality, not tolerance.
+
+use super::QuantParams;
+
+/// Block size for the chunked traversal: small enough to stay
+/// cache-resident, large enough that the reduction loop and the rounding
+/// loop each vectorize over a full block.
+const CHUNK: usize = 1024;
+
+/// Fused min/max + fake-quantize in place (the Fig. 3 static-store
+/// path): returns the (min, max) of the *original* values while
+/// rewriting `xs` to the `[qmin, qmax]` grid.  `(0.0, 0.0)` on an empty
+/// slice, matching [`super::minmax`].
+pub fn minmax_fq(xs: &mut [f32], qmin: f32, qmax: f32, bits: u32) -> (f32, f32) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let qp = QuantParams::from_range(qmin, qmax, bits);
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for chunk in xs.chunks_mut(CHUNK) {
+        for &x in chunk.iter() {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        for x in chunk.iter_mut() {
+            *x = qp.fq(*x);
+        }
+    }
+    (lo, hi)
+}
+
+/// Fake-quantize `src` into a caller-owned buffer (the no-alloc variant
+/// of [`super::fake_quant`]).  Panics if the lengths differ.
+pub fn fq_into(src: &[f32], dst: &mut [f32], qmin: f32, qmax: f32, bits: u32) {
+    assert_eq!(src.len(), dst.len(), "fq_into buffer length mismatch");
+    let qp = QuantParams::from_range(qmin, qmax, bits);
+    for (d, &x) in dst.iter_mut().zip(src) {
+        *d = qp.fq(x);
+    }
+}
+
+/// Fused DSGC objective: `cosine(x, fake_quant(x))` in one traversal,
+/// never materializing the quantized tensor.  Identical accumulation
+/// order to `cosine_similarity(x, &fake_quant(x, ..))`, so results are
+/// bit-equal to the scalar two-pass form (including the zero-vector
+/// conventions).
+pub fn fq_cosine(xs: &[f32], qmin: f32, qmax: f32, bits: u32) -> f32 {
+    let qp = QuantParams::from_range(qmin, qmax, bits);
+    let (mut dot, mut na, mut nb) = (0f64, 0f64, 0f64);
+    for &x in xs {
+        let q = qp.fq(x);
+        dot += x as f64 * q as f64;
+        na += x as f64 * x as f64;
+        nb += q as f64 * q as f64;
+    }
+    if na == 0.0 && nb == 0.0 {
+        return 1.0;
+    }
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    (dot / (na.sqrt() * nb.sqrt())) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{cosine_similarity, fake_quant, fake_quant_slice, minmax};
+    use crate::util::testkit::{forall, gens};
+
+    fn case(rng: &mut crate::util::rng::Pcg32) -> (f32, f32, u32, Vec<f32>) {
+        let (lo, hi) = gens::range(rng);
+        let bits = gens::bits(rng);
+        // span several chunks sometimes so the chunked path is exercised
+        let xs = gens::tensor(rng, 3 * CHUNK);
+        (lo, hi, bits, xs)
+    }
+
+    #[test]
+    fn minmax_fq_equals_scalar_two_pass() {
+        forall(96, "minmax_fq-parity", case, |(lo, hi, bits, xs)| {
+            let mut fused = xs.clone();
+            let stats = minmax_fq(&mut fused, *lo, *hi, *bits);
+            let mut scalar = xs.clone();
+            let expect_stats = minmax(&scalar);
+            fake_quant_slice(&mut scalar, *lo, *hi, *bits);
+            stats == expect_stats && fused == scalar
+        });
+    }
+
+    #[test]
+    fn fq_into_equals_fake_quant() {
+        forall(96, "fq_into-parity", case, |(lo, hi, bits, xs)| {
+            let mut dst = vec![0.0f32; xs.len()];
+            fq_into(xs, &mut dst, *lo, *hi, *bits);
+            dst == fake_quant(xs, *lo, *hi, *bits)
+        });
+    }
+
+    #[test]
+    fn fq_cosine_equals_two_pass_cosine() {
+        forall(96, "fq_cosine-parity", case, |(lo, hi, bits, xs)| {
+            let fused = fq_cosine(xs, *lo, *hi, *bits);
+            let q = fake_quant(xs, *lo, *hi, *bits);
+            fused == cosine_similarity(xs, &q)
+        });
+    }
+
+    #[test]
+    fn empty_and_degenerate_inputs() {
+        assert_eq!(minmax_fq(&mut [], -1.0, 1.0, 8), (0.0, 0.0));
+        fq_into(&[], &mut [], -1.0, 1.0, 8);
+        // all-zero tensor quantizes to itself: cosine convention is 1
+        assert_eq!(fq_cosine(&[0.0; 8], -1.0, 1.0, 8), 1.0);
+        // degenerate range: outputs collapse to the guarded near-zero grid
+        let mut xs = [0.5f32, -0.5];
+        let (lo, hi) = minmax_fq(&mut xs, 0.0, 0.0, 8);
+        assert_eq!((lo, hi), (-0.5, 0.5));
+        assert!(xs.iter().all(|&x| x.is_finite() && x.abs() < 1e-9));
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn fq_into_rejects_mismatched_buffers() {
+        let mut dst = [0.0f32; 2];
+        fq_into(&[1.0], &mut dst, -1.0, 1.0, 8);
+    }
+}

@@ -7,7 +7,13 @@
 //! the compiled graphs do.  Property tests enforce the invariants; the
 //! integration suite cross-checks against artifact outputs.
 
+//!
+//! `kernel` holds the fused single-pass variants of the hot paths
+//! (stats + fake-quant in one traversal, the no-alloc DSGC objective);
+//! the scalar entry points below stay as the reference semantics.
+
 pub mod dsgc;
+pub mod kernel;
 
 /// Asymmetric uniform quantizer parameters for a `[qmin, qmax]` range.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -72,7 +78,13 @@ impl QuantParams {
 }
 
 /// Per-tensor (min, max) — the accumulator statistics of paper Fig. 3.
+/// An empty slice yields `(0.0, 0.0)`: the naive `(+inf, -inf)` fold
+/// poisons every downstream consumer (`ema_update` smears the infinities
+/// into the range state permanently).
 pub fn minmax(xs: &[f32]) -> (f32, f32) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
     let mut lo = f32::INFINITY;
     let mut hi = f32::NEG_INFINITY;
     for &x in xs {
@@ -90,10 +102,11 @@ pub fn fake_quant_slice(xs: &mut [f32], qmin: f32, qmax: f32, bits: u32) {
     }
 }
 
-/// Fake-quantize into a new buffer (used by DSGC candidate evaluation).
+/// Fake-quantize into a new buffer.
 pub fn fake_quant(xs: &[f32], qmin: f32, qmax: f32, bits: u32) -> Vec<f32> {
-    let qp = QuantParams::from_range(qmin, qmax, bits);
-    xs.iter().map(|&x| qp.fq(x)).collect()
+    let mut out = vec![0.0; xs.len()];
+    kernel::fq_into(xs, &mut out, qmin, qmax, bits);
+    out
 }
 
 /// Cosine similarity between two tensors (DSGC's objective; paper Sec. 5.1:
@@ -266,6 +279,17 @@ mod tests {
         let xs = [-2.0, -0.5, 0.5, 3.0];
         assert!((saturation_ratio(&xs, -1.0, 1.0) - 0.5).abs() < 1e-6);
         assert_eq!(saturation_ratio(&[], -1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn minmax_of_empty_slice_is_zero_not_inf() {
+        assert_eq!(minmax(&[]), (0.0, 0.0));
+        // the regression this guards: an (+inf, -inf) fold would poison
+        // the EMA'd range state forever
+        let (lo, hi) = minmax(&[]);
+        let r = ema_update([-1.0, 1.0], [lo, hi], 0.9);
+        assert!(r[0].is_finite() && r[1].is_finite());
+        assert_eq!(minmax(&[2.0]), (2.0, 2.0));
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //!   pay it equally.
 
 use super::traffic::{BitWidths, Conv2dGeom, TrafficCost};
+use crate::quant::kernel;
 
 /// Bit-widths of the backward datapath.
 #[derive(Debug, Clone, Copy)]
@@ -69,6 +70,17 @@ pub fn bwd_compare(g: &Conv2dGeom, b: BwdBits) -> TrafficCost {
         static_bits: bwd_static_cost(g, b),
         dynamic_bits: bwd_dynamic_cost(g, b),
     }
+}
+
+/// Numeric counterpart of the `G_X` term in [`bwd_static_cost`]: quantize
+/// and "store" an input-gradient tensor the way the static (in-hindsight)
+/// accelerator does — one fused `minmax_fq` pass produces the `b_g`-bit
+/// tensor *and* the Fig. 3 statistics the next range update consumes.
+/// Returns `((lo, hi), bits_moved)` so callers can tie the numeric path
+/// back to the closed-form accounting.
+pub fn store_gx_static(gx: &mut [f32], qmin: f32, qmax: f32, b: BwdBits) -> ((f32, f32), u64) {
+    let stats = kernel::minmax_fq(gx, qmin, qmax, b.b_g as u32);
+    (stats, gx.len() as u64 * b.b_g)
 }
 
 /// Full training-step (fwd + bwd) traffic for a network under each
@@ -166,6 +178,26 @@ mod tests {
         let mut b2 = b;
         b2.b_acc = 32; // same acc, G_W unchanged
         assert_eq!(delta, bwd_dynamic_cost(&g, b2) - bwd_static_cost(&g, b2));
+    }
+
+    #[test]
+    fn fused_gx_store_matches_the_closed_form_term() {
+        use crate::quant::{minmax, QuantParams};
+        use crate::util::rng::Pcg32;
+        let g = traffic::table5_layers()[0];
+        let b = BwdBits::default();
+        let n = (g.cin * g.w * g.h) as usize;
+        let mut rng = Pcg32::new(17, 1);
+        let mut gx: Vec<f32> = (0..n).map(|_| rng.normal() * 0.01).collect();
+        let expect_stats = minmax(&gx);
+        let (stats, bits_moved) = store_gx_static(&mut gx, -0.05, 0.05, b);
+        // the single pass reports the pre-quantization extrema ...
+        assert_eq!(stats, expect_stats);
+        // ... moves exactly the closed-form G_X store term ...
+        assert_eq!(bits_moved, g.cin * g.w * g.h * b.b_g);
+        // ... and leaves the tensor on the b_g grid
+        let qp = QuantParams::from_range(-0.05, 0.05, b.b_g as u32);
+        assert!(gx.iter().all(|&x| (qp.fq(x) - x).abs() < 1e-7));
     }
 
     #[test]

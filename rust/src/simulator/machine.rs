@@ -8,17 +8,19 @@
 //! * **static** — ranges are known up front: each completed accumulator
 //!   slice is requantized immediately and written to memory at `b_a`
 //!   bits; in-hindsight additionally folds the slice min/max into the
-//!   online statistics registers (paper Fig. 3) at zero extra traffic;
+//!   online statistics registers (paper Fig. 3) at zero extra traffic —
+//!   realized as one fused `quant::kernel::minmax_fq` pass;
 //! * **dynamic** — every slice is written at `b_acc` bits; once the full
 //!   tensor is out, min/max are computed, the tensor is read *back*,
-//!   quantized, and written again at `b_a` bits.
+//!   quantized, and written again at `b_a` bits — two passes by
+//!   construction, which is the whole Sec. 6 argument.
 //!
 //! The machine is bit-exact: its integer path must agree with the
 //! `quant` module's fake-quant (asserted in tests), which is in turn the
 //! mirror of the L1 kernels — so the simulator validates the whole
 //! numeric chain, not just byte counts.
 
-use crate::quant::QuantParams;
+use crate::quant::{fake_quant_slice, kernel, minmax, QuantParams};
 
 /// DMA byte counters, one per dataflow phase (paper Fig. 4's arrows).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -137,8 +139,7 @@ impl MacArray {
 
         // Dequantize the accumulator: real = acc * scale_a * scale_w.
         let s = qp_a.scale * qp_w.scale;
-        let real: Vec<f32> = acc.iter().map(|&v| v as f32 * s).collect();
-        let (lo, hi) = crate::quant::minmax(&real);
+        let mut real: Vec<f32> = acc.iter().map(|&v| v as f32 * s).collect();
 
         let mut phases = Phases {
             weight_load: k as u64 * n as u64 * self.b_w / 8,
@@ -147,25 +148,32 @@ impl MacArray {
         };
 
         let out_elems = (m * n) as u64;
-        let qp_out = match policy {
+        let acc_stats = match policy {
             Policy::Static { qmin, qmax } => {
-                // requantize at the accumulator; only b_a-bit data leaves
+                // requantize at the accumulator; only b_a-bit data leaves.
+                // One fused pass quantizes the outgoing tensor *and* folds
+                // the pre-quantization extrema into the Fig. 3 statistics
+                // registers — the single-traversal contract the paper's
+                // accelerator sketch relies on.
                 phases.output_store = out_elems * self.b_a / 8;
-                QuantParams::from_range(qmin, qmax, out_bits)
+                kernel::minmax_fq(&mut real, qmin, qmax, out_bits)
             }
             Policy::Dynamic => {
-                // full-precision round trip through memory first
+                // full-precision round trip through memory first: the
+                // ranges are unknown until the whole tensor exists, so the
+                // stats pass and the quantize pass cannot fuse.
                 phases.acc_store = out_elems * self.b_acc / 8;
                 phases.acc_reload = out_elems * self.b_acc / 8;
                 phases.output_store = out_elems * self.b_a / 8;
-                QuantParams::from_range(lo, hi, out_bits)
+                let (lo, hi) = minmax(&real);
+                fake_quant_slice(&mut real, lo, hi, out_bits);
+                (lo, hi)
             }
         };
-        let output: Vec<f32> = real.iter().map(|&x| qp_out.fq(x)).collect();
 
         RunResult {
-            output,
-            acc_stats: (lo, hi),
+            output: real,
+            acc_stats,
             phases,
             cycles,
             mac_utilization: useful as f64 / issued as f64,

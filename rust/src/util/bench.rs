@@ -7,8 +7,10 @@
 //! Env knobs: `HINDSIGHT_BENCH_STEPS`, `HINDSIGHT_BENCH_SEEDS`,
 //! `HINDSIGHT_BENCH_QUICK=1` (CI-scale run).
 
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
+use crate::util::json::{self, Value};
 use crate::util::stats;
 
 /// Timing summary for one benchmark case.
@@ -139,6 +141,38 @@ pub fn pm(mean: f64, std: f64) -> String {
     format!("{mean:.2} ± {std:.2}")
 }
 
+/// Append one record to the kernel-perf trajectory file so successive
+/// bench runs accumulate (`BENCH_kernels.json` in the bench's working
+/// directory — the crate root under `cargo bench` — or the path in
+/// `HINDSIGHT_BENCH_JSON`).  The file is `{"runs": [...]}`; a missing or
+/// malformed file is re-seeded.
+pub fn append_bench_record(record: Value) -> std::io::Result<PathBuf> {
+    let path = PathBuf::from(
+        std::env::var("HINDSIGHT_BENCH_JSON").unwrap_or_else(|_| "BENCH_kernels.json".into()),
+    );
+    append_bench_record_at(&path, record)?;
+    Ok(path)
+}
+
+/// Path-explicit form of [`append_bench_record`] (testable).
+pub fn append_bench_record_at(path: &Path, record: Value) -> std::io::Result<()> {
+    let mut doc = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|s| json::parse(&s).ok())
+        .unwrap_or(Value::Null);
+    if !matches!(doc, Value::Object(_)) {
+        doc = Value::object(vec![("runs", Value::Array(Vec::new()))]);
+    }
+    if let Value::Object(kv) = &mut doc {
+        match kv.iter_mut().find(|(k, _)| k == "runs") {
+            Some((_, Value::Array(runs))) => runs.push(record),
+            Some((_, other)) => *other = Value::Array(vec![record]),
+            None => kv.push(("runs".to_string(), Value::Array(vec![record]))),
+        }
+    }
+    std::fs::write(path, format!("{doc}\n"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,5 +203,32 @@ mod tests {
     fn table_rejects_bad_rows() {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn bench_records_accumulate_in_json() {
+        let path = std::env::temp_dir().join(format!(
+            "hindsight_bench_test_{}.json",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let rec = |n: usize| {
+            Value::object(vec![
+                ("bench", Value::from("unit-test")),
+                ("n", Value::from(n)),
+            ])
+        };
+        append_bench_record_at(&path, rec(1)).unwrap();
+        append_bench_record_at(&path, rec(2)).unwrap();
+        let doc = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let runs = doc.get("runs").unwrap().as_array().unwrap();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[1].get("n").unwrap().as_usize(), Some(2));
+        // a malformed file is re-seeded, not crashed on
+        std::fs::write(&path, "not json").unwrap();
+        append_bench_record_at(&path, rec(3)).unwrap();
+        let doc = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("runs").unwrap().as_array().unwrap().len(), 1);
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -116,7 +116,7 @@ fn train_stats_match_dump_gradients() {
 fn training_is_deterministic() {
     let Some(e) = engine() else { return };
     let run = |seed: u64| {
-        let mut cfg = quick("mlp").fully_quantized(Estimator::Hindsight);
+        let mut cfg = quick("mlp").fully_quantized(Estimator::HINDSIGHT);
         cfg.seed = seed;
         Trainer::new(&e, cfg).unwrap().run().unwrap()
     };
@@ -135,15 +135,9 @@ fn training_is_deterministic() {
 #[test]
 fn all_estimators_train() {
     let Some(e) = engine() else { return };
-    for est in [
-        Estimator::Current,
-        Estimator::Running,
-        Estimator::Hindsight,
-        Estimator::Dsgc,
-    ] {
+    for est in Estimator::all().filter(|e| e.enabled()) {
         let mut cfg = quick("mlp").fully_quantized(est);
-        if est == Estimator::Dsgc {
-            cfg.act_est = Estimator::Current;
+        if est.needs_search() {
             cfg.dsgc_period = 5;
         }
         cfg.steps = 40;
@@ -166,11 +160,11 @@ fn quantization_perturbs_but_does_not_break() {
     let Some(e) = engine() else { return };
     let mut base = quick("mlp");
     base.steps = 60;
-    let fp = Trainer::new(&e, base.clone().fully_quantized(Estimator::Fp32))
+    let fp = Trainer::new(&e, base.clone().fully_quantized(Estimator::FP32))
         .unwrap()
         .run()
         .unwrap();
-    let qt = Trainer::new(&e, base.fully_quantized(Estimator::Hindsight))
+    let qt = Trainer::new(&e, base.fully_quantized(Estimator::HINDSIGHT))
         .unwrap()
         .run()
         .unwrap();
@@ -187,7 +181,7 @@ fn quantization_perturbs_but_does_not_break() {
 #[test]
 fn estimator_sweep_reuses_executables() {
     let Some(e) = engine() else { return };
-    for est in [Estimator::Current, Estimator::Running, Estimator::Hindsight] {
+    for est in [Estimator::CURRENT, Estimator::RUNNING, Estimator::HINDSIGHT] {
         let mut cfg = quick("mlp").fully_quantized(est);
         cfg.steps = 2;
         cfg.calib_batches = 0;
@@ -219,7 +213,7 @@ fn resnet_pallas_variant_steps() {
 #[test]
 fn hindsight_ranges_track_statistics() {
     let Some(e) = engine() else { return };
-    let mut cfg = quick("mlp").fully_quantized(Estimator::Hindsight);
+    let mut cfg = quick("mlp").fully_quantized(Estimator::HINDSIGHT);
     cfg.steps = 30;
     let mut t = Trainer::new(&e, cfg).unwrap();
     t.calibrate().unwrap();
