@@ -3,9 +3,11 @@
 //! 1. the **fused single-pass kernel** `quant::kernel::minmax_fq` — one
 //!    traversal computes the online accumulator statistics *and*
 //!    requantizes with the static range, vs the scalar two-pass
-//!    `minmax` + `fake_quant_slice` baseline it replaced.  Runs without
-//!    artifacts; the scalar-vs-fused numbers append to
-//!    `BENCH_kernels.json` so the perf trajectory accumulates.
+//!    `minmax` + `fake_quant_slice` baseline it replaced — plus the
+//!    per-channel axis (`minmax_fq_axis` vs the scalar gather-per-channel
+//!    reference, with per-tensor timings alongside).  Runs without
+//!    artifacts; the numbers append to `BENCH_kernels.json` so the perf
+//!    trajectory accumulates.
 //! 2. the **runtime contract**: static ranges go into the executable,
 //!    online statistics come back out of the same execution, and the
 //!    between-step update is a handful of flops in the coordinator
@@ -69,6 +71,84 @@ fn kernel_section() {
         ]);
         match append_bench_record(rec) {
             Ok(path) => println!("recorded {} elems -> {}", n, path.display()),
+            Err(e) => eprintln!("could not record bench json: {e}"),
+        }
+    }
+    table.print();
+}
+
+/// Per-channel axis of the same Fig. 3 contract: one channel-strided
+/// fused traversal (`minmax_fq_axis`) vs the scalar per-channel
+/// reference (gather each channel, two passes, scatter back), with the
+/// per-tensor `minmax_fq` timing alongside as the granularity axis.
+fn axis_kernel_section() {
+    let mut table = Table::new(
+        "Fig. 3 kernel, per-channel — fused minmax_fq_axis vs scalar gather",
+        &["elems", "channels", "scalar ms", "fused ms", "speedup", "per-tensor ms"],
+    );
+    let iters = if quick() { 5 } else { 30 };
+    let channels = 64usize;
+    for n in [65_536usize, 1_048_576, 4_194_304] {
+        let mut rng = Pcg32::new(n as u64, 9);
+        let src: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let ranges: Vec<[f32; 2]> = (0..channels)
+            .map(|c| {
+                let w = 2.5 + (c % 7) as f32 * 0.2;
+                [-w, w]
+            })
+            .collect();
+        // scalar per-channel reference: strided gather, two passes per
+        // channel, scatter back (what a non-fused coordinator would do)
+        let mut buf = src.clone();
+        let scalar = time_it("scalar-axis", 2, iters, || {
+            for (c, r) in ranges.iter().enumerate() {
+                let mut chan: Vec<f32> =
+                    buf.iter().skip(c).step_by(channels).copied().collect();
+                std::hint::black_box(quant::minmax(&chan));
+                quant::fake_quant_slice(&mut chan, r[0], r[1], 8);
+                for (k, v) in chan.iter().enumerate() {
+                    buf[c + k * channels] = *v;
+                }
+            }
+            std::hint::black_box(buf.first());
+        });
+        let mut buf2 = src.clone();
+        let fused = time_it("fused-axis", 2, iters, || {
+            let stats = kernel::minmax_fq_axis(&mut buf2, &ranges, 8);
+            std::hint::black_box(stats.first().copied());
+            std::hint::black_box(buf2.first());
+        });
+        // the granularity axis: same tensor through the per-tensor kernel
+        let mut buf3 = src.clone();
+        let per_tensor = time_it("per-tensor", 2, iters, || {
+            let stats = kernel::minmax_fq(&mut buf3, -3.0, 3.0, 8);
+            std::hint::black_box(stats);
+            std::hint::black_box(buf3.first());
+        });
+        let speedup = scalar.mean_s / fused.mean_s;
+        table.row(&[
+            n.to_string(),
+            channels.to_string(),
+            format!("{:.3}", scalar.mean_ms()),
+            format!("{:.3}", fused.mean_ms()),
+            format!("{speedup:.2}x"),
+            format!("{:.3}", per_tensor.mean_ms()),
+        ]);
+        let rec = Value::object(vec![
+            ("bench", Value::from("fig3_online_stats")),
+            ("kernel", Value::from("minmax_fq_axis")),
+            ("granularity", Value::from("per-channel")),
+            ("elems", Value::from(n)),
+            ("channels", Value::from(channels)),
+            ("bits", Value::from(8usize)),
+            ("iters", Value::from(iters)),
+            ("scalar_ms", Value::from(scalar.mean_ms())),
+            ("fused_ms", Value::from(fused.mean_ms())),
+            ("speedup", Value::from(speedup)),
+            ("per_tensor_ms", Value::from(per_tensor.mean_ms())),
+        ]);
+        match append_bench_record(rec) {
+            Ok(path) => println!("recorded {} elems (axis) -> {}", n, path.display()),
             Err(e) => eprintln!("could not record bench json: {e}"),
         }
     }
@@ -143,5 +223,6 @@ fn contract_section() {
 fn main() {
     hindsight::util::logging::init();
     kernel_section();
+    axis_kernel_section();
     contract_section();
 }

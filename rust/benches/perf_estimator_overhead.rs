@@ -3,14 +3,17 @@
 //! as it requires estimating the objective function at multiple clipping
 //! thresholds" in measured numbers.
 //!
-//! Three sections:
+//! Four sections:
 //!  1. DSGC objective cost, fused (`kernel::fq_cosine`, no allocation)
 //!     vs the scalar alloc-per-probe baseline it replaced — appended to
 //!     `BENCH_kernels.json`; runs without artifacts.
 //!  2. search-pass cost per estimator family: DSGC's golden-section
 //!     (iters + 3 full passes) vs sampled min-max (one strided
 //!     subsample pass).
-//!  3. end-to-end steps/second with searches amortized (needs built
+//!  3. per-tensor vs per-channel search cost (the `@pc` granularity
+//!     axis, via the channel-replicating adapter) — appended to
+//!     `BENCH_kernels.json`.
+//!  4. end-to-end steps/second with searches amortized (needs built
 //!     artifacts; skipped otherwise).
 //!
 //!   cargo bench --bench perf_estimator_overhead
@@ -18,7 +21,7 @@
 mod common;
 
 use hindsight::coordinator::{Estimator, Trainer};
-use hindsight::estimator::{RangeEstimator, SampledMinMax};
+use hindsight::estimator::{PerChannel, RangeEstimator, SampledMinMax};
 use hindsight::quant::{self, dsgc};
 use hindsight::runtime::manifest::Manifest;
 use hindsight::runtime::Engine;
@@ -116,6 +119,61 @@ fn search_family_cost() {
     );
 }
 
+/// Per-tensor vs per-channel search cost: the per-channel adapter splits
+/// the tensor into C strided slices and searches each independently, so
+/// the total objective work is ~unchanged for DSGC (same element count)
+/// plus one gather — the granularity tax is the gather, not the search.
+fn granularity_cost() {
+    let mut table = Table::new(
+        "Search cost per granularity (64 channel groups)",
+        &["Estimator", "Tensor elems", "per-tensor ms", "per-channel ms", "ratio"],
+    );
+    let iters = if quick() { 3 } else { 10 };
+    let channels = 64usize;
+    for n in [65_536usize, 1_048_576] {
+        let g = grad_tensor(n);
+        for (label, est) in [("DSGC", Estimator::DSGC), ("sampled", Estimator::SAMPLED_MINMAX)] {
+            let dsgc_iters = 20;
+            let mut pt = est.instantiate();
+            let per_tensor = time_it("search-pt", 1, iters, || {
+                std::hint::black_box(pt.search(&g, 8, dsgc_iters));
+            });
+            let mut pc = PerChannel::replicate(|| est.instantiate(), channels);
+            let mut rows = vec![[0.0f32; 2]; channels];
+            let per_channel = time_it("search-pc", 1, iters, || {
+                std::hint::black_box(pc.search_rows(&g, 8, dsgc_iters, &mut rows));
+            });
+            let ratio = per_channel.mean_s / per_tensor.mean_s;
+            table.row(&[
+                label.to_string(),
+                n.to_string(),
+                format!("{:.3}", per_tensor.mean_ms()),
+                format!("{:.3}", per_channel.mean_ms()),
+                format!("{ratio:.2}x"),
+            ]);
+            let rec = Value::object(vec![
+                ("bench", Value::from("perf_estimator_overhead")),
+                ("kernel", Value::from("search_granularity")),
+                ("estimator", Value::from(est.key())),
+                ("elems", Value::from(n)),
+                ("channels", Value::from(channels)),
+                ("bits", Value::from(8usize)),
+                ("iters", Value::from(iters)),
+                ("per_tensor_ms", Value::from(per_tensor.mean_ms())),
+                ("per_channel_ms", Value::from(per_channel.mean_ms())),
+                ("ratio", Value::from(ratio)),
+            ]);
+            match append_bench_record(rec) {
+                Ok(path) => {
+                    println!("recorded {label} {n} elems (granularity) -> {}", path.display())
+                }
+                Err(e) => eprintln!("could not record bench json: {e}"),
+            }
+        }
+    }
+    table.print();
+}
+
 fn end_to_end() {
     if !Manifest::default_dir().join("manifest.json").exists() {
         println!("\nartifacts not built; skipping the end-to-end section");
@@ -159,5 +217,6 @@ fn main() {
     hindsight::util::logging::init();
     fused_vs_scalar_objective();
     search_family_cost();
+    granularity_cost();
     end_to_end();
 }

@@ -69,7 +69,9 @@ pub struct TrainConfig {
     pub weight_decay: f32,
     /// calibration batches before training (paper Sec. 5.2)
     pub calib_batches: usize,
-    /// DSGC update interval in steps (paper: 100)
+    /// DSGC update interval in steps (paper: 100).  0 is valid and means
+    /// "search once, at step 0" — the bootstrap search only (the trainer
+    /// guards the modulo; see `trainer::search_due`).
     pub dsgc_period: u64,
     /// golden-section refinement iterations per DSGC update
     pub dsgc_iters: u32,
@@ -136,10 +138,12 @@ impl TrainConfig {
 
     pub fn tag(&self) -> String {
         format!(
-            "{}-g:{}-a:{}-w:{}-s{}",
+            "{}-g:{}{}-a:{}{}-w:{}-s{}",
             self.model,
             self.grad_est.name(),
+            self.grad_est.suffix(),
             self.act_est.name(),
+            self.act_est.suffix(),
             self.quant_weights,
             self.seed
         )
@@ -195,5 +199,17 @@ mod tests {
         let d = TrainConfig::new("cnn").fully_quantized(Estimator::DSGC);
         assert_eq!(d.grad_est, Estimator::DSGC);
         assert_eq!(d.act_est, Estimator::CURRENT);
+    }
+
+    #[test]
+    fn per_channel_configs_parse_and_tag() {
+        let pc = Estimator::parse("hindsight@pc").unwrap();
+        let c = TrainConfig::new("cnn").fully_quantized(pc);
+        assert!(c.grad_est.is_per_channel());
+        assert!(c.act_est.is_per_channel()); // granularity carries over
+        assert!(c.tag().contains("@pc"), "{}", c.tag());
+        // per-tensor tags are unchanged
+        let t = TrainConfig::new("cnn").fully_quantized(Estimator::HINDSIGHT);
+        assert!(!t.tag().contains("@pc"), "{}", t.tag());
     }
 }

@@ -1,17 +1,25 @@
 //! The range-estimation state machine (paper Sec. 4, realized).
 //!
-//! The compiled graph takes the (Q, 2) range state as an *input* and
-//! returns two (Q, 2) tensors: `new_ranges` (the state-update each
+//! The compiled graph takes the range state as an *input* and returns
+//! two tensors of the same shape: `new_ranges` (the state-update each
 //! estimator mode prescribes, computed in-graph) and `stats` (the raw
 //! accumulator min/max of the step — paper Fig. 3).  This module owns
 //! what happens *between* steps — but no longer knows any estimator's
 //! semantics: each quantizer site carries a boxed
 //! [`RangeEstimator`](crate::estimator::RangeEstimator) instantiated
 //! from the registry, and `RangeManager` just routes the graph outputs
-//! through the per-site `absorb_step` / `absorb_calibration` hooks and
-//! the periodic `search` hook for estimators that declare
-//! `needs_search` (DSGC, sampled min-max).  The (Q, 2) tensor ABI to
-//! the compiled graph is unchanged.
+//! through the per-site `absorb_step_rows` / `absorb_calibration_rows`
+//! hooks and the periodic `search_rows` hook for estimators that
+//! declare `needs_search` (DSGC, sampled min-max).
+//!
+//! **Row layout.**  The graph ABI is one dense f32 tensor of shape
+//! `(R, 2)` where `R` is the total number of range rows: each site
+//! contributes a contiguous *row group* — one row for per-tensor sites,
+//! `n_channels` rows for per-channel sites (channels-last: channel `c`
+//! of a site owns row `offset(site) + c`).  A site→row-offset table maps
+//! between the two indexings; with every site per-tensor (the paper's
+//! setting) `R == Q` and the layout degenerates to the original one row
+//! per site, bit-for-bit (golden parity tests below pin this).
 
 use crate::coordinator::config::Estimator;
 use crate::estimator::{RangeEstimator, StepCtx};
@@ -21,32 +29,45 @@ use crate::runtime::tensor::Tensor;
 /// Per-quantizer range state + delegated estimator semantics.
 #[derive(Debug, Clone)]
 pub struct RangeManager {
-    /// (Q, 2) rows: [qmin, qmax] per site, indexed by site index
+    /// (R, 2) rows: [qmin, qmax] per channel group, all sites flattened
     ranges: Vec<[f32; 2]>,
+    /// site → first row; `offsets[i]..offsets[i+1]` is site i's group
+    offsets: Vec<usize>,
     kinds: Vec<SiteKind>,
     pub act_est: Estimator,
     pub grad_est: Estimator,
     /// one estimator instance per site (owns any per-site state)
     sites: Vec<Box<dyn RangeEstimator>>,
-    /// last raw stats observed (diagnostics, saturation tracking)
+    /// last raw stats observed per row (diagnostics, saturation tracking)
     last_stats: Vec<[f32; 2]>,
     calibrated: bool,
 }
 
 impl RangeManager {
     pub fn new(model: &ModelSpec, act_est: Estimator, grad_est: Estimator) -> Self {
-        let kinds = model.sites.iter().map(|s| s.kind).collect::<Vec<_>>();
-        let sites: Vec<Box<dyn RangeEstimator>> = kinds
-            .iter()
-            .map(|k| match k {
-                SiteKind::Act => act_est.instantiate(),
-                SiteKind::Grad => grad_est.instantiate(),
-            })
-            .collect();
-        let ranges = sites.iter().map(|e| e.init()).collect();
+        let kinds: Vec<SiteKind> = model.sites.iter().map(|s| s.kind).collect();
+        let mut sites: Vec<Box<dyn RangeEstimator>> = Vec::with_capacity(kinds.len());
+        let mut offsets = Vec::with_capacity(kinds.len() + 1);
+        offsets.push(0usize);
+        for s in &model.sites {
+            let est = match s.kind {
+                SiteKind::Act => act_est,
+                SiteKind::Grad => grad_est,
+            };
+            let inst = est.instantiate_site(s.channels());
+            offsets.push(offsets.last().unwrap() + inst.n_rows());
+            sites.push(inst);
+        }
+        let mut ranges = Vec::with_capacity(*offsets.last().unwrap());
+        for e in &sites {
+            for _ in 0..e.n_rows() {
+                ranges.push(e.init());
+            }
+        }
         Self {
-            last_stats: vec![[0.0, 0.0]; kinds.len()],
+            last_stats: vec![[0.0, 0.0]; ranges.len()],
             ranges,
+            offsets,
             kinds,
             act_est,
             grad_est,
@@ -59,7 +80,23 @@ impl RangeManager {
         self.kinds.len()
     }
 
-    /// The (Q, 2) tensor fed to the graph this step.
+    /// Total range rows R across all sites (== n_sites when every site
+    /// is per-tensor).
+    pub fn n_rows(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// First row index of site `i` in the flat (R, 2) layout.
+    pub fn row_offset(&self, i: usize) -> usize {
+        self.offsets[i]
+    }
+
+    /// All of site `i`'s rows (one per channel group).
+    pub fn site_rows(&self, i: usize) -> &[[f32; 2]] {
+        &self.ranges[self.offsets[i]..self.offsets[i + 1]]
+    }
+
+    /// The (R, 2) tensor fed to the graph this step.
     pub fn as_tensor(&self) -> Tensor {
         let mut data = Vec::with_capacity(self.ranges.len() * 2);
         for r in &self.ranges {
@@ -68,16 +105,21 @@ impl RangeManager {
         Tensor::from_f32(&[self.ranges.len(), 2], data)
     }
 
+    /// Site `i`'s first row (its only row for per-tensor sites).
     pub fn row(&self, i: usize) -> [f32; 2] {
-        self.ranges[i]
+        self.ranges[self.offsets[i]]
     }
 
+    /// Set every row of site `i` to `r` (one row for per-tensor sites).
     pub fn set_row(&mut self, i: usize, r: [f32; 2]) {
-        self.ranges[i] = r;
+        for row in self.offsets[i]..self.offsets[i + 1] {
+            self.ranges[row] = r;
+        }
     }
 
+    /// Site `i`'s most recent raw stats (first row of its group).
     pub fn last_stats(&self, i: usize) -> [f32; 2] {
-        self.last_stats[i]
+        self.last_stats[self.offsets[i]]
     }
 
     /// Scalar ABI values for the train graph.
@@ -98,25 +140,33 @@ impl RangeManager {
     }
 
     /// Absorb one training step's outputs: each site's estimator sees
-    /// `{current row, raw stats, in-graph update}` and returns the row
-    /// the next step quantizes with.
+    /// `{current row, raw stats, in-graph update}` for every row of its
+    /// group and returns the rows the next step quantizes with.
     ///
     /// `first_step` lets uncalibrated estimators implement the paper's
     /// initialization `q^0 = minmax(G^0)`.
     pub fn update(&mut self, new_ranges: &Tensor, stats: &Tensor, first_step: bool) {
         let nr = new_ranges.as_f32().expect("new_ranges f32");
         let st = stats.as_f32().expect("stats f32");
-        assert_eq!(nr.len(), self.ranges.len() * 2);
-        for i in 0..self.ranges.len() {
-            self.last_stats[i] = [st[2 * i], st[2 * i + 1]];
-            let ctx = StepCtx {
-                current: self.ranges[i],
-                stats: self.last_stats[i],
-                new_ranges: [nr[2 * i], nr[2 * i + 1]],
-                first_step,
-                calibrated: self.calibrated,
-            };
-            self.ranges[i] = self.sites[i].absorb_step(ctx);
+        let r = self.ranges.len();
+        assert_eq!(nr.len(), 2 * r, "new_ranges has {} values, want 2 x {r} rows", nr.len());
+        assert_eq!(st.len(), 2 * r, "stats has {} values, want 2 x {r} rows", st.len());
+        let mut ctxs: Vec<StepCtx> = Vec::new();
+        for i in 0..self.kinds.len() {
+            let (start, end) = (self.offsets[i], self.offsets[i + 1]);
+            ctxs.clear();
+            for row in start..end {
+                self.last_stats[row] = [st[2 * row], st[2 * row + 1]];
+                ctxs.push(StepCtx {
+                    current: self.ranges[row],
+                    stats: self.last_stats[row],
+                    new_ranges: [nr[2 * row], nr[2 * row + 1]],
+                    first_step,
+                    calibrated: self.calibrated,
+                });
+            }
+            let (sites, ranges) = (&mut self.sites, &mut self.ranges);
+            sites[i].absorb_step_rows(&ctxs, &mut ranges[start..end]);
         }
     }
 
@@ -124,11 +174,23 @@ impl RangeManager {
     /// through the network before training to set activation ranges).
     pub fn calibrate(&mut self, stats: &Tensor, eta: f32) {
         let st = stats.as_f32().expect("stats f32");
-        for i in 0..self.ranges.len() {
-            let s = [st[2 * i], st[2 * i + 1]];
-            self.ranges[i] =
-                self.sites[i].absorb_calibration(self.ranges[i], s, eta, !self.calibrated);
-            self.last_stats[i] = s;
+        let r = self.ranges.len();
+        assert_eq!(st.len(), 2 * r, "stats has {} values, want 2 x {r} rows", st.len());
+        let mut cur: Vec<[f32; 2]> = Vec::new();
+        let mut obs: Vec<[f32; 2]> = Vec::new();
+        for i in 0..self.kinds.len() {
+            let (start, end) = (self.offsets[i], self.offsets[i + 1]);
+            cur.clear();
+            obs.clear();
+            for row in start..end {
+                let s = [st[2 * row], st[2 * row + 1]];
+                cur.push(self.ranges[row]);
+                obs.push(s);
+                self.last_stats[row] = s;
+            }
+            let first = !self.calibrated;
+            let (sites, ranges) = (&mut self.sites, &mut self.ranges);
+            sites[i].absorb_calibration_rows(&cur, &obs, eta, first, &mut ranges[start..end]);
         }
         self.calibrated = true;
     }
@@ -138,22 +200,23 @@ impl RangeManager {
     }
 
     /// Site indices the periodic search pass must visit: gradient sites
-    /// whose estimator declares `needs_search` (DSGC, sampled min-max).
+    /// whose *own* estimator declares `needs_search` — consulted
+    /// per-site, not from the config-level gradient estimator, so mixed
+    /// and per-channel site populations resolve correctly.  (The dump
+    /// graph only materializes gradient tensors, hence the kind filter.)
     pub fn search_sites(&self) -> Vec<usize> {
-        if !self.grad_est.needs_search() {
-            return vec![];
-        }
         (0..self.kinds.len())
-            .filter(|&i| self.kinds[i] == SiteKind::Grad)
+            .filter(|&i| self.kinds[i] == SiteKind::Grad && self.sites[i].needs_search())
             .collect()
     }
 
-    /// Run one site's tensor-level search and adopt the resulting range.
+    /// Run one site's tensor-level search and adopt the resulting rows
+    /// (per-channel sites search each channel's strided slice).
     /// Returns the search's cost in tensor traversals.
     pub fn search_site(&mut self, i: usize, tensor: &[f32], bits: u32, iters: u32) -> u32 {
-        let out = self.sites[i].search(tensor, bits, iters);
-        self.ranges[i] = out.range;
-        out.evals
+        let (start, end) = (self.offsets[i], self.offsets[i + 1]);
+        let (sites, ranges) = (&mut self.sites, &mut self.ranges);
+        sites[i].search_rows(tensor, bits, iters, &mut ranges[start..end])
     }
 
     /// Mean saturation headroom diagnostic: how much of the last stats
@@ -187,14 +250,14 @@ mod tests {
     use crate::util::rng::Pcg32;
     use crate::util::testkit::forall;
 
-    fn model(n_act: usize, n_grad: usize) -> ModelSpec {
+    fn model_ch(n_act: usize, n_grad: usize, channels: usize) -> ModelSpec {
         let mut sites = Vec::new();
         for i in 0..n_act + n_grad {
             sites.push(SiteSpec {
                 index: i,
                 name: format!("s{i}"),
                 kind: if i < n_act { SiteKind::Act } else { SiteKind::Grad },
-                feature_shape: vec![4],
+                feature_shape: vec![channels],
             });
         }
         ModelSpec {
@@ -209,6 +272,10 @@ mod tests {
             sites,
             graphs: vec![],
         }
+    }
+
+    fn model(n_act: usize, n_grad: usize) -> ModelSpec {
+        model_ch(n_act, n_grad, 4)
     }
 
     fn t(q: usize, vals: &[f32]) -> Tensor {
@@ -310,6 +377,119 @@ mod tests {
         // hull over both observations, not an EMA
         assert_eq!(rm.row(0), [-1.0, 3.0]);
         assert_eq!(rm.row(1), [-2.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "stats has")]
+    fn update_rejects_short_stats_tensor() {
+        // regression: only new_ranges used to be length-checked, so a
+        // short stats tensor died with an unhelpful index panic
+        let m = model(1, 1);
+        let mut rm = RangeManager::new(&m, Estimator::HINDSIGHT, Estimator::HINDSIGHT);
+        rm.update(&t(2, &[0.0; 4]), &t(1, &[0.0; 2]), false);
+    }
+
+    // ------------------------------------------------------------------
+    // Per-channel layout
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn per_channel_sites_expand_the_row_table() {
+        let m = model_ch(1, 1, 3);
+        let pc = Estimator::HINDSIGHT.per_channel();
+        let rm = RangeManager::new(&m, pc, Estimator::HINDSIGHT);
+        // act site: 3 rows (per-channel); grad site: 1 (per-tensor)
+        assert_eq!(rm.n_sites(), 2);
+        assert_eq!(rm.n_rows(), 4);
+        assert_eq!(rm.row_offset(0), 0);
+        assert_eq!(rm.row_offset(1), 3);
+        assert_eq!(rm.site_rows(0).len(), 3);
+        assert_eq!(rm.as_tensor().shape, vec![4, 2]);
+    }
+
+    #[test]
+    fn per_channel_rows_update_independently() {
+        let m = model_ch(1, 0, 2);
+        let pc = Estimator::MAX_HISTORY.per_channel();
+        let mut rm = RangeManager::new(&m, pc, Estimator::FP32);
+        // R = 2 rows; feed different stats per channel
+        rm.update(&t(2, &[0.0; 4]), &t(2, &[-1.0, 1.0, -5.0, 0.5]), true);
+        assert_eq!(rm.site_rows(0), &[[-1.0, 1.0], [-5.0, 0.5]]);
+        rm.update(&t(2, &[0.0; 4]), &t(2, &[-2.0, 0.5, -1.0, 1.0]), false);
+        // each channel hulls only its own history
+        assert_eq!(rm.site_rows(0), &[[-2.0, 1.0], [-5.0, 1.0]]);
+    }
+
+    #[test]
+    fn per_channel_search_sites_and_search() {
+        let m = model_ch(0, 1, 2);
+        let pc = Estimator::SAMPLED_MINMAX.per_channel();
+        let mut rm = RangeManager::new(&m, Estimator::CURRENT, pc);
+        // search_sites consults the per-site estimator, not the config
+        assert_eq!(rm.search_sites(), vec![0]);
+        // even channel ~[-1,1], odd channel ~[-4,4]
+        let mut rng = Pcg32::new(9, 1);
+        let g: Vec<f32> = (0..4096)
+            .map(|i| if i % 2 == 0 { rng.range(-1.0, 1.0) } else { rng.range(-4.0, 4.0) })
+            .collect();
+        let evals = rm.search_site(0, &g, 8, 0);
+        assert_eq!(evals, 2);
+        let rows = rm.site_rows(0);
+        assert!(rows[0][1] < 1.5 && rows[1][1] > 3.0, "{rows:?}");
+    }
+
+    /// Tentpole acceptance: every per-channel estimator pinned to one
+    /// channel reproduces the per-tensor row sequence bit-for-bit over
+    /// random calibration + step sequences.
+    #[test]
+    fn per_channel_one_group_matches_per_tensor_bit_for_bit() {
+        for base in [
+            Estimator::FP32,
+            Estimator::CURRENT,
+            Estimator::RUNNING,
+            Estimator::HINDSIGHT,
+            Estimator::DSGC,
+            Estimator::MAX_HISTORY,
+            Estimator::SAMPLED_MINMAX,
+        ] {
+            forall(
+                32,
+                &format!("pc-golden-{}", base.key()),
+                |rng| {
+                    let n_act = 1 + rng.below(2);
+                    let n_grad = 1 + rng.below(2);
+                    let q = n_act + n_grad;
+                    let calib: Vec<Vec<f32>> =
+                        (0..rng.below(3)).map(|_| rand_rows(rng, q)).collect();
+                    let steps: Vec<(Vec<f32>, Vec<f32>)> = (0..1 + rng.below(5))
+                        .map(|_| (rand_rows(rng, q), rand_rows(rng, q)))
+                        .collect();
+                    let eta = rng.range(0.0, 1.0);
+                    (n_act, n_grad, calib, steps, eta)
+                },
+                |(n_act, n_grad, calib, steps, eta)| {
+                    let m = model_ch(*n_act, *n_grad, 1);
+                    let q = n_act + n_grad;
+                    let mut rm_pt = RangeManager::new(&m, base, base);
+                    let mut rm_pc = RangeManager::new(&m, base.per_channel(), base.per_channel());
+                    assert_eq!(rm_pc.n_rows(), q); // 1 channel == 1 row per site
+                    for st in calib {
+                        rm_pt.calibrate(&t(q, st), *eta);
+                        rm_pc.calibrate(&t(q, st), *eta);
+                    }
+                    for (step, (nr, st)) in steps.iter().enumerate() {
+                        rm_pt.update(&t(q, nr), &t(q, st), step == 0);
+                        rm_pc.update(&t(q, nr), &t(q, st), step == 0);
+                        for i in 0..q {
+                            if rm_pt.row(i) != rm_pc.row(i) {
+                                return false;
+                            }
+                        }
+                    }
+                    true
+                },
+            );
+        }
     }
 
     // ------------------------------------------------------------------

@@ -19,6 +19,17 @@ use crate::runtime::engine::{Engine, Graph};
 use crate::runtime::manifest::ModelSpec;
 use crate::runtime::tensor::Tensor;
 
+/// Whether the periodic search pass is due at `step`.  A zero period
+/// means "search once, at step 0" (the bootstrap search only) — the
+/// naive `step % period` would panic with a divide-by-zero.
+fn search_due(step: u64, period: u64) -> bool {
+    if period == 0 {
+        step == 0
+    } else {
+        step % period == 0
+    }
+}
+
 /// One model + one configuration training session.
 pub struct Trainer<'e> {
     engine: &'e Engine,
@@ -64,6 +75,27 @@ impl<'e> Trainer<'e> {
         let carry = engine.run(&g_init, &[Tensor::scalar_i32(cfg.seed as i32)])?;
 
         let ranges = RangeManager::new(&model, cfg.act_est, cfg.grad_est);
+        // fail early and readably when the range-row count does not match
+        // the compiled graph's ranges input — otherwise a per-channel
+        // config surfaces as an opaque marshalling shape error on the
+        // first step
+        if let Ok(gspec) = model.graph("train") {
+            if let Ok(ri) = gspec.input_index("ranges") {
+                let want = &gspec.inputs[ri].shape;
+                let have = vec![ranges.n_rows(), 2];
+                if *want != have {
+                    anyhow::bail!(
+                        "model '{}' compiled with a {:?} ranges input but the configured \
+                         estimators produce a {:?} range state — these artifacts are \
+                         per-tensor; per-channel ('@pc') estimators need \
+                         per-channel-aware artifacts (re-run python/compile/aot.py)",
+                        model.name,
+                        want,
+                        have
+                    );
+                }
+            }
+        }
         let mut spec = SynthSpec::tiny(
             model.n_classes,
             model.input_shape[0],
@@ -190,8 +222,8 @@ impl<'e> Trainer<'e> {
     /// One optimization step; returns (loss, train-batch accuracy).
     pub fn train_step(&mut self) -> Result<(f32, f32)> {
         // periodic tensor-level range search for estimators that need it
-        // (step 0 bootstraps the ranges)
-        if self.cfg.grad_est.needs_search() && self.step % self.cfg.dsgc_period == 0 {
+        // (step 0 bootstraps the ranges; period 0 = bootstrap only)
+        if self.cfg.grad_est.needs_search() && search_due(self.step, self.cfg.dsgc_period) {
             self.search_update()?;
         }
 
@@ -274,10 +306,21 @@ impl<'e> Trainer<'e> {
     }
 
     /// Full-validation evaluation; returns (loss, accuracy).
+    ///
+    /// Each validation sample is scored *at most once*: batches take
+    /// distinct index windows and the metrics are normalized by the true
+    /// scored count.  (The previous wrap-around `i % len` scored the
+    /// head of the set twice whenever the count didn't divide the batch
+    /// size, biasing both loss and accuracy toward those samples.)  The
+    /// trailing partial batch is dropped — the eval graph returns
+    /// batch-level sums, so padded slots can't be masked out; the one
+    /// exception is a validation set smaller than a single batch, where
+    /// wrap-padding is unavoidable and the old normalization applies.
     pub fn evaluate(&mut self) -> Result<(f32, f32)> {
         let g_eval = self.g_eval.clone().context("model has no eval graph")?;
         let bs = self.model.batch_size;
-        let n_batches = (self.cfg.n_val / bs).max(1);
+        let n_avail = self.cfg.n_val.min(self.data.len(true)).max(1);
+        let (n_batches, wrap) = if n_avail >= bs { (n_avail / bs, false) } else { (1, true) };
         let p = self.model.params.len();
         let s = self.model.state.len();
         let ranges_t = self.ranges.as_tensor();
@@ -294,7 +337,7 @@ impl<'e> Trainer<'e> {
         let mut y = self.y_buf.clone();
         for b in 0..n_batches {
             let idx: Vec<usize> = (b * bs..(b + 1) * bs)
-                .map(|i| i % self.data.len(true))
+                .map(|i| if wrap { i % n_avail } else { i })
                 .collect();
             self.data.fill_batch(
                 &idx,
@@ -377,6 +420,21 @@ mod tests {
         Some(Engine::new().unwrap())
     }
 
+    /// Regression: `dsgc_period == 0` used to hit `step % 0` and panic
+    /// with a divide-by-zero on the very first train step.  Zero now
+    /// means "bootstrap search only" — due at step 0, never again.
+    #[test]
+    fn zero_dsgc_period_means_bootstrap_search_only() {
+        assert!(search_due(0, 0));
+        for step in 1..50 {
+            assert!(!search_due(step, 0));
+        }
+        // the periodic semantics are unchanged
+        assert!(search_due(0, 10));
+        assert!(search_due(10, 10));
+        assert!(!search_due(7, 10));
+    }
+
     fn quick_cfg(model: &str) -> TrainConfig {
         let mut c = TrainConfig::new(model);
         c.steps = 12;
@@ -441,6 +499,20 @@ mod tests {
             }
             assert!(t.search_evals > 0, "{}: no search ran", est.key());
         }
+    }
+
+    #[test]
+    fn zero_period_trains_without_panicking() {
+        let Some(e) = engine() else { return };
+        let mut cfg = quick_cfg("mlp").grad_only(Estimator::DSGC);
+        cfg.dsgc_period = 0;
+        cfg.dsgc_iters = 3;
+        let mut t = Trainer::new(&e, cfg).unwrap();
+        for _ in 0..3 {
+            t.train_step().unwrap();
+        }
+        // exactly one (bootstrap) search ran; no divide-by-zero
+        assert!(t.search_evals > 0);
     }
 
     #[test]

@@ -50,6 +50,10 @@ impl MaxHistory {
     }
 
     fn hull(&self) -> [f32; 2] {
+        // NaN policy: `f32::min`/`max` drop NaN operands, so a NaN stats
+        // row never propagates into the hull as long as any finite row
+        // is in the window (same dropping convention as `quant::minmax`;
+        // pinned by `nan_stats_drop_out_of_the_hull` below)
         let mut lo = f32::INFINITY;
         let mut hi = f32::NEG_INFINITY;
         for s in &self.hist {
@@ -201,6 +205,19 @@ mod tests {
         assert_eq!(e.absorb_calibration([-1.0, 1.0], [-2.0, 2.0], 0.9, true), [-2.0, 2.0]);
         // not an EMA: the hull keeps the widest observation
         assert_eq!(e.absorb_calibration([-2.0, 2.0], [-1.0, 1.0], 0.9, false), [-2.0, 2.0]);
+    }
+
+    #[test]
+    fn nan_stats_drop_out_of_the_hull() {
+        let mut e = MaxHistory::new(4);
+        assert_eq!(e.absorb_step(ctx([-1.0, 1.0])), [-1.0, 1.0]);
+        // a NaN stats row contributes nothing to the hull
+        let r = e.absorb_step(ctx([f32::NAN, f32::NAN]));
+        assert_eq!(r, [-1.0, 1.0]);
+        // one-sided NaN likewise only drops the NaN side
+        let r = e.absorb_step(ctx([f32::NAN, 2.0]));
+        assert_eq!(r, [-1.0, 2.0]);
+        assert!(r[0].is_finite() && r[1].is_finite());
     }
 
     #[test]

@@ -24,19 +24,31 @@
 //!   tensors on a period, via the dump graph
 //!   ([`RangeEstimator::search`]).
 //!
+//! Granularity is orthogonal to estimator semantics: a site may
+//! quantize per tensor (one range row) or per channel group (one row per
+//! channel).  The [`perchannel::PerChannel`] adapter replicates any
+//! registered estimator across a site's channels, so every estimator
+//! gains a per-channel variant for free — the registry exposes it
+//! through the `@pc` key suffix (`hindsight@pc`).  Multi-row sites flow
+//! through the `*_rows` hooks below; single-row estimators only ever
+//! implement the scalar hooks and inherit the defaults.
+//!
 //! Submodules: [`classic`] carries the five estimators of the paper's
 //! comparison (FP32 / current / running / in-hindsight / DSGC);
 //! [`literature`] adds comparison estimators from the wider literature
 //! (window max-history, Banner et al.-style sampled min-max);
+//! [`perchannel`] holds the channel-replicating adapter;
 //! [`registry`] owns the name table and the [`Estimator`] handle.
 
 pub mod classic;
 pub mod literature;
+pub mod perchannel;
 pub mod registry;
 
 pub use classic::{Current, Dsgc, Fp32, Hindsight, Running};
 pub use literature::{MaxHistory, SampledMinMax};
-pub use registry::{Estimator, EstimatorInfo, REGISTRY};
+pub use perchannel::PerChannel;
+pub use registry::{Estimator, EstimatorInfo, Granularity, REGISTRY};
 
 /// Everything one site's estimator sees from one training step.
 #[derive(Debug, Clone, Copy)]
@@ -85,11 +97,18 @@ pub struct SearchOutcome {
 ///
 /// One boxed instance exists per quantizer site, so implementations may
 /// carry per-site state (EMA history, sliding windows, search phase).
-/// All hooks are pure coordinator-side math: the (Q, 2) tensor ABI to
-/// the compiled graph is owned by `RangeManager` and never changes.
+/// All hooks are pure coordinator-side math: the dense (R, 2) tensor
+/// ABI to the compiled graph — one row group per site — is owned by
+/// `RangeManager` and never changes shape mid-run.
 pub trait RangeEstimator: std::fmt::Debug + Send {
     /// Registry key (stable string id, e.g. `"hindsight"`).
     fn name(&self) -> &'static str;
+
+    /// Number of range rows this site maintains — 1 for per-tensor
+    /// estimators, the channel-group count for per-channel sites.
+    fn n_rows(&self) -> usize {
+        1
+    }
 
     /// Initial range row before calibration or the first observation.
     fn init(&self) -> [f32; 2] {
@@ -100,6 +119,15 @@ pub trait RangeEstimator: std::fmt::Debug + Send {
 
     /// Absorb one training step's graph outputs; returns the next row.
     fn absorb_step(&mut self, ctx: StepCtx) -> [f32; 2];
+
+    /// Multi-row absorb: one [`StepCtx`] per range row, results written
+    /// into `out` (both slices have [`RangeEstimator::n_rows`] entries).
+    /// Single-row estimators inherit this forwarding default; the
+    /// per-channel adapter overrides it.
+    fn absorb_step_rows(&mut self, ctxs: &[StepCtx], out: &mut [[f32; 2]]) {
+        debug_assert_eq!(ctxs.len(), 1, "single-row estimator got {} rows", ctxs.len());
+        out[0] = self.absorb_step(ctxs[0]);
+    }
 
     /// Absorb one calibration batch (paper Sec. 5.2).  Default: first
     /// batch seeds the row with raw stats, later batches EMA in.
@@ -117,6 +145,20 @@ pub trait RangeEstimator: std::fmt::Debug + Send {
         }
     }
 
+    /// Multi-row calibration: per-row `current`/`stats`, results written
+    /// into `out` (all slices have [`RangeEstimator::n_rows`] entries).
+    fn absorb_calibration_rows(
+        &mut self,
+        currents: &[[f32; 2]],
+        stats: &[[f32; 2]],
+        eta: f32,
+        first_batch: bool,
+        out: &mut [[f32; 2]],
+    ) {
+        debug_assert_eq!(currents.len(), 1, "single-row estimator got {} rows", currents.len());
+        out[0] = self.absorb_calibration(currents[0], stats[0], eta, first_batch);
+    }
+
     /// Whether this estimator requires the periodic tensor-level search
     /// pass (the dump graph + [`RangeEstimator::search`]).
     fn needs_search(&self) -> bool {
@@ -127,6 +169,19 @@ pub trait RangeEstimator: std::fmt::Debug + Send {
     /// estimator declares [`RangeEstimator::needs_search`].
     fn search(&mut self, _tensor: &[f32], _bits: u32, _iters: u32) -> SearchOutcome {
         panic!("estimator '{}' has no tensor-level search", self.name())
+    }
+
+    /// Multi-row search: ranges written into `out`
+    /// ([`RangeEstimator::n_rows`] entries), total tensor-traversal cost
+    /// returned.  The default runs one whole-tensor search and broadcasts
+    /// its range; the per-channel adapter searches each channel's strided
+    /// slice independently.
+    fn search_rows(&mut self, tensor: &[f32], bits: u32, iters: u32, out: &mut [[f32; 2]]) -> u32 {
+        let o = self.search(tensor, bits, iters);
+        for r in out.iter_mut() {
+            *r = o.range;
+        }
+        o.evals
     }
 
     /// Boxed clone (lets `RangeManager` derive `Clone`).
@@ -181,5 +236,31 @@ mod tests {
     fn searchless_estimators_reject_search() {
         let mut e: Box<dyn RangeEstimator> = Box::new(Hindsight);
         e.search(&[1.0], 8, 4);
+    }
+
+    #[test]
+    fn default_row_hooks_forward_to_the_scalar_hooks() {
+        let mut e: Box<dyn RangeEstimator> = Box::new(Hindsight);
+        assert_eq!(e.n_rows(), 1);
+        let ctx = StepCtx {
+            current: [-1.0, 1.0],
+            stats: [-2.0, 2.0],
+            new_ranges: [-0.5, 0.5],
+            first_step: false,
+            calibrated: true,
+        };
+        let mut out = [[0.0f32; 2]; 1];
+        e.absorb_step_rows(&[ctx], &mut out);
+        assert_eq!(out[0], e.absorb_step(ctx));
+        let mut out = [[0.0f32; 2]; 1];
+        e.absorb_calibration_rows(&[[-1.0, 1.0]], &[[-3.0, 3.0]], 0.5, true, &mut out);
+        assert_eq!(out[0], [-3.0, 3.0]);
+        // the default search_rows broadcasts the whole-tensor result
+        let mut s: Box<dyn RangeEstimator> = Box::new(SampledMinMax::new(4));
+        let mut rows = [[0.0f32; 2]; 2];
+        let evals = s.search_rows(&[-1.0, 0.5, 2.0, -0.25], 8, 0, &mut rows);
+        assert_eq!(evals, 1);
+        assert_eq!(rows[0], rows[1]);
+        assert!(rows[0][0] <= -1.0 && rows[0][1] >= 2.0);
     }
 }

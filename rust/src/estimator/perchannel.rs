@@ -1,0 +1,290 @@
+//! Per-channel granularity as an *adapter*, not a new estimator family.
+//!
+//! [`PerChannel`] replicates any registered estimator once per channel
+//! group and routes each channel's row through its own replica — so
+//! `hindsight`, `running`, `maxhist`, DSGC, the sampled searcher, and
+//! every future registry entry gain a per-channel variant for free (the
+//! registry exposes them via the `@pc` key suffix, e.g. `hindsight@pc`).
+//! This is the standard remedy for the inter-channel weight/gradient
+//! spread that TQT (Jain et al.) and Banner et al. identify as the main
+//! accuracy lever at 8 bits.
+//!
+//! Channel layout convention (shared with `quant::kernel::minmax_fq_axis`
+//! and the simulator's per-channel store path): channels are the
+//! trailing, fastest-varying axis — the channel of flat element `i` is
+//! `i % n_channels`.
+//!
+//! With one channel the adapter is a transparent wrapper: every hook
+//! forwards to the single replica, so an `@pc` site over a 1-channel
+//! feature reproduces the per-tensor row sequence bit-for-bit (pinned by
+//! the golden parity tests here and in `coordinator::ranges`).
+
+use super::{RangeEstimator, SearchOutcome, StepCtx};
+
+/// Channel-replicating adapter around any single-row estimator.
+#[derive(Debug)]
+pub struct PerChannel {
+    /// base estimator's registry key (what `name()` reports)
+    name: &'static str,
+    /// one replica per channel group, each owning its own state
+    channels: Vec<Box<dyn RangeEstimator>>,
+}
+
+impl PerChannel {
+    /// Replicate `make()` across `n_channels` channel groups.
+    pub fn replicate(make: impl Fn() -> Box<dyn RangeEstimator>, n_channels: usize) -> Self {
+        assert!(n_channels > 0, "PerChannel needs at least one channel");
+        let channels: Vec<_> = (0..n_channels).map(|_| make()).collect();
+        assert_eq!(
+            channels[0].n_rows(),
+            1,
+            "PerChannel wraps single-row estimators, got '{}' with {} rows",
+            channels[0].name(),
+            channels[0].n_rows()
+        );
+        Self { name: channels[0].name(), channels }
+    }
+
+    pub fn n_channels(&self) -> usize {
+        self.channels.len()
+    }
+}
+
+impl Clone for PerChannel {
+    fn clone(&self) -> Self {
+        Self { name: self.name, channels: self.channels.clone() }
+    }
+}
+
+impl RangeEstimator for PerChannel {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn n_rows(&self) -> usize {
+        self.channels.len()
+    }
+
+    fn init(&self) -> [f32; 2] {
+        self.channels[0].init()
+    }
+
+    fn absorb_step(&mut self, ctx: StepCtx) -> [f32; 2] {
+        debug_assert_eq!(
+            self.channels.len(),
+            1,
+            "multi-channel sites absorb via absorb_step_rows"
+        );
+        self.channels[0].absorb_step(ctx)
+    }
+
+    fn absorb_step_rows(&mut self, ctxs: &[StepCtx], out: &mut [[f32; 2]]) {
+        assert_eq!(ctxs.len(), self.channels.len(), "ctx rows vs channels");
+        assert_eq!(out.len(), self.channels.len(), "out rows vs channels");
+        for (c, est) in self.channels.iter_mut().enumerate() {
+            out[c] = est.absorb_step(ctxs[c]);
+        }
+    }
+
+    fn absorb_calibration(
+        &mut self,
+        current: [f32; 2],
+        stats: [f32; 2],
+        eta: f32,
+        first_batch: bool,
+    ) -> [f32; 2] {
+        debug_assert_eq!(
+            self.channels.len(),
+            1,
+            "multi-channel sites calibrate via absorb_calibration_rows"
+        );
+        self.channels[0].absorb_calibration(current, stats, eta, first_batch)
+    }
+
+    fn absorb_calibration_rows(
+        &mut self,
+        currents: &[[f32; 2]],
+        stats: &[[f32; 2]],
+        eta: f32,
+        first_batch: bool,
+        out: &mut [[f32; 2]],
+    ) {
+        assert_eq!(currents.len(), self.channels.len(), "calib rows vs channels");
+        for (c, est) in self.channels.iter_mut().enumerate() {
+            out[c] = est.absorb_calibration(currents[c], stats[c], eta, first_batch);
+        }
+    }
+
+    fn needs_search(&self) -> bool {
+        self.channels[0].needs_search()
+    }
+
+    fn search(&mut self, tensor: &[f32], bits: u32, iters: u32) -> SearchOutcome {
+        debug_assert_eq!(self.channels.len(), 1, "multi-channel sites search via search_rows");
+        self.channels[0].search(tensor, bits, iters)
+    }
+
+    fn search_rows(&mut self, tensor: &[f32], bits: u32, iters: u32, out: &mut [[f32; 2]]) -> u32 {
+        let c = self.channels.len();
+        assert_eq!(out.len(), c, "out rows vs channels");
+        assert_eq!(
+            tensor.len() % c,
+            0,
+            "tensor length {} not divisible by {c} channels",
+            tensor.len()
+        );
+        // one gather pass total: each channel's strided slice is copied
+        // once into a scratch buffer sized tensor.len()/c
+        let mut chan = Vec::with_capacity(tensor.len() / c);
+        let mut evals = 0u32;
+        for (ch, est) in self.channels.iter_mut().enumerate() {
+            chan.clear();
+            chan.extend(tensor.iter().skip(ch).step_by(c).copied());
+            let o = est.search(&chan, bits, iters);
+            out[ch] = o.range;
+            evals += o.evals;
+        }
+        evals
+    }
+
+    fn clone_box(&self) -> Box<dyn RangeEstimator> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimator::Estimator;
+    use crate::util::rng::Pcg32;
+    use crate::util::testkit::forall;
+
+    fn ctx(stats: [f32; 2], current: [f32; 2]) -> StepCtx {
+        StepCtx {
+            current,
+            stats,
+            new_ranges: [0.6 * stats[0], 0.6 * stats[1]],
+            first_step: false,
+            calibrated: true,
+        }
+    }
+
+    #[test]
+    fn channels_evolve_independently() {
+        let est = Estimator::parse("maxhist").unwrap();
+        let mut pc = PerChannel::replicate(|| Estimator::MAX_HISTORY.instantiate(), 2);
+        assert_eq!(pc.n_rows(), 2);
+        assert_eq!(pc.name(), est.key());
+        let ctxs = [ctx([-1.0, 1.0], [-1.0, 1.0]), ctx([-5.0, 0.5], [-1.0, 1.0])];
+        let mut out = [[0.0f32; 2]; 2];
+        pc.absorb_step_rows(&ctxs, &mut out);
+        // each channel's window holds only its own stats
+        assert_eq!(out[0], [-1.0, 1.0]);
+        assert_eq!(out[1], [-5.0, 0.5]);
+    }
+
+    /// Golden parity: a 1-channel adapter reproduces the plain per-tensor
+    /// estimator bit-for-bit across random step/calibration sequences,
+    /// for every registered estimator.
+    #[test]
+    fn one_channel_adapter_matches_per_tensor_bit_for_bit() {
+        for est in Estimator::all() {
+            forall(
+                32,
+                &format!("pc1-parity-{}", est.key()),
+                |rng| {
+                    let calib: Vec<[f32; 2]> = (0..rng.below(3))
+                        .map(|_| ordered(rng))
+                        .collect();
+                    let steps: Vec<([f32; 2], [f32; 2])> = (0..1 + rng.below(6))
+                        .map(|_| (ordered(rng), ordered(rng)))
+                        .collect();
+                    (calib, steps, rng.range(0.0, 1.0))
+                },
+                |(calib, steps, eta)| {
+                    let mut plain = est.instantiate();
+                    let mut pc = PerChannel::replicate(|| est.instantiate(), 1);
+                    let mut row_p = plain.init();
+                    let mut row_c = pc.init();
+                    if row_p != row_c {
+                        return false;
+                    }
+                    for (i, s) in calib.iter().enumerate() {
+                        row_p = plain.absorb_calibration(row_p, *s, *eta, i == 0);
+                        let mut out = [[0.0f32; 2]; 1];
+                        pc.absorb_calibration_rows(&[row_c], &[*s], *eta, i == 0, &mut out);
+                        row_c = out[0];
+                        if row_p != row_c {
+                            return false;
+                        }
+                    }
+                    for (i, (st, nr)) in steps.iter().enumerate() {
+                        let mk = |cur: [f32; 2]| StepCtx {
+                            current: cur,
+                            stats: *st,
+                            new_ranges: *nr,
+                            first_step: i == 0,
+                            calibrated: !calib.is_empty(),
+                        };
+                        row_p = plain.absorb_step(mk(row_p));
+                        let mut out = [[0.0f32; 2]; 1];
+                        pc.absorb_step_rows(&[mk(row_c)], &mut out);
+                        row_c = out[0];
+                        if row_p != row_c {
+                            return false;
+                        }
+                    }
+                    true
+                },
+            );
+        }
+    }
+
+    fn ordered(rng: &mut Pcg32) -> [f32; 2] {
+        let a = rng.range(-20.0, 20.0);
+        let b = rng.range(-20.0, 20.0);
+        [a.min(b), a.max(b)]
+    }
+
+    #[test]
+    fn search_rows_splits_channels_by_stride() {
+        // channel 0 = even indices in [-1, 1]; channel 1 = odd in [-4, 4]
+        let n = 4096;
+        let mut g = vec![0.0f32; n];
+        let mut rng = Pcg32::new(5, 1);
+        for (i, v) in g.iter_mut().enumerate() {
+            *v = if i % 2 == 0 { rng.range(-1.0, 1.0) } else { rng.range(-4.0, 4.0) };
+        }
+        let mut pc = PerChannel::replicate(|| Estimator::SAMPLED_MINMAX.instantiate(), 2);
+        assert!(pc.needs_search());
+        let mut rows = [[0.0f32; 2]; 2];
+        let evals = pc.search_rows(&g, 8, 0, &mut rows);
+        assert_eq!(evals, 2); // one subsample pass per channel
+        // channel ranges reflect their own distribution, not the hull
+        assert!(rows[0][1] < 1.5, "{rows:?}");
+        assert!(rows[1][1] > 3.0, "{rows:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn search_rows_rejects_misaligned_tensors() {
+        let mut pc = PerChannel::replicate(|| Estimator::DSGC.instantiate(), 3);
+        let mut rows = [[0.0f32; 2]; 3];
+        pc.search_rows(&[1.0, 2.0], 8, 1, &mut rows);
+    }
+
+    #[test]
+    fn clone_preserves_per_channel_state() {
+        let mut pc = PerChannel::replicate(|| Estimator::MAX_HISTORY.instantiate(), 2);
+        let ctxs = [ctx([-1.0, 1.0], [-1.0, 1.0]), ctx([-2.0, 2.0], [-1.0, 1.0])];
+        let mut out = [[0.0f32; 2]; 2];
+        pc.absorb_step_rows(&ctxs, &mut out);
+        let mut dup = pc.clone_box();
+        let mut a = [[0.0f32; 2]; 2];
+        let mut b = [[0.0f32; 2]; 2];
+        let next = [ctx([-0.5, 0.5], out[0]), ctx([-0.5, 0.5], out[1])];
+        pc.absorb_step_rows(&next, &mut a);
+        dup.absorb_step_rows(&next, &mut b);
+        assert_eq!(a, b);
+    }
+}

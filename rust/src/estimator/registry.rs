@@ -17,7 +17,17 @@ use anyhow::{bail, Result};
 
 use super::classic::{Current, Dsgc, Fp32, Hindsight, Running};
 use super::literature::{MaxHistory, SampledMinMax};
+use super::perchannel::PerChannel;
 use super::RangeEstimator;
+
+/// Quantizer granularity of a configured estimator: one range row per
+/// site (per-tensor, the paper's setting) or one per channel group.
+/// Selected with the registry key suffix `@pc` (`hindsight@pc`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Granularity {
+    PerTensor,
+    PerChannel,
+}
 
 /// One registry row: estimator metadata + per-site factory.
 pub struct EstimatorInfo {
@@ -163,32 +173,52 @@ pub static REGISTRY: &[&EstimatorInfo] = &[
     &SAMPLED_INFO,
 ];
 
-/// Cheap `Copy` handle to one registry row.
+/// Cheap `Copy` handle to one registry row plus a granularity tag.
 #[derive(Clone, Copy)]
-pub struct Estimator(&'static EstimatorInfo);
+pub struct Estimator {
+    info: &'static EstimatorInfo,
+    gran: Granularity,
+}
+
+const fn per_tensor(info: &'static EstimatorInfo) -> Estimator {
+    Estimator { info, gran: Granularity::PerTensor }
+}
 
 impl Estimator {
-    pub const FP32: Self = Self(&FP32_INFO);
-    pub const CURRENT: Self = Self(&CURRENT_INFO);
-    pub const RUNNING: Self = Self(&RUNNING_INFO);
-    pub const HINDSIGHT: Self = Self(&HINDSIGHT_INFO);
-    pub const DSGC: Self = Self(&DSGC_INFO);
-    pub const MAX_HISTORY: Self = Self(&MAX_HISTORY_INFO);
-    pub const SAMPLED_MINMAX: Self = Self(&SAMPLED_INFO);
+    pub const FP32: Self = per_tensor(&FP32_INFO);
+    pub const CURRENT: Self = per_tensor(&CURRENT_INFO);
+    pub const RUNNING: Self = per_tensor(&RUNNING_INFO);
+    pub const HINDSIGHT: Self = per_tensor(&HINDSIGHT_INFO);
+    pub const DSGC: Self = per_tensor(&DSGC_INFO);
+    pub const MAX_HISTORY: Self = per_tensor(&MAX_HISTORY_INFO);
+    pub const SAMPLED_MINMAX: Self = per_tensor(&SAMPLED_INFO);
 
-    /// Resolve a registry key (the CLI / config string form).
+    /// Resolve a registry key (the CLI / config string form), with an
+    /// optional granularity suffix: `hindsight` is per-tensor,
+    /// `hindsight@pc` per-channel.
     pub fn parse(s: &str) -> Result<Self> {
+        let (base, gran) = match s.split_once('@') {
+            None => (s, Granularity::PerTensor),
+            Some((b, "pc")) => (b, Granularity::PerChannel),
+            Some((_, suffix)) => {
+                bail!("unknown granularity suffix '@{suffix}' (use '@pc' for per-channel)")
+            }
+        };
         for info in REGISTRY {
-            if info.key == s {
-                return Ok(Self(info));
+            if info.key == base {
+                return Ok(Self { info, gran });
             }
         }
-        bail!("unknown estimator '{s}' ({})", Self::keys().join("|"))
+        bail!(
+            "unknown estimator '{base}' ({}; append '@pc' for per-channel)",
+            Self::keys().join("|")
+        )
     }
 
-    /// Iterate every registered estimator, in registry order.
+    /// Iterate every registered estimator, in registry order
+    /// (per-tensor granularity; use [`Estimator::per_channel`] to flip).
     pub fn all() -> impl Iterator<Item = Estimator> {
-        REGISTRY.iter().copied().map(Estimator)
+        REGISTRY.iter().copied().map(per_tensor)
     }
 
     /// Every registry key, in registry order.
@@ -196,57 +226,101 @@ impl Estimator {
         REGISTRY.iter().map(|i| i.key).collect()
     }
 
-    /// The stable string id (`"hindsight"`, ...).
+    /// The stable base string id (`"hindsight"`, ...), without the
+    /// granularity suffix; [`Estimator::spec`] gives the full form.
     pub fn key(&self) -> &'static str {
-        self.0.key
+        self.info.key
     }
 
     /// Display name (the paper's table row labels).
     pub fn name(&self) -> &'static str {
-        self.0.display
+        self.info.display
+    }
+
+    /// Range granularity of this configured estimator.
+    pub fn granularity(&self) -> Granularity {
+        self.gran
+    }
+
+    pub fn is_per_channel(&self) -> bool {
+        self.gran == Granularity::PerChannel
+    }
+
+    /// The same estimator at per-channel granularity.
+    pub fn per_channel(&self) -> Self {
+        Self { info: self.info, gran: Granularity::PerChannel }
+    }
+
+    /// The granularity suffix of the parseable key form (`""` or `"@pc"`).
+    pub fn suffix(&self) -> &'static str {
+        match self.gran {
+            Granularity::PerTensor => "",
+            Granularity::PerChannel => "@pc",
+        }
+    }
+
+    /// Full parseable key (`"hindsight"` / `"hindsight@pc"`): round-trips
+    /// through [`Estimator::parse`].
+    pub fn spec(&self) -> String {
+        format!("{}{}", self.key(), self.suffix())
     }
 
     /// Graph `mode` scalar (see `python/compile/quant_ops.py`).
     pub fn mode(&self) -> f32 {
-        self.0.mode
+        self.info.mode
     }
 
     /// Whether this estimator quantizes its tensor class at all.
     pub fn enabled(&self) -> bool {
-        self.0.enabled
+        self.info.enabled
     }
 
     /// Is the step-path quantization static (paper Table 1 "Static")?
     pub fn is_static(&self) -> bool {
-        self.0.is_static
+        self.info.is_static
     }
 
     /// Requires the periodic dump-graph search pass (DSGC-style).
     pub fn needs_search(&self) -> bool {
-        self.0.needs_search
+        self.info.needs_search
     }
 
     /// Benefits from the initial calibration pass (paper Sec. 5.2).
     pub fn stateful(&self) -> bool {
-        self.0.stateful
+        self.info.stateful
     }
 
     /// Run an uncalibrated first step in current-min-max mode.
     pub fn bootstrap_dynamic(&self) -> bool {
-        self.0.bootstrap_dynamic
+        self.info.bootstrap_dynamic
     }
 
-    /// Build the per-site trait object.
+    /// Build a single-row (per-tensor) trait object.
     pub fn instantiate(&self) -> Box<dyn RangeEstimator> {
-        (self.0.make)()
+        (self.info.make)()
+    }
+
+    /// Build the trait object for a site with `n_channels` channel
+    /// groups, honoring this handle's granularity: per-tensor handles
+    /// ignore `n_channels`; per-channel handles wrap the estimator in
+    /// the channel-replicating [`PerChannel`] adapter (one row per
+    /// channel — bit-identical to per-tensor when `n_channels == 1`).
+    pub fn instantiate_site(&self, n_channels: usize) -> Box<dyn RangeEstimator> {
+        match self.gran {
+            Granularity::PerTensor => (self.info.make)(),
+            Granularity::PerChannel => {
+                Box::new(PerChannel::replicate(self.info.make, n_channels.max(1)))
+            }
+        }
     }
 }
 
-// identity is the registry key: const-promotion may duplicate the
-// underlying &'static EstimatorInfo, so pointer equality is not reliable
+// identity is the registry key + granularity: const-promotion may
+// duplicate the underlying &'static EstimatorInfo, so pointer equality
+// is not reliable
 impl PartialEq for Estimator {
     fn eq(&self, other: &Self) -> bool {
-        self.0.key == other.0.key
+        self.info.key == other.info.key && self.gran == other.gran
     }
 }
 
@@ -254,7 +328,7 @@ impl Eq for Estimator {}
 
 impl std::fmt::Debug for Estimator {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "Estimator({})", self.0.key)
+        write!(f, "Estimator({})", self.spec())
     }
 }
 
@@ -326,5 +400,35 @@ mod tests {
     fn equality_is_by_key_not_address() {
         assert_eq!(Estimator::HINDSIGHT, Estimator::parse("hindsight").unwrap());
         assert_ne!(Estimator::HINDSIGHT, Estimator::RUNNING);
+    }
+
+    #[test]
+    fn granularity_suffix_parses_and_round_trips() {
+        for est in Estimator::all() {
+            let pc = Estimator::parse(&format!("{}@pc", est.key())).unwrap();
+            assert!(pc.is_per_channel());
+            assert_eq!(pc, est.per_channel());
+            assert_ne!(pc, est, "granularity is part of identity");
+            // base metadata is granularity-independent
+            assert_eq!(pc.mode(), est.mode());
+            assert_eq!(pc.needs_search(), est.needs_search());
+            assert_eq!(pc.key(), est.key());
+            // spec round-trips through parse
+            assert_eq!(Estimator::parse(&pc.spec()).unwrap(), pc);
+            assert_eq!(Estimator::parse(&est.spec()).unwrap(), est);
+        }
+        let err = Estimator::parse("hindsight@bogus").unwrap_err().to_string();
+        assert!(err.contains("granularity suffix"), "{err}");
+        assert!(Estimator::parse("nope@pc").is_err());
+    }
+
+    #[test]
+    fn per_channel_sites_replicate_one_row_per_channel() {
+        let pc = Estimator::parse("hindsight@pc").unwrap();
+        assert_eq!(pc.instantiate_site(4).n_rows(), 4);
+        assert_eq!(pc.instantiate_site(1).n_rows(), 1);
+        assert_eq!(pc.instantiate_site(0).n_rows(), 1); // guarded
+        // per-tensor handles ignore the channel count
+        assert_eq!(Estimator::HINDSIGHT.instantiate_site(4).n_rows(), 1);
     }
 }

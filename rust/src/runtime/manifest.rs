@@ -50,13 +50,24 @@ pub enum SiteKind {
     Grad,
 }
 
-/// One quantizer site (row of the range-state tensor).
+/// One quantizer site (row group of the range-state tensor).
 #[derive(Debug, Clone)]
 pub struct SiteSpec {
     pub index: usize,
     pub name: String,
     pub kind: SiteKind,
     pub feature_shape: Vec<usize>,
+}
+
+impl SiteSpec {
+    /// Channel-group count for per-channel range estimation: the
+    /// trailing (fastest-varying) axis of the site's feature shape —
+    /// the channels-last convention the quant kernels and the
+    /// per-channel estimator adapter share.  Scalar or empty feature
+    /// shapes quantize per tensor (1 group).
+    pub fn channels(&self) -> usize {
+        self.feature_shape.last().copied().unwrap_or(1).max(1)
+    }
 }
 
 /// Parameter/state leaf descriptor.
@@ -336,6 +347,15 @@ mod tests {
         assert_eq!(model.batch_size, 32);
         assert_eq!(model.sites.len(), 2);
         assert_eq!(model.grad_sites().len(), 1);
+        // channels-last convention: trailing feature axis is the group count
+        assert_eq!(model.sites[0].channels(), 64);
+        let scalar_site = SiteSpec {
+            index: 9,
+            name: "s".into(),
+            kind: SiteKind::Act,
+            feature_shape: vec![],
+        };
+        assert_eq!(scalar_site.channels(), 1);
         let g = model.graph("train").unwrap();
         assert_eq!(g.input_index("seed").unwrap(), 1);
         assert!(g.input_index("nope").is_err());
@@ -371,7 +391,7 @@ mod tests {
             g.outputs.len(),
             resnet.params.len() * 2 + resnet.state.len() + 4
         );
-        // the ranges input is (Q, 2)
+        // the ranges input is (R, 2); R == Q for per-tensor artifacts
         let ri = g.input_index("ranges").unwrap();
         assert_eq!(g.inputs[ri].shape, vec![resnet.n_sites(), 2]);
     }

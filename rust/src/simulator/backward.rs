@@ -83,6 +83,21 @@ pub fn store_gx_static(gx: &mut [f32], qmin: f32, qmax: f32, b: BwdBits) -> ((f3
     (stats, gx.len() as u64 * b.b_g)
 }
 
+/// Per-channel-group variant of [`store_gx_static`]: `ranges[c]` covers
+/// the gradient elements with flat index ≡ c (mod `ranges.len()`)
+/// (channels-last, the layout the per-channel estimator adapter feeds).
+/// Traffic is identical to the per-tensor store — per-channel
+/// granularity only widens the statistics register file, the store is
+/// still a single fused traversal.
+pub fn store_gx_static_axis(
+    gx: &mut [f32],
+    ranges: &[[f32; 2]],
+    b: BwdBits,
+) -> (Vec<(f32, f32)>, u64) {
+    let stats = kernel::minmax_fq_axis(gx, ranges, b.b_g as u32);
+    (stats, gx.len() as u64 * b.b_g)
+}
+
 /// Full training-step (fwd + bwd) traffic for a network under each
 /// policy; the deployment-level number the paper's Sec. 6 argument
 /// implies.  Returns (static_bits, dynamic_bits).
@@ -198,6 +213,42 @@ mod tests {
         // ... and leaves the tensor on the b_g grid
         let qp = QuantParams::from_range(-0.05, 0.05, b.b_g as u32);
         assert!(gx.iter().all(|&x| (qp.fq(x) - x).abs() < 1e-7));
+    }
+
+    #[test]
+    fn per_channel_gx_store_same_traffic_finer_stats() {
+        use crate::quant::minmax;
+        use crate::util::rng::Pcg32;
+        let b = BwdBits::default();
+        let c = 8usize;
+        let n = c * 512;
+        let mut rng = Pcg32::new(23, 1);
+        // channel-dependent spread: channel i scaled by (i + 1)
+        let gx: Vec<f32> = (0..n)
+            .map(|i| rng.normal() * 0.01 * ((i % c) + 1) as f32)
+            .collect();
+        let ranges: Vec<[f32; 2]> = (0..c).map(|i| {
+            let w = 0.05 * (i + 1) as f32;
+            [-w, w]
+        }).collect();
+        let mut per_tensor = gx.clone();
+        let (_, bits_pt) = store_gx_static(&mut per_tensor, -0.4, 0.4, b);
+        let mut per_chan = gx.clone();
+        let (stats, bits_pc) = store_gx_static_axis(&mut per_chan, &ranges, b);
+        // identical closed-form traffic term
+        assert_eq!(bits_pc, bits_pt);
+        // per-channel stats match each channel's strided hull
+        for (ch, s) in stats.iter().enumerate() {
+            let chan: Vec<f32> = gx.iter().skip(ch).step_by(c).copied().collect();
+            assert_eq!(*s, minmax(&chan));
+        }
+        // one group reduces to the per-tensor store bit-for-bit
+        let mut a = gx.clone();
+        let (s1, _) = store_gx_static(&mut a, -0.4, 0.4, b);
+        let mut bb = gx.clone();
+        let (s2, _) = store_gx_static_axis(&mut bb, &[[-0.4, 0.4]], b);
+        assert_eq!(vec![s1], s2);
+        assert_eq!(a, bb);
     }
 
     #[test]

@@ -46,6 +46,10 @@ pub struct RunResult {
     /// min/max of the accumulator output *before* requantization —
     /// the Fig. 3 statistics the in-hindsight estimator consumes
     pub acc_stats: (f32, f32),
+    /// per-channel-group accumulator stats (populated only under
+    /// [`Policy::StaticPerChannel`]; the online statistics registers
+    /// hold one (min, max) pair per channel group there)
+    pub acc_stats_axis: Vec<(f32, f32)>,
     pub phases: Phases,
     /// MAC-array busy cycles (one cycle per PxP MAC wavefront)
     pub cycles: u64,
@@ -54,10 +58,17 @@ pub struct RunResult {
 }
 
 /// Quantization-at-the-accumulator policy.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Policy {
-    /// pre-computed ranges (in-hindsight / any static scheme)
+    /// pre-computed per-tensor range (in-hindsight / any static scheme)
     Static { qmin: f32, qmax: f32 },
+    /// pre-computed per-channel-group ranges: row `c` quantizes output
+    /// elements with flat index ≡ c (mod ranges.len()) — for a
+    /// row-major (m, n) output with `ranges.len()` dividing `n`, that is
+    /// column group `j % ranges.len()` (channels-last).  Same
+    /// single-traversal store as [`Policy::Static`], just with one
+    /// statistics register pair per channel group.
+    StaticPerChannel { ranges: Vec<[f32; 2]> },
     /// current min-max: ranges depend on the full output (dynamic)
     Dynamic,
 }
@@ -148,6 +159,7 @@ impl MacArray {
         };
 
         let out_elems = (m * n) as u64;
+        let mut acc_stats_axis = Vec::new();
         let acc_stats = match policy {
             Policy::Static { qmin, qmax } => {
                 // requantize at the accumulator; only b_a-bit data leaves.
@@ -157,6 +169,17 @@ impl MacArray {
                 // accelerator sketch relies on.
                 phases.output_store = out_elems * self.b_a / 8;
                 kernel::minmax_fq(&mut real, qmin, qmax, out_bits)
+            }
+            Policy::StaticPerChannel { ranges } => {
+                // identical traffic to Static: per-channel granularity
+                // only widens the statistics register file, the store is
+                // still one fused traversal (now channel-strided).
+                phases.output_store = out_elems * self.b_a / 8;
+                acc_stats_axis = kernel::minmax_fq_axis(&mut real, &ranges, out_bits);
+                acc_stats_axis.iter().fold(
+                    (f32::INFINITY, f32::NEG_INFINITY),
+                    |(lo, hi), &(l, h)| (lo.min(l), hi.max(h)),
+                )
             }
             Policy::Dynamic => {
                 // full-precision round trip through memory first: the
@@ -174,6 +197,7 @@ impl MacArray {
         RunResult {
             output: real,
             acc_stats,
+            acc_stats_axis,
             phases,
             cycles,
             mac_utilization: useful as f64 / issued as f64,
@@ -307,6 +331,41 @@ mod tests {
                           Policy::Static { qmin: lo * 1.1, qmax: hi * 1.1 });
         let cos = crate::quant::cosine_similarity(&st.output, &dy.output);
         assert!(cos > 0.999, "cos {cos}");
+    }
+
+    #[test]
+    fn static_per_channel_one_group_equals_static() {
+        let (m, k, n) = (16, 32, 16);
+        let (a, w, qpa, qpw) = machine_inputs(m, k, n);
+        let mac = MacArray::default();
+        let st = mac.gemm(&a, &w, m, k, n, qpa, qpw, 8,
+                          Policy::Static { qmin: -25.0, qmax: 25.0 });
+        let pc = mac.gemm(&a, &w, m, k, n, qpa, qpw, 8,
+                          Policy::StaticPerChannel { ranges: vec![[-25.0, 25.0]] });
+        assert_eq!(pc.output, st.output); // bit-for-bit
+        assert_eq!(pc.acc_stats, st.acc_stats);
+        assert_eq!(pc.acc_stats_axis, vec![st.acc_stats]);
+        assert_eq!(pc.phases, st.phases);
+    }
+
+    #[test]
+    fn static_per_channel_moves_static_traffic_and_tracks_columns() {
+        let (m, k, n) = (8, 16, 4);
+        let (a, w, qpa, qpw) = machine_inputs(m, k, n);
+        let mac = MacArray::default();
+        // one range row per output column (channels-last, C = n)
+        let ranges: Vec<[f32; 2]> = (0..n).map(|_| [-30.0, 30.0]).collect();
+        let pc = mac.gemm(&a, &w, m, k, n, qpa, qpw, 8,
+                          Policy::StaticPerChannel { ranges });
+        let dy = mac.gemm(&a, &w, m, k, n, qpa, qpw, 8, Policy::Dynamic);
+        // per-channel static is the same single-traversal store as static
+        assert_eq!(pc.phases.acc_store, 0);
+        assert!(pc.phases.total() < dy.phases.total());
+        // channel stats hull over columns == the per-tensor stats
+        assert_eq!(pc.acc_stats_axis.len(), n);
+        assert_eq!(pc.acc_stats, dy.acc_stats);
+        // per-tensor policies leave the axis registers empty
+        assert!(dy.acc_stats_axis.is_empty());
     }
 
     #[test]
