@@ -1,13 +1,20 @@
-//! Extension ablation: bit-width sweep of the quantization-error/accuracy
-//! trade-off under in-hindsight ranges — the paper fixes 8 bits for the
-//! accuracy tables; this maps the headroom below it using the Rust quant
-//! substrate (error metrics) plus the simulator (traffic scaling).
+//! Extension ablation: gradient bit-width sweep of the
+//! quantization-error/accuracy trade-off under in-hindsight ranges — the
+//! paper fixes 8 bits for the accuracy tables; this maps the headroom
+//! below it.  Each row is a full mixed-precision `QuantScheme`
+//! (`w:current:8 a:hindsight:8 g:hindsight:<bits>`) driving the quant
+//! substrate (error metrics) and the simulator's scheme bridge
+//! (per-class-bit backward traffic); every row is appended to
+//! `BENCH_kernels.json` so the mixed-precision trajectory accumulates.
 //!
 //!   cargo bench --bench ablation_bitwidth
 
 use hindsight::quant::{self, QuantParams};
-use hindsight::simulator::traffic::{self, BitWidths};
-use hindsight::util::bench::Table;
+use hindsight::scheme::{QuantScheme, TensorClass};
+use hindsight::simulator::scheme::layer_traffic;
+use hindsight::simulator::traffic;
+use hindsight::util::bench::{append_bench_record, Table};
+use hindsight::util::json::Value;
 use hindsight::util::rng::Pcg32;
 
 fn main() {
@@ -26,35 +33,50 @@ fn main() {
     let (lo, hi) = quant::minmax(&g);
     // hindsight-style range: 10% EMA lag on the true extrema
     let (hlo, hhi) = (lo * 0.9, hi * 0.9);
+    let layer = traffic::table5_layers()[0];
 
     let mut t = Table::new(
-        "Ablation — bit-width sweep (gradient-shaped tensor, hindsight range)",
-        &["bits", "MSE", "cosine", "saturation", "traffic (Table5 row1, static KB)"],
+        "Ablation — gradient bit-width sweep (gradient-shaped tensor, hindsight range)",
+        &["scheme", "MSE", "cosine", "saturation", "bwd static KB", "step ratio"],
     );
     for bits in [2u32, 4, 6, 8, 10] {
+        // one mixed-precision scheme per row, via the typed builder
+        let scheme = QuantScheme::w8a8g8().bits(TensorClass::Gradients, bits);
         let qp = QuantParams::from_range(hlo, hhi, bits);
         let q: Vec<f32> = g.iter().map(|&x| qp.fq(x)).collect();
         let mse = quant::mse(&g, hlo, hhi, bits);
         let cos = quant::cosine_similarity(&g, &q);
         let sat = quant::saturation_ratio(&g, hlo, hhi);
-        let b = BitWidths {
-            b_w: bits as u64,
-            b_a: bits as u64,
-            b_acc: 32,
-        };
-        let cost = traffic::compare(&traffic::table5_layers()[0], b);
+        // per-class bits flow through the simulator's scheme bridge
+        let lt = layer_traffic(&scheme, &layer);
+        let bwd_static_kb = lt.bwd.static_bits as f64 / 8.0 / 1024.0;
         t.row(&[
-            bits.to_string(),
+            scheme.to_string(),
             format!("{mse:.3e}"),
             format!("{cos:.5}"),
-            format!("{:.4}", sat),
-            format!("{:.0}", cost.static_kb()),
+            format!("{sat:.4}"),
+            format!("{bwd_static_kb:.0}"),
+            format!("{:.2}", lt.step_ratio()),
         ]);
+        let record = Value::object(vec![
+            ("bench", Value::from("ablation_bitwidth")),
+            ("scheme", Value::from(scheme.to_string())),
+            ("bits_g", Value::from(bits as usize)),
+            ("mse", Value::from(mse)),
+            ("cosine", Value::from(cos as f64)),
+            ("bwd_static_kb", Value::from(bwd_static_kb)),
+            ("step_ratio", Value::from(lt.step_ratio())),
+        ]);
+        match append_bench_record(record) {
+            Ok(path) => log::debug!("recorded bitwidth row to {}", path.display()),
+            Err(e) => eprintln!("warning: could not append bench record: {e}"),
+        }
     }
     t.print();
     println!(
         "cosine (DSGC's objective) saturates by 8 bits — consistent with the \
          paper's choice of G8 and with 4-bit work needing format changes \
-         (radix-4 FP4, Sun et al. 2020)."
+         (radix-4 FP4, Sun et al. 2020); lower G bits also *widen* the \
+         static-vs-dynamic step ratio (the dynamic 32-bit round trip is fixed)."
     );
 }

@@ -5,7 +5,7 @@
 
 mod common;
 
-use hindsight::coordinator::{sweep_row, Estimator};
+use hindsight::coordinator::{sweep_row, Estimator, QuantScheme};
 use hindsight::runtime::Engine;
 use hindsight::util::bench::Table;
 
@@ -19,8 +19,8 @@ fn main() {
     );
     let mut accs = Vec::new();
     for eta in [0.0f32, 0.5, 0.9, 0.99] {
-        let mut cfg = common::base_cfg("cnn", &s).fully_quantized(Estimator::HINDSIGHT);
-        cfg.eta = eta;
+        let mut cfg = common::base_cfg("cnn", &s);
+        cfg.scheme = QuantScheme::fully_quantized(Estimator::HINDSIGHT).eta_all(eta);
         let out = sweep_row(&engine, &cfg, &format!("eta={eta}"), &s.seeds).unwrap();
         accs.push(out.agg.mean());
         table.row(&[

@@ -6,7 +6,7 @@
 //!   HINDSIGHT_BENCH_SEEDS   seeds per row               (default 2)
 //!   HINDSIGHT_BENCH_QUICK=1 tiny CI-scale run (24 steps, 1 seed)
 
-use hindsight::coordinator::{sweep_row, Estimator, TrainConfig};
+use hindsight::coordinator::{sweep_row, Estimator, QuantScheme, TrainConfig};
 use hindsight::runtime::Engine;
 use hindsight::util::bench::{env_usize, quick, Table};
 
@@ -76,12 +76,14 @@ pub fn estimator_table(
         if est.needs_search() && mode == Mode::ActOnly {
             continue; // search estimators apply to gradients only
         }
-        let cfg = match mode {
-            Mode::GradOnly => base_cfg(model, &s).grad_only(est),
-            Mode::ActOnly => base_cfg(model, &s).act_only(est),
+        // each row is a typed QuantScheme built from the swept estimator
+        let mut cfg = base_cfg(model, &s);
+        cfg.scheme = match mode {
+            Mode::GradOnly => QuantScheme::grad_only(est),
+            Mode::ActOnly => QuantScheme::act_only(est),
             // fully_quantized applies the paper-Table-3 act fallback for
             // search estimators
-            Mode::Full => base_cfg(model, &s).fully_quantized(est),
+            Mode::Full => QuantScheme::fully_quantized(est),
         };
         let out = sweep_row(&engine, &cfg, est.name(), &s.seeds)
             .expect("sweep row");

@@ -1,5 +1,8 @@
 //! Paper Table 3: fully quantized training (W8/A8/G8) across the three
-//! architecture families on the Tiny ImageNet stand-in.
+//! architecture families on the Tiny ImageNet stand-in.  Every row is a
+//! typed `QuantScheme` built through `QuantScheme::fully_quantized`
+//! (the in-hindsight row is exactly `w:current:8 a:hindsight:8
+//! g:hindsight:8`, i.e. `QuantScheme::w8a8g8()`).
 //!
 //!   cargo bench --bench table3_full_quant
 

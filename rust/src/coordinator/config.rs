@@ -1,13 +1,17 @@
 //! Training configuration, mirroring the paper's Sec. 5 setup.
 //!
-//! The range-estimation method for a tensor class used to be a closed
-//! enum here; it is now the registry-backed [`Estimator`] handle from
-//! `crate::estimator` (re-exported for the existing import paths), so a
-//! config can name any registered estimator.
+//! Quantization policy is no longer a flat pair of estimator knobs plus
+//! a global `eta`: [`TrainConfig`] carries a typed
+//! [`QuantScheme`](crate::scheme::QuantScheme) — one
+//! `QuantSpec { estimator, bits, eta, symmetric }` per tensor class
+//! (weights / activations / gradients) plus per-site overrides.  The
+//! legacy accessors (`grad_est()`, `act_est()`, `quant_weights()`,
+//! `eta()`) survive one PR as deprecated shims over the scheme.
 
 use anyhow::{bail, Result};
 
 pub use crate::estimator::Estimator;
+pub use crate::scheme::{QuantScheme, QuantSpec, TensorClass};
 
 /// Learning-rate schedule (paper: step decay for ResNet/VGG, cosine for
 /// MobileNetV2).
@@ -57,12 +61,9 @@ impl Schedule {
 pub struct TrainConfig {
     pub model: String,
     pub steps: u64,
-    pub grad_est: Estimator,
-    pub act_est: Estimator,
-    /// quantize weights (current min-max, per the paper)
-    pub quant_weights: bool,
-    /// EMA momentum for running/in-hindsight (paper: 0.9)
-    pub eta: f32,
+    /// the quantization policy: per-class estimator/bits/eta/symmetry
+    /// plus per-site overrides
+    pub scheme: QuantScheme,
     pub lr: f32,
     pub final_lr: f32,
     pub schedule: Schedule,
@@ -83,15 +84,13 @@ pub struct TrainConfig {
 }
 
 impl TrainConfig {
-    /// Paper-shaped defaults at testbed scale (see DESIGN.md §3).
+    /// Paper-shaped defaults at testbed scale (see DESIGN.md §3): the
+    /// fully quantized W8/A8/G8 in-hindsight scheme.
     pub fn new(model: &str) -> Self {
         Self {
             model: model.to_string(),
             steps: 300,
-            grad_est: Estimator::HINDSIGHT,
-            act_est: Estimator::HINDSIGHT,
-            quant_weights: true,
-            eta: 0.9,
+            scheme: QuantScheme::w8a8g8(),
             lr: 0.05,
             final_lr: 1e-5,
             schedule: Schedule::Step,
@@ -107,46 +106,60 @@ impl TrainConfig {
         }
     }
 
-    /// Configure the paper's "fully quantized" W8/A8/G8 setting.
-    ///
-    /// Search-based estimators (DSGC-style `needs_search`) apply to
-    /// gradients only; their activation side falls back to current
-    /// min-max (paper Table 3's DSGC row).  Centralized here so sweeps,
-    /// benches and examples don't each re-encode the rule.
+    /// Configure the paper's "fully quantized" W8/A8/G8 setting for
+    /// `est` (see [`QuantScheme::fully_quantized`] for the search-
+    /// estimator activation fallback and the FP32 weight rule).  Only
+    /// the class *estimators* are re-pointed: per-class bits/eta/sym
+    /// and site overrides already on the config survive, so sweeping
+    /// estimators over a user-built base scheme (e.g. `--eta 0.5`)
+    /// keeps the user's knobs — matching the legacy field-wise
+    /// mutators, which never touched `eta`.
     pub fn fully_quantized(mut self, est: Estimator) -> Self {
-        self.grad_est = est;
-        self.act_est = if est.needs_search() { Estimator::CURRENT } else { est };
-        self.quant_weights = est.enabled();
+        self.scheme = self.scheme.with_fully_quantized(est);
         self
     }
 
     /// Gradient-quantization-only study (paper Table 1).
     pub fn grad_only(mut self, est: Estimator) -> Self {
-        self.grad_est = est;
-        self.act_est = Estimator::FP32;
-        self.quant_weights = false;
+        self.scheme = self.scheme.with_grad_only(est);
         self
     }
 
     /// Activation-quantization-only study (paper Table 2).
     pub fn act_only(mut self, est: Estimator) -> Self {
-        self.act_est = est;
-        self.grad_est = Estimator::FP32;
-        self.quant_weights = false;
+        self.scheme = self.scheme.with_act_only(est);
         self
     }
 
+    // ---- deprecated shims over the scheme (one PR of grace) -------------
+
+    /// Legacy accessor for the gradient estimator.
+    #[deprecated(note = "read cfg.scheme.gradients.estimator")]
+    pub fn grad_est(&self) -> Estimator {
+        self.scheme.gradients.estimator
+    }
+
+    /// Legacy accessor for the activation estimator.
+    #[deprecated(note = "read cfg.scheme.activations.estimator")]
+    pub fn act_est(&self) -> Estimator {
+        self.scheme.activations.estimator
+    }
+
+    /// Legacy accessor for the weight-quantization switch.
+    #[deprecated(note = "read cfg.scheme.weights.enabled()")]
+    pub fn quant_weights(&self) -> bool {
+        self.scheme.weights.enabled()
+    }
+
+    /// Legacy accessor for the global EMA momentum.
+    #[deprecated(note = "read per-class eta from cfg.scheme (graph_eta() for the graph scalar)")]
+    pub fn eta(&self) -> f32 {
+        self.scheme.graph_eta()
+    }
+
+    /// Run tag: model + the scheme's one-token form + seed.
     pub fn tag(&self) -> String {
-        format!(
-            "{}-g:{}{}-a:{}{}-w:{}-s{}",
-            self.model,
-            self.grad_est.name(),
-            self.grad_est.suffix(),
-            self.act_est.name(),
-            self.act_est.suffix(),
-            self.quant_weights,
-            self.seed
-        )
+        format!("{}-{}-s{}", self.model, self.scheme.tag(), self.seed)
     }
 }
 
@@ -188,28 +201,82 @@ mod tests {
     #[test]
     fn config_presets() {
         let c = TrainConfig::new("resnet_tiny").grad_only(Estimator::DSGC);
-        assert_eq!(c.grad_est, Estimator::DSGC);
-        assert_eq!(c.act_est, Estimator::FP32);
-        assert!(!c.quant_weights);
+        assert_eq!(c.scheme.gradients.estimator, Estimator::DSGC);
+        assert_eq!(c.scheme.activations.estimator, Estimator::FP32);
+        assert!(!c.scheme.weights.enabled());
         let f = TrainConfig::new("cnn").fully_quantized(Estimator::RUNNING);
-        assert!(f.quant_weights);
+        assert!(f.scheme.weights.enabled());
         let fp = TrainConfig::new("cnn").fully_quantized(Estimator::FP32);
-        assert!(!fp.quant_weights);
+        assert!(!fp.scheme.weights.enabled());
         // search estimators quantize gradients; acts fall back to current
         let d = TrainConfig::new("cnn").fully_quantized(Estimator::DSGC);
-        assert_eq!(d.grad_est, Estimator::DSGC);
-        assert_eq!(d.act_est, Estimator::CURRENT);
+        assert_eq!(d.scheme.gradients.estimator, Estimator::DSGC);
+        assert_eq!(d.scheme.activations.estimator, Estimator::CURRENT);
+    }
+
+    #[test]
+    fn presets_preserve_user_scheme_attrs() {
+        // regression: `sweep --eta 0.5 --mode grad` must not silently
+        // reset eta/bits/sym/overrides when the sweep re-points the
+        // estimators per row
+        let mut base = TrainConfig::new("cnn");
+        base.scheme = QuantScheme::parse("w:current:8 a:hindsight:4:eta=0.5 g:hindsight:8:sym")
+            .unwrap()
+            .eta_all(0.5)
+            .override_site_str("fc1_g", "tqt:8")
+            .unwrap();
+        for c in [
+            base.clone().fully_quantized(Estimator::DSGC),
+            base.clone().grad_only(Estimator::DSGC),
+            base.clone().act_only(Estimator::RUNNING),
+        ] {
+            assert_eq!(c.scheme.gradients.eta, 0.5, "{}", c.scheme);
+            assert_eq!(c.scheme.activations.bits, 4, "{}", c.scheme);
+            assert!(c.scheme.gradients.symmetric, "{}", c.scheme);
+            assert_eq!(c.scheme.overrides().count(), 1, "{}", c.scheme);
+        }
+        // and the estimator re-pointing itself still applies
+        let d = base.clone().fully_quantized(Estimator::DSGC);
+        assert_eq!(d.scheme.gradients.estimator, Estimator::DSGC);
+        assert_eq!(d.scheme.activations.estimator, Estimator::CURRENT);
+        let g = base.grad_only(Estimator::DSGC);
+        assert_eq!(g.scheme.activations.estimator, Estimator::FP32);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_accessors_mirror_the_scheme() {
+        let c = TrainConfig::new("cnn").fully_quantized(Estimator::DSGC);
+        assert_eq!(c.grad_est(), Estimator::DSGC);
+        assert_eq!(c.act_est(), Estimator::CURRENT);
+        assert!(c.quant_weights());
+        assert_eq!(c.eta(), c.scheme.graph_eta());
+        let mut c = c;
+        c.scheme = c.scheme.clone().eta_all(0.5);
+        assert_eq!(c.eta(), 0.5);
     }
 
     #[test]
     fn per_channel_configs_parse_and_tag() {
         let pc = Estimator::parse("hindsight@pc").unwrap();
         let c = TrainConfig::new("cnn").fully_quantized(pc);
-        assert!(c.grad_est.is_per_channel());
-        assert!(c.act_est.is_per_channel()); // granularity carries over
+        assert!(c.scheme.gradients.is_per_channel());
+        assert!(c.scheme.activations.is_per_channel()); // granularity carries over
         assert!(c.tag().contains("@pc"), "{}", c.tag());
         // per-tensor tags are unchanged
         let t = TrainConfig::new("cnn").fully_quantized(Estimator::HINDSIGHT);
         assert!(!t.tag().contains("@pc"), "{}", t.tag());
+        // the tag carries the whole scheme, one token per run
+        assert!(t.tag().contains("g:hindsight:8"), "{}", t.tag());
+        assert!(!t.tag().contains(' '), "{}", t.tag());
+    }
+
+    #[test]
+    fn config_accepts_string_form_schemes() {
+        let mut c = TrainConfig::new("cnn");
+        c.scheme = QuantScheme::parse("w:current:8 a:hindsight:8 g:hindsight@pc:4").unwrap();
+        assert_eq!(c.scheme.gradients.bits, 4);
+        assert!(c.scheme.gradients.is_per_channel());
+        assert_eq!(c.scheme.activations.bits, 8);
     }
 }

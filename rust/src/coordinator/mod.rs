@@ -4,7 +4,8 @@
 //!   state and the graph-ABI scalar encoding; estimator semantics are
 //!   delegated to per-site `crate::estimator` trait objects.
 //! * [`config`] — training configuration (mirrors the paper's Sec. 5
-//!   experimental setup); estimators are named registry entries.
+//!   experimental setup); the quantization policy is a typed
+//!   [`QuantScheme`] (per-tensor-class specs + per-site overrides).
 //! * [`trainer`] — the step loop: batch marshalling, the compiled train /
 //!   eval / dump graphs, calibration, LR schedules, metrics.
 //! * [`sweep`] — multi-seed, multi-estimator sweeps producing the paper's
@@ -15,7 +16,7 @@ pub mod ranges;
 pub mod sweep;
 pub mod trainer;
 
-pub use config::{Estimator, Schedule, TrainConfig};
+pub use config::{Estimator, QuantScheme, QuantSpec, Schedule, TensorClass, TrainConfig};
 pub use ranges::RangeManager;
 pub use sweep::{sweep_row, SweepOutcome};
 pub use trainer::Trainer;

@@ -20,11 +20,37 @@
 //! between the two indexings; with every site per-tensor (the paper's
 //! setting) `R == Q` and the layout degenerates to the original one row
 //! per site, bit-for-bit (golden parity tests below pin this).
+//!
+//! **Scheme resolution.**  Construction takes a
+//! [`QuantScheme`](crate::scheme::QuantScheme) and resolves each site's
+//! [`QuantSpec`](crate::scheme::QuantSpec) once (class spec, or a
+//! per-site override keyed by site name): the spec's estimator and
+//! granularity pick the trait object, its `eta` drives calibration, its
+//! `bits` drive the periodic search, and its `symmetric` flag
+//! symmetrizes every row the coordinator adopts — no loose knobs are
+//! threaded through the call sites anymore.
 
 use crate::coordinator::config::Estimator;
 use crate::estimator::{RangeEstimator, StepCtx};
 use crate::runtime::manifest::{ModelSpec, SiteKind};
 use crate::runtime::tensor::Tensor;
+use crate::scheme::{QuantScheme, QuantSpec, TensorClass};
+
+/// The tensor class a quantizer site belongs to.
+fn class_of(kind: SiteKind) -> TensorClass {
+    match kind {
+        SiteKind::Act => TensorClass::Activations,
+        SiteKind::Grad => TensorClass::Gradients,
+    }
+}
+
+/// Force rows onto a zero-symmetric grid: `[-m, m]`, `m = max(|lo|, |hi|)`.
+fn symmetrize(rows: &mut [[f32; 2]]) {
+    for r in rows {
+        let m = (-r[0]).max(r[1]).max(0.0);
+        *r = [-m, m];
+    }
+}
 
 /// Per-quantizer range state + delegated estimator semantics.
 #[derive(Debug, Clone)]
@@ -34,8 +60,10 @@ pub struct RangeManager {
     /// site → first row; `offsets[i]..offsets[i+1]` is site i's group
     offsets: Vec<usize>,
     kinds: Vec<SiteKind>,
-    pub act_est: Estimator,
-    pub grad_est: Estimator,
+    /// the configured scheme (class specs + overrides)
+    scheme: QuantScheme,
+    /// each site's resolved spec (override or class spec)
+    site_specs: Vec<QuantSpec>,
     /// one estimator instance per site (owns any per-site state)
     sites: Vec<Box<dyn RangeEstimator>>,
     /// last raw stats observed per row (diagnostics, saturation tracking)
@@ -44,19 +72,18 @@ pub struct RangeManager {
 }
 
 impl RangeManager {
-    pub fn new(model: &ModelSpec, act_est: Estimator, grad_est: Estimator) -> Self {
+    pub fn new(model: &ModelSpec, scheme: &QuantScheme) -> Self {
         let kinds: Vec<SiteKind> = model.sites.iter().map(|s| s.kind).collect();
         let mut sites: Vec<Box<dyn RangeEstimator>> = Vec::with_capacity(kinds.len());
+        let mut site_specs: Vec<QuantSpec> = Vec::with_capacity(kinds.len());
         let mut offsets = Vec::with_capacity(kinds.len() + 1);
         offsets.push(0usize);
         for s in &model.sites {
-            let est = match s.kind {
-                SiteKind::Act => act_est,
-                SiteKind::Grad => grad_est,
-            };
-            let inst = est.instantiate_site(s.channels());
+            let spec = scheme.site_spec(class_of(s.kind), &s.name);
+            let inst = spec.instantiate_site(s.channels());
             offsets.push(offsets.last().unwrap() + inst.n_rows());
             sites.push(inst);
+            site_specs.push(spec);
         }
         let mut ranges = Vec::with_capacity(*offsets.last().unwrap());
         for e in &sites {
@@ -69,11 +96,31 @@ impl RangeManager {
             ranges,
             offsets,
             kinds,
-            act_est,
-            grad_est,
+            scheme: scheme.clone(),
+            site_specs,
             sites,
             calibrated: false,
         }
+    }
+
+    /// The scheme this manager was built from.
+    pub fn scheme(&self) -> &QuantScheme {
+        &self.scheme
+    }
+
+    /// Site `i`'s resolved spec (class spec or per-site override).
+    pub fn site_spec(&self, i: usize) -> &QuantSpec {
+        &self.site_specs[i]
+    }
+
+    /// The activation-class estimator (graph-ABI scalar source).
+    pub fn act_est(&self) -> Estimator {
+        self.scheme.activations.estimator
+    }
+
+    /// The gradient-class estimator (graph-ABI scalar source).
+    pub fn grad_est(&self) -> Estimator {
+        self.scheme.gradients.estimator
     }
 
     pub fn n_sites(&self) -> usize {
@@ -124,19 +171,19 @@ impl RangeManager {
 
     /// Scalar ABI values for the train graph.
     pub fn mode_act(&self) -> f32 {
-        self.act_est.mode()
+        self.act_est().mode()
     }
 
     pub fn mode_grad(&self) -> f32 {
-        self.grad_est.mode()
+        self.grad_est().mode()
     }
 
     pub fn aq_on(&self) -> f32 {
-        self.act_est.enabled() as u32 as f32
+        self.act_est().enabled() as u32 as f32
     }
 
     pub fn gq_on(&self) -> f32 {
-        self.grad_est.enabled() as u32 as f32
+        self.grad_est().enabled() as u32 as f32
     }
 
     /// Absorb one training step's outputs: each site's estimator sees
@@ -167,12 +214,16 @@ impl RangeManager {
             }
             let (sites, ranges) = (&mut self.sites, &mut self.ranges);
             sites[i].absorb_step_rows(&ctxs, &mut ranges[start..end]);
+            if self.site_specs[i].symmetric {
+                symmetrize(&mut ranges[start..end]);
+            }
         }
     }
 
     /// Absorb one *calibration* batch (paper Sec. 5.2: feed a few batches
     /// through the network before training to set activation ranges).
-    pub fn calibrate(&mut self, stats: &Tensor, eta: f32) {
+    /// Each site blends with its own spec's `eta`.
+    pub fn calibrate(&mut self, stats: &Tensor) {
         let st = stats.as_f32().expect("stats f32");
         let r = self.ranges.len();
         assert_eq!(st.len(), 2 * r, "stats has {} values, want 2 x {r} rows", st.len());
@@ -189,8 +240,12 @@ impl RangeManager {
                 self.last_stats[row] = s;
             }
             let first = !self.calibrated;
+            let eta = self.site_specs[i].eta;
             let (sites, ranges) = (&mut self.sites, &mut self.ranges);
             sites[i].absorb_calibration_rows(&cur, &obs, eta, first, &mut ranges[start..end]);
+            if self.site_specs[i].symmetric {
+                symmetrize(&mut ranges[start..end]);
+            }
         }
         self.calibrated = true;
     }
@@ -210,13 +265,28 @@ impl RangeManager {
             .collect()
     }
 
+    /// Whether any gradient site requires the periodic dump-graph search
+    /// pass (allocation-free form of `!search_sites().is_empty()`).
+    pub fn needs_search_pass(&self) -> bool {
+        self.kinds
+            .iter()
+            .zip(&self.sites)
+            .any(|(k, s)| *k == SiteKind::Grad && s.needs_search())
+    }
+
     /// Run one site's tensor-level search and adopt the resulting rows
-    /// (per-channel sites search each channel's strided slice).
-    /// Returns the search's cost in tensor traversals.
-    pub fn search_site(&mut self, i: usize, tensor: &[f32], bits: u32, iters: u32) -> u32 {
+    /// (per-channel sites search each channel's strided slice).  The
+    /// search runs at the site's own spec bit-width.  Returns the
+    /// search's cost in tensor traversals.
+    pub fn search_site(&mut self, i: usize, tensor: &[f32], iters: u32) -> u32 {
         let (start, end) = (self.offsets[i], self.offsets[i + 1]);
+        let bits = self.site_specs[i].bits;
         let (sites, ranges) = (&mut self.sites, &mut self.ranges);
-        sites[i].search_rows(tensor, bits, iters, &mut ranges[start..end])
+        let evals = sites[i].search_rows(tensor, bits, iters, &mut ranges[start..end]);
+        if self.site_specs[i].symmetric {
+            symmetrize(&mut ranges[start..end]);
+        }
+        evals
     }
 
     /// Mean saturation headroom diagnostic: how much of the last stats
@@ -282,10 +352,20 @@ mod tests {
         Tensor::from_f32(&[q, 2], vals.to_vec())
     }
 
+    /// Scheme with the given per-class estimators at defaults (the old
+    /// two-knob constructor, as a scheme).
+    fn scheme2(act: Estimator, grad: Estimator) -> QuantScheme {
+        QuantScheme::fp32().act_est(act).grad_est(grad)
+    }
+
+    fn mgr(m: &ModelSpec, act: Estimator, grad: Estimator) -> RangeManager {
+        RangeManager::new(m, &scheme2(act, grad))
+    }
+
     #[test]
     fn first_step_adopts_raw_stats() {
         let m = model(1, 1);
-        let mut rm = RangeManager::new(&m, Estimator::HINDSIGHT, Estimator::HINDSIGHT);
+        let mut rm = mgr(&m, Estimator::HINDSIGHT, Estimator::HINDSIGHT);
         let nr = t(2, &[-0.5, 0.5, -0.1, 0.1]);
         let st = t(2, &[-2.0, 3.0, -4.0, 5.0]);
         rm.update(&nr, &st, true);
@@ -299,7 +379,7 @@ mod tests {
     #[test]
     fn fp32_rows_frozen() {
         let m = model(1, 1);
-        let mut rm = RangeManager::new(&m, Estimator::FP32, Estimator::HINDSIGHT);
+        let mut rm = mgr(&m, Estimator::FP32, Estimator::HINDSIGHT);
         let before = rm.row(0);
         rm.update(&t(2, &[9.0, 9.0, -1.0, 1.0]), &t(2, &[0.0, 1.0, 0.0, 1.0]), false);
         assert_eq!(rm.row(0), before); // act site untouched (FP32)
@@ -311,9 +391,9 @@ mod tests {
     #[test]
     fn dsgc_rows_held_between_searches() {
         let m = model(1, 2);
-        let mut rm = RangeManager::new(&m, Estimator::CURRENT, Estimator::DSGC);
+        let mut rm = mgr(&m, Estimator::CURRENT, Estimator::DSGC);
         rm.set_row(1, [-7.0, 7.0]); // pretend a search happened
-        rm.calibrate(&t(3, &[0.0; 6]), 0.9); // mark calibrated
+        rm.calibrate(&t(3, &[0.0; 6])); // mark calibrated
         rm.set_row(1, [-7.0, 7.0]);
         rm.update(
             &t(3, &[0.0, 1.0, -1.0, 1.0, -1.0, 1.0]),
@@ -322,38 +402,41 @@ mod tests {
         );
         assert_eq!(rm.row(1), [-7.0, 7.0]); // held
         assert_eq!(rm.search_sites(), vec![1, 2]);
+        assert!(rm.needs_search_pass());
         // act sites are never search sites
-        let rm2 = RangeManager::new(&m, Estimator::DSGC, Estimator::CURRENT);
+        let rm2 = mgr(&m, Estimator::DSGC, Estimator::CURRENT);
         assert!(rm2.search_sites().is_empty());
+        assert!(!rm2.needs_search_pass());
     }
 
     #[test]
     fn search_site_adopts_the_searched_range() {
         let m = model(0, 1);
-        let mut rm = RangeManager::new(&m, Estimator::CURRENT, Estimator::SAMPLED_MINMAX);
+        let mut rm = mgr(&m, Estimator::CURRENT, Estimator::SAMPLED_MINMAX);
         assert_eq!(rm.search_sites(), vec![0]);
         let g: Vec<f32> = (0..4096).map(|i| ((i % 513) as f32 / 256.0) - 1.0).collect();
-        let evals = rm.search_site(0, &g, 8, 0);
+        let evals = rm.search_site(0, &g, 0);
         assert_eq!(evals, 1);
         let r = rm.row(0);
         assert!(r[0] <= -0.9 && r[1] >= 0.9, "{r:?}");
     }
 
     #[test]
-    fn calibration_seeds_then_emas() {
+    fn calibration_seeds_then_emas_with_the_spec_eta() {
         let m = model(2, 0);
-        let mut rm = RangeManager::new(&m, Estimator::HINDSIGHT, Estimator::FP32);
-        rm.calibrate(&t(2, &[-1.0, 1.0, -2.0, 2.0]), 0.5);
+        let scheme = scheme2(Estimator::HINDSIGHT, Estimator::FP32).eta_all(0.5);
+        let mut rm = RangeManager::new(&m, &scheme);
+        rm.calibrate(&t(2, &[-1.0, 1.0, -2.0, 2.0]));
         assert_eq!(rm.row(0), [-1.0, 1.0]);
-        rm.calibrate(&t(2, &[-3.0, 3.0, -2.0, 2.0]), 0.5);
-        assert_eq!(rm.row(0), [-2.0, 2.0]); // 0.5 blend
+        rm.calibrate(&t(2, &[-3.0, 3.0, -2.0, 2.0]));
+        assert_eq!(rm.row(0), [-2.0, 2.0]); // 0.5 blend from the spec eta
         assert!(rm.is_calibrated());
     }
 
     #[test]
     fn tensor_roundtrip_and_coverage() {
         let m = model(1, 0);
-        let mut rm = RangeManager::new(&m, Estimator::HINDSIGHT, Estimator::FP32);
+        let mut rm = mgr(&m, Estimator::HINDSIGHT, Estimator::FP32);
         rm.set_row(0, [-1.0, 1.0]);
         let t = rm.as_tensor();
         assert_eq!(t.shape, vec![1, 2]);
@@ -370,7 +453,7 @@ mod tests {
     #[test]
     fn maxhist_rows_track_the_window_hull() {
         let m = model(1, 1);
-        let mut rm = RangeManager::new(&m, Estimator::MAX_HISTORY, Estimator::MAX_HISTORY);
+        let mut rm = mgr(&m, Estimator::MAX_HISTORY, Estimator::MAX_HISTORY);
         rm.update(&t(2, &[0.0; 4]), &t(2, &[-1.0, 1.0, -2.0, 2.0]), true);
         assert_eq!(rm.row(0), [-1.0, 1.0]);
         rm.update(&t(2, &[0.0; 4]), &t(2, &[-0.5, 3.0, -1.0, 1.0]), false);
@@ -385,8 +468,70 @@ mod tests {
         // regression: only new_ranges used to be length-checked, so a
         // short stats tensor died with an unhelpful index panic
         let m = model(1, 1);
-        let mut rm = RangeManager::new(&m, Estimator::HINDSIGHT, Estimator::HINDSIGHT);
+        let mut rm = mgr(&m, Estimator::HINDSIGHT, Estimator::HINDSIGHT);
         rm.update(&t(2, &[0.0; 4]), &t(1, &[0.0; 2]), false);
+    }
+
+    // ------------------------------------------------------------------
+    // Scheme resolution: overrides, symmetry, per-site bits/eta
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn per_site_overrides_resolve_by_site_name() {
+        let m = model(1, 2); // sites s0 (act), s1, s2 (grad)
+        let scheme = scheme2(Estimator::HINDSIGHT, Estimator::HINDSIGHT)
+            .override_site_str("s2", "dsgc:4")
+            .unwrap();
+        let rm = RangeManager::new(&m, &scheme);
+        assert_eq!(rm.site_spec(1).estimator, Estimator::HINDSIGHT);
+        assert_eq!(rm.site_spec(2).estimator, Estimator::DSGC);
+        assert_eq!(rm.site_spec(2).bits, 4);
+        // only the overridden grad site needs the search pass
+        assert_eq!(rm.search_sites(), vec![2]);
+        assert!(rm.needs_search_pass());
+    }
+
+    #[test]
+    fn search_runs_at_the_sites_own_bits() {
+        // 3-bit vs 8-bit DSGC searches clip differently on a heavy tail
+        let m = model(0, 1);
+        let mut g = vec![0.0f32; 4096];
+        let mut rng = Pcg32::new(3, 1);
+        for v in g.iter_mut() {
+            *v = rng.normal() * 0.02;
+        }
+        g[0] = 1.0; // one outlier the low-bit search should clip away
+        let mk = |bits: u32| {
+            let mut s = scheme2(Estimator::CURRENT, Estimator::DSGC);
+            s.gradients.bits = bits;
+            s
+        };
+        let mut rm3 = RangeManager::new(&m, &mk(3));
+        let mut rm8 = RangeManager::new(&m, &mk(8));
+        rm3.search_site(0, &g, 8);
+        rm8.search_site(0, &g, 8);
+        assert!(
+            rm3.row(0)[1] < rm8.row(0)[1],
+            "3-bit search must clip harder: {:?} vs {:?}",
+            rm3.row(0),
+            rm8.row(0)
+        );
+    }
+
+    #[test]
+    fn symmetric_specs_clamp_every_adopted_row() {
+        let m = model(1, 1);
+        let mut scheme = scheme2(Estimator::HINDSIGHT, Estimator::HINDSIGHT);
+        scheme.gradients.symmetric = true;
+        let mut rm = RangeManager::new(&m, &scheme);
+        // calibration: act row keeps the raw stats, grad row symmetrizes
+        rm.calibrate(&t(2, &[-1.0, 2.0, -1.0, 3.0]));
+        assert_eq!(rm.row(0), [-1.0, 2.0]);
+        assert_eq!(rm.row(1), [-3.0, 3.0]);
+        // step adoption symmetrizes too
+        rm.update(&t(2, &[-0.5, 0.25, -0.5, 0.25]), &t(2, &[0.0; 4]), false);
+        assert_eq!(rm.row(0), [-0.5, 0.25]);
+        assert_eq!(rm.row(1), [-0.5, 0.5]);
     }
 
     // ------------------------------------------------------------------
@@ -397,7 +542,7 @@ mod tests {
     fn per_channel_sites_expand_the_row_table() {
         let m = model_ch(1, 1, 3);
         let pc = Estimator::HINDSIGHT.per_channel();
-        let rm = RangeManager::new(&m, pc, Estimator::HINDSIGHT);
+        let rm = mgr(&m, pc, Estimator::HINDSIGHT);
         // act site: 3 rows (per-channel); grad site: 1 (per-tensor)
         assert_eq!(rm.n_sites(), 2);
         assert_eq!(rm.n_rows(), 4);
@@ -411,7 +556,7 @@ mod tests {
     fn per_channel_rows_update_independently() {
         let m = model_ch(1, 0, 2);
         let pc = Estimator::MAX_HISTORY.per_channel();
-        let mut rm = RangeManager::new(&m, pc, Estimator::FP32);
+        let mut rm = mgr(&m, pc, Estimator::FP32);
         // R = 2 rows; feed different stats per channel
         rm.update(&t(2, &[0.0; 4]), &t(2, &[-1.0, 1.0, -5.0, 0.5]), true);
         assert_eq!(rm.site_rows(0), &[[-1.0, 1.0], [-5.0, 0.5]]);
@@ -424,7 +569,7 @@ mod tests {
     fn per_channel_search_sites_and_search() {
         let m = model_ch(0, 1, 2);
         let pc = Estimator::SAMPLED_MINMAX.per_channel();
-        let mut rm = RangeManager::new(&m, Estimator::CURRENT, pc);
+        let mut rm = mgr(&m, Estimator::CURRENT, pc);
         // search_sites consults the per-site estimator, not the config
         assert_eq!(rm.search_sites(), vec![0]);
         // even channel ~[-1,1], odd channel ~[-4,4]
@@ -432,7 +577,7 @@ mod tests {
         let g: Vec<f32> = (0..4096)
             .map(|i| if i % 2 == 0 { rng.range(-1.0, 1.0) } else { rng.range(-4.0, 4.0) })
             .collect();
-        let evals = rm.search_site(0, &g, 8, 0);
+        let evals = rm.search_site(0, &g, 0);
         assert_eq!(evals, 2);
         let rows = rm.site_rows(0);
         assert!(rows[0][1] < 1.5 && rows[1][1] > 3.0, "{rows:?}");
@@ -451,6 +596,7 @@ mod tests {
             Estimator::DSGC,
             Estimator::MAX_HISTORY,
             Estimator::SAMPLED_MINMAX,
+            Estimator::TQT,
         ] {
             forall(
                 32,
@@ -470,12 +616,15 @@ mod tests {
                 |(n_act, n_grad, calib, steps, eta)| {
                     let m = model_ch(*n_act, *n_grad, 1);
                     let q = n_act + n_grad;
-                    let mut rm_pt = RangeManager::new(&m, base, base);
-                    let mut rm_pc = RangeManager::new(&m, base.per_channel(), base.per_channel());
+                    let mut rm_pt = RangeManager::new(&m, &scheme2(base, base).eta_all(*eta));
+                    let mut rm_pc = RangeManager::new(
+                        &m,
+                        &scheme2(base.per_channel(), base.per_channel()).eta_all(*eta),
+                    );
                     assert_eq!(rm_pc.n_rows(), q); // 1 channel == 1 row per site
                     for st in calib {
-                        rm_pt.calibrate(&t(q, st), *eta);
-                        rm_pc.calibrate(&t(q, st), *eta);
+                        rm_pt.calibrate(&t(q, st));
+                        rm_pc.calibrate(&t(q, st));
                     }
                     for (step, (nr, st)) in steps.iter().enumerate() {
                         rm_pt.update(&t(q, nr), &t(q, st), step == 0);
@@ -562,7 +711,7 @@ mod tests {
                 |(n_act, n_grad, calib, steps, eta)| {
                     let m = model(*n_act, *n_grad);
                     let q = n_act + n_grad;
-                    let mut rm = RangeManager::new(&m, est, est);
+                    let mut rm = RangeManager::new(&m, &scheme2(est, est).eta_all(*eta));
                     // legacy mirror state
                     let mut rows = vec![[-1.0f32, 1.0]; q];
                     let mut calibrated = false;
@@ -576,7 +725,7 @@ mod tests {
                             );
                         }
                         calibrated = true;
-                        rm.calibrate(&t(q, st), *eta);
+                        rm.calibrate(&t(q, st));
                     }
                     for (step, (nr, st)) in steps.iter().enumerate() {
                         rm.update(&t(q, nr), &t(q, st), step == 0);

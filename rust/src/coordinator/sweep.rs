@@ -65,8 +65,10 @@ mod tests {
             let parsed = Estimator::parse(est.key()).unwrap();
             assert_eq!(parsed, est);
             let full = TrainConfig::new("mlp").fully_quantized(parsed);
-            assert_eq!(full.quant_weights, parsed.enabled());
-            assert!(full.tag().contains(parsed.name()), "{}", full.tag());
+            assert_eq!(full.scheme.weights.enabled(), parsed.enabled());
+            assert_eq!(full.scheme.gradients.estimator, parsed);
+            // the tag carries the scheme's string form (registry keys)
+            assert!(full.tag().contains(parsed.key()), "{}", full.tag());
             let _ = TrainConfig::new("mlp").grad_only(parsed);
             let _ = TrainConfig::new("mlp").act_only(parsed);
             // per-site instances are constructible for every name

@@ -62,19 +62,127 @@ impl<'e> Trainer<'e> {
         } else {
             None
         };
-        let g_dump = if cfg.grad_est.needs_search() {
-            Some(engine.graph(&cfg.model, "dump").with_context(|| {
-                format!("estimator '{}' requires the dump graph", cfg.grad_est.key())
-            })?)
-        } else {
-            None
-        };
 
         // init params on-device from the seed
         let g_init = engine.graph(&cfg.model, "init")?;
         let carry = engine.run(&g_init, &[Tensor::scalar_i32(cfg.seed as i32)])?;
 
-        let ranges = RangeManager::new(&model, cfg.act_est, cfg.grad_est);
+        let ranges = RangeManager::new(&model, &cfg.scheme);
+        // the dump graph is needed iff any (possibly overridden) grad
+        // site's estimator declares the periodic search pass; name the
+        // actual sites in the error so an override-triggered requirement
+        // doesn't get blamed on the (search-free) class estimator
+        let g_dump = if ranges.needs_search_pass() {
+            let searchers: Vec<String> = ranges
+                .search_sites()
+                .iter()
+                .map(|&i| {
+                    format!("{}:{}", model.sites[i].name, ranges.site_spec(i).estimator.spec())
+                })
+                .collect();
+            Some(engine.graph(&cfg.model, "dump").with_context(|| {
+                format!(
+                    "search-based estimator(s) [{}] require the dump graph",
+                    searchers.join(", ")
+                )
+            })?)
+        } else {
+            None
+        };
+        // Manifest validation: the artifacts were AOT-compiled at fixed
+        // bit-widths, so every enabled class/site of the scheme must
+        // match them — mixed-precision schemes run on the simulator
+        // path (`simulator::scheme`) until per-bitwidth artifacts exist.
+        let m = &engine.manifest;
+        let check = |what: &str, want: u32, have: u32| -> Result<()> {
+            if want != have {
+                anyhow::bail!(
+                    "scheme requests {want}-bit {what} but the compiled artifacts are \
+                     {have}-bit — engine runs are fixed-bit (W{}/A{}/G{}); run \
+                     mixed-precision schemes on the simulator (`mem-report`, \
+                     `simulator::scheme`) or rebuild artifacts (python/compile/aot.py)",
+                    m.bits_w,
+                    m.bits_a,
+                    m.bits_g
+                );
+            }
+            Ok(())
+        };
+        if cfg.scheme.weights.enabled() {
+            check("weights", cfg.scheme.weights.bits, m.bits_w)?;
+        }
+        // overrides are keyed by site name: a typo'd key would otherwise
+        // be silently inert (and dodge every check below)
+        for (site, _) in cfg.scheme.overrides() {
+            if !model.sites.iter().any(|s| s.name == site) {
+                let names: Vec<&str> = model.sites.iter().map(|s| s.name.as_str()).collect();
+                anyhow::bail!(
+                    "scheme override '@{site}' matches no quantizer site of model '{}' \
+                     (sites: {})",
+                    model.name,
+                    names.join(", ")
+                );
+            }
+        }
+        for s in &model.sites {
+            use crate::runtime::manifest::SiteKind;
+            let (class, have, what) = match s.kind {
+                SiteKind::Act => (crate::scheme::TensorClass::Activations, m.bits_a, "activations"),
+                SiteKind::Grad => (crate::scheme::TensorClass::Gradients, m.bits_g, "gradients"),
+            };
+            let spec = cfg.scheme.site_spec(class, &s.name);
+            if spec.enabled() {
+                check(what, spec.bits, have)?;
+            }
+            // the periodic search pass only materializes gradient
+            // tensors, so a search-based estimator on an activation site
+            // would freeze at its init row forever — reject it instead
+            if spec.estimator.needs_search() && s.kind == SiteKind::Act {
+                anyhow::bail!(
+                    "activation site '{}' uses search-based estimator '{}' — the dump-graph \
+                     search pass visits gradient sites only (paper Table 3 runs DSGC-style \
+                     estimators on gradients, activations fall back to 'current')",
+                    s.name,
+                    spec.estimator.spec()
+                );
+            }
+            // the train graph has ONE mode/enable scalar per class, so a
+            // per-site override may refine semantics only within the same
+            // graph mode (e.g. hindsight -> tqt/dsgc, all static); a
+            // dynamic override under a static class (or vice versa) would
+            // silently quantize with the wrong in-graph rule
+            let class_est = cfg.scheme.spec(class).estimator;
+            if spec.estimator.mode() != class_est.mode()
+                || spec.estimator.enabled() != class_est.enabled()
+            {
+                anyhow::bail!(
+                    "site '{}' override '{}' runs in graph mode {} but its class \
+                     estimator '{}' runs in mode {} — per-site overrides must keep \
+                     the class's graph mode (static/dynamic) and enable bit",
+                    s.name,
+                    spec.estimator.spec(),
+                    spec.estimator.mode(),
+                    class_est.spec(),
+                    class_est.mode()
+                );
+            }
+        }
+        // the train graph has a single EMA scalar (graph_eta == the
+        // gradient eta): a stateful activation estimator whose in-graph
+        // update would want a different eta only sees its own eta during
+        // calibration — surface that instead of silently ignoring it
+        if cfg.scheme.activations.estimator.enabled()
+            && cfg.scheme.activations.estimator.stateful()
+            && cfg.scheme.activations.eta != cfg.scheme.graph_eta()
+        {
+            log::warn!(
+                "activation eta {} differs from the graph eta {} — the compiled graph \
+                 has one EMA scalar (the gradient eta); per-class activation eta \
+                 applies to calibration batches only",
+                cfg.scheme.activations.eta,
+                cfg.scheme.graph_eta()
+            );
+        }
         // fail early and readably when the range-row count does not match
         // the compiled graph's ranges input — otherwise a per-channel
         // config surfaces as an opaque marshalling shape error on the
@@ -160,7 +268,7 @@ impl<'e> Trainer<'e> {
             self.fill_next_batch();
             let out = self.run_train_graph(0.0, 0.0, true)?;
             let stats = &out[out.len() - 1];
-            self.ranges.calibrate(stats, self.cfg.eta);
+            self.ranges.calibrate(stats); // per-site spec eta
         }
         if n > 0 {
             log::debug!(
@@ -192,9 +300,9 @@ impl<'e> Trainer<'e> {
                 }
             };
             (
-                boot(self.cfg.act_est, self.ranges.mode_act()),
-                boot(self.cfg.grad_est, self.ranges.mode_grad()),
-                self.cfg.quant_weights as u32 as f32,
+                boot(self.cfg.scheme.activations.estimator, self.ranges.mode_act()),
+                boot(self.cfg.scheme.gradients.estimator, self.ranges.mode_grad()),
+                self.cfg.scheme.weights.enabled() as u32 as f32,
                 self.ranges.aq_on(),
                 self.ranges.gq_on(),
             )
@@ -205,7 +313,7 @@ impl<'e> Trainer<'e> {
             Tensor::scalar_f32(wq),
             Tensor::scalar_f32(aq),
             Tensor::scalar_f32(gq),
-            Tensor::scalar_f32(self.cfg.eta),
+            Tensor::scalar_f32(self.cfg.scheme.graph_eta()),
             Tensor::scalar_f32(lr),
             Tensor::scalar_f32(wd),
             Tensor::scalar_i32((self.cfg.seed as i32) ^ (self.step as i32)),
@@ -221,9 +329,9 @@ impl<'e> Trainer<'e> {
 
     /// One optimization step; returns (loss, train-batch accuracy).
     pub fn train_step(&mut self) -> Result<(f32, f32)> {
-        // periodic tensor-level range search for estimators that need it
+        // periodic tensor-level range search for sites that need it
         // (step 0 bootstraps the ranges; period 0 = bootstrap only)
-        if self.cfg.grad_est.needs_search() && search_due(self.step, self.cfg.dsgc_period) {
+        if self.ranges.needs_search_pass() && search_due(self.step, self.cfg.dsgc_period) {
             self.search_update()?;
         }
 
@@ -267,10 +375,10 @@ impl<'e> Trainer<'e> {
         let ranges_t = self.ranges.as_tensor();
         let scal = [
             Tensor::scalar_f32(2.0), // mode_grad: static while dumping
-            Tensor::scalar_f32(self.cfg.quant_weights as u32 as f32),
+            Tensor::scalar_f32(self.cfg.scheme.weights.enabled() as u32 as f32),
             Tensor::scalar_f32(self.ranges.aq_on()),
             Tensor::scalar_f32(self.ranges.gq_on()),
-            Tensor::scalar_f32(self.cfg.eta),
+            Tensor::scalar_f32(self.cfg.scheme.graph_eta()),
             Tensor::scalar_i32(self.cfg.seed as i32 ^ self.step as i32),
         ];
         let p = self.model.params.len();
@@ -285,15 +393,23 @@ impl<'e> Trainer<'e> {
         inputs.extend(scal.iter());
         let grads = self.engine.run_refs(&g_dump, &inputs)?;
 
+        // the dump graph returns one tensor per *gradient site* in site
+        // order; with per-site overrides only a subset may need search,
+        // so map each search site to its position among the grad sites
+        use crate::runtime::manifest::SiteKind;
+        let grad_order: Vec<usize> = (0..self.model.sites.len())
+            .filter(|&i| self.model.sites[i].kind == SiteKind::Grad)
+            .collect();
+        assert_eq!(grads.len(), grad_order.len(), "dump arity vs grad sites");
         let sites = self.ranges.search_sites();
-        assert_eq!(grads.len(), sites.len(), "dump arity vs grad sites");
-        for (g, &site) in grads.iter().zip(&sites) {
-            let evals = self.ranges.search_site(
-                site,
-                g.as_f32()?,
-                self.engine.manifest.bits_g,
-                self.cfg.dsgc_iters,
-            );
+        for &site in &sites {
+            let pos = grad_order
+                .iter()
+                .position(|&g| g == site)
+                .expect("search site is a grad site");
+            let evals =
+                self.ranges
+                    .search_site(site, grads[pos].as_f32()?, self.cfg.dsgc_iters);
             self.search_evals += evals as u64;
         }
         log::debug!(
@@ -328,7 +444,7 @@ impl<'e> Trainer<'e> {
         // for hindsight/dsgc, current for the dynamic methods.
         let scal = [
             Tensor::scalar_f32(self.ranges.mode_act()),
-            Tensor::scalar_f32(self.cfg.quant_weights as u32 as f32),
+            Tensor::scalar_f32(self.cfg.scheme.weights.enabled() as u32 as f32),
             Tensor::scalar_f32(self.ranges.aq_on()),
         ];
         let mut loss_sum = 0f64;
@@ -369,12 +485,13 @@ impl<'e> Trainer<'e> {
     /// and at the end.  Returns the run record.
     pub fn run(mut self) -> Result<RunRecord> {
         // paper Sec. 5.2: stateful estimators (running / hindsight /
-        // max-history) benefit from an initial calibration pass; apply it
-        // whenever either tensor class uses one (it also seeds the
+        // max-history / tqt) benefit from an initial calibration pass;
+        // apply it whenever any site uses one (it also seeds the
         // gradient ranges, subsuming the q^0 = minmax(G^0) bootstrap).
-        if (self.cfg.act_est.stateful() || self.cfg.grad_est.stateful())
-            && self.cfg.calib_batches > 0
-        {
+        let any_stateful = self.cfg.scheme.activations.estimator.stateful()
+            || self.cfg.scheme.gradients.estimator.stateful()
+            || self.cfg.scheme.overrides().any(|(_, s)| s.estimator.stateful());
+        if any_stateful && self.cfg.calib_batches > 0 {
             self.calibrate()?;
         }
         let t0 = Instant::now();
@@ -513,6 +630,39 @@ mod tests {
         }
         // exactly one (bootstrap) search ran; no divide-by-zero
         assert!(t.search_evals > 0);
+    }
+
+    #[test]
+    fn mixed_precision_schemes_are_rejected_by_fixed_bit_artifacts() {
+        use crate::scheme::QuantScheme;
+        let Some(e) = engine() else { return };
+        let mut cfg = quick_cfg("mlp");
+        cfg.scheme = QuantScheme::parse("w:current:8 a:hindsight:8 g:hindsight:4").unwrap();
+        let err = Trainer::new(&e, cfg).err().expect("4-bit grads vs 8-bit artifacts");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("4-bit"), "{msg}");
+        assert!(msg.contains("simulator"), "{msg}");
+        // disabled classes are not validated: fp32 grads at odd bits pass
+        let mut cfg = quick_cfg("mlp");
+        cfg.scheme = QuantScheme::parse("w:current:8 a:hindsight:8 g:fp32:4").unwrap();
+        assert!(Trainer::new(&e, cfg).is_ok());
+    }
+
+    #[test]
+    fn bogus_overrides_and_act_search_schemes_are_rejected() {
+        use crate::scheme::QuantScheme;
+        let Some(e) = engine() else { return };
+        // an override naming no site must not be silently inert
+        let mut cfg = quick_cfg("mlp");
+        cfg.scheme = QuantScheme::w8a8g8().override_site_str("no_such_site", "tqt:8").unwrap();
+        let msg = format!("{:#}", Trainer::new(&e, cfg).err().expect("unknown site"));
+        assert!(msg.contains("no_such_site"), "{msg}");
+        assert!(msg.contains("sites:"), "{msg}");
+        // search-based estimators on activation sites would freeze at init
+        let mut cfg = quick_cfg("mlp");
+        cfg.scheme = QuantScheme::w8a8g8().act("dsgc").unwrap();
+        let msg = format!("{:#}", Trainer::new(&e, cfg).err().expect("act search"));
+        assert!(msg.contains("gradient sites only"), "{msg}");
     }
 
     #[test]

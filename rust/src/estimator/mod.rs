@@ -37,6 +37,7 @@
 //! comparison (FP32 / current / running / in-hindsight / DSGC);
 //! [`literature`] adds comparison estimators from the wider literature
 //! (window max-history, Banner et al.-style sampled min-max);
+//! [`trained`] the TQT-style trained-threshold estimator;
 //! [`perchannel`] holds the channel-replicating adapter;
 //! [`registry`] owns the name table and the [`Estimator`] handle.
 
@@ -44,11 +45,32 @@ pub mod classic;
 pub mod literature;
 pub mod perchannel;
 pub mod registry;
+pub mod trained;
 
 pub use classic::{Current, Dsgc, Fp32, Hindsight, Running};
 pub use literature::{MaxHistory, SampledMinMax};
 pub use perchannel::PerChannel;
 pub use registry::{Estimator, EstimatorInfo, Granularity, REGISTRY};
+pub use trained::TrainedThreshold;
+
+/// Per-site knobs a `QuantSpec` resolves for one quantizer site and
+/// hands to the registry factories: estimators that adapt may consume
+/// them (TQT derives its threshold step from `eta`); search-based
+/// estimators additionally receive `bits` per search call.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SiteParams {
+    /// quantization bit-width of the site
+    pub bits: u32,
+    /// EMA momentum / adaptation-rate knob of the site
+    pub eta: f32,
+}
+
+impl Default for SiteParams {
+    /// The paper's defaults (8 bits, eta 0.9).
+    fn default() -> Self {
+        Self { bits: 8, eta: 0.9 }
+    }
+}
 
 /// Everything one site's estimator sees from one training step.
 #[derive(Debug, Clone, Copy)]

@@ -18,7 +18,8 @@ use anyhow::{bail, Result};
 use super::classic::{Current, Dsgc, Fp32, Hindsight, Running};
 use super::literature::{MaxHistory, SampledMinMax};
 use super::perchannel::PerChannel;
-use super::RangeEstimator;
+use super::trained::TrainedThreshold;
+use super::{RangeEstimator, SiteParams};
 
 /// Quantizer granularity of a configured estimator: one range row per
 /// site (per-tensor, the paper's setting) or one per channel group.
@@ -51,30 +52,34 @@ pub struct EstimatorInfo {
     /// run an uncalibrated first step in current-min-max mode so the
     /// first grid is the first batch's statistics (paper Sec. 4.1)
     pub bootstrap_dynamic: bool,
-    /// per-site trait-object factory
-    pub make: fn() -> Box<dyn RangeEstimator>,
+    /// per-site trait-object factory; receives the site's resolved
+    /// [`SiteParams`] (bits/eta) so adaptive estimators can consume them
+    pub make: fn(SiteParams) -> Box<dyn RangeEstimator>,
 }
 
-fn make_fp32() -> Box<dyn RangeEstimator> {
+fn make_fp32(_p: SiteParams) -> Box<dyn RangeEstimator> {
     Box::new(Fp32)
 }
-fn make_current() -> Box<dyn RangeEstimator> {
+fn make_current(_p: SiteParams) -> Box<dyn RangeEstimator> {
     Box::new(Current)
 }
-fn make_running() -> Box<dyn RangeEstimator> {
+fn make_running(_p: SiteParams) -> Box<dyn RangeEstimator> {
     Box::new(Running)
 }
-fn make_hindsight() -> Box<dyn RangeEstimator> {
+fn make_hindsight(_p: SiteParams) -> Box<dyn RangeEstimator> {
     Box::new(Hindsight)
 }
-fn make_dsgc() -> Box<dyn RangeEstimator> {
+fn make_dsgc(_p: SiteParams) -> Box<dyn RangeEstimator> {
     Box::new(Dsgc)
 }
-fn make_maxhist() -> Box<dyn RangeEstimator> {
+fn make_maxhist(_p: SiteParams) -> Box<dyn RangeEstimator> {
     Box::new(MaxHistory::default())
 }
-fn make_sampled() -> Box<dyn RangeEstimator> {
+fn make_sampled(_p: SiteParams) -> Box<dyn RangeEstimator> {
     Box::new(SampledMinMax::default())
+}
+fn make_tqt(p: SiteParams) -> Box<dyn RangeEstimator> {
+    Box::new(TrainedThreshold::from_params(p))
 }
 
 const FP32_INFO: EstimatorInfo = EstimatorInfo {
@@ -161,6 +166,18 @@ const SAMPLED_INFO: EstimatorInfo = EstimatorInfo {
     make: make_sampled,
 };
 
+const TQT_INFO: EstimatorInfo = EstimatorInfo {
+    key: "tqt",
+    display: "Trained threshold (TQT)",
+    mode: 2.0, // coordinator-side state: the graph runs static
+    enabled: true,
+    is_static: true,
+    needs_search: false,
+    stateful: true,
+    bootstrap_dynamic: true,
+    make: make_tqt,
+};
+
 /// Every registered estimator, in presentation order (the paper's five,
 /// then the literature additions).
 pub static REGISTRY: &[&EstimatorInfo] = &[
@@ -171,6 +188,7 @@ pub static REGISTRY: &[&EstimatorInfo] = &[
     &DSGC_INFO,
     &MAX_HISTORY_INFO,
     &SAMPLED_INFO,
+    &TQT_INFO,
 ];
 
 /// Cheap `Copy` handle to one registry row plus a granularity tag.
@@ -192,6 +210,7 @@ impl Estimator {
     pub const DSGC: Self = per_tensor(&DSGC_INFO);
     pub const MAX_HISTORY: Self = per_tensor(&MAX_HISTORY_INFO);
     pub const SAMPLED_MINMAX: Self = per_tensor(&SAMPLED_INFO);
+    pub const TQT: Self = per_tensor(&TQT_INFO);
 
     /// Resolve a registry key (the CLI / config string form), with an
     /// optional granularity suffix: `hindsight` is per-tensor,
@@ -210,7 +229,8 @@ impl Estimator {
             }
         }
         bail!(
-            "unknown estimator '{base}' ({}; append '@pc' for per-channel)",
+            "unknown estimator '{base}' — valid keys: {}; append '@pc' for per-channel \
+             granularity; scheme clauses take a ':<bits>' suffix (e.g. 'hindsight@pc:4')",
             Self::keys().join("|")
         )
     }
@@ -295,9 +315,21 @@ impl Estimator {
         self.info.bootstrap_dynamic
     }
 
-    /// Build a single-row (per-tensor) trait object.
+    /// Build a single-row (per-tensor) trait object with the default
+    /// [`SiteParams`] (8 bits, eta 0.9).
     pub fn instantiate(&self) -> Box<dyn RangeEstimator> {
-        (self.info.make)()
+        self.instantiate_with(SiteParams::default())
+    }
+
+    /// Build a single-row (per-tensor) trait object with explicit
+    /// per-site params.
+    pub fn instantiate_with(&self, params: SiteParams) -> Box<dyn RangeEstimator> {
+        (self.info.make)(params)
+    }
+
+    /// [`Estimator::instantiate_site_with`] with the default params.
+    pub fn instantiate_site(&self, n_channels: usize) -> Box<dyn RangeEstimator> {
+        self.instantiate_site_with(SiteParams::default(), n_channels)
     }
 
     /// Build the trait object for a site with `n_channels` channel
@@ -305,11 +337,17 @@ impl Estimator {
     /// ignore `n_channels`; per-channel handles wrap the estimator in
     /// the channel-replicating [`PerChannel`] adapter (one row per
     /// channel — bit-identical to per-tensor when `n_channels == 1`).
-    pub fn instantiate_site(&self, n_channels: usize) -> Box<dyn RangeEstimator> {
+    /// The site's resolved `params` reach every replica's factory.
+    pub fn instantiate_site_with(
+        &self,
+        params: SiteParams,
+        n_channels: usize,
+    ) -> Box<dyn RangeEstimator> {
         match self.gran {
-            Granularity::PerTensor => (self.info.make)(),
+            Granularity::PerTensor => (self.info.make)(params),
             Granularity::PerChannel => {
-                Box::new(PerChannel::replicate(self.info.make, n_channels.max(1)))
+                let make = self.info.make;
+                Box::new(PerChannel::replicate(move || make(params), n_channels.max(1)))
             }
         }
     }
@@ -386,7 +424,7 @@ mod tests {
 
     #[test]
     fn new_estimators_are_static_plugins() {
-        for est in [Estimator::MAX_HISTORY, Estimator::SAMPLED_MINMAX] {
+        for est in [Estimator::MAX_HISTORY, Estimator::SAMPLED_MINMAX, Estimator::TQT] {
             assert!(est.enabled());
             assert!(est.is_static());
             assert_eq!(est.mode(), 2.0);
@@ -394,6 +432,33 @@ mod tests {
         assert!(Estimator::SAMPLED_MINMAX.needs_search());
         assert!(!Estimator::MAX_HISTORY.needs_search());
         assert!(Estimator::MAX_HISTORY.stateful());
+        // tqt: search-free stateful plugin (ROADMAP "Next" item)
+        assert!(!Estimator::TQT.needs_search());
+        assert!(Estimator::TQT.stateful());
+        assert!(Estimator::TQT.bootstrap_dynamic());
+        assert_eq!(Estimator::parse("tqt").unwrap(), Estimator::TQT);
+    }
+
+    #[test]
+    fn site_params_reach_the_factories() {
+        // tqt derives its threshold step from the site's eta
+        let mut slow = Estimator::TQT.instantiate_with(SiteParams { bits: 8, eta: 0.99 });
+        let mut fast = Estimator::TQT.instantiate_with(SiteParams { bits: 8, eta: 0.5 });
+        let ctx = super::super::StepCtx {
+            current: [-1.0, 1.0],
+            stats: [-2.0, 2.0],
+            new_ranges: [0.0, 0.0],
+            first_step: false,
+            calibrated: true,
+        };
+        let s = slow.absorb_step(ctx);
+        let f = fast.absorb_step(ctx);
+        assert!(f[1] > s[1], "faster eta-derived step must move further: {f:?} vs {s:?}");
+        // per-channel replication carries the params to every replica
+        let pc = Estimator::TQT
+            .per_channel()
+            .instantiate_site_with(SiteParams { bits: 8, eta: 0.5 }, 3);
+        assert_eq!(pc.n_rows(), 3);
     }
 
     #[test]

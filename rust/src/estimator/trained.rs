@@ -1,0 +1,220 @@
+//! Trained-threshold range estimation in the spirit of TQT (Jain et
+//! al., "Trained Quantization Thresholds", 1903.08066).
+//!
+//! TQT learns clipping thresholds by gradient descent on the task loss.
+//! The coordinator never sees the loss gradient w.r.t. a threshold, but
+//! the *sign* of that gradient is well approximated by a clipping proxy:
+//! when the observed statistics exceed the threshold, values are being
+//! clipped and the threshold gradient pushes the threshold up; when the
+//! statistics fall inside it, grid resolution is being wasted and the
+//! gradient pushes it down.  [`TrainedThreshold`] realizes exactly that
+//! sign rule, with the multiplicative (log2-domain) update TQT uses:
+//!
+//! ```text
+//!   m_side <- m_side * 2^( step * sgn(|stats_side| - m_side) )
+//! ```
+//!
+//! per side (lo magnitudes and hi magnitudes move independently), where
+//! `step` is the log2-domain learning rate.  Like in-hindsight
+//! estimation this is *static*: the range used at step `t` was computed
+//! from steps `< t` only, so the fused single-store accelerator path
+//! applies.  It is a `needs_search`-free stateful plugin — no dump
+//! graph, no periodic tensor traversals, O(1) coordinator work per row.
+//!
+//! The registry key is `tqt`; the spec's `eta` doubles as the
+//! adaptation-rate knob (`step = 1 - eta`, clamped to
+//! [`MIN_STEP`]..=[`MAX_STEP`]), so `g:tqt:8:eta=0.95` trains its
+//! thresholds half as fast as the default.  Golden tests below pin the
+//! update rule bit-for-bit.
+
+use super::{RangeEstimator, SiteParams, StepCtx};
+
+/// Smallest log2-domain threshold step (eta very close to 1).
+pub const MIN_STEP: f32 = 1.0 / 64.0;
+/// Largest log2-domain threshold step (eta far from 1).
+pub const MAX_STEP: f32 = 0.25;
+
+/// Trained-threshold (TQT-style) estimator: thresholds nudged by the
+/// sign of the clipping-gradient proxy, multiplicatively in log2 domain.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainedThreshold {
+    /// log2-domain learning rate of one threshold update
+    step: f32,
+}
+
+impl TrainedThreshold {
+    pub fn new(step: f32) -> Self {
+        assert!(step > 0.0 && step.is_finite(), "threshold step must be positive");
+        Self { step }
+    }
+
+    /// Registry constructor: derive the threshold step from the site's
+    /// range-adaptation momentum (`step = 1 - eta`, clamped).
+    pub fn from_params(p: SiteParams) -> Self {
+        Self::new((1.0 - p.eta).clamp(MIN_STEP, MAX_STEP))
+    }
+
+    pub fn step(&self) -> f32 {
+        self.step
+    }
+
+    /// One side's update: thresholds move multiplicatively toward the
+    /// observed magnitude (`obs` is the magnitude-signed raw side
+    /// value).  A dead side (threshold 0) re-seeds from the
+    /// observation; a NaN observation holds the threshold (the same
+    /// NaN-dropping convention as `quant::minmax` — checked explicitly
+    /// because `f32::max` would silently fold NaN to 0 and shrink).
+    fn nudge(&self, cur_mag: f32, obs: f32) -> f32 {
+        if obs.is_nan() {
+            return cur_mag;
+        }
+        let obs_mag = obs.max(0.0);
+        if cur_mag <= 0.0 {
+            return obs_mag;
+        }
+        if obs_mag > cur_mag {
+            cur_mag * 2f32.powf(self.step) // clipping: grow
+        } else if obs_mag < cur_mag {
+            cur_mag * 2f32.powf(-self.step) // headroom: shrink
+        } else {
+            cur_mag
+        }
+    }
+}
+
+impl RangeEstimator for TrainedThreshold {
+    fn name(&self) -> &'static str {
+        "tqt"
+    }
+
+    fn absorb_step(&mut self, ctx: StepCtx) -> [f32; 2] {
+        if ctx.bootstrap() {
+            // paper Sec. 4.1 convention shared by the stateful
+            // estimators: the first grid is the first batch's statistics
+            return ctx.stats;
+        }
+        // thresholds are per-side magnitudes around zero (the quantizer
+        // grid always contains 0; `QuantParams::from_range` clamps)
+        let lo = -self.nudge((-ctx.current[0]).max(0.0), -ctx.stats[0]);
+        let hi = self.nudge(ctx.current[1].max(0.0), ctx.stats[1]);
+        [lo, hi]
+    }
+
+    fn absorb_calibration(
+        &mut self,
+        current: [f32; 2],
+        stats: [f32; 2],
+        _eta: f32,
+        first_batch: bool,
+    ) -> [f32; 2] {
+        // threshold training wants a generous starting point it can
+        // shrink from, so calibration takes the hull of the observed
+        // batches instead of the default EMA blend
+        if first_batch {
+            stats
+        } else {
+            [current[0].min(stats[0]), current[1].max(stats[1])]
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn RangeEstimator> {
+        Box::new(*self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(current: [f32; 2], stats: [f32; 2]) -> StepCtx {
+        StepCtx {
+            current,
+            stats,
+            new_ranges: [99.0, 99.0], // must be ignored: tqt is coordinator-side
+            first_step: false,
+            calibrated: true,
+        }
+    }
+
+    /// Golden pin of the update rule: exact factors, per side, both
+    /// directions.
+    #[test]
+    fn update_rule_is_signed_log2_nudging() {
+        let mut e = TrainedThreshold::new(0.0625);
+        let up = 2f32.powf(0.0625);
+        let down = 2f32.powf(-0.0625);
+        // lo clips (|-2| > 1) -> grows; hi has headroom (0.5 < 1) -> shrinks
+        assert_eq!(e.absorb_step(ctx([-1.0, 1.0], [-2.0, 0.5])), [-up, down]);
+        // both clip -> both grow
+        assert_eq!(e.absorb_step(ctx([-1.0, 1.0], [-3.0, 3.0])), [-up, up]);
+        // both inside -> both shrink
+        assert_eq!(e.absorb_step(ctx([-4.0, 2.0], [-1.0, 1.0])), [-4.0 * down, 2.0 * down]);
+        // exact hit -> unchanged
+        assert_eq!(e.absorb_step(ctx([-1.0, 2.0], [-1.0, 2.0])), [-1.0, 2.0]);
+    }
+
+    #[test]
+    fn bootstrap_seeds_from_stats_like_the_paper_init() {
+        let mut e = TrainedThreshold::new(0.0625);
+        let mut c = ctx([-1.0, 1.0], [-2.0, 3.0]);
+        c.first_step = true;
+        c.calibrated = false;
+        assert_eq!(e.absorb_step(c), [-2.0, 3.0]);
+        // calibrated first steps use the trained rule, not the re-seed
+        c.calibrated = true;
+        assert_ne!(e.absorb_step(c), [-2.0, 3.0]);
+    }
+
+    #[test]
+    fn dead_sides_reseed_and_nan_observations_hold() {
+        let mut e = TrainedThreshold::new(0.0625);
+        // a zero side adopts the observation directly
+        assert_eq!(e.absorb_step(ctx([0.0, 1.0], [-2.0, 1.0]))[0], -2.0);
+        // one-sided tensors keep the dead side at zero
+        assert_eq!(e.absorb_step(ctx([0.0, 1.0], [0.5, 1.0]))[0], 0.0);
+        // NaN stats leave the thresholds unchanged (minmax NaN policy)
+        assert_eq!(e.absorb_step(ctx([-1.0, 2.0], [f32::NAN, f32::NAN])), [-1.0, 2.0]);
+    }
+
+    #[test]
+    fn repeated_steps_converge_to_the_observed_magnitude() {
+        let mut e = TrainedThreshold::new(0.0625);
+        let mut row = [-8.0f32, 0.125];
+        for _ in 0..200 {
+            row = e.absorb_step(ctx(row, [-1.0, 1.0]));
+        }
+        // within one multiplicative step of the target on both sides
+        // (small slack over 2^step: the oscillation bound is exact only
+        // in real arithmetic)
+        let tol = 2f32.powf(0.0625) * 1.001;
+        assert!(-row[0] <= tol && 1.0 / -row[0] <= tol, "{row:?}");
+        assert!(row[1] <= tol && 1.0 / row[1] <= tol, "{row:?}");
+    }
+
+    #[test]
+    fn calibration_takes_the_hull_not_the_ema() {
+        let mut e = TrainedThreshold::new(0.0625);
+        assert_eq!(e.absorb_calibration([-1.0, 1.0], [-3.0, 0.5], 0.9, true), [-3.0, 0.5]);
+        assert_eq!(
+            e.absorb_calibration([-3.0, 0.5], [-1.0, 2.0], 0.9, false),
+            [-3.0, 2.0]
+        );
+    }
+
+    #[test]
+    fn step_derives_from_eta_with_clamping() {
+        assert_eq!(
+            TrainedThreshold::from_params(SiteParams { bits: 8, eta: 0.9 }).step(),
+            (1.0f32 - 0.9).clamp(MIN_STEP, MAX_STEP)
+        );
+        // eta ~ 1 clamps to the smallest step, eta 0 to the largest
+        assert_eq!(
+            TrainedThreshold::from_params(SiteParams { bits: 8, eta: 1.0 }).step(),
+            MIN_STEP
+        );
+        assert_eq!(
+            TrainedThreshold::from_params(SiteParams { bits: 8, eta: 0.0 }).step(),
+            MAX_STEP
+        );
+    }
+}

@@ -20,7 +20,12 @@
 //!   golden-section range search live here.
 //! * [`estimator`] — the pluggable range-estimator subsystem: the
 //!   `RangeEstimator` trait, the string-keyed registry, the paper's five
-//!   estimators and the literature additions (max-history, sampled).
+//!   estimators and the literature additions (max-history, sampled,
+//!   TQT-style trained thresholds).
+//! * [`scheme`] — typed per-tensor-class quantization schemes: one
+//!   `QuantSpec` (estimator, bits, eta, symmetry) per tensor class plus
+//!   per-site overrides, with a builder and a canonical string form
+//!   (`w:current:8 a:hindsight:8 g:hindsight@pc:4`).
 //! * [`simulator`] — fixed-point accelerator model: MAC-array execution
 //!   and the static-vs-dynamic memory-traffic accounting of paper §6.
 //! * [`models`] — architecture geometry zoo (full-size ResNet18 / VGG16 /
@@ -41,5 +46,6 @@ pub mod metrics;
 pub mod models;
 pub mod quant;
 pub mod runtime;
+pub mod scheme;
 pub mod simulator;
 pub mod util;

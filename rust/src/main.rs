@@ -8,23 +8,30 @@
 //!   inspect     print a model's manifest ABI and quantizer sites
 //!   bench-step  time the train-step hot path for one model
 //!
-//! Estimator names (`--grad-est`, `--act-est`, `--estimators`) resolve
-//! through the registry in `hindsight::estimator` — `hindsight
-//! estimators` prints what is available.  Append `@pc` to any key for
-//! per-channel granularity (one range row per channel group).
+//! Quantization policy is a typed scheme: one clause per tensor class
+//! (`w:` weights, `a:` activations, `g:` gradients), each naming a
+//! registry estimator (append `@pc` for per-channel granularity), a
+//! bit-width, and optional `eta=`/`sym` attrs — `--scheme
+//! "w:current:8 a:hindsight:8 g:hindsight@pc:4"`.  The legacy flags
+//! (`--grad-est`, `--act-est`, `--quant-weights`, `--eta`) still work
+//! and rewrite the scheme.  `hindsight estimators` prints the registry
+//! and the full scheme grammar.
 //!
 //! Examples:
 //!   hindsight train --model cnn --steps 300 --grad-est hindsight
+//!   hindsight train --model cnn --scheme "w:current:8 a:hindsight:8 g:hindsight:8"
 //!   hindsight train --model cnn --grad-est hindsight@pc
 //!   hindsight sweep --model resnet_tiny --mode grad --seeds 1,2,3
-//!   hindsight sweep --model cnn --estimators hindsight,hindsight@pc
+//!   hindsight sweep --model cnn --estimators hindsight,hindsight@pc,tqt
 //!   hindsight mem-report --network mobilenet_v2
 
 use anyhow::{bail, Result};
 
-use hindsight::coordinator::{sweep_row, Estimator, Schedule, TrainConfig, Trainer};
+use hindsight::coordinator::{sweep_row, Estimator, QuantScheme, Schedule, TrainConfig, Trainer};
 use hindsight::models;
 use hindsight::runtime::Engine;
+use hindsight::scheme::parse::syntax_help;
+use hindsight::simulator::backward::{self, BwdBits};
 use hindsight::simulator::traffic::{self, BitWidths};
 use hindsight::util::bench::Table;
 use hindsight::util::cli::Args;
@@ -54,7 +61,10 @@ fn run(mut args: Args) -> Result<()> {
         Some(other) => bail!("unknown subcommand '{other}'"),
         None => {
             eprintln!(
-                "usage: hindsight <train|sweep|estimators|mem-report|inspect|bench-step> [--flags]"
+                "usage: hindsight <train|sweep|estimators|mem-report|inspect|bench-step> [--flags]\n\
+                 quantization policy: --scheme \"w:current:8 a:hindsight:8 g:hindsight@pc:4\"\n\
+                 {}",
+                syntax_help()
             );
             Ok(())
         }
@@ -65,10 +75,28 @@ fn parse_cfg(args: &mut Args) -> Result<TrainConfig> {
     let model = args.str_or("model", "cnn");
     let mut cfg = TrainConfig::new(&model);
     cfg.steps = args.u64_or("steps", cfg.steps);
-    cfg.grad_est = Estimator::parse(&args.str_or("grad-est", "hindsight"))?;
-    cfg.act_est = Estimator::parse(&args.str_or("act-est", "hindsight"))?;
-    cfg.quant_weights = args.bool_or("quant-weights", cfg.quant_weights);
-    cfg.eta = args.f32_or("eta", cfg.eta);
+    // the typed scheme is the source of truth; the legacy flags rewrite
+    // it field by field so existing invocations keep working
+    let mut scheme = match args.get("scheme") {
+        Some(s) => QuantScheme::parse(&s)?,
+        None => QuantScheme::w8a8g8(),
+    };
+    if let Some(g) = args.get("grad-est") {
+        scheme = scheme.grad(&g)?;
+    }
+    if let Some(a) = args.get("act-est") {
+        scheme = scheme.act(&a)?;
+    }
+    if let Some(w) = args.get("quant-weights") {
+        let on = hindsight::util::cli::parse_bool(&w);
+        scheme = scheme.weights_est(if on { Estimator::CURRENT } else { Estimator::FP32 });
+    }
+    if let Some(e) = args.get("eta") {
+        let eta = hindsight::scheme::parse::parse_eta(&e)
+            .map_err(|err| anyhow::anyhow!("--eta: {err:#}"))?;
+        scheme = scheme.eta_all(eta);
+    }
+    cfg.scheme = scheme;
     cfg.lr = args.f32_or("lr", cfg.lr);
     cfg.schedule = Schedule::parse(&args.str_or("schedule", "step"))?;
     cfg.weight_decay = args.f32_or("weight-decay", cfg.weight_decay);
@@ -139,7 +167,8 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
             "full" => base.clone().fully_quantized(est),
             other => bail!("unknown --mode '{other}' (grad|act|full)"),
         };
-        let label = format!("{}{}", est.name(), est.suffix());
+        // labels carry the parseable scheme-clause form (key + suffix)
+        let label = est.spec();
         let out = sweep_row(&engine, &cfg, &label, &seeds)?;
         table.row(&[
             label,
@@ -185,15 +214,25 @@ fn cmd_estimators(args: &mut Args) -> Result<()> {
         "granularity: append '@pc' to any key (e.g. 'hindsight@pc') for \
          per-channel ranges — one row per channel group, any estimator."
     );
+    println!(
+        "schemes: compose per-tensor-class policies with --scheme; \
+         per-site overrides use '@<site>:<spec>' clauses.\n{}",
+        syntax_help()
+    );
     Ok(())
 }
 
 fn cmd_mem_report(args: &mut Args) -> Result<()> {
     let network = args.str_or("network", "table5");
+    // a scheme sets the per-class datapath widths; the explicit bit
+    // flags override individual fields on top.  A scheme also switches
+    // on the backward-pass table, where its gradient clause matters.
+    let scheme = args.get("scheme").map(|s| QuantScheme::parse(&s)).transpose()?;
+    let base = scheme.as_ref().map(BitWidths::from_scheme).unwrap_or_default();
     let b = BitWidths {
-        b_w: args.usize_or("bits-w", 8) as u64,
-        b_a: args.usize_or("bits-a", 8) as u64,
-        b_acc: args.usize_or("bits-acc", 32) as u64,
+        b_w: args.usize_or("bits-w", base.b_w as usize) as u64,
+        b_a: args.usize_or("bits-a", base.b_a as usize) as u64,
+        b_acc: args.usize_or("bits-acc", base.b_acc as usize) as u64,
     };
     args.finish().map_err(anyhow::Error::msg)?;
 
@@ -236,6 +275,45 @@ fn cmd_mem_report(args: &mut Args) -> Result<()> {
         format!("+{:.0}%", (tot_d as f64 / tot_s as f64 - 1.0) * 100.0),
     ]);
     table.print();
+
+    // under a scheme, the gradient clause drives the backward pass —
+    // report it so `g:<bits>` visibly changes the numbers.  The
+    // explicit bit flags already resolved into `b` apply here too, so
+    // forward and backward bill the same datapath.
+    if let Some(scheme) = &scheme {
+        let bb = BwdBits {
+            b_g: BwdBits::from_scheme(scheme).b_g,
+            b_a: b.b_a,
+            b_w: b.b_w,
+            b_acc: b.b_acc,
+        };
+        let mut bt = Table::new(
+            &format!("Backward pass under scheme (G at {} bits)", bb.b_g),
+            &["Layer", "Static", "Dynamic", "Delta"],
+        );
+        let mut bs = 0u64;
+        let mut bd = 0u64;
+        for g in &layers {
+            let c = backward::bwd_compare(g, bb);
+            bs += c.static_bits;
+            bd += c.dynamic_bits;
+            bt.row(&[
+                g.name.to_string(),
+                format!("{:.0} KB", c.static_kb()),
+                format!("{:.0} KB", c.dynamic_kb()),
+                format!("+{:.0}%", c.delta_percent()),
+            ]);
+        }
+        bt.row(&[
+            "TOTAL".into(),
+            format!("{:.0} KB", bs as f64 / 8.0 / 1024.0),
+            format!("{:.0} KB", bd as f64 / 8.0 / 1024.0),
+            format!("+{:.0}%", (bd as f64 / bs as f64 - 1.0) * 100.0),
+        ]);
+        bt.print();
+        let step_ratio = (tot_d + bd) as f64 / (tot_s + bs) as f64;
+        println!("training step (fwd + bwd) dynamic/static ratio: {step_ratio:.2}x");
+    }
     Ok(())
 }
 

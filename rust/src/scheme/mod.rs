@@ -1,0 +1,506 @@
+//! Typed per-tensor-class quantization schemes.
+//!
+//! The paper's experiments are inherently per-tensor-class: gradients use
+//! in-hindsight estimation while activations may use running min-max and
+//! weights current min-max, at independently chosen bit-widths (Tables
+//! 1-3, W8/A8/G8 vs W4/A4/G8).  This module replaces the old flat
+//! two-knob configuration (one gradient estimator, one activation
+//! estimator, a global `eta`, an implicit global bit-width) with a
+//! composable policy object:
+//!
+//! * [`QuantSpec`] — how one tensor class is quantized: the range
+//!   [`Estimator`], the bit-width, the EMA momentum `eta` and an optional
+//!   symmetric-grid constraint.  Granularity (per-tensor vs per-channel)
+//!   is part of the estimator's identity (the `@pc` key suffix) and is
+//!   exposed through [`QuantSpec::granularity`].
+//! * [`TensorClass`] — the three classes the training graph quantizes:
+//!   weights, activations, gradients.
+//! * [`QuantScheme`] — one spec per class plus per-site overrides keyed
+//!   by quantizer-site name, with a builder
+//!   (`QuantScheme::w8a8g8().grad("hindsight@pc")?.bits(TensorClass::Gradients, 4)`)
+//!   and a canonical string form
+//!   (`w:current:8 a:hindsight:8 g:hindsight@pc:4`) that parses and
+//!   round-trips (see [`parse`]).
+//!
+//! Consumers: `TrainConfig` carries a scheme instead of loose knobs,
+//! `RangeManager` resolves each site's spec at construction (per-site
+//! bits/eta flow into search and calibration), the accelerator simulator
+//! derives its per-class bit-widths from a scheme
+//! (`simulator::scheme`), and the CLI/sweeps/benches construct schemes
+//! via the builder or the string form.
+
+pub mod parse;
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::estimator::{Estimator, Granularity, RangeEstimator, SiteParams};
+
+/// Default bit-width of every tensor class (the paper's W8/A8/G8).
+pub const DEFAULT_BITS: u32 = 8;
+/// Default EMA momentum (paper Sec. 5: eta = 0.9).
+pub const DEFAULT_ETA: f32 = 0.9;
+/// Valid bit-width range for a scheme spec (2-bit grids up to the
+/// 16-bit headroom ablations probe; the accumulator stays 32-bit).
+pub const BITS_RANGE: std::ops::RangeInclusive<u32> = 2..=16;
+
+/// The three tensor classes the training graph quantizes (paper Fig. 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TensorClass {
+    /// layer weights (the paper quantizes them with current min-max)
+    Weights,
+    /// forward activations
+    Activations,
+    /// backward activation gradients (the paper's focus)
+    Gradients,
+}
+
+impl TensorClass {
+    /// All classes, in canonical (`w a g`) order.
+    pub fn all() -> [TensorClass; 3] {
+        [Self::Weights, Self::Activations, Self::Gradients]
+    }
+
+    /// The one-letter clause prefix of the string form.
+    pub fn token(self) -> &'static str {
+        match self {
+            Self::Weights => "w",
+            Self::Activations => "a",
+            Self::Gradients => "g",
+        }
+    }
+}
+
+/// How one tensor class (or one overridden site) is quantized.
+///
+/// `granularity` lives inside the estimator handle (`@pc` registry
+/// suffix) so it cannot drift out of sync; [`QuantSpec::granularity`]
+/// exposes it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantSpec {
+    /// range estimator (registry key, possibly `@pc`)
+    pub estimator: Estimator,
+    /// quantization bit-width (validated against [`BITS_RANGE`])
+    pub bits: u32,
+    /// EMA momentum for running/in-hindsight-style updates; also the
+    /// adaptation-rate knob stateful estimators may consume (TQT derives
+    /// its threshold step from it)
+    pub eta: f32,
+    /// force a zero-symmetric grid: the coordinator symmetrizes every
+    /// range row it adopts to `[-m, m]`, `m = max(|lo|, |hi|)`
+    pub symmetric: bool,
+}
+
+impl QuantSpec {
+    /// Spec with the paper's defaults (8 bits, eta 0.9, asymmetric).
+    pub fn new(estimator: Estimator) -> Self {
+        Self {
+            estimator,
+            bits: DEFAULT_BITS,
+            eta: DEFAULT_ETA,
+            symmetric: false,
+        }
+    }
+
+    /// Parse one clause body of the string form (`hindsight@pc:4`,
+    /// `current:8:eta=0.5:sym`); see [`parse`] for the grammar.
+    pub fn parse(clause: &str) -> Result<Self> {
+        parse::parse_spec(clause)
+    }
+
+    /// Quantizer granularity (delegates to the estimator handle).
+    pub fn granularity(&self) -> Granularity {
+        self.estimator.granularity()
+    }
+
+    pub fn is_per_channel(&self) -> bool {
+        self.estimator.is_per_channel()
+    }
+
+    /// Whether this spec quantizes its tensor class at all.
+    pub fn enabled(&self) -> bool {
+        self.estimator.enabled()
+    }
+
+    /// The per-site knobs handed to the estimator registry's factories.
+    pub fn params(&self) -> SiteParams {
+        SiteParams {
+            bits: self.bits,
+            eta: self.eta,
+        }
+    }
+
+    /// Bits this class actually moves on the accelerator datapath: the
+    /// spec's bit-width when it quantizes, full precision (32) when the
+    /// class is `fp32` — so traffic models never bill an unquantized
+    /// tensor at its (inert) spec bits.
+    pub fn datapath_bits(&self) -> u64 {
+        if self.enabled() {
+            self.bits as u64
+        } else {
+            32
+        }
+    }
+
+    /// Build the per-site estimator instance for a site with
+    /// `n_channels` channel groups, honoring granularity and handing the
+    /// spec's bits/eta to the registry factory.
+    pub fn instantiate_site(&self, n_channels: usize) -> Box<dyn RangeEstimator> {
+        self.estimator.instantiate_site_with(self.params(), n_channels)
+    }
+
+    pub fn with_bits(mut self, bits: u32) -> Self {
+        assert!(
+            BITS_RANGE.contains(&bits),
+            "bits {bits} outside the supported {}..={} range",
+            BITS_RANGE.start(),
+            BITS_RANGE.end()
+        );
+        self.bits = bits;
+        self
+    }
+
+    pub fn with_eta(mut self, eta: f32) -> Self {
+        assert!((0.0..=1.0).contains(&eta), "eta {eta} outside [0, 1]");
+        self.eta = eta;
+        self
+    }
+
+    pub fn with_symmetric(mut self, on: bool) -> Self {
+        self.symmetric = on;
+        self
+    }
+}
+
+/// One [`QuantSpec`] per tensor class plus per-site overrides, keyed by
+/// quantizer-site name.  This is the whole quantization policy of a run:
+/// `TrainConfig` carries one, `RangeManager` resolves it per site, the
+/// simulator derives per-class bit-widths from it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantScheme {
+    pub weights: QuantSpec,
+    pub activations: QuantSpec,
+    pub gradients: QuantSpec,
+    /// site-name → spec; wins over the class spec for that site only
+    overrides: BTreeMap<String, QuantSpec>,
+}
+
+impl QuantScheme {
+    /// No quantization anywhere (every class `fp32`).
+    pub fn fp32() -> Self {
+        Self {
+            weights: QuantSpec::new(Estimator::FP32),
+            activations: QuantSpec::new(Estimator::FP32),
+            gradients: QuantSpec::new(Estimator::FP32),
+            overrides: BTreeMap::new(),
+        }
+    }
+
+    /// The paper's fully quantized W8/A8/G8 setting with in-hindsight
+    /// ranges — identical to the legacy `fully_quantized(HINDSIGHT)`
+    /// configuration (weights current min-max, acts/grads in-hindsight,
+    /// 8 bits everywhere; parity is pinned bit-for-bit on the simulator
+    /// path in `simulator::scheme`).
+    pub fn w8a8g8() -> Self {
+        Self::fully_quantized(Estimator::HINDSIGHT)
+    }
+
+    /// Fully quantized setting for `est`: gradients use `est`,
+    /// activations fall back to current min-max for search-based
+    /// (`needs_search`) estimators (paper Table 3's DSGC row), weights
+    /// are quantized (current min-max) iff `est` quantizes at all.
+    pub fn fully_quantized(est: Estimator) -> Self {
+        Self::fp32().with_fully_quantized(est)
+    }
+
+    /// Gradient-quantization-only study (paper Table 1).
+    pub fn grad_only(est: Estimator) -> Self {
+        Self::fp32().with_grad_only(est)
+    }
+
+    /// Activation-quantization-only study (paper Table 2).
+    pub fn act_only(est: Estimator) -> Self {
+        Self::fp32().with_act_only(est)
+    }
+
+    // The `with_*` variants re-point the class *estimators* of an
+    // existing scheme while preserving everything else (per-class
+    // bits/eta/symmetry and site overrides) — what a sweep wants when
+    // the base scheme came from user flags.
+
+    /// [`QuantScheme::fully_quantized`] applied to this scheme's
+    /// estimators, keeping its bits/eta/sym attrs and overrides.
+    pub fn with_fully_quantized(mut self, est: Estimator) -> Self {
+        self.gradients.estimator = est;
+        self.activations.estimator =
+            if est.needs_search() { Estimator::CURRENT } else { est };
+        self.weights.estimator =
+            if est.enabled() { Estimator::CURRENT } else { Estimator::FP32 };
+        self
+    }
+
+    /// [`QuantScheme::grad_only`] applied to this scheme's estimators.
+    pub fn with_grad_only(mut self, est: Estimator) -> Self {
+        self.gradients.estimator = est;
+        self.activations.estimator = Estimator::FP32;
+        self.weights.estimator = Estimator::FP32;
+        self
+    }
+
+    /// [`QuantScheme::act_only`] applied to this scheme's estimators.
+    pub fn with_act_only(mut self, est: Estimator) -> Self {
+        self.activations.estimator = est;
+        self.gradients.estimator = Estimator::FP32;
+        self.weights.estimator = Estimator::FP32;
+        self
+    }
+
+    /// Parse the canonical string form; see [`parse`] for the grammar.
+    pub fn parse(s: &str) -> Result<Self> {
+        parse::parse_scheme(s)
+    }
+
+    /// The spec of one tensor class.
+    pub fn spec(&self, class: TensorClass) -> &QuantSpec {
+        match class {
+            TensorClass::Weights => &self.weights,
+            TensorClass::Activations => &self.activations,
+            TensorClass::Gradients => &self.gradients,
+        }
+    }
+
+    pub fn spec_mut(&mut self, class: TensorClass) -> &mut QuantSpec {
+        match class {
+            TensorClass::Weights => &mut self.weights,
+            TensorClass::Activations => &mut self.activations,
+            TensorClass::Gradients => &mut self.gradients,
+        }
+    }
+
+    /// Resolve the spec governing one quantizer site: a per-site
+    /// override if present, else the class spec.
+    pub fn site_spec(&self, class: TensorClass, site: &str) -> QuantSpec {
+        self.overrides.get(site).copied().unwrap_or(*self.spec(class))
+    }
+
+    /// The per-site overrides, in site-name order.
+    pub fn overrides(&self) -> impl Iterator<Item = (&str, &QuantSpec)> {
+        self.overrides.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    // ---- builder --------------------------------------------------------
+
+    /// Set the gradient estimator from a registry key (`"hindsight@pc"`).
+    pub fn grad(self, key: &str) -> Result<Self> {
+        Ok(self.grad_est(Estimator::parse(key)?))
+    }
+
+    /// Set the activation estimator from a registry key.
+    pub fn act(self, key: &str) -> Result<Self> {
+        Ok(self.act_est(Estimator::parse(key)?))
+    }
+
+    /// Set the weight estimator from a registry key (`"current"` to
+    /// quantize weights, `"fp32"` to disable).
+    pub fn weights(self, key: &str) -> Result<Self> {
+        Ok(self.weights_est(Estimator::parse(key)?))
+    }
+
+    pub fn grad_est(mut self, est: Estimator) -> Self {
+        self.gradients.estimator = est;
+        self
+    }
+
+    pub fn act_est(mut self, est: Estimator) -> Self {
+        self.activations.estimator = est;
+        self
+    }
+
+    pub fn weights_est(mut self, est: Estimator) -> Self {
+        self.weights.estimator = est;
+        self
+    }
+
+    /// Set one class's bit-width (panics outside [`BITS_RANGE`]; the
+    /// string-form parser reports the same constraint as an error).
+    pub fn bits(mut self, class: TensorClass, bits: u32) -> Self {
+        let spec = self.spec(class).with_bits(bits);
+        *self.spec_mut(class) = spec;
+        self
+    }
+
+    /// Set one class's EMA momentum.
+    pub fn eta(mut self, class: TensorClass, eta: f32) -> Self {
+        let spec = self.spec(class).with_eta(eta);
+        *self.spec_mut(class) = spec;
+        self
+    }
+
+    /// Set every class's EMA momentum (the legacy global `--eta` knob).
+    pub fn eta_all(mut self, eta: f32) -> Self {
+        for class in TensorClass::all() {
+            let spec = self.spec(class).with_eta(eta);
+            *self.spec_mut(class) = spec;
+        }
+        self
+    }
+
+    /// Force a zero-symmetric grid for one class.
+    pub fn symmetric(mut self, class: TensorClass, on: bool) -> Self {
+        self.spec_mut(class).symmetric = on;
+        self
+    }
+
+    /// Override one site's spec by quantizer-site name (wins over the
+    /// class spec for that site only).  Site names must be single
+    /// tokens: no whitespace, `:` or `@`.
+    pub fn override_site(mut self, site: &str, spec: QuantSpec) -> Result<Self> {
+        parse::validate_site_name(site)?;
+        self.overrides.insert(site.to_string(), spec);
+        Ok(self)
+    }
+
+    /// Override one site's spec from a clause body (`"tqt:8"`).
+    pub fn override_site_str(self, site: &str, clause: &str) -> Result<Self> {
+        let spec = QuantSpec::parse(clause)?;
+        self.override_site(site, spec)
+    }
+
+    // ---- derived views --------------------------------------------------
+
+    /// The single `eta` scalar fed to the compiled train graph.  The
+    /// graph ABI has one EMA momentum for all in-graph range updates, so
+    /// it follows the gradient class (the paper's estimation target);
+    /// per-class `eta` differences still apply to all coordinator-side
+    /// math (calibration, stateful estimators).
+    pub fn graph_eta(&self) -> f32 {
+        self.gradients.eta
+    }
+
+    /// Filesystem-friendly one-token form of the canonical string
+    /// (spaces replaced by `_`), for run tags and sweep labels.
+    pub fn tag(&self) -> String {
+        self.to_string().replace(' ', "_")
+    }
+}
+
+impl Default for QuantScheme {
+    /// The paper's headline setting ([`QuantScheme::w8a8g8`]).
+    fn default() -> Self {
+        Self::w8a8g8()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn w8a8g8_matches_the_legacy_fully_quantized_defaults() {
+        let s = QuantScheme::w8a8g8();
+        assert_eq!(s.gradients.estimator, Estimator::HINDSIGHT);
+        assert_eq!(s.activations.estimator, Estimator::HINDSIGHT);
+        assert_eq!(s.weights.estimator, Estimator::CURRENT);
+        assert!(s.weights.enabled());
+        for class in TensorClass::all() {
+            assert_eq!(s.spec(class).bits, 8);
+            assert_eq!(s.spec(class).eta, DEFAULT_ETA);
+            assert!(!s.spec(class).symmetric);
+        }
+        assert_eq!(s, QuantScheme::default());
+        assert_eq!(s, QuantScheme::fully_quantized(Estimator::HINDSIGHT));
+    }
+
+    #[test]
+    fn fully_quantized_applies_the_search_and_fp32_fallbacks() {
+        // search estimators quantize gradients; acts fall back to current
+        let d = QuantScheme::fully_quantized(Estimator::DSGC);
+        assert_eq!(d.gradients.estimator, Estimator::DSGC);
+        assert_eq!(d.activations.estimator, Estimator::CURRENT);
+        assert!(d.weights.enabled());
+        // fp32 disables weight quantization too
+        let f = QuantScheme::fully_quantized(Estimator::FP32);
+        assert!(!f.weights.enabled());
+        assert!(!f.activations.enabled());
+    }
+
+    #[test]
+    fn grad_and_act_only_studies() {
+        let g = QuantScheme::grad_only(Estimator::DSGC);
+        assert_eq!(g.gradients.estimator, Estimator::DSGC);
+        assert!(!g.activations.enabled());
+        assert!(!g.weights.enabled());
+        let a = QuantScheme::act_only(Estimator::RUNNING);
+        assert_eq!(a.activations.estimator, Estimator::RUNNING);
+        assert!(!a.gradients.enabled());
+    }
+
+    #[test]
+    fn builder_chain_from_the_issue() {
+        let s = QuantScheme::w8a8g8()
+            .grad("hindsight@pc")
+            .unwrap()
+            .bits(TensorClass::Gradients, 4);
+        assert!(s.gradients.is_per_channel());
+        assert_eq!(s.gradients.bits, 4);
+        assert_eq!(s.activations.bits, 8);
+        assert_eq!(s.to_string(), "w:current:8 a:hindsight:8 g:hindsight@pc:4");
+    }
+
+    #[test]
+    fn site_overrides_win_for_their_site_only() {
+        let s = QuantScheme::w8a8g8()
+            .override_site_str("fc1_g", "tqt:6")
+            .unwrap();
+        let o = s.site_spec(TensorClass::Gradients, "fc1_g");
+        assert_eq!(o.estimator.key(), "tqt");
+        assert_eq!(o.bits, 6);
+        let base = s.site_spec(TensorClass::Gradients, "fc0_g");
+        assert_eq!(base.estimator, Estimator::HINDSIGHT);
+        assert_eq!(s.overrides().count(), 1);
+    }
+
+    #[test]
+    fn bad_site_names_are_rejected() {
+        let spec = QuantSpec::new(Estimator::HINDSIGHT);
+        assert!(QuantScheme::w8a8g8().override_site("has space", spec).is_err());
+        assert!(QuantScheme::w8a8g8().override_site("has:colon", spec).is_err());
+        assert!(QuantScheme::w8a8g8().override_site("", spec).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the supported")]
+    fn builder_rejects_out_of_range_bits() {
+        let _ = QuantScheme::w8a8g8().bits(TensorClass::Gradients, 1);
+    }
+
+    #[test]
+    fn eta_flows_per_class_and_graph_eta_follows_gradients() {
+        let s = QuantScheme::w8a8g8()
+            .eta(TensorClass::Activations, 0.5)
+            .eta(TensorClass::Gradients, 0.75);
+        assert_eq!(s.activations.eta, 0.5);
+        assert_eq!(s.graph_eta(), 0.75);
+        let all = QuantScheme::w8a8g8().eta_all(0.25);
+        for class in TensorClass::all() {
+            assert_eq!(all.spec(class).eta, 0.25);
+        }
+    }
+
+    #[test]
+    fn spec_instantiation_honors_granularity_and_params() {
+        let pc = QuantSpec::new(Estimator::parse("hindsight@pc").unwrap());
+        assert_eq!(pc.instantiate_site(3).n_rows(), 3);
+        let pt = QuantSpec::new(Estimator::HINDSIGHT);
+        assert_eq!(pt.instantiate_site(3).n_rows(), 1);
+        assert_eq!(pt.params(), SiteParams { bits: 8, eta: DEFAULT_ETA });
+    }
+
+    #[test]
+    fn tag_is_single_token() {
+        let tag = QuantScheme::w8a8g8().tag();
+        assert!(!tag.contains(' '), "{tag}");
+        assert!(tag.contains("g:hindsight:8"), "{tag}");
+    }
+}

@@ -1,0 +1,337 @@
+//! The canonical string form of a [`QuantScheme`] and its parser.
+//!
+//! Grammar (whitespace-separated clauses, each class at most once;
+//! unmentioned classes default to `fp32`):
+//!
+//! ```text
+//!   scheme  := clause (ws clause)*
+//!   clause  := ('w' | 'a' | 'g') ':' spec      per-class spec
+//!            | '@' site-name ':' spec          per-site override
+//!   spec    := est-key ['@pc'] (':' attr)*
+//!   attr    := <bits>                          integer in 2..=16
+//!            | 'eta=' <float>                  EMA momentum in [0, 1]
+//!            | 'sym'                           zero-symmetric grid
+//! ```
+//!
+//! Examples: `w:current:8 a:hindsight:8 g:hindsight@pc:4`,
+//! `g:tqt:8:eta=0.95`, `w:fp32:8 a:fp32:8 g:dsgc:8 @fc1_g:sampled:8`.
+//!
+//! `Display` emits the canonical form (every class, explicit bits,
+//! non-default `eta`/`sym` attrs, overrides in site-name order) and
+//! round-trips: `QuantScheme::parse(&s.to_string()) == s` for every
+//! valid scheme — pinned by property tests below across all registry
+//! keys × granularities × bit-widths.
+//!
+//! Errors enumerate the valid registry keys and the `@pc` / `:bits`
+//! suffix syntax instead of just echoing the bad token.
+
+use std::fmt;
+
+use anyhow::{bail, Context, Result};
+
+use super::{QuantScheme, QuantSpec, TensorClass, BITS_RANGE, DEFAULT_ETA};
+use crate::estimator::Estimator;
+
+/// One-paragraph grammar reminder appended to parse errors and printed
+/// by `hindsight estimators`.
+pub fn syntax_help() -> String {
+    format!(
+        "scheme syntax: whitespace-separated clauses `<class>:<est>[@pc][:<bits>][:eta=<f>][:sym]` \
+         with class one of w|a|g (or `@<site>` for a per-site override); \
+         estimator keys: {}; bits in {}..={}; e.g. \
+         'w:current:8 a:hindsight:8 g:hindsight@pc:4'",
+        Estimator::keys().join("|"),
+        BITS_RANGE.start(),
+        BITS_RANGE.end()
+    )
+}
+
+/// Parse an EMA momentum, enforcing the one range rule every surface
+/// shares (`eta=` attrs, the CLI `--eta` flag).
+pub fn parse_eta(v: &str) -> Result<f32> {
+    v.parse()
+        .ok()
+        .filter(|e: &f32| (0.0..=1.0).contains(e))
+        .with_context(|| format!("bad eta '{v}' — expected a float in [0, 1]"))
+}
+
+/// Reject site names the string form cannot represent.
+pub(super) fn validate_site_name(site: &str) -> Result<()> {
+    if site.is_empty()
+        || site
+            .chars()
+            .any(|c| c.is_whitespace() || c == ':' || c == '@')
+    {
+        bail!(
+            "invalid site name '{site}': overrides are keyed by single-token \
+             site names (no whitespace, ':' or '@')"
+        );
+    }
+    Ok(())
+}
+
+/// Parse one clause body (`hindsight@pc:4:eta=0.5:sym`).
+pub(super) fn parse_spec(body: &str) -> Result<QuantSpec> {
+    let mut parts = body.split(':');
+    let key = parts.next().unwrap_or("");
+    if key.is_empty() {
+        bail!("empty estimator key in '{body}' — {}", syntax_help());
+    }
+    let estimator =
+        Estimator::parse(key).with_context(|| format!("in spec '{body}' — {}", syntax_help()))?;
+    let mut spec = QuantSpec::new(estimator);
+    let mut saw_bits = false;
+    for attr in parts {
+        if let Some(v) = attr.strip_prefix("eta=") {
+            spec.eta = parse_eta(v).with_context(|| format!("in '{body}'"))?;
+        } else if attr == "sym" {
+            spec.symmetric = true;
+        } else if !attr.is_empty() && attr.chars().all(|c| c.is_ascii_digit()) {
+            if saw_bits {
+                bail!("duplicate bit-width attr '{attr}' in '{body}'");
+            }
+            let bits: u32 = attr.parse().with_context(|| format!("bad bits '{attr}'"))?;
+            if !BITS_RANGE.contains(&bits) {
+                bail!(
+                    "bits {bits} in '{body}' outside the supported {}..={} range",
+                    BITS_RANGE.start(),
+                    BITS_RANGE.end()
+                );
+            }
+            spec.bits = bits;
+            saw_bits = true;
+        } else {
+            bail!(
+                "unknown attribute '{attr}' in '{body}' — expected a bit-width \
+                 ({}..={}), 'eta=<f>' or 'sym'; {}",
+                BITS_RANGE.start(),
+                BITS_RANGE.end(),
+                syntax_help()
+            );
+        }
+    }
+    Ok(spec)
+}
+
+/// Parse the whole scheme string; see the module docs for the grammar.
+pub(super) fn parse_scheme(s: &str) -> Result<QuantScheme> {
+    let mut scheme = QuantScheme::fp32();
+    let mut seen = [false; 3];
+    let mut any = false;
+    for tok in s.split_whitespace() {
+        any = true;
+        let Some((head, body)) = tok.split_once(':') else {
+            bail!("clause '{tok}' has no ':' — {}", syntax_help());
+        };
+        if let Some(site) = head.strip_prefix('@') {
+            validate_site_name(site)?;
+            let spec = parse_spec(body)?;
+            if scheme.overrides.insert(site.to_string(), spec).is_some() {
+                bail!("duplicate override for site '{site}'");
+            }
+        } else {
+            let class = match head {
+                "w" => TensorClass::Weights,
+                "a" => TensorClass::Activations,
+                "g" => TensorClass::Gradients,
+                other => bail!(
+                    "unknown tensor class '{other}' in clause '{tok}' — {}",
+                    syntax_help()
+                ),
+            };
+            let idx = TensorClass::all().iter().position(|c| *c == class).unwrap();
+            if seen[idx] {
+                bail!("duplicate clause for tensor class '{head}'");
+            }
+            seen[idx] = true;
+            *scheme.spec_mut(class) = parse_spec(body)?;
+        }
+    }
+    if !any {
+        bail!("empty scheme string — {}", syntax_help());
+    }
+    Ok(scheme)
+}
+
+impl fmt::Display for QuantSpec {
+    /// Canonical clause body: `est[@pc]:bits[:eta=<f>][:sym]` (bits
+    /// always explicit, `eta` only when non-default).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}", self.estimator.spec(), self.bits)?;
+        if self.eta != DEFAULT_ETA {
+            write!(f, ":eta={}", self.eta)?;
+        }
+        if self.symmetric {
+            write!(f, ":sym")?;
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for QuantScheme {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "w:{} a:{} g:{}",
+            self.weights, self.activations, self.gradients
+        )?;
+        for (site, spec) in &self.overrides {
+            write!(f, " @{site}:{spec}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimator::Granularity;
+    use crate::util::testkit::forall;
+
+    #[test]
+    fn the_issue_example_parses_and_round_trips() {
+        let s = QuantScheme::parse("w:current:8 a:hindsight:8 g:hindsight@pc:4").unwrap();
+        assert_eq!(s.weights.estimator, Estimator::CURRENT);
+        assert_eq!(s.activations.estimator, Estimator::HINDSIGHT);
+        assert_eq!(s.gradients.estimator.key(), "hindsight");
+        assert!(s.gradients.is_per_channel());
+        assert_eq!(s.gradients.bits, 4);
+        assert_eq!(s.to_string(), "w:current:8 a:hindsight:8 g:hindsight@pc:4");
+        assert_eq!(QuantScheme::parse(&s.to_string()).unwrap(), s);
+    }
+
+    #[test]
+    fn unmentioned_classes_default_to_fp32() {
+        let s = QuantScheme::parse("g:dsgc:8").unwrap();
+        assert!(!s.weights.enabled());
+        assert!(!s.activations.enabled());
+        assert_eq!(s.gradients.estimator, Estimator::DSGC);
+        assert_eq!(s, QuantScheme::grad_only(Estimator::DSGC));
+    }
+
+    #[test]
+    fn attrs_parse_in_any_order() {
+        let a = QuantScheme::parse("g:hindsight:4:eta=0.5:sym").unwrap();
+        let b = QuantScheme::parse("g:hindsight:sym:eta=0.5:4").unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.gradients.bits, 4);
+        assert_eq!(a.gradients.eta, 0.5);
+        assert!(a.gradients.symmetric);
+        // bits default to 8 when omitted
+        let c = QuantScheme::parse("g:hindsight").unwrap();
+        assert_eq!(c.gradients.bits, 8);
+    }
+
+    #[test]
+    fn overrides_parse_and_round_trip_in_name_order() {
+        let s = QuantScheme::parse("g:dsgc:8 @b_site:tqt:6 @a_site:sampled:8").unwrap();
+        assert_eq!(s.overrides().count(), 2);
+        assert_eq!(
+            s.to_string(),
+            "w:fp32:8 a:fp32:8 g:dsgc:8 @a_site:sampled:8 @b_site:tqt:6"
+        );
+        assert_eq!(QuantScheme::parse(&s.to_string()).unwrap(), s);
+    }
+
+    #[test]
+    fn errors_enumerate_keys_and_suffix_syntax() {
+        let err = QuantScheme::parse("g:bogus:8").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown estimator 'bogus'"), "{msg}");
+        for key in Estimator::keys() {
+            assert!(msg.contains(key), "error must list '{key}': {msg}");
+        }
+        assert!(msg.contains("@pc"), "{msg}");
+        assert!(msg.contains(":<bits>"), "{msg}");
+
+        let err = format!("{:#}", QuantScheme::parse("x:hindsight:8").unwrap_err());
+        assert!(err.contains("unknown tensor class 'x'"), "{err}");
+        assert!(err.contains("w|a|g"), "{err}");
+
+        let err = format!("{:#}", QuantScheme::parse("g:hindsight:wat").unwrap_err());
+        assert!(err.contains("unknown attribute 'wat'"), "{err}");
+        assert!(err.contains("eta=<f>"), "{err}");
+    }
+
+    #[test]
+    fn malformed_schemes_are_rejected() {
+        assert!(QuantScheme::parse("").is_err());
+        assert!(QuantScheme::parse("   ").is_err());
+        assert!(QuantScheme::parse("g").is_err()); // no ':'
+        assert!(QuantScheme::parse("g:").is_err()); // empty key
+        assert!(QuantScheme::parse("g:hindsight:8 g:current:8").is_err()); // dup class
+        assert!(QuantScheme::parse("@s:tqt:8 @s:tqt:8").is_err()); // dup site
+        assert!(QuantScheme::parse("g:hindsight:1").is_err()); // bits too low
+        assert!(QuantScheme::parse("g:hindsight:99").is_err()); // bits too high
+        assert!(QuantScheme::parse("g:hindsight:4:4").is_err()); // dup bits
+        assert!(QuantScheme::parse("g:hindsight:eta=2.0").is_err()); // eta range
+        assert!(QuantScheme::parse("g:hindsight@bogus:8").is_err()); // bad gran
+        assert!(QuantScheme::parse("@:tqt:8").is_err()); // empty site
+    }
+
+    /// Satellite acceptance: the string form round-trips for every
+    /// registry key × granularity × bit-width 2..=8, exhaustively, in
+    /// every class slot.
+    #[test]
+    fn round_trip_exhaustive_over_keys_granularities_and_bits() {
+        for est in Estimator::all() {
+            for pc in [false, true] {
+                let est = if pc { est.per_channel() } else { est };
+                for bits in 2u32..=8 {
+                    for class in TensorClass::all() {
+                        let mut s = QuantScheme::w8a8g8();
+                        s.spec_mut(class).estimator = est;
+                        let s = s.bits(class, bits);
+                        let rendered = s.to_string();
+                        let parsed = QuantScheme::parse(&rendered)
+                            .unwrap_or_else(|e| panic!("'{rendered}' failed: {e:#}"));
+                        assert_eq!(parsed, s, "round trip of '{rendered}'");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Randomized round trip over full schemes: random estimators,
+    /// granularities, bits, eta, sym and overrides per case.
+    #[test]
+    fn round_trip_random_schemes() {
+        let keys = Estimator::keys();
+        forall(
+            128,
+            "scheme-round-trip",
+            |rng| {
+                let spec = |rng: &mut crate::util::rng::Pcg32| {
+                    let mut est = Estimator::parse(keys[rng.below(keys.len())]).unwrap();
+                    if rng.below(2) == 1 {
+                        est = est.per_channel();
+                    }
+                    let mut q = QuantSpec::new(est).with_bits(2 + rng.below(7) as u32);
+                    if rng.below(2) == 1 {
+                        // quarter-steps land on exact f32 values
+                        q = q.with_eta(rng.below(5) as f32 * 0.25);
+                    }
+                    q.symmetric = rng.below(2) == 1;
+                    q
+                };
+                let mut s = QuantScheme::fp32();
+                s.weights = spec(rng);
+                s.activations = spec(rng);
+                s.gradients = spec(rng);
+                for i in 0..rng.below(3) {
+                    s = s.override_site(&format!("site{i}"), spec(rng)).unwrap();
+                }
+                s
+            },
+            |s| QuantScheme::parse(&s.to_string()).unwrap() == *s,
+        );
+    }
+
+    #[test]
+    fn granularity_survives_the_string_form() {
+        let s = QuantScheme::parse("a:running@pc:8 g:tqt@pc:4").unwrap();
+        assert_eq!(s.activations.granularity(), Granularity::PerChannel);
+        assert_eq!(s.gradients.granularity(), Granularity::PerChannel);
+        assert_eq!(s.weights.granularity(), Granularity::PerTensor);
+    }
+}

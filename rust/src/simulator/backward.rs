@@ -20,7 +20,7 @@ use super::traffic::{BitWidths, Conv2dGeom, TrafficCost};
 use crate::quant::kernel;
 
 /// Bit-widths of the backward datapath.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BwdBits {
     /// activation-gradient bit-width (G8 in the paper)
     pub b_g: u64,
@@ -38,6 +38,20 @@ impl Default for BwdBits {
             b_g: 8,
             b_a: 8,
             b_w: 8,
+            b_acc: 32,
+        }
+    }
+}
+
+impl BwdBits {
+    /// Backward-path bit-widths of a quantization scheme: per-class bits
+    /// from the gradient/activation/weight specs (32 for disabled/fp32
+    /// classes), 32-bit accumulator.
+    pub fn from_scheme(scheme: &crate::scheme::QuantScheme) -> Self {
+        Self {
+            b_g: scheme.gradients.datapath_bits(),
+            b_a: scheme.activations.datapath_bits(),
+            b_w: scheme.weights.datapath_bits(),
             b_acc: 32,
         }
     }

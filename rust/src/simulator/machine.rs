@@ -95,6 +95,38 @@ impl Default for MacArray {
 }
 
 impl MacArray {
+    /// Machine with the datapath widths of a quantization scheme
+    /// (weight/activation bits from the class specs, 32 for disabled
+    /// fp32 classes; default array size and 32-bit accumulator).
+    pub fn from_scheme(scheme: &crate::scheme::QuantScheme) -> Self {
+        Self {
+            b_w: scheme.weights.datapath_bits(),
+            b_a: scheme.activations.datapath_bits(),
+            ..Default::default()
+        }
+    }
+}
+
+impl Policy {
+    /// The accumulator policy a [`QuantSpec`](crate::scheme::QuantSpec)
+    /// implies for the tensor it quantizes, given the coordinator-held
+    /// range rows of the site: static estimators requantize at the
+    /// accumulator with the pre-computed row(s) — one per channel group
+    /// for `@pc` specs — while dynamic estimators pay the two-pass
+    /// round trip.
+    pub fn for_spec(spec: &crate::scheme::QuantSpec, rows: &[[f32; 2]]) -> Policy {
+        assert!(!rows.is_empty(), "policy needs at least one range row");
+        if !spec.estimator.is_static() {
+            Policy::Dynamic
+        } else if spec.is_per_channel() {
+            Policy::StaticPerChannel { ranges: rows.to_vec() }
+        } else {
+            Policy::Static { qmin: rows[0][0], qmax: rows[0][1] }
+        }
+    }
+}
+
+impl MacArray {
     /// Run `Y[m,n] = A[m,k] @ W[k,n]` where A/W are *real-valued* tensors
     /// pre-quantized to (qp_a, qp_w) grids; the machine operates on their
     /// integer indices exactly like silicon would.

@@ -10,9 +10,13 @@
 //!   tracking per-phase DMA bytes; it realizes Figs. 2 and 4 in numbers
 //!   and cross-validates the closed form (integration tests assert the
 //!   two agree).
+//! * [`scheme`] — the bridge from the typed `QuantScheme` API: per-class
+//!   bit-widths and policies resolve from a scheme, so mixed-precision
+//!   settings (`g:hindsight@pc:4`) execute end-to-end here.
 
 pub mod backward;
 pub mod machine;
+pub mod scheme;
 pub mod traffic;
 
 pub use traffic::{Conv2dGeom, TrafficCost};

@@ -1,0 +1,268 @@
+//! Scheme-driven accelerator simulation: the bridge between the typed
+//! [`QuantScheme`] API and the fixed-point machine/traffic models.
+//!
+//! The compiled engine artifacts are fixed-bit (W8/A8/G8), so
+//! mixed-precision schemes — `w:current:8 a:hindsight:8 g:hindsight@pc:4`
+//! — execute end-to-end *here*: per-class bit-widths resolve from the
+//! scheme into the forward ([`BitWidths::from_scheme`]) and backward
+//! ([`BwdBits::from_scheme`]) datapaths, the activation spec picks the
+//! accumulator [`Policy`] (static single-store vs dynamic round trip,
+//! per-tensor vs per-channel), and the gradient spec drives the fused
+//! `G_X` store.  [`QuantScheme::w8a8g8`] reproduces the legacy default
+//! simulator configuration bit-for-bit (pinned below).
+
+use crate::quant::QuantParams;
+use crate::scheme::QuantScheme;
+use crate::simulator::backward::{bwd_compare, store_gx_static, store_gx_static_axis, BwdBits};
+use crate::simulator::machine::{MacArray, Policy, RunResult};
+use crate::simulator::traffic::{compare, BitWidths, Conv2dGeom, TrafficCost};
+
+/// Traffic accounting of one layer under one scheme: forward eq. (4)/(5)
+/// at the scheme's W/A bits, backward analogue at its G bits.
+#[derive(Debug, Clone)]
+pub struct LayerTraffic {
+    pub fwd: TrafficCost,
+    pub bwd: TrafficCost,
+    /// the bit-widths the scheme resolved to (reported so callers can
+    /// verify per-class bits end-to-end)
+    pub fwd_bits: BitWidths,
+    pub bwd_bits: BwdBits,
+}
+
+impl LayerTraffic {
+    /// Whole-training-step ratio (dynamic / static), the Sec. 6 number.
+    pub fn step_ratio(&self) -> f64 {
+        (self.fwd.dynamic_bits + self.bwd.dynamic_bits) as f64
+            / (self.fwd.static_bits + self.bwd.static_bits) as f64
+    }
+}
+
+/// Closed-form eq. (4)/(5) traffic of `geom` under `scheme`.
+pub fn layer_traffic(scheme: &QuantScheme, geom: &Conv2dGeom) -> LayerTraffic {
+    let fwd_bits = BitWidths::from_scheme(scheme);
+    let bwd_bits = BwdBits::from_scheme(scheme);
+    LayerTraffic {
+        fwd: compare(geom, fwd_bits),
+        bwd: bwd_compare(geom, bwd_bits),
+        fwd_bits,
+        bwd_bits,
+    }
+}
+
+/// Execute one forward GEMM on the MAC-array machine under `scheme`:
+/// datapath widths from the weight/activation specs, output requantized
+/// at the activation bits under the activation spec's policy
+/// (`act_rows` are the coordinator-held range rows of the output site —
+/// one row per channel group for `@pc` specs).  The activation spec
+/// must quantize (`enabled`); an fp32 class has no machine-level store
+/// policy.
+#[allow(clippy::too_many_arguments)]
+pub fn forward_gemm(
+    scheme: &QuantScheme,
+    a: &[f32],
+    w: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    qp_a: QuantParams,
+    qp_w: QuantParams,
+    act_rows: &[[f32; 2]],
+) -> RunResult {
+    assert!(
+        scheme.activations.enabled(),
+        "forward_gemm needs a quantizing activation spec (got '{}')",
+        scheme.activations.estimator.key()
+    );
+    let mac = MacArray::from_scheme(scheme);
+    let policy = Policy::for_spec(&scheme.activations, act_rows);
+    mac.gemm(a, w, m, k, n, qp_a, qp_w, scheme.activations.bits, policy)
+}
+
+/// Quantize-and-store one backward `G_X` tensor under `scheme`: the
+/// gradient spec picks the bit-width and granularity of the fused store
+/// (`rows` as in [`forward_gemm`]).  Returns the per-row Fig. 3
+/// statistics and the bits moved — `gx.len() * g_bits`, which is how a
+/// mixed-precision `g:4` scheme is verified end-to-end.
+pub fn store_gradient(
+    scheme: &QuantScheme,
+    gx: &mut [f32],
+    rows: &[[f32; 2]],
+) -> (Vec<(f32, f32)>, u64) {
+    let b = BwdBits::from_scheme(scheme);
+    if scheme.gradients.is_per_channel() {
+        store_gx_static_axis(gx, rows, b)
+    } else {
+        let (stats, bits) = store_gx_static(gx, rows[0][0], rows[0][1], b);
+        (vec![stats], bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::minmax;
+    use crate::simulator::traffic::table5_layers;
+    use crate::util::rng::Pcg32;
+
+    fn inputs(m: usize, k: usize, n: usize) -> (Vec<f32>, Vec<f32>, QuantParams, QuantParams) {
+        let mut rng = Pcg32::new(41, 1);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.5).collect();
+        let (alo, ahi) = minmax(&a);
+        let (wlo, whi) = minmax(&w);
+        (
+            a,
+            w,
+            QuantParams::from_range(alo, ahi, 8),
+            QuantParams::from_range(wlo, whi, 8),
+        )
+    }
+
+    /// Satellite acceptance: `QuantScheme::w8a8g8()` reproduces the
+    /// legacy default simulator path bit-for-bit.
+    #[test]
+    fn w8a8g8_matches_the_legacy_defaults_bit_for_bit() {
+        let scheme = QuantScheme::w8a8g8();
+        assert_eq!(BitWidths::from_scheme(&scheme), BitWidths::default());
+        assert_eq!(BwdBits::from_scheme(&scheme), BwdBits::default());
+        let (m, k, n) = (16, 32, 16);
+        let (a, w, qpa, qpw) = inputs(m, k, n);
+        // legacy path: default machine, per-tensor static policy
+        let legacy = MacArray::default().gemm(
+            &a,
+            &w,
+            m,
+            k,
+            n,
+            qpa,
+            qpw,
+            8,
+            Policy::Static { qmin: -25.0, qmax: 25.0 },
+        );
+        let ours = forward_gemm(&scheme, &a, &w, m, k, n, qpa, qpw, &[[-25.0, 25.0]]);
+        assert_eq!(ours.output, legacy.output); // bit-for-bit
+        assert_eq!(ours.phases, legacy.phases);
+        assert_eq!(ours.acc_stats, legacy.acc_stats);
+        assert_eq!(ours.cycles, legacy.cycles);
+        // and the closed-form traffic equals the default-bits closed form
+        for g in table5_layers() {
+            let t = layer_traffic(&scheme, &g);
+            let legacy = compare(&g, BitWidths::default());
+            assert_eq!(t.fwd.static_bits, legacy.static_bits);
+            assert_eq!(t.fwd.dynamic_bits, legacy.dynamic_bits);
+            let legacy_bwd = bwd_compare(&g, BwdBits::default());
+            assert_eq!(t.bwd.static_bits, legacy_bwd.static_bits);
+            assert_eq!(t.bwd.dynamic_bits, legacy_bwd.dynamic_bits);
+        }
+    }
+
+    /// Tentpole acceptance: the mixed-precision scheme of the issue
+    /// executes end-to-end on the simulator with per-class bits visible
+    /// in the traffic/stats output.
+    #[test]
+    fn mixed_precision_scheme_runs_end_to_end() {
+        let scheme = QuantScheme::parse("w:current:8 a:hindsight:8 g:hindsight@pc:4").unwrap();
+        let g = table5_layers()[0];
+        let t = layer_traffic(&scheme, &g);
+        // per-class bits surface in the resolved widths ...
+        assert_eq!(t.fwd_bits, BitWidths { b_w: 8, b_a: 8, b_acc: 32 });
+        assert_eq!(t.bwd_bits.b_g, 4);
+        // ... and in the backward accounting: the G_X store term is
+        // 4-bit, so static backward traffic drops vs the 8-bit scheme
+        let t8 = layer_traffic(&QuantScheme::w8a8g8(), &g);
+        let gx_elems = g.cin * g.w * g.h;
+        assert_eq!(
+            t8.bwd.static_bits - t.bwd.static_bits,
+            gx_elems * 4 + g.output_elems() * 4, // G_X store + G_Y load at 4 bits less
+        );
+
+        // forward executes on the machine (a:hindsight:8 => static store)
+        let (m, k, n) = (8, 16, 4);
+        let (a, w, qpa, qpw) = inputs(m, k, n);
+        let run = forward_gemm(&scheme, &a, &w, m, k, n, qpa, qpw, &[[-30.0, 30.0]]);
+        assert_eq!(run.phases.acc_store, 0); // static single store
+        assert_eq!(run.phases.output_store, (m * n) as u64); // 8 bits/elem
+
+        // gradient store: per-channel (2 groups), 4-bit traffic
+        let c = 2usize;
+        let mut rng = Pcg32::new(7, 1);
+        let gx: Vec<f32> = (0..c * 256)
+            .map(|i| rng.normal() * 0.01 * ((i % c) + 1) as f32)
+            .collect();
+        let rows: Vec<[f32; 2]> = (0..c).map(|i| {
+            let w = 0.05 * (i + 1) as f32;
+            [-w, w]
+        }).collect();
+        let mut stored = gx.clone();
+        let (stats, bits_moved) = store_gradient(&scheme, &mut stored, &rows);
+        assert_eq!(bits_moved, gx.len() as u64 * 4, "G_X moves at 4 bits/elem");
+        assert_eq!(stats.len(), c, "one statistics register pair per channel");
+        // per-channel stats match each channel's strided hull
+        for (ch, s) in stats.iter().enumerate() {
+            let chan: Vec<f32> = gx.iter().skip(ch).step_by(c).copied().collect();
+            assert_eq!(*s, minmax(&chan));
+        }
+        // the stored tensor sits on each channel's 4-bit grid
+        for (i, (&orig, &q)) in gx.iter().zip(&stored).enumerate() {
+            let qp = QuantParams::from_range(rows[i % c][0], rows[i % c][1], 4);
+            assert_eq!(q, qp.fq(orig));
+        }
+    }
+
+    #[test]
+    fn fp32_classes_bill_full_precision_traffic() {
+        // an unmentioned (fp32) class moves 32-bit data, not its inert
+        // spec bits — a grad-only scheme must not look like W8/A8
+        let s = QuantScheme::parse("g:hindsight:4").unwrap();
+        assert_eq!(
+            BitWidths::from_scheme(&s),
+            BitWidths { b_w: 32, b_a: 32, b_acc: 32 }
+        );
+        let b = BwdBits::from_scheme(&s);
+        assert_eq!((b.b_g, b.b_a, b.b_w), (4, 32, 32));
+        // fp32 gradients round-trip at full precision too
+        let f = BwdBits::from_scheme(&QuantScheme::fp32());
+        assert_eq!(f.b_g, 32);
+    }
+
+    #[test]
+    fn dynamic_act_specs_pick_the_two_pass_policy() {
+        let scheme = QuantScheme::parse("w:current:8 a:current:8 g:hindsight:8").unwrap();
+        let (m, k, n) = (8, 8, 8);
+        let (a, w, qpa, qpw) = inputs(m, k, n);
+        let run = forward_gemm(&scheme, &a, &w, m, k, n, qpa, qpw, &[[-30.0, 30.0]]);
+        // dynamic: accumulator round trip through memory
+        assert!(run.phases.acc_store > 0);
+        assert_eq!(run.phases.acc_store, run.phases.acc_reload);
+    }
+
+    #[test]
+    fn per_channel_act_specs_pick_the_axis_policy() {
+        let scheme = QuantScheme::parse("w:current:8 a:hindsight@pc:8 g:hindsight:8").unwrap();
+        let (m, k, n) = (8, 16, 4);
+        let (a, w, qpa, qpw) = inputs(m, k, n);
+        let rows: Vec<[f32; 2]> = (0..n).map(|_| [-30.0, 30.0]).collect();
+        let run = forward_gemm(&scheme, &a, &w, m, k, n, qpa, qpw, &rows);
+        assert_eq!(run.acc_stats_axis.len(), n); // one register pair per column
+        assert_eq!(run.phases.acc_store, 0); // still a single-store path
+    }
+
+    #[test]
+    fn lower_gradient_bits_widen_the_step_ratio() {
+        // shrinking only the static-path G_X store makes dynamic's fixed
+        // 32-bit round trip relatively more expensive
+        let g = table5_layers()[0];
+        let r8 = layer_traffic(&QuantScheme::w8a8g8(), &g).step_ratio();
+        let mixed = QuantScheme::parse("w:current:8 a:hindsight:8 g:hindsight:4").unwrap();
+        let r4 = layer_traffic(&mixed, &g).step_ratio();
+        assert!(r4 > r8, "g:4 ratio {r4} vs g:8 ratio {r8}");
+    }
+
+    #[test]
+    #[should_panic(expected = "quantizing activation spec")]
+    fn fp32_activations_have_no_machine_policy() {
+        let scheme = QuantScheme::grad_only(crate::estimator::Estimator::HINDSIGHT);
+        let (a, w, qpa, qpw) = inputs(4, 4, 4);
+        let _ = forward_gemm(&scheme, &a, &w, 4, 4, 4, qpa, qpw, &[[-1.0, 1.0]]);
+    }
+}

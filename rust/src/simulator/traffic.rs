@@ -84,7 +84,7 @@ impl Conv2dGeom {
 }
 
 /// Bit-widths of the datapath.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BitWidths {
     pub b_w: u64,
     pub b_a: u64,
@@ -97,6 +97,19 @@ impl Default for BitWidths {
         Self {
             b_w: 8,
             b_a: 8,
+            b_acc: 32,
+        }
+    }
+}
+
+impl BitWidths {
+    /// Forward-path bit-widths of a quantization scheme: per-class bits
+    /// from the weight/activation specs (32 for disabled/fp32 classes),
+    /// 32-bit accumulator.
+    pub fn from_scheme(scheme: &crate::scheme::QuantScheme) -> Self {
+        Self {
+            b_w: scheme.weights.datapath_bits(),
+            b_a: scheme.activations.datapath_bits(),
             b_acc: 32,
         }
     }

@@ -6,6 +6,12 @@
 
 use std::collections::BTreeMap;
 
+/// The one boolean-token rule every flag shares (`--flag`,
+/// `--flag true|1|yes`); anything else is false.
+pub fn parse_bool(v: &str) -> bool {
+    matches!(v, "true" | "1" | "yes")
+}
+
 #[derive(Debug, Clone)]
 pub struct Args {
     pub subcommand: Option<String>,
@@ -85,9 +91,7 @@ impl Args {
     }
 
     pub fn bool_or(&mut self, key: &str, default: bool) -> bool {
-        self.get(key)
-            .map(|v| matches!(v.as_str(), "true" | "1" | "yes"))
-            .unwrap_or(default)
+        self.get(key).map(|v| parse_bool(&v)).unwrap_or(default)
     }
 
     /// Comma-separated list.
