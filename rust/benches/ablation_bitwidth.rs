@@ -1,16 +1,17 @@
 //! Extension ablation: gradient bit-width sweep of the
 //! quantization-error/accuracy trade-off under in-hindsight ranges — the
 //! paper fixes 8 bits for the accuracy tables; this maps the headroom
-//! below it.  Each row is a full mixed-precision `QuantScheme`
-//! (`w:current:8 a:hindsight:8 g:hindsight:<bits>`) driving the quant
-//! substrate (error metrics) and the simulator's scheme bridge
-//! (per-class-bit backward traffic); every row is appended to
-//! `BENCH_kernels.json` so the mixed-precision trajectory accumulates.
+//! below it.  The bit-width axis is a brace-expanded scheme grid
+//! (`g:hindsight:{2,4,6,8,10}`); each expanded row is a full
+//! mixed-precision `QuantScheme` driving the quant substrate (error
+//! metrics) and the simulator's scheme bridge (per-class-bit backward
+//! traffic); every row is appended to `BENCH_kernels.json` so the
+//! mixed-precision trajectory accumulates.
 //!
 //!   cargo bench --bench ablation_bitwidth
 
+use hindsight::coordinator::GridSpec;
 use hindsight::quant::{self, QuantParams};
-use hindsight::scheme::{QuantScheme, TensorClass};
 use hindsight::simulator::scheme::layer_traffic;
 use hindsight::simulator::traffic;
 use hindsight::util::bench::{append_bench_record, Table};
@@ -39,16 +40,20 @@ fn main() {
         "Ablation — gradient bit-width sweep (gradient-shaped tensor, hindsight range)",
         &["scheme", "MSE", "cosine", "saturation", "bwd static KB", "step ratio"],
     );
-    for bits in [2u32, 4, 6, 8, 10] {
-        // one mixed-precision scheme per row, via the typed builder
-        let scheme = QuantScheme::w8a8g8().bits(TensorClass::Gradients, bits);
+    // one mixed-precision scheme per row, brace-expanded by the grid
+    // engine (seed axis unused: these rows run on the simulator, not
+    // the trainer)
+    let grid = GridSpec::new("w:current:8 a:hindsight:8 g:hindsight:{2,4,6,8,10}", &[1])
+        .expect("bit-width grid");
+    for scheme in grid.schemes() {
+        let bits = scheme.gradients.bits;
         let qp = QuantParams::from_range(hlo, hhi, bits);
         let q: Vec<f32> = g.iter().map(|&x| qp.fq(x)).collect();
         let mse = quant::mse(&g, hlo, hhi, bits);
         let cos = quant::cosine_similarity(&g, &q);
         let sat = quant::saturation_ratio(&g, hlo, hhi);
         // per-class bits flow through the simulator's scheme bridge
-        let lt = layer_traffic(&scheme, &layer);
+        let lt = layer_traffic(scheme, &layer);
         let bwd_static_kb = lt.bwd.static_bits as f64 / 8.0 / 1024.0;
         t.row(&[
             scheme.to_string(),

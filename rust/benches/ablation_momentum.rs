@@ -1,11 +1,15 @@
 //! Ablation: sensitivity of in-hindsight min-max to the EMA momentum η
 //! (paper Sec. 5.2: "we observe little sensitivity to that parameter").
+//! The η axis is a scheme grid — one fully quantized scheme per η via
+//! the typed builder, expanded and run through the grid engine.
 //!
 //!   cargo bench --bench ablation_momentum
 
 mod common;
 
-use hindsight::coordinator::{sweep_row, Estimator, QuantScheme};
+use hindsight::coordinator::{
+    grid_rows, run_cells_on, Estimator, GridOptions, GridSpec, QuantScheme,
+};
 use hindsight::runtime::Engine;
 use hindsight::util::bench::Table;
 
@@ -17,16 +21,22 @@ fn main() {
         "Ablation — in-hindsight momentum η (cnn, fully quantized)",
         &["η", "Val. Acc. (%)", "ms/step"],
     );
+    let etas = [0.0f32, 0.5, 0.9, 0.99];
+    let schemes: Vec<QuantScheme> = etas
+        .iter()
+        .map(|&eta| QuantScheme::fully_quantized(Estimator::HINDSIGHT).eta_all(eta))
+        .collect();
+    let grid = GridSpec::alternation(&schemes, &s.seeds).expect("eta grid");
+    let cells = grid.expand(&common::base_cfg("cnn", &s));
+    let rows = grid_rows(&run_cells_on(&engine, &cells, &GridOptions::serial()));
     let mut accs = Vec::new();
-    for eta in [0.0f32, 0.5, 0.9, 0.99] {
-        let mut cfg = common::base_cfg("cnn", &s);
-        cfg.scheme = QuantScheme::fully_quantized(Estimator::HINDSIGHT).eta_all(eta);
-        let out = sweep_row(&engine, &cfg, &format!("eta={eta}"), &s.seeds).unwrap();
-        accs.push(out.agg.mean());
+    for (eta, row) in etas.iter().zip(&rows) {
+        assert!(!row.runs.is_empty(), "eta={eta}: every cell failed");
+        accs.push(row.agg.mean());
         table.row(&[
             format!("{eta}"),
-            out.cell(),
-            format!("{:.0}", out.sec_per_step * 1e3),
+            row.cell(),
+            format!("{:.0}", row.sec_per_step * 1e3),
         ]);
     }
     table.print();

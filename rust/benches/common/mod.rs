@@ -6,7 +6,9 @@
 //!   HINDSIGHT_BENCH_SEEDS   seeds per row               (default 2)
 //!   HINDSIGHT_BENCH_QUICK=1 tiny CI-scale run (24 steps, 1 seed)
 
-use hindsight::coordinator::{sweep_row, Estimator, QuantScheme, TrainConfig};
+use hindsight::coordinator::{
+    grid_rows, run_cells_on, Estimator, GridOptions, GridSpec, QuantScheme, TrainConfig,
+};
 use hindsight::runtime::Engine;
 use hindsight::util::bench::{env_usize, quick, Table};
 
@@ -71,22 +73,38 @@ pub fn estimator_table(
         &["Method", "Static", "Val. Acc. (%)", "paper (TinyImageNet)", "ms/step"],
     );
     // the whole registry: the paper's five rows plus the literature
-    // estimators ride along with "-" in the paper column
-    for est in Estimator::all() {
-        if est.needs_search() && mode == Mode::ActOnly {
-            continue; // search estimators apply to gradients only
-        }
-        // each row is a typed QuantScheme built from the swept estimator
-        let mut cfg = base_cfg(model, &s);
-        cfg.scheme = match mode {
+    // estimators ride along with "-" in the paper column.  Each row is
+    // a typed QuantScheme; the row set is a one-alternation GridSpec so
+    // the table shares the grid engine's expansion/order/label path.
+    // search estimators apply to gradients only
+    let ests: Vec<Estimator> = Estimator::all()
+        .filter(|est| !(est.needs_search() && mode == Mode::ActOnly))
+        .collect();
+    let schemes: Vec<QuantScheme> = ests
+        .iter()
+        .map(|&est| match mode {
             Mode::GradOnly => QuantScheme::grad_only(est),
             Mode::ActOnly => QuantScheme::act_only(est),
             // fully_quantized applies the paper-Table-3 act fallback for
             // search estimators
             Mode::Full => QuantScheme::fully_quantized(est),
-        };
-        let out = sweep_row(&engine, &cfg, est.name(), &s.seeds)
-            .expect("sweep row");
+        })
+        .collect();
+    let grid = GridSpec::alternation(&schemes, &s.seeds).expect("estimator grid");
+    assert_eq!(
+        grid.schemes().len(),
+        ests.len(),
+        "mode schemes must stay distinct per estimator"
+    );
+    let cells = grid.expand(&base_cfg(model, &s));
+    let rows = grid_rows(&run_cells_on(&engine, &cells, &GridOptions::serial()));
+    for (est, row) in ests.iter().zip(&rows) {
+        assert!(
+            !row.runs.is_empty(),
+            "{}: every cell of row '{}' failed",
+            est.name(),
+            row.label
+        );
         let paper_cell = paper
             .iter()
             .find(|(n, _)| *n == est.name())
@@ -94,10 +112,10 @@ pub fn estimator_table(
             .unwrap_or_else(|| "-".into());
         table.row(&[
             est.name().to_string(),
-            static_cell(est),
-            out.cell(),
+            static_cell(*est),
+            row.cell(),
             paper_cell,
-            format!("{:.0}", out.sec_per_step * 1e3),
+            format!("{:.0}", row.sec_per_step * 1e3),
         ]);
     }
     table

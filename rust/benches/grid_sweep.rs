@@ -1,0 +1,132 @@
+//! Grid-engine smoke: expand a tiny 4-cell scheme grid, run it on the
+//! 2-worker executor into the resumable run store, then re-run and
+//! require that *zero* cells execute (all served from the store), and
+//! that the parallel ordering is bit-identical to the serial path.
+//!
+//! With compiled artifacts present the cells run real trainers; without
+//! them (CI's bench-smoke job) a deterministic synthetic trainer stands
+//! in — the expansion, executor, store and resume logic under test are
+//! identical either way.  The store lands in `HINDSIGHT_GRID_STORE`
+//! (default `grid_smoke_store/`), one `cell-*.json` per cell, so CI can
+//! assert all 4 cells persisted.
+//!
+//!   cargo bench --bench grid_sweep
+
+use hindsight::coordinator::executor::{run_grid_with, summarize};
+use hindsight::coordinator::{
+    grid_rows, run_grid, CellOutcome, CellRun, GridCell, GridOptions, GridSpec, RunStore,
+    TrainConfig,
+};
+use hindsight::metrics::RunRecord;
+use hindsight::runtime::manifest::Manifest;
+use hindsight::util::bench::{append_bench_record, quick};
+use hindsight::util::json::Value;
+
+const TEMPLATE: &str = "g:{hindsight,current,running,tqt}:8";
+
+fn run_cells(cells: &[GridCell], opts: &GridOptions, real: bool) -> Vec<CellRun> {
+    if real {
+        run_grid(cells, opts)
+    } else {
+        // deterministic synthetic trainer: the record depends only on
+        // the cell's label, like a real run on its configuration
+        run_grid_with(cells, opts, |_| Ok(()), |_: &mut (), cell: &GridCell| {
+            Ok(RunRecord::synthetic(&cell.label, 6))
+        })
+    }
+}
+
+fn main() {
+    hindsight::util::logging::init();
+    let real = Manifest::default_dir().join("manifest.json").exists();
+    let store_dir = std::env::var("HINDSIGHT_GRID_STORE")
+        .unwrap_or_else(|_| "grid_smoke_store".to_string());
+    // fresh store: this smoke proves the ran→cached transition
+    let _ = std::fs::remove_dir_all(&store_dir);
+
+    let mut base = TrainConfig::new("mlp");
+    if real {
+        base.steps = if quick() { 6 } else { 24 };
+        base.n_train = 128;
+        base.n_val = 64;
+        base.calib_batches = 1;
+    }
+    let grid = GridSpec::new(TEMPLATE, &[1]).expect("grid template");
+    let cells = grid.expand(&base);
+    assert_eq!(cells.len(), 4, "the smoke grid is 4 cells");
+
+    // pass 1: everything runs, 2 workers, write-through to the store
+    let opts = GridOptions {
+        workers: 2,
+        store: Some(RunStore::open(&store_dir).expect("run store")),
+        use_cache: true,
+        fail_fast: false,
+    };
+    let first = run_cells(&cells, &opts, real);
+    let s1 = summarize(&first);
+    println!(
+        "pass 1 ({}): {} ran, {} cached, {} failed",
+        if real { "engine" } else { "synthetic" },
+        s1.ran,
+        s1.cached,
+        s1.failed
+    );
+    assert_eq!(s1.ran, 4, "first pass must execute every cell");
+    assert_eq!(s1.failed, 0);
+    assert_eq!(opts.store.as_ref().unwrap().len(), 4, "4 cells persisted");
+
+    // pass 2 (resume): zero executions, all four served from the store
+    let second = run_cells(&cells, &opts, real);
+    let s2 = summarize(&second);
+    println!("pass 2 (resume): {} ran, {} cached, {} failed", s2.ran, s2.cached, s2.failed);
+    assert_eq!(s2.ran, 0, "resume must execute zero trainer runs");
+    assert_eq!(s2.cached, 4);
+    for (a, b) in first.iter().zip(&second) {
+        assert_eq!(a.index, b.index, "grid ordering is deterministic");
+        assert_eq!(
+            a.outcome.record(),
+            b.outcome.record(),
+            "cached record differs for '{}'",
+            a.label
+        );
+    }
+
+    // serial parity: a 1-worker uncached run is bit-identical in
+    // ordering and aggregates to the 2-worker pass
+    let serial_opts = GridOptions {
+        workers: 1,
+        store: None,
+        use_cache: false,
+        fail_fast: false,
+    };
+    let serial = run_cells(&cells, &serial_opts, real);
+    let rows_par = grid_rows(&first);
+    let rows_ser = grid_rows(&serial);
+    assert_eq!(rows_par.len(), rows_ser.len());
+    for (p, s) in rows_par.iter().zip(&rows_ser) {
+        assert_eq!(p.label, s.label);
+        let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&p.agg.accs), bits(&s.agg.accs), "row '{}'", p.label);
+    }
+    println!("parallel(2) == serial(1): aggregates bit-identical across {} rows", rows_par.len());
+
+    let cached_labels: Vec<Value> = second
+        .iter()
+        .filter(|r| matches!(r.outcome, CellOutcome::Cached(_)))
+        .map(|r| Value::from(r.label.clone()))
+        .collect();
+    let record = Value::object(vec![
+        ("bench", Value::from("grid_sweep")),
+        ("template", Value::from(TEMPLATE)),
+        ("cells", Value::from(cells.len())),
+        ("workers", Value::from(2usize)),
+        ("resumed_cached", Value::from(cached_labels.len())),
+        ("engine", Value::from(real)),
+        ("store", Value::from(store_dir.clone())),
+        ("labels", Value::Array(cached_labels)),
+    ]);
+    match append_bench_record(record) {
+        Ok(path) => println!("recorded grid smoke to {}", path.display()),
+        Err(e) => eprintln!("warning: could not append bench record: {e}"),
+    }
+}

@@ -2,7 +2,9 @@
 //! architecture families on the Tiny ImageNet stand-in.  Every row is a
 //! typed `QuantScheme` built through `QuantScheme::fully_quantized`
 //! (the in-hindsight row is exactly `w:current:8 a:hindsight:8
-//! g:hindsight:8`, i.e. `QuantScheme::w8a8g8()`).
+//! g:hindsight:8`, i.e. `QuantScheme::w8a8g8()`); the row set runs as
+//! one estimator×seed grid through `GridSpec` + the grid executor (see
+//! `common::estimator_table`), not a hand-rolled loop.
 //!
 //!   cargo bench --bench table3_full_quant
 

@@ -4,9 +4,9 @@
 //! a global `eta`: [`TrainConfig`] carries a typed
 //! [`QuantScheme`](crate::scheme::QuantScheme) — one
 //! `QuantSpec { estimator, bits, eta, symmetric }` per tensor class
-//! (weights / activations / gradients) plus per-site overrides.  The
-//! legacy accessors (`grad_est()`, `act_est()`, `quant_weights()`,
-//! `eta()`) survive one PR as deprecated shims over the scheme.
+//! (weights / activations / gradients) plus per-site overrides.  (The
+//! legacy flat accessors survived exactly one PR as deprecated shims
+//! and are gone; read `cfg.scheme` directly.)
 
 use anyhow::{bail, Result};
 
@@ -131,32 +131,6 @@ impl TrainConfig {
         self
     }
 
-    // ---- deprecated shims over the scheme (one PR of grace) -------------
-
-    /// Legacy accessor for the gradient estimator.
-    #[deprecated(note = "read cfg.scheme.gradients.estimator")]
-    pub fn grad_est(&self) -> Estimator {
-        self.scheme.gradients.estimator
-    }
-
-    /// Legacy accessor for the activation estimator.
-    #[deprecated(note = "read cfg.scheme.activations.estimator")]
-    pub fn act_est(&self) -> Estimator {
-        self.scheme.activations.estimator
-    }
-
-    /// Legacy accessor for the weight-quantization switch.
-    #[deprecated(note = "read cfg.scheme.weights.enabled()")]
-    pub fn quant_weights(&self) -> bool {
-        self.scheme.weights.enabled()
-    }
-
-    /// Legacy accessor for the global EMA momentum.
-    #[deprecated(note = "read per-class eta from cfg.scheme (graph_eta() for the graph scalar)")]
-    pub fn eta(&self) -> f32 {
-        self.scheme.graph_eta()
-    }
-
     /// Run tag: model + the scheme's one-token form + seed.
     pub fn tag(&self) -> String {
         format!("{}-{}-s{}", self.model, self.scheme.tag(), self.seed)
@@ -241,19 +215,6 @@ mod tests {
         assert_eq!(d.scheme.activations.estimator, Estimator::CURRENT);
         let g = base.grad_only(Estimator::DSGC);
         assert_eq!(g.scheme.activations.estimator, Estimator::FP32);
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_accessors_mirror_the_scheme() {
-        let c = TrainConfig::new("cnn").fully_quantized(Estimator::DSGC);
-        assert_eq!(c.grad_est(), Estimator::DSGC);
-        assert_eq!(c.act_est(), Estimator::CURRENT);
-        assert!(c.quant_weights());
-        assert_eq!(c.eta(), c.scheme.graph_eta());
-        let mut c = c;
-        c.scheme = c.scheme.clone().eta_all(0.5);
-        assert_eq!(c.eta(), 0.5);
     }
 
     #[test]

@@ -1,0 +1,752 @@
+//! Rayon-free parallel grid execution: a `std::thread` work queue with
+//! deterministic result ordering, per-worker engine reuse and panic
+//! isolation.
+//!
+//! Design constraints, in order:
+//!
+//! * **Determinism** — results land by *grid index*, never by completion
+//!   order, so a `--workers 8` sweep prints (and aggregates) exactly
+//!   what the serial path would.  Each cell's run is itself
+//!   deterministic (pinned by `tests/integration.rs`), so parallel and
+//!   serial grids are bit-identical.
+//! * **Engine reuse** — the PJRT [`Engine`] is single-threaded
+//!   (`Rc`/`RefCell` executable cache), so each worker thread builds
+//!   one engine lazily and keeps it across all the cells it claims: a
+//!   worker compiles each (model, graph) at most once per sweep.
+//! * **Panic isolation** — one diverging cell (a shape mismatch, an
+//!   assert deep in a kernel) must not kill a week-long grid.  Worker
+//!   panics are caught per cell and reported as [`CellOutcome::Failed`];
+//!   the worker drops its (possibly inconsistent) engine and re-inits
+//!   for the next cell.
+//! * **Resumability** — cells found in the [`RunStore`] are served as
+//!   [`CellOutcome::Cached`] without occupying a worker; completed
+//!   cells are written through so an interrupted grid resumes where it
+//!   stopped.
+//!
+//! The generic core ([`run_indexed`] / [`run_grid_with`]) takes the
+//! per-worker context and per-cell runner as closures, so the executor
+//! is exercised by tests and the `grid_sweep` bench without compiled
+//! artifacts; [`run_grid`] instantiates it with real engines and
+//! trainers, and [`run_cells_on`] is the serial shared-engine variant
+//! `sweep_row` and the bench tables wrap.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::coordinator::grid::GridCell;
+use crate::coordinator::store::{CellKey, RunStore};
+use crate::coordinator::sweep::SweepOutcome;
+use crate::coordinator::trainer::Trainer;
+use crate::metrics::RunRecord;
+use crate::runtime::engine::Engine;
+
+/// How a grid executes: worker count, the run store (if any) and
+/// whether cached cells may be served from it.
+#[derive(Debug)]
+pub struct GridOptions {
+    /// worker threads (clamped to [1, pending cells])
+    pub workers: usize,
+    /// resumable run store for cache reads and write-through
+    pub store: Option<RunStore>,
+    /// serve cells from the store when present (`false` = `--no-cache`:
+    /// every cell re-runs; completed cells still write through)
+    pub use_cache: bool,
+    /// serial path only: after a failed/panicked cell, mark the
+    /// remaining cells as skipped instead of running them — the
+    /// fail-fast a table row wants (`sweep_row` bails on the first
+    /// failure, so training the remaining seeds would be wasted work).
+    /// The threaded path ignores this: in-flight workers can't be
+    /// cancelled, and a grid wants per-cell isolation anyway.
+    pub fail_fast: bool,
+}
+
+impl GridOptions {
+    /// One worker, no store, fail-fast: the plain in-process sweep.
+    pub fn serial() -> Self {
+        Self {
+            workers: 1,
+            store: None,
+            use_cache: true,
+            fail_fast: true,
+        }
+    }
+}
+
+/// Result of one executed (or cached, or failed) grid cell.
+#[derive(Debug)]
+pub enum CellOutcome {
+    /// the cell was trained this run
+    Ran(RunRecord),
+    /// the cell was served from the run store
+    Cached(RunRecord),
+    /// the cell errored or panicked; the rest of the grid is unaffected
+    Failed(String),
+}
+
+impl CellOutcome {
+    pub fn record(&self) -> Option<&RunRecord> {
+        match self {
+            Self::Ran(r) | Self::Cached(r) => Some(r),
+            Self::Failed(_) => None,
+        }
+    }
+
+    pub fn is_cached(&self) -> bool {
+        matches!(self, Self::Cached(_))
+    }
+
+    pub fn is_failed(&self) -> bool {
+        matches!(self, Self::Failed(_))
+    }
+}
+
+/// One cell's result, at its grid index.
+#[derive(Debug)]
+pub struct CellRun {
+    pub index: usize,
+    pub label: String,
+    pub key: CellKey,
+    pub outcome: CellOutcome,
+}
+
+/// Outcome of one generic job (see [`run_indexed`]).
+#[derive(Debug)]
+pub enum JobOutcome<R> {
+    Done(R),
+    Failed(String),
+}
+
+/// Run `jobs` on `workers` threads over a shared claim cursor; results
+/// land in a vector indexed like `jobs`, regardless of completion
+/// order.  `init` builds one context per worker (lazily, so an init
+/// failure is reported per claimed job rather than aborting the grid);
+/// `run` executes one job against the worker's context.  A panicking
+/// job is isolated: it reports as `Failed` and the worker rebuilds its
+/// context before the next claim.
+pub fn run_indexed<T, R, W, I, F>(jobs: &[T], workers: usize, init: I, run: F) -> Vec<JobOutcome<R>>
+where
+    T: Sync,
+    R: Send,
+    I: Fn(usize) -> Result<W> + Sync,
+    F: Fn(&mut W, usize, &T) -> Result<R> + Sync,
+{
+    if jobs.is_empty() {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, jobs.len());
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<JobOutcome<R>>>> =
+        jobs.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let (cursor, slots, init, run) = (&cursor, &slots, &init, &run);
+            scope.spawn(move || {
+                let mut ctx: Option<W> = None;
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= jobs.len() {
+                        break;
+                    }
+                    let outcome = run_one(&mut ctx, w, i, &jobs[i], init, run);
+                    *slots[i].lock().unwrap_or_else(|p| p.into_inner()) = Some(outcome);
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap_or_else(|p| p.into_inner())
+                .unwrap_or_else(|| {
+                    JobOutcome::Failed("job never completed (worker died)".into())
+                })
+        })
+        .collect()
+}
+
+fn run_one<T, R, W>(
+    ctx: &mut Option<W>,
+    worker: usize,
+    index: usize,
+    job: &T,
+    init: &(impl Fn(usize) -> Result<W> + Sync),
+    run: &(impl Fn(&mut W, usize, &T) -> Result<R> + Sync),
+) -> JobOutcome<R> {
+    if ctx.is_none() {
+        // init panics (e.g. an unwrap deep in PJRT client construction)
+        // must not escape: an uncaught panic in a scoped thread would
+        // re-raise at the join and kill the whole grid
+        match catch_unwind(AssertUnwindSafe(|| init(worker))) {
+            Ok(Ok(c)) => *ctx = Some(c),
+            Ok(Err(e)) => return JobOutcome::Failed(format!("worker {worker} init: {e:#}")),
+            Err(panic) => {
+                return JobOutcome::Failed(format!(
+                    "worker {worker} init panicked: {}",
+                    panic_message(&panic)
+                ))
+            }
+        }
+    }
+    let c = ctx.as_mut().expect("context initialized above");
+    match catch_unwind(AssertUnwindSafe(|| run(c, index, job))) {
+        Ok(Ok(r)) => JobOutcome::Done(r),
+        Ok(Err(e)) => JobOutcome::Failed(format!("{e:#}")),
+        Err(panic) => {
+            // a panicking cell may leave the worker context (engine
+            // caches, in-flight state) inconsistent: drop it so the
+            // next claimed cell re-inits from scratch
+            *ctx = None;
+            JobOutcome::Failed(format!("panicked: {}", panic_message(&panic)))
+        }
+    }
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".into()
+    }
+}
+
+/// The grid pipeline over a pluggable cell runner: serve cached cells
+/// from the store, run the pending ones on the worker queue, write
+/// completions through, and return every cell's result in grid order.
+pub fn run_grid_with<W, I, F>(
+    cells: &[GridCell],
+    opts: &GridOptions,
+    init: I,
+    run: F,
+) -> Vec<CellRun>
+where
+    I: Fn(usize) -> Result<W> + Sync,
+    F: Fn(&mut W, &GridCell) -> Result<RunRecord> + Sync,
+{
+    // cache reads are serial and cheap: cached cells never occupy a
+    // worker, so `--resume` on a completed grid runs zero trainers
+    let mut outcomes: Vec<Option<CellOutcome>> = cells
+        .iter()
+        .map(|cell| {
+            if !opts.use_cache {
+                return None;
+            }
+            let store = opts.store.as_ref()?;
+            store
+                .get(&CellKey::of(&cell.cfg))
+                .map(CellOutcome::Cached)
+        })
+        .collect();
+    let pending: Vec<&GridCell> = cells
+        .iter()
+        .zip(&outcomes)
+        .filter(|(_, o)| o.is_none())
+        .map(|(c, _)| c)
+        .collect();
+    let cached = cells.len() - pending.len();
+    if cached > 0 {
+        log::info!("grid: {cached} cell(s) served from the run store");
+    }
+    let results = run_indexed(&pending, opts.workers, init, |w, _i, cell: &&GridCell| run(w, cell));
+    let mut results = results.into_iter();
+    for (cell, slot) in cells.iter().zip(outcomes.iter_mut()) {
+        if slot.is_some() {
+            continue;
+        }
+        let outcome = match results.next().expect("one result per pending cell") {
+            JobOutcome::Done(rec) => {
+                if let Some(store) = &opts.store {
+                    if let Err(e) = store.put(&CellKey::of(&cell.cfg), &rec) {
+                        log::warn!("grid cell '{}': store write failed: {e:#}", cell.label);
+                    }
+                }
+                CellOutcome::Ran(rec)
+            }
+            JobOutcome::Failed(e) => {
+                log::warn!("grid cell '{}' failed: {e}", cell.label);
+                CellOutcome::Failed(e)
+            }
+        };
+        *slot = Some(outcome);
+    }
+    cells
+        .iter()
+        .zip(outcomes)
+        .map(|(cell, outcome)| CellRun {
+            index: cell.index,
+            label: cell.label.clone(),
+            key: CellKey::of(&cell.cfg),
+            outcome: outcome.expect("every cell resolved"),
+        })
+        .collect()
+}
+
+/// Execute a grid with real engines and trainers: each worker thread
+/// builds (and reuses) its own [`Engine`], so an N-worker sweep holds N
+/// PJRT clients and compiles each (model, graph) at most N times.
+pub fn run_grid(cells: &[GridCell], opts: &GridOptions) -> Vec<CellRun> {
+    // the engine constructor defaults XLA_FLAGS via the process
+    // environment; do it once before workers race to build clients
+    crate::runtime::engine::ensure_default_xla_flags();
+    run_grid_with(
+        cells,
+        opts,
+        |worker| {
+            log::debug!("grid worker {worker}: building engine");
+            Engine::new()
+        },
+        |engine, cell| {
+            log::info!("[grid:{}] running", cell.label);
+            Trainer::new(engine, cell.cfg.clone())?.run()
+        },
+    )
+}
+
+/// Serial grid execution over a pluggable cell runner.  Cache reads,
+/// store write-through and result ordering match [`run_grid_with`];
+/// unlike the threaded path, `opts.fail_fast` is honored: after the
+/// first failed or panicked cell the remaining cells are marked
+/// skipped instead of executed.
+pub fn run_cells_serial_with<F>(
+    cells: &[GridCell],
+    opts: &GridOptions,
+    mut runner: F,
+) -> Vec<CellRun>
+where
+    F: FnMut(&GridCell) -> Result<RunRecord>,
+{
+    let mut aborted: Option<String> = None;
+    let mut out = Vec::with_capacity(cells.len());
+    for cell in cells {
+        let key = CellKey::of(&cell.cfg);
+        let outcome = if let Some(first) = &aborted {
+            CellOutcome::Failed(format!("skipped: earlier cell '{first}' failed (fail-fast)"))
+        } else {
+            let cached = if opts.use_cache {
+                opts.store
+                    .as_ref()
+                    .and_then(|s| s.get(&key))
+                    .map(CellOutcome::Cached)
+            } else {
+                None
+            };
+            cached.unwrap_or_else(|| {
+                log::info!("[grid:{}] running", cell.label);
+                match catch_unwind(AssertUnwindSafe(|| runner(cell))) {
+                    Ok(Ok(rec)) => {
+                        if let Some(store) = &opts.store {
+                            if let Err(e) = store.put(&key, &rec) {
+                                log::warn!(
+                                    "grid cell '{}': store write failed: {e:#}",
+                                    cell.label
+                                );
+                            }
+                        }
+                        CellOutcome::Ran(rec)
+                    }
+                    Ok(Err(e)) => {
+                        log::warn!("grid cell '{}' failed: {e:#}", cell.label);
+                        CellOutcome::Failed(format!("{e:#}"))
+                    }
+                    Err(p) => {
+                        log::warn!("grid cell '{}' panicked", cell.label);
+                        CellOutcome::Failed(format!("panicked: {}", panic_message(&p)))
+                    }
+                }
+            })
+        };
+        if opts.fail_fast && outcome.is_failed() && aborted.is_none() {
+            aborted = Some(cell.label.clone());
+        }
+        out.push(CellRun {
+            index: cell.index,
+            label: cell.label.clone(),
+            key,
+            outcome,
+        });
+    }
+    out
+}
+
+/// Serial variant sharing one caller-owned engine (the engine is
+/// single-threaded, so the in-process path of `sweep_row` and the
+/// benches cannot hand it to worker threads).  Cache, store
+/// write-through and result ordering match [`run_grid`]; the two
+/// deliberate differences are fail-fast (see [`GridOptions::fail_fast`])
+/// and panic recovery — a worker thread discards its engine after a
+/// panicking cell, while the shared engine here cannot be rebuilt, so
+/// with `fail_fast` off later cells reuse it (its executable cache is
+/// insert-after-compile, so a caught panic cannot leave a half-built
+/// entry behind).
+pub fn run_cells_on(engine: &Engine, cells: &[GridCell], opts: &GridOptions) -> Vec<CellRun> {
+    run_cells_serial_with(cells, opts, |cell| {
+        Trainer::new(engine, cell.cfg.clone())?.run()
+    })
+}
+
+/// Group a grid's cell results into per-scheme table rows (cells are
+/// scheme-major, so grouping is by consecutive runs of the canonical
+/// scheme string).  Failed cells are excluded from the aggregate — a
+/// row over zero surviving cells reports an empty aggregate rather
+/// than poisoning its neighbours.
+pub fn grid_rows(runs: &[CellRun]) -> Vec<SweepOutcome> {
+    let mut rows = Vec::new();
+    let mut i = 0;
+    while i < runs.len() {
+        let scheme = runs[i].key.scheme.clone();
+        let mut recs = Vec::new();
+        let mut failed = 0usize;
+        while i < runs.len() && runs[i].key.scheme == scheme {
+            match &runs[i].outcome {
+                CellOutcome::Ran(r) | CellOutcome::Cached(r) => recs.push(r.clone()),
+                CellOutcome::Failed(_) => failed += 1,
+            }
+            i += 1;
+        }
+        if failed > 0 {
+            log::warn!("grid row '{scheme}': {failed} failed cell(s) excluded from the aggregate");
+        }
+        rows.push(SweepOutcome::from_runs(&scheme, recs));
+    }
+    rows
+}
+
+/// Cell counts of a finished grid, for the CLI summary line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GridSummary {
+    pub ran: usize,
+    pub cached: usize,
+    pub failed: usize,
+}
+
+pub fn summarize(runs: &[CellRun]) -> GridSummary {
+    let mut s = GridSummary {
+        ran: 0,
+        cached: 0,
+        failed: 0,
+    };
+    for r in runs {
+        match r.outcome {
+            CellOutcome::Ran(_) => s.ran += 1,
+            CellOutcome::Cached(_) => s.cached += 1,
+            CellOutcome::Failed(_) => s.failed += 1,
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::TrainConfig;
+    use crate::coordinator::grid::GridSpec;
+    use crate::coordinator::store::RunStore;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn results_land_by_index_not_completion_order() {
+        let jobs: Vec<usize> = (0..16).collect();
+        let out = run_indexed(
+            &jobs,
+            4,
+            |_| Ok(()),
+            |_, i, &job| {
+                // later jobs finish first: completion order is roughly
+                // reversed, result order must not be
+                std::thread::sleep(std::time::Duration::from_millis(((16 - i) % 5) as u64));
+                Ok(job * 2)
+            },
+        );
+        assert_eq!(out.len(), 16);
+        for (i, o) in out.iter().enumerate() {
+            match o {
+                JobOutcome::Done(v) => assert_eq!(*v, i * 2, "slot {i}"),
+                JobOutcome::Failed(e) => panic!("job {i} failed: {e}"),
+            }
+        }
+    }
+
+    #[test]
+    fn a_panicking_job_is_isolated_and_the_worker_reinits() {
+        let inits = AtomicUsize::new(0);
+        let jobs = [0usize, 1, 2];
+        let out = run_indexed(
+            &jobs,
+            1,
+            |_| {
+                inits.fetch_add(1, Ordering::SeqCst);
+                Ok(())
+            },
+            |_, _, &job| {
+                if job == 1 {
+                    panic!("cell diverged");
+                }
+                Ok(job)
+            },
+        );
+        assert!(matches!(out[0], JobOutcome::Done(0)));
+        match &out[1] {
+            JobOutcome::Failed(e) => assert!(e.contains("cell diverged"), "{e}"),
+            other => panic!("expected failure, got {other:?}"),
+        }
+        assert!(matches!(out[2], JobOutcome::Done(2)), "grid continued");
+        // the single worker re-initialized after the panic
+        assert_eq!(inits.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn worker_init_failure_fails_jobs_not_the_process() {
+        let jobs = [0usize, 1];
+        let out = run_indexed(
+            &jobs,
+            2,
+            |w| -> Result<()> { anyhow::bail!("no engine on worker {w}") },
+            |_, _, &job| Ok(job),
+        );
+        for o in &out {
+            match o {
+                JobOutcome::Failed(e) => assert!(e.contains("init"), "{e}"),
+                other => panic!("expected init failure, got {other:?}"),
+            }
+        }
+    }
+
+    // ---- synthetic grid harness (no artifacts needed) -------------------
+
+    fn tmp_store(tag: &str) -> RunStore {
+        let dir = std::env::temp_dir().join(format!(
+            "hindsight_executor_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        RunStore::open(dir).unwrap()
+    }
+
+    /// Deterministic fake training: the record depends only on the
+    /// cell's label (as a real run depends only on its config).
+    fn synthetic_record(cell: &GridCell) -> RunRecord {
+        RunRecord::synthetic(&cell.label, 4)
+    }
+
+    fn synthetic_cells() -> Vec<GridCell> {
+        GridSpec::new("g:{hindsight,current,running,tqt}:8", &[1, 2])
+            .unwrap()
+            .expand(&TrainConfig::new("mlp"))
+    }
+
+    #[test]
+    fn grid_store_round_trip_serves_cached_cells_and_skips_reruns() {
+        let cells = synthetic_cells();
+        let executions = AtomicUsize::new(0);
+        let runner = |_: &mut (), cell: &GridCell| {
+            executions.fetch_add(1, Ordering::SeqCst);
+            Ok(synthetic_record(cell))
+        };
+        let opts = GridOptions {
+            workers: 2,
+            store: Some(tmp_store("cache")),
+            use_cache: true,
+            fail_fast: false,
+        };
+        let first = run_grid_with(&cells, &opts, |_| Ok(()), runner);
+        assert_eq!(executions.load(Ordering::SeqCst), cells.len());
+        assert!(first.iter().all(|r| matches!(r.outcome, CellOutcome::Ran(_))));
+        assert_eq!(opts.store.as_ref().unwrap().len(), cells.len());
+
+        // resume: every cell cached, zero runner invocations
+        let second = run_grid_with(&cells, &opts, |_| Ok(()), runner);
+        assert_eq!(executions.load(Ordering::SeqCst), cells.len());
+        assert!(second.iter().all(|r| r.outcome.is_cached()));
+        for (a, b) in first.iter().zip(&second) {
+            assert_eq!(a.index, b.index);
+            assert_eq!(a.outcome.record(), b.outcome.record(), "{}", a.label);
+        }
+
+        // --no-cache forces re-execution despite the store
+        let no_cache = GridOptions {
+            use_cache: false,
+            ..opts
+        };
+        let third = run_grid_with(&cells, &no_cache, |_| Ok(()), runner);
+        assert_eq!(executions.load(Ordering::SeqCst), 2 * cells.len());
+        assert!(third.iter().all(|r| matches!(r.outcome, CellOutcome::Ran(_))));
+
+        assert_eq!(
+            summarize(&second),
+            GridSummary {
+                ran: 0,
+                cached: cells.len(),
+                failed: 0
+            }
+        );
+        let _ = std::fs::remove_dir_all(no_cache.store.unwrap().dir());
+    }
+
+    /// Satellite acceptance (engine-free half): a 2-worker grid is
+    /// bit-identical — ordering and aggregates — to the serial path,
+    /// even when workers finish out of order.
+    #[test]
+    fn parallel_grid_matches_serial_bit_for_bit() {
+        let cells = synthetic_cells();
+        let run = |workers: usize| {
+            let opts = GridOptions {
+                workers,
+                store: None,
+                use_cache: true,
+                fail_fast: false,
+            };
+            run_grid_with(&cells, &opts, |_| Ok(()), |_: &mut (), cell: &GridCell| {
+                // scramble completion order
+                std::thread::sleep(std::time::Duration::from_millis(
+                    ((cells.len() - cell.index) % 3) as u64,
+                ));
+                Ok(synthetic_record(cell))
+            })
+        };
+        let serial = run(1);
+        let parallel = run(2);
+        assert_eq!(serial.len(), parallel.len());
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.index, p.index);
+            assert_eq!(s.label, p.label);
+            assert_eq!(s.outcome.record(), p.outcome.record());
+        }
+        let rs = grid_rows(&serial);
+        let rp = grid_rows(&parallel);
+        assert_eq!(rs.len(), 4, "one row per scheme");
+        for (a, b) in rs.iter().zip(&rp) {
+            assert_eq!(a.label, b.label);
+            // bitwise aggregate equality, not tolerance
+            let bits = |xs: &[f64]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&a.agg.accs), bits(&b.agg.accs), "{}", a.label);
+            assert_eq!(a.sec_per_step.to_bits(), b.sec_per_step.to_bits());
+            assert_eq!(a.agg.cells, b.agg.cells, "provenance matches");
+            assert_eq!(a.runs.len(), 2);
+        }
+    }
+
+    #[test]
+    fn failed_cells_are_excluded_from_rows_but_not_fatal() {
+        let cells = synthetic_cells();
+        let opts = GridOptions {
+            workers: 2,
+            store: None,
+            use_cache: true,
+            fail_fast: false,
+        };
+        let runs = run_grid_with(&cells, &opts, |_| Ok(()), |_: &mut (), cell: &GridCell| {
+            if cell.index == 1 {
+                anyhow::bail!("diverged");
+            }
+            if cell.index == 2 {
+                panic!("kernel assert");
+            }
+            Ok(synthetic_record(cell))
+        });
+        let s = summarize(&runs);
+        assert_eq!(s.failed, 2);
+        assert_eq!(s.ran, cells.len() - 2);
+        let rows = grid_rows(&runs);
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0].runs.len(), 1, "seed 2 of row 0 failed");
+        assert_eq!(rows[1].runs.len(), 1, "seed 1 of row 1 panicked");
+        assert_eq!(rows[2].runs.len(), 2);
+    }
+
+    /// Regression (review finding): `sweep_row` relies on the serial
+    /// path to stop after the first failure — without fail-fast it
+    /// would train every remaining seed and then throw the work away.
+    #[test]
+    fn serial_fail_fast_skips_cells_after_the_first_failure() {
+        let cells = synthetic_cells();
+        let mut executed = 0usize;
+        let opts = GridOptions::serial(); // fail_fast: true
+        let runs = run_cells_serial_with(&cells, &opts, |cell| {
+            executed += 1;
+            if cell.index == 2 {
+                anyhow::bail!("diverged");
+            }
+            Ok(synthetic_record(cell))
+        });
+        assert_eq!(executed, 3, "cells after the failure must not run");
+        assert!(matches!(runs[0].outcome, CellOutcome::Ran(_)));
+        assert!(matches!(runs[1].outcome, CellOutcome::Ran(_)));
+        match &runs[2].outcome {
+            CellOutcome::Failed(e) => assert!(e.contains("diverged"), "{e}"),
+            other => panic!("expected failure, got {other:?}"),
+        }
+        for r in &runs[3..] {
+            match &r.outcome {
+                CellOutcome::Failed(e) => {
+                    assert!(e.contains("skipped"), "{e}");
+                    assert!(e.contains(&cells[2].label), "names the first failure: {e}");
+                }
+                other => panic!("expected skip, got {other:?}"),
+            }
+        }
+        // with fail_fast off the same runner executes every cell
+        let mut executed = 0usize;
+        let opts = GridOptions {
+            fail_fast: false,
+            ..GridOptions::serial()
+        };
+        let runs = run_cells_serial_with(&cells, &opts, |cell| {
+            executed += 1;
+            if cell.index == 2 {
+                anyhow::bail!("diverged");
+            }
+            Ok(synthetic_record(cell))
+        });
+        assert_eq!(executed, cells.len());
+        assert_eq!(summarize(&runs).failed, 1);
+    }
+
+    /// Engine-gated golden test: with compiled artifacts, a real
+    /// 2-worker grid must be bit-identical to the serial shared-engine
+    /// path (aggregates and ordering) and a resumed grid must execute
+    /// zero trainer runs.
+    #[test]
+    fn engine_grid_parallel_serial_and_resume_parity() {
+        use crate::runtime::manifest::Manifest;
+        if !Manifest::default_dir().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut base = TrainConfig::new("mlp");
+        base.steps = 6;
+        base.n_train = 64;
+        base.n_val = 32;
+        base.calib_batches = 1;
+        let cells = GridSpec::new("g:{hindsight,current}:8", &[1, 2])
+            .unwrap()
+            .expand(&base);
+
+        let engine = Engine::new().unwrap();
+        let serial = run_cells_on(&engine, &cells, &GridOptions::serial());
+        let store = tmp_store("engine");
+        let opts = GridOptions {
+            workers: 2,
+            store: Some(store),
+            use_cache: true,
+            fail_fast: false,
+        };
+        let parallel = run_grid(&cells, &opts);
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.index, p.index);
+            let (a, b) = (s.outcome.record().unwrap(), p.outcome.record().unwrap());
+            assert_eq!(a.losses, b.losses, "{}", s.label);
+            assert_eq!(a.evals, b.evals, "{}", s.label);
+        }
+        // resume: all four cells come from the store
+        let resumed = run_grid(&cells, &opts);
+        let s = summarize(&resumed);
+        assert_eq!(s.cached, cells.len());
+        assert_eq!(s.ran, 0);
+        let _ = std::fs::remove_dir_all(opts.store.unwrap().dir());
+    }
+}

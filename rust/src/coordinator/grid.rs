@@ -1,0 +1,428 @@
+//! Scheme-grid sweeps: brace expansion over the scheme grammar.
+//!
+//! The paper's headline results are *grids* — estimator × bit-width ×
+//! granularity × eta × seed (Table 3, Fig. 3, the ablations) — so the
+//! sweep layer speaks grids natively.  A [`GridSpec`] is a scheme-string
+//! template with shell-style alternations plus a seed list:
+//!
+//! ```text
+//!   g:{hindsight,current,tqt}@{pt,pc}:{4,8}     × --seeds 1..5
+//! ```
+//!
+//! Expansion is a deterministic cartesian product (the leftmost brace
+//! varies slowest, exactly like shell brace expansion), every expanded
+//! string parses through the [`QuantScheme`] grammar, duplicates (after
+//! canonicalization) collapse to their first occurrence, and each
+//! resulting cell — one `(scheme, seed)` pair — gets a unique label and
+//! a dense grid index.  The executor (`coordinator::executor`) runs
+//! cells by index and lands results by index, so a grid's output
+//! ordering never depends on worker scheduling; the run store
+//! (`coordinator::store`) keys cached cells by the canonical scheme
+//! string the expansion produced.
+//!
+//! `@pt` is accepted as the explicit per-tensor granularity suffix so
+//! granularity can be a grid axis (`@{pt,pc}`); it canonicalizes to the
+//! bare key.
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::config::TrainConfig;
+use crate::scheme::QuantScheme;
+
+/// One cell of an expanded grid: a full training configuration plus its
+/// dense grid index and unique label.
+#[derive(Debug, Clone)]
+pub struct GridCell {
+    /// dense index in expansion order (scheme-major, seed-minor)
+    pub index: usize,
+    /// unique label: `<scheme tag>#s<seed>` (single token)
+    pub label: String,
+    /// the cell's full configuration (scheme and seed applied)
+    pub cfg: TrainConfig,
+}
+
+/// A scheme-grid template plus the seed axis.  Construction expands and
+/// validates eagerly, so a held `GridSpec` is always runnable.
+#[derive(Debug, Clone)]
+pub struct GridSpec {
+    template: String,
+    /// expanded schemes, deduplicated by canonical string, in expansion
+    /// order (first occurrence wins)
+    schemes: Vec<QuantScheme>,
+    seeds: Vec<u64>,
+}
+
+impl GridSpec {
+    /// Expand `template` (scheme grammar + `{a,b,...}` alternations)
+    /// against `seeds`.  Errors name the expansion that failed to parse.
+    pub fn new(template: &str, seeds: &[u64]) -> Result<Self> {
+        let seeds = validate_seeds(seeds)?;
+        let expansions = expand_braces(template)?;
+        let mut schemes: Vec<QuantScheme> = Vec::with_capacity(expansions.len());
+        let mut seen: Vec<String> = Vec::with_capacity(expansions.len());
+        for exp in &expansions {
+            let scheme = QuantScheme::parse(exp)
+                .with_context(|| format!("grid expansion '{exp}' of template '{template}'"))?;
+            let canon = scheme.to_string();
+            // alternations may canonicalize onto each other (e.g. an
+            // explicit `@pt` vs the bare key): keep first occurrence
+            if !seen.contains(&canon) {
+                seen.push(canon);
+                schemes.push(scheme);
+            }
+        }
+        if schemes.is_empty() {
+            bail!("grid template '{template}' expanded to no schemes");
+        }
+        Ok(Self {
+            template: template.to_string(),
+            schemes,
+            seeds,
+        })
+    }
+
+    /// Grid over an explicit scheme list (one alternation): the template
+    /// is reconstructed from the canonical strings, so typed-builder
+    /// callers (the benches' protocol tables) and string-template
+    /// callers share one expansion/label/ordering path.
+    pub fn alternation(schemes: &[QuantScheme], seeds: &[u64]) -> Result<Self> {
+        if schemes.is_empty() {
+            bail!("grid alternation needs at least one scheme");
+        }
+        let alts: Vec<String> = schemes.iter().map(|s| s.to_string()).collect();
+        Self::new(&format!("{{{}}}", alts.join(",")), seeds)
+    }
+
+    pub fn template(&self) -> &str {
+        &self.template
+    }
+
+    /// The expanded schemes, deduplicated, in expansion order.
+    pub fn schemes(&self) -> &[QuantScheme] {
+        &self.schemes
+    }
+
+    pub fn seeds(&self) -> &[u64] {
+        &self.seeds
+    }
+
+    /// Total cell count (`schemes × seeds`).
+    pub fn n_cells(&self) -> usize {
+        self.schemes.len() * self.seeds.len()
+    }
+
+    /// Expand into ordered, uniquely-labeled cells over `base`
+    /// (scheme-major, seed-minor; `base`'s own scheme and seed are
+    /// replaced, everything else — model, steps, lr, ... — carries over).
+    pub fn expand(&self, base: &TrainConfig) -> Vec<GridCell> {
+        let mut cells = Vec::with_capacity(self.n_cells());
+        for scheme in &self.schemes {
+            for &seed in &self.seeds {
+                let mut cfg = base.clone();
+                cfg.scheme = scheme.clone();
+                cfg.seed = seed;
+                cells.push(GridCell {
+                    index: cells.len(),
+                    label: format!("{}#s{seed}", scheme.tag()),
+                    cfg,
+                });
+            }
+        }
+        cells
+    }
+}
+
+/// One-scheme grid helper: the cells `sweep_row` runs — `base`'s own
+/// scheme across `seeds`, in seed order.
+pub fn seed_cells(base: &TrainConfig, seeds: &[u64]) -> Result<Vec<GridCell>> {
+    let seeds = validate_seeds(seeds)?;
+    Ok(seeds
+        .iter()
+        .enumerate()
+        .map(|(i, &seed)| {
+            let mut cfg = base.clone();
+            cfg.seed = seed;
+            GridCell {
+                index: i,
+                label: format!("{}#s{seed}", base.scheme.tag()),
+                cfg,
+            }
+        })
+        .collect())
+}
+
+/// Parse the CLI seed axis: comma-separated integers and/or inclusive
+/// `a..b` ranges (`"1..5"` → 1,2,3,4,5; `"1,2,7..9"` → 1,2,7,8,9).
+pub fn parse_seeds(s: &str) -> Result<Vec<u64>> {
+    let mut seeds = Vec::new();
+    for tok in s.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            bail!("empty seed token in '{s}'");
+        }
+        if let Some((a, b)) = tok.split_once("..") {
+            let lo: u64 = a
+                .trim()
+                .parse()
+                .with_context(|| format!("bad seed range start '{a}' in '{s}'"))?;
+            let hi: u64 = b
+                .trim()
+                .parse()
+                .with_context(|| format!("bad seed range end '{b}' in '{s}'"))?;
+            if lo > hi {
+                bail!("seed range '{tok}' is empty (start > end; ranges are inclusive)");
+            }
+            seeds.extend(lo..=hi);
+        } else {
+            seeds.push(
+                tok.parse()
+                    .with_context(|| format!("bad seed '{tok}' in '{s}'"))?,
+            );
+        }
+    }
+    validate_seeds(&seeds)
+}
+
+/// The one seed-list rule every grid surface shares: non-empty,
+/// duplicate-free (a duplicated seed would silently double-weight one
+/// run in every aggregate).
+fn validate_seeds(seeds: &[u64]) -> Result<Vec<u64>> {
+    if seeds.is_empty() {
+        bail!("empty seed list — pass at least one seed");
+    }
+    for (i, s) in seeds.iter().enumerate() {
+        if seeds[..i].contains(s) {
+            bail!("duplicate seed {s} — each seed may appear once per grid");
+        }
+    }
+    Ok(seeds.to_vec())
+}
+
+/// Shell-style brace expansion: every `{a,b,...}` alternation multiplies
+/// the result set; the leftmost brace varies slowest.  Braces do not
+/// nest; an empty alternative (`{a,}`) is allowed (optional-suffix
+/// grids like `hindsight{,@pc}`).
+pub fn expand_braces(template: &str) -> Result<Vec<String>> {
+    let Some(open) = template.find('{') else {
+        if template.contains('}') {
+            bail!("unmatched '}}' in '{template}'");
+        }
+        return Ok(vec![template.to_string()]);
+    };
+    let rest = &template[open + 1..];
+    let close = rest
+        .find('}')
+        .with_context(|| format!("unmatched '{{' in '{template}'"))?;
+    let body = &rest[..close];
+    if body.contains('{') {
+        bail!("nested braces in '{template}' — alternations do not nest");
+    }
+    if body.is_empty() {
+        bail!("empty alternation '{{}}' in '{template}'");
+    }
+    let prefix = &template[..open];
+    let tails = expand_braces(&rest[close + 1..])?;
+    let mut out = Vec::with_capacity(body.split(',').count() * tails.len());
+    for alt in body.split(',') {
+        let alt = alt.trim();
+        for tail in &tails {
+            out.push(format!("{prefix}{alt}{tail}"));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimator::Estimator;
+    use crate::util::testkit::forall;
+
+    #[test]
+    fn brace_expansion_is_shell_ordered() {
+        assert_eq!(expand_braces("plain").unwrap(), vec!["plain"]);
+        assert_eq!(
+            expand_braces("x{a,b}y{1,2}").unwrap(),
+            vec!["xay1", "xay2", "xby1", "xby2"]
+        );
+        // empty alternative = optional suffix
+        assert_eq!(
+            expand_braces("hindsight{,@pc}").unwrap(),
+            vec!["hindsight", "hindsight@pc"]
+        );
+        // whitespace around alternatives is trimmed
+        assert_eq!(expand_braces("{a, b}").unwrap(), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn malformed_templates_are_rejected() {
+        assert!(expand_braces("{a,b").is_err()); // unmatched {
+        assert!(expand_braces("a}b").is_err()); // unmatched }
+        assert!(expand_braces("{a,{b,c}}").is_err()); // nested
+        assert!(expand_braces("{}").is_err()); // empty alternation
+        assert!(GridSpec::new("g:{bogus,hindsight}:8", &[1]).is_err()); // bad key
+        assert!(GridSpec::new("g:hindsight:{1,8}", &[1]).is_err()); // bad bits
+        let err = format!(
+            "{:#}",
+            GridSpec::new("g:{hindsight,nope}:8", &[1]).unwrap_err()
+        );
+        assert!(err.contains("g:nope:8"), "names the expansion: {err}");
+    }
+
+    #[test]
+    fn the_issue_grid_expands_deterministically() {
+        let template = "g:{hindsight,current,tqt}@{pt,pc}:{4,8}";
+        let a = GridSpec::new(template, &[1, 2, 3, 4, 5]).unwrap();
+        let b = GridSpec::new(template, &[1, 2, 3, 4, 5]).unwrap();
+        // deterministic: two expansions agree exactly
+        let canon = |g: &GridSpec| -> Vec<String> {
+            g.schemes().iter().map(|s| s.to_string()).collect()
+        };
+        assert_eq!(canon(&a), canon(&b));
+        // 3 estimators × 2 granularities × 2 bit-widths, duplicate-free
+        assert_eq!(a.schemes().len(), 12);
+        assert_eq!(a.n_cells(), 60);
+        let mut seen = canon(&a);
+        seen.sort();
+        seen.dedup();
+        assert_eq!(seen.len(), 12, "expansion must be duplicate-free");
+        // `@pt` canonicalizes to the bare key; `@pc` survives
+        assert!(canon(&a).contains(&"w:fp32:8 a:fp32:8 g:hindsight:4".to_string()));
+        assert!(canon(&a).contains(&"w:fp32:8 a:fp32:8 g:tqt@pc:8".to_string()));
+    }
+
+    /// Satellite acceptance: expansion is deterministic, duplicate-free
+    /// and label-unique across estimators × granularities × bits.
+    #[test]
+    fn expansion_exhaustive_over_estimators_granularities_and_bits() {
+        let keys = Estimator::keys().join(",");
+        let template = format!("g:{{{keys}}}@{{pt,pc}}:{{2,4,8}}");
+        let grid = GridSpec::new(&template, &[1, 2]).unwrap();
+        let n = Estimator::keys().len() * 2 * 3;
+        assert_eq!(grid.schemes().len(), n);
+        // expansion order matches the nested-loop order (key slowest,
+        // granularity, then bits) and every scheme equals its
+        // builder-constructed counterpart
+        let mut i = 0;
+        for est in Estimator::all() {
+            for pc in [false, true] {
+                let est = if pc { est.per_channel() } else { est };
+                for bits in [2u32, 4, 8] {
+                    let mut want = QuantScheme::fp32();
+                    want.gradients.estimator = est;
+                    let want = want.bits(crate::scheme::TensorClass::Gradients, bits);
+                    assert_eq!(grid.schemes()[i], want, "slot {i}");
+                    i += 1;
+                }
+            }
+        }
+        // labels are unique across the whole cell set
+        let cells = grid.expand(&TrainConfig::new("mlp"));
+        assert_eq!(cells.len(), n * 2);
+        let mut labels: Vec<&str> = cells.iter().map(|c| c.label.as_str()).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), n * 2, "cell labels must be unique");
+        // indices are dense and in order
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+        }
+    }
+
+    /// Randomized: any alternation set (with textual duplicates) expands
+    /// deterministically into a duplicate-free, label-unique grid.
+    #[test]
+    fn random_alternation_grids_are_duplicate_free() {
+        let keys = Estimator::keys();
+        forall(
+            64,
+            "grid-dedup",
+            |rng| {
+                // 2-5 alternatives, possibly repeating, over random
+                // keys/granularities/bits
+                let n = 2 + rng.below(4);
+                let alts: Vec<String> = (0..n)
+                    .map(|_| {
+                        let key = keys[rng.below(keys.len())];
+                        let gran = ["", "@pt", "@pc"][rng.below(3)];
+                        let bits = [4, 8][rng.below(2)];
+                        format!("{key}{gran}:{bits}")
+                    })
+                    .collect();
+                format!("g:{{{}}}", alts.join(","))
+            },
+            |template| {
+                let a = GridSpec::new(template, &[7]).unwrap();
+                let b = GridSpec::new(template, &[7]).unwrap();
+                let canon: Vec<String> =
+                    a.schemes().iter().map(|s| s.to_string()).collect();
+                let canon_b: Vec<String> =
+                    b.schemes().iter().map(|s| s.to_string()).collect();
+                let mut uniq = canon.clone();
+                uniq.sort();
+                uniq.dedup();
+                canon == canon_b && uniq.len() == canon.len()
+            },
+        );
+    }
+
+    #[test]
+    fn cells_carry_the_base_config() {
+        let mut base = TrainConfig::new("cnn");
+        base.steps = 77;
+        base.lr = 0.25;
+        let grid = GridSpec::new("g:{hindsight,current}:8", &[3, 9]).unwrap();
+        let cells = grid.expand(&base);
+        assert_eq!(cells.len(), 4);
+        // scheme-major, seed-minor
+        assert_eq!(cells[0].cfg.seed, 3);
+        assert_eq!(cells[1].cfg.seed, 9);
+        assert_eq!(cells[0].cfg.scheme, cells[1].cfg.scheme);
+        assert_ne!(cells[1].cfg.scheme, cells[2].cfg.scheme);
+        for c in &cells {
+            assert_eq!(c.cfg.steps, 77);
+            assert_eq!(c.cfg.lr, 0.25);
+            assert_eq!(c.cfg.model, "cnn");
+            assert!(c.label.contains("#s"), "{}", c.label);
+            assert!(!c.label.contains(' '), "{}", c.label);
+        }
+    }
+
+    #[test]
+    fn alternation_matches_the_textual_template() {
+        let schemes = vec![
+            QuantScheme::fully_quantized(Estimator::HINDSIGHT),
+            QuantScheme::fully_quantized(Estimator::DSGC),
+        ];
+        let grid = GridSpec::alternation(&schemes, &[1]).unwrap();
+        assert_eq!(grid.schemes(), &schemes[..]);
+        // duplicates collapse to first occurrence
+        let dup = vec![schemes[0].clone(), schemes[0].clone(), schemes[1].clone()];
+        assert_eq!(GridSpec::alternation(&dup, &[1]).unwrap().schemes().len(), 2);
+        assert!(GridSpec::alternation(&[], &[1]).is_err());
+    }
+
+    #[test]
+    fn seed_parsing_ranges_and_lists() {
+        assert_eq!(parse_seeds("1..5").unwrap(), vec![1, 2, 3, 4, 5]);
+        assert_eq!(parse_seeds("1,2,7..9").unwrap(), vec![1, 2, 7, 8, 9]);
+        assert_eq!(parse_seeds("4").unwrap(), vec![4]);
+        assert_eq!(parse_seeds(" 1 , 2 ").unwrap(), vec![1, 2]);
+        assert!(parse_seeds("").is_err());
+        assert!(parse_seeds("5..1").is_err());
+        assert!(parse_seeds("x").is_err());
+        assert!(parse_seeds("1,1").is_err());
+        assert!(parse_seeds("1..3,2").is_err()); // overlapping range
+    }
+
+    #[test]
+    fn empty_or_duplicate_seed_axes_are_rejected() {
+        assert!(GridSpec::new("g:hindsight:8", &[]).is_err());
+        assert!(GridSpec::new("g:hindsight:8", &[1, 1]).is_err());
+        assert!(seed_cells(&TrainConfig::new("mlp"), &[]).is_err());
+        let cells = seed_cells(&TrainConfig::new("mlp"), &[5, 6]).unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].cfg.seed, 5);
+        assert_eq!(cells[1].index, 1);
+    }
+}

@@ -8,15 +8,30 @@
 //!   [`QuantScheme`] (per-tensor-class specs + per-site overrides).
 //! * [`trainer`] — the step loop: batch marshalling, the compiled train /
 //!   eval / dump graphs, calibration, LR schedules, metrics.
-//! * [`sweep`] — multi-seed, multi-estimator sweeps producing the paper's
-//!   table rows (mean ± std over seeds).
+//! * [`sweep`] — multi-seed table rows (mean ± std over seeds); a thin
+//!   wrapper over the executor's serial path.
+//! * [`grid`] — scheme-grid sweeps: brace-expansion templates
+//!   (`g:{hindsight,current}@{pt,pc}:{4,8}`) deterministically expanded
+//!   into ordered, uniquely-labeled cells.
+//! * [`executor`] — the rayon-free `std::thread` work-queue executor:
+//!   per-worker engine reuse, panic isolation, results landing by grid
+//!   index (bit-identical to the serial path at any worker count).
+//! * [`store`] — the resumable run store: completed cells persist as
+//!   JSON keyed by `(model, canonical scheme, seed, steps)` so
+//!   re-running a grid skips cached cells.
 
 pub mod config;
+pub mod executor;
+pub mod grid;
 pub mod ranges;
+pub mod store;
 pub mod sweep;
 pub mod trainer;
 
 pub use config::{Estimator, QuantScheme, QuantSpec, Schedule, TensorClass, TrainConfig};
+pub use executor::{grid_rows, run_cells_on, run_grid, CellOutcome, CellRun, GridOptions};
+pub use grid::{parse_seeds, GridCell, GridSpec};
 pub use ranges::RangeManager;
+pub use store::{CellKey, RunStore};
 pub use sweep::{sweep_row, SweepOutcome};
 pub use trainer::Trainer;

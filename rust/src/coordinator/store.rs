@@ -1,0 +1,351 @@
+//! The resumable run store: completed grid cells persisted as JSON.
+//!
+//! A week-long ablation grid must survive interruption, so every
+//! completed cell lands on disk as one JSON document keyed by
+//! `(model, canonical scheme string, seed, steps)` plus a digest of
+//! the remaining run-determining knobs (lr, schedule, weight decay,
+//! calibration, search cadence, dataset sizes) — together, exactly the
+//! inputs that determine a run's outcome on the deterministic training
+//! stack.  Re-running the same grid serves cached cells from the store
+//! instead of re-training (`--no-cache` forces re-execution); changing
+//! *any* knob changes the key, so a cache hit is never a stale result.
+//!
+//! Layout: one `cell-<fnv64>.json` file per cell under the store
+//! directory.  The file name is a 64-bit FNV-1a hash of the key string;
+//! the key fields are also stored *inside* the document and verified on
+//! read, so a hash collision (or a file copied between stores) degrades
+//! to a cache miss, never to a wrong record.  Writes go through a
+//! temp-file rename, so an interrupted run never leaves a torn cell
+//! behind.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::config::TrainConfig;
+use crate::metrics::RunRecord;
+use crate::util::json::{self, Value};
+
+/// Store-document schema version; bump on incompatible layout changes
+/// (older documents then read as cache misses, not parse errors).
+const STORE_VERSION: f64 = 1.0;
+
+/// The identity of one grid cell: everything that determines the run's
+/// outcome.  The scheme is the *canonical* string form, so any two
+/// configs that quantize identically share a cache entry regardless of
+/// how they were spelled; `config` digests every other outcome-relevant
+/// training knob so a changed `--lr` (say) can never serve a stale
+/// cached cell.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CellKey {
+    pub model: String,
+    pub scheme: String,
+    pub seed: u64,
+    pub steps: u64,
+    /// digest of the remaining run-determining config fields (see
+    /// [`CellKey::config_digest`])
+    pub config: String,
+}
+
+impl CellKey {
+    /// The key of a training configuration.
+    pub fn of(cfg: &TrainConfig) -> Self {
+        Self {
+            model: cfg.model.clone(),
+            scheme: cfg.scheme.to_string(),
+            seed: cfg.seed,
+            steps: cfg.steps,
+            config: Self::config_digest(cfg),
+        }
+    }
+
+    /// Stable flat form of every outcome-relevant config field outside
+    /// the primary key.  `log_every` is deliberately excluded — it only
+    /// changes logging, never the record.
+    pub fn config_digest(cfg: &TrainConfig) -> String {
+        format!(
+            "lr={} flr={} sched={:?} wd={} calib={} dsgcp={} dsgci={} ntrain={} nval={} evale={}",
+            cfg.lr,
+            cfg.final_lr,
+            cfg.schedule,
+            cfg.weight_decay,
+            cfg.calib_batches,
+            cfg.dsgc_period,
+            cfg.dsgc_iters,
+            cfg.n_train,
+            cfg.n_val,
+            cfg.eval_every
+        )
+    }
+
+    /// Stable flat form (also the hash input):
+    /// `model|scheme|s<seed>|t<steps>|<config>`.
+    pub fn id(&self) -> String {
+        format!(
+            "{}|{}|s{}|t{}|{}",
+            self.model, self.scheme, self.seed, self.steps, self.config
+        )
+    }
+
+    /// Store file name for this key.
+    pub fn file_name(&self) -> String {
+        format!("cell-{:016x}.json", fnv1a64(self.id().as_bytes()))
+    }
+}
+
+/// 64-bit FNV-1a (the store needs a stable, dependency-free hash; the
+/// key fields inside each document guard against collisions).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// A directory of persisted cell records.
+#[derive(Debug)]
+pub struct RunStore {
+    dir: PathBuf,
+}
+
+impl RunStore {
+    /// Open (creating if needed) the store at `dir`.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating run store {}", dir.display()))?;
+        Ok(Self { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Look a cell up; any mismatch (absent, torn, wrong version, key
+    /// fields disagreeing with `key`) is a cache miss, never an error.
+    pub fn get(&self, key: &CellKey) -> Option<RunRecord> {
+        let path = self.dir.join(key.file_name());
+        let text = std::fs::read_to_string(&path).ok()?;
+        let doc = json::parse(&text).ok()?;
+        if doc.get("version")?.as_f64()? != STORE_VERSION {
+            return None;
+        }
+        let stored = CellKey {
+            model: doc.get("model")?.as_str()?.to_string(),
+            scheme: doc.get("scheme")?.as_str()?.to_string(),
+            seed: doc.get("seed")?.as_f64()? as u64,
+            steps: doc.get("steps")?.as_f64()? as u64,
+            config: doc.get("config")?.as_str()?.to_string(),
+        };
+        if stored != *key {
+            log::warn!(
+                "run store {}: key mismatch (stored '{}', wanted '{}') — treating as miss",
+                path.display(),
+                stored.id(),
+                key.id()
+            );
+            return None;
+        }
+        RunRecord::from_json(doc.get("record")?).ok()
+    }
+
+    pub fn contains(&self, key: &CellKey) -> bool {
+        self.get(key).is_some()
+    }
+
+    /// Persist a completed cell (atomically: temp file + rename;
+    /// overwrites any previous record under the same key).
+    pub fn put(&self, key: &CellKey, record: &RunRecord) -> Result<PathBuf> {
+        let doc = Value::object(vec![
+            ("version", Value::Num(STORE_VERSION)),
+            ("model", Value::from(key.model.clone())),
+            ("scheme", Value::from(key.scheme.clone())),
+            ("seed", Value::Num(key.seed as f64)),
+            ("steps", Value::Num(key.steps as f64)),
+            ("config", Value::from(key.config.clone())),
+            ("record", record.to_json()),
+        ]);
+        let path = self.dir.join(key.file_name());
+        let tmp = self
+            .dir
+            .join(format!(".tmp-{}-{}", std::process::id(), key.file_name()));
+        std::fs::write(&tmp, format!("{doc}\n"))
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("committing {}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Number of cell documents in the store (any key).
+    pub fn len(&self) -> usize {
+        let Ok(rd) = std::fs::read_dir(&self.dir) else {
+            return 0;
+        };
+        rd.filter_map(|e| e.ok())
+            .filter(|e| {
+                let name = e.file_name();
+                let name = name.to_string_lossy();
+                name.starts_with("cell-") && name.ends_with(".json")
+            })
+            .count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_store(tag: &str) -> RunStore {
+        let dir = std::env::temp_dir().join(format!(
+            "hindsight_store_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        RunStore::open(dir).unwrap()
+    }
+
+    fn record(name: &str) -> RunRecord {
+        let mut r = RunRecord::new(name);
+        r.log_step(0, 2.5, 0.1);
+        r.log_step(1, 1.0 / 3.0, 0.2);
+        r.log_eval(1, 0.9, 0.55);
+        r.train_seconds = 1.25;
+        r.extra.insert("coverage".into(), 0.75);
+        r
+    }
+
+    fn key(scheme: &str, seed: u64, steps: u64) -> CellKey {
+        CellKey {
+            model: "mlp".into(),
+            scheme: scheme.into(),
+            seed,
+            steps,
+            config: "lr=0.05".into(),
+        }
+    }
+
+    #[test]
+    fn put_get_round_trip() {
+        let store = tmp_store("roundtrip");
+        let key = key("w:current:8 a:hindsight:8 g:hindsight:8", 3, 24);
+        assert!(store.get(&key).is_none());
+        assert!(store.is_empty());
+        let rec = record("mlp-run");
+        store.put(&key, &rec).unwrap();
+        assert_eq!(store.get(&key).unwrap(), rec);
+        assert_eq!(store.len(), 1);
+        // overwrite under the same key
+        let rec2 = record("mlp-run-2");
+        store.put(&key, &rec2).unwrap();
+        assert_eq!(store.get(&key).unwrap(), rec2);
+        assert_eq!(store.len(), 1);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn keys_separate_every_axis_including_the_config_digest() {
+        let base = key("w:fp32:8 a:fp32:8 g:hindsight:8", 1, 100);
+        let mut variants = vec![base.clone()];
+        let mut k = base.clone();
+        k.scheme = "w:fp32:8 a:fp32:8 g:current:8".into();
+        variants.push(k);
+        let mut k = base.clone();
+        k.seed = 2;
+        variants.push(k);
+        let mut k = base.clone();
+        k.steps = 200;
+        variants.push(k);
+        let mut k = base.clone();
+        k.model = "cnn".into();
+        variants.push(k);
+        // a changed training knob (digest) must also miss — a stale
+        // cached cell under a new lr would be silently wrong results
+        let mut k = base.clone();
+        k.config = "lr=0.005".into();
+        variants.push(k);
+        let mut names: Vec<String> = variants.iter().map(|k| k.file_name()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), variants.len(), "every key axis must separate");
+    }
+
+    #[test]
+    fn config_digest_tracks_every_outcome_relevant_knob() {
+        let base = TrainConfig::new("mlp");
+        let d0 = CellKey::config_digest(&base);
+        let mutations: Vec<Box<dyn Fn(&mut TrainConfig)>> = vec![
+            Box::new(|c| c.lr = 0.005),
+            Box::new(|c| c.final_lr = 0.9),
+            Box::new(|c| c.schedule = crate::coordinator::config::Schedule::Cosine),
+            Box::new(|c| c.weight_decay = 0.5),
+            Box::new(|c| c.calib_batches = 9),
+            Box::new(|c| c.dsgc_period = 7),
+            Box::new(|c| c.dsgc_iters = 3),
+            Box::new(|c| c.n_train = 64),
+            Box::new(|c| c.n_val = 16),
+            Box::new(|c| c.eval_every = 5),
+        ];
+        for (i, m) in mutations.iter().enumerate() {
+            let mut cfg = base.clone();
+            m(&mut cfg);
+            assert_ne!(CellKey::config_digest(&cfg), d0, "mutation {i} must change the digest");
+        }
+        // log_every is presentation-only: same digest, same cache cell
+        let mut cfg = base.clone();
+        cfg.log_every = 999;
+        assert_eq!(CellKey::config_digest(&cfg), d0);
+    }
+
+    #[test]
+    fn corrupt_wrong_version_or_mismatched_documents_read_as_misses() {
+        let store = tmp_store("corrupt");
+        let key = key("w:fp32:8 a:fp32:8 g:hindsight:8", 1, 10);
+        let path = store.dir().join(key.file_name());
+        // torn write
+        std::fs::write(&path, "{\"version\":").unwrap();
+        assert!(store.get(&key).is_none());
+        // future version
+        std::fs::write(&path, "{\"version\":99,\"model\":\"mlp\"}").unwrap();
+        assert!(store.get(&key).is_none());
+        // right file name, wrong key inside (simulated hash collision)
+        let other = CellKey {
+            seed: 2,
+            ..key.clone()
+        };
+        let doc = Value::object(vec![
+            ("version", Value::Num(STORE_VERSION)),
+            ("model", Value::from(other.model.clone())),
+            ("scheme", Value::from(other.scheme.clone())),
+            ("seed", Value::Num(other.seed as f64)),
+            ("steps", Value::Num(other.steps as f64)),
+            ("config", Value::from(other.config.clone())),
+            ("record", record("x").to_json()),
+        ]);
+        std::fs::write(&path, doc.to_string()).unwrap();
+        assert!(store.get(&key).is_none(), "key fields must be verified");
+        assert!(store.get(&other).is_none(), "lives under the wrong file name");
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn cell_key_of_config_uses_the_canonical_scheme() {
+        use crate::coordinator::config::Estimator;
+        let mut cfg = TrainConfig::new("mlp").fully_quantized(Estimator::HINDSIGHT);
+        cfg.seed = 7;
+        cfg.steps = 50;
+        let key = CellKey::of(&cfg);
+        assert_eq!(key.scheme, "w:current:8 a:hindsight:8 g:hindsight:8");
+        assert_eq!(key.seed, 7);
+        assert_eq!(key.steps, 50);
+        assert_eq!(key.config, CellKey::config_digest(&cfg));
+        assert!(key.config.contains("lr=0.05"), "{}", key.config);
+        assert!(key.file_name().starts_with("cell-"));
+        assert!(key.file_name().ends_with(".json"));
+    }
+}

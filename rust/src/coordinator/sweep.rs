@@ -1,11 +1,19 @@
-//! Multi-seed sweeps: run one configuration across seeds and aggregate
-//! into the paper's "mean ± std" table rows.  A whole estimator sweep
-//! shares a single Engine, so each model compiles exactly once.
+//! Multi-seed sweeps: one configuration across seeds, aggregated into
+//! the paper's "mean ± std" table rows.
+//!
+//! Since the grid refactor this is a thin wrapper over the sweep
+//! engine: `sweep_row` builds the seed cells with
+//! [`grid::seed_cells`](crate::coordinator::grid::seed_cells) and runs
+//! them through the executor's serial shared-engine path
+//! ([`executor::run_cells_on`](crate::coordinator::executor::run_cells_on)),
+//! so an entire estimator sweep compiles each model exactly once and
+//! shares cache/store semantics with the parallel `--grid` path.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::coordinator::config::TrainConfig;
-use crate::coordinator::trainer::Trainer;
+use crate::coordinator::executor::{run_cells_on, CellOutcome, GridOptions};
+use crate::coordinator::grid::seed_cells;
 use crate::metrics::{RunRecord, SeedAggregate};
 use crate::runtime::engine::Engine;
 
@@ -15,40 +23,64 @@ pub struct SweepOutcome {
     pub label: String,
     pub agg: SeedAggregate,
     pub runs: Vec<RunRecord>,
-    /// mean seconds per training step (perf reporting)
+    /// mean seconds per training step (perf reporting); 0.0 when no
+    /// steps ran — never a masked divide
     pub sec_per_step: f64,
 }
 
 impl SweepOutcome {
+    /// Aggregate completed runs into a row.  Handles the degenerate
+    /// cases explicitly: zero training steps (a `steps = 0` smoke
+    /// config, or every cell failed) reports `sec_per_step` of exactly
+    /// 0.0 rather than dividing total seconds by a clamped step count.
+    pub fn from_runs(label: &str, runs: Vec<RunRecord>) -> Self {
+        let agg = SeedAggregate::from_runs(label, &runs);
+        let total_steps: f64 = runs.iter().map(|r| r.steps.len() as f64).sum();
+        let total_secs: f64 = runs.iter().map(|r| r.train_seconds).sum();
+        let sec_per_step = if total_steps > 0.0 {
+            total_secs / total_steps
+        } else {
+            0.0
+        };
+        Self {
+            label: label.to_string(),
+            agg,
+            runs,
+            sec_per_step,
+        }
+    }
+
     pub fn cell(&self) -> String {
         self.agg.cell()
     }
 }
 
-/// Run `cfg` across `seeds`, returning the aggregate row.
+/// Run `cfg` across `seeds` on one shared engine, returning the
+/// aggregate row.  An empty seed list is an error (a degenerate
+/// no-seed aggregate would silently print `NaN ± NaN`); any failing
+/// seed cell fails the whole row, and the serial path's fail-fast
+/// ([`GridOptions::serial`]) stops before training the remaining
+/// seeds — partial rows are a grid-engine concern
+/// (`executor::grid_rows`), not a table-row one.
 pub fn sweep_row(
     engine: &Engine,
     base: &TrainConfig,
     label: &str,
     seeds: &[u64],
 ) -> Result<SweepOutcome> {
-    let mut runs = Vec::with_capacity(seeds.len());
-    for &seed in seeds {
-        let mut cfg = base.clone();
-        cfg.seed = seed;
-        log::info!("[sweep:{label}] seed {seed} ...");
-        let rec = Trainer::new(engine, cfg)?.run()?;
-        runs.push(rec);
+    if seeds.is_empty() {
+        bail!("sweep row '{label}': empty seed list — pass at least one seed");
     }
-    let agg = SeedAggregate::from_runs(label, &runs);
-    let total_steps: f64 = runs.iter().map(|r| r.steps.len() as f64).sum();
-    let total_secs: f64 = runs.iter().map(|r| r.train_seconds).sum();
-    Ok(SweepOutcome {
-        label: label.to_string(),
-        agg,
-        runs,
-        sec_per_step: total_secs / total_steps.max(1.0),
-    })
+    let cells = seed_cells(base, seeds)?;
+    let results = run_cells_on(engine, &cells, &GridOptions::serial());
+    let mut runs = Vec::with_capacity(results.len());
+    for r in results {
+        match r.outcome {
+            CellOutcome::Ran(rec) | CellOutcome::Cached(rec) => runs.push(rec),
+            CellOutcome::Failed(e) => bail!("sweep row '{label}': cell '{}': {e}", r.label),
+        }
+    }
+    Ok(SweepOutcome::from_runs(label, runs))
 }
 
 #[cfg(test)]
@@ -77,6 +109,42 @@ mod tests {
         assert!(Estimator::parse("not-an-estimator").is_err());
     }
 
+    /// Satellite regression: degenerate aggregates are explicit, not
+    /// masked.  Zero completed steps → `sec_per_step` exactly 0.0.
+    #[test]
+    fn from_runs_reports_zero_sec_per_step_when_no_steps_ran() {
+        let out = SweepOutcome::from_runs("empty", Vec::new());
+        assert_eq!(out.sec_per_step, 0.0);
+        assert!(out.runs.is_empty());
+        assert!(out.agg.accs.is_empty());
+        // a run that trained zero steps but spent wall-clock time (e.g.
+        // a steps=0 smoke config that still compiled/evaluated)
+        let mut rec = RunRecord::new("zero-steps");
+        rec.train_seconds = 3.5;
+        let out = SweepOutcome::from_runs("zero", vec![rec]);
+        assert_eq!(out.sec_per_step, 0.0, "no steps ran: report 0.0, not 3.5/1");
+        // the normal case still divides by the true step count
+        let mut rec = RunRecord::new("two-steps");
+        rec.log_step(0, 1.0, 0.5);
+        rec.log_step(1, 0.9, 0.5);
+        rec.train_seconds = 3.0;
+        let out = SweepOutcome::from_runs("ok", vec![rec]);
+        assert_eq!(out.sec_per_step, 1.5);
+    }
+
+    #[test]
+    fn empty_seed_lists_are_rejected() {
+        if !Manifest::default_dir().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let engine = Engine::new().unwrap();
+        let cfg = TrainConfig::new("mlp");
+        let err = sweep_row(&engine, &cfg, "none", &[]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("empty seed list"), "{msg}");
+    }
+
     #[test]
     fn sweep_aggregates_across_seeds() {
         if !Manifest::default_dir().join("manifest.json").exists() {
@@ -93,6 +161,9 @@ mod tests {
         assert_eq!(out.runs.len(), 2);
         assert!(out.agg.accs.iter().all(|a| a.is_finite()));
         assert!(out.sec_per_step > 0.0);
+        // provenance: one cell tag per seed, in seed order
+        assert_eq!(out.agg.cells.len(), 2);
+        assert!(out.agg.cells[0].ends_with("-s1"), "{:?}", out.agg.cells);
         // one engine, one train-graph compile across both seeds
         assert!(engine.stats().compiles <= 3); // init + train + eval
     }

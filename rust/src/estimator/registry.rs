@@ -214,13 +214,19 @@ impl Estimator {
 
     /// Resolve a registry key (the CLI / config string form), with an
     /// optional granularity suffix: `hindsight` is per-tensor,
-    /// `hindsight@pc` per-channel.
+    /// `hindsight@pc` per-channel.  `@pt` is accepted as the explicit
+    /// per-tensor spelling (it canonicalizes back to the bare key) so
+    /// grid templates can alternate over granularity (`@{pt,pc}`).
     pub fn parse(s: &str) -> Result<Self> {
         let (base, gran) = match s.split_once('@') {
             None => (s, Granularity::PerTensor),
             Some((b, "pc")) => (b, Granularity::PerChannel),
+            Some((b, "pt")) => (b, Granularity::PerTensor),
             Some((_, suffix)) => {
-                bail!("unknown granularity suffix '@{suffix}' (use '@pc' for per-channel)")
+                bail!(
+                    "unknown granularity suffix '@{suffix}' (use '@pc' for per-channel, \
+                     '@pt' for explicit per-tensor)"
+                )
             }
         };
         for info in REGISTRY {
@@ -485,6 +491,11 @@ mod tests {
         let err = Estimator::parse("hindsight@bogus").unwrap_err().to_string();
         assert!(err.contains("granularity suffix"), "{err}");
         assert!(Estimator::parse("nope@pc").is_err());
+        // '@pt' is the explicit per-tensor spelling (grid granularity
+        // axes); it canonicalizes back to the bare key
+        let pt = Estimator::parse("hindsight@pt").unwrap();
+        assert_eq!(pt, Estimator::HINDSIGHT);
+        assert_eq!(pt.spec(), "hindsight");
     }
 
     #[test]

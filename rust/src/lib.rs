@@ -37,7 +37,9 @@
 //!   cache, device-resident parameter state.
 //! * [`coordinator`] — the paper's contribution as runtime logic: the
 //!   range-state machine delegating to the estimator subsystem,
-//!   calibration, the training driver and multi-seed sweeps.
+//!   calibration, the training driver, and the sweep-grid engine
+//!   (brace-expanded scheme grids, a deterministic parallel executor,
+//!   a resumable run store).
 
 pub mod coordinator;
 pub mod data;

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   train       train one model/estimator configuration end to end
 //!   sweep       multi-seed, multi-estimator table rows (paper Tables 1-4)
+//!               and parallel scheme grids (--grid/--workers/--resume)
 //!   estimators  list the range-estimator registry
 //!   mem-report  static-vs-dynamic memory traffic (paper Table 5 / Sec. 6)
 //!   inspect     print a model's manifest ABI and quantizer sites
@@ -17,17 +18,29 @@
 //! and rewrite the scheme.  `hindsight estimators` prints the registry
 //! and the full scheme grammar.
 //!
+//! Scheme grids: `sweep --grid` takes a scheme template with shell-style
+//! alternations, crossed with `--seeds` (ranges are inclusive), run on
+//! `--workers` threads with deterministic (grid-index) output ordering.
+//! Completed cells persist in the run store (`--store`, default `runs/`)
+//! so an interrupted grid resumes where it stopped; `--no-cache` forces
+//! every cell to re-run.
+//!
 //! Examples:
 //!   hindsight train --model cnn --steps 300 --grad-est hindsight
 //!   hindsight train --model cnn --scheme "w:current:8 a:hindsight:8 g:hindsight:8"
 //!   hindsight train --model cnn --grad-est hindsight@pc
 //!   hindsight sweep --model resnet_tiny --mode grad --seeds 1,2,3
 //!   hindsight sweep --model cnn --estimators hindsight,hindsight@pc,tqt
+//!   hindsight sweep --model cnn --grid "g:{hindsight,current,tqt}@{pt,pc}:8" \
+//!       --seeds 1..5 --workers 4
 //!   hindsight mem-report --network mobilenet_v2
 
 use anyhow::{bail, Result};
 
-use hindsight::coordinator::{sweep_row, Estimator, QuantScheme, Schedule, TrainConfig, Trainer};
+use hindsight::coordinator::{
+    grid_rows, parse_seeds, run_grid, sweep_row, CellOutcome, Estimator, GridOptions, GridSpec,
+    QuantScheme, RunStore, Schedule, TrainConfig, Trainer,
+};
 use hindsight::models;
 use hindsight::runtime::Engine;
 use hindsight::scheme::parse::syntax_help;
@@ -63,6 +76,8 @@ fn run(mut args: Args) -> Result<()> {
             eprintln!(
                 "usage: hindsight <train|sweep|estimators|mem-report|inspect|bench-step> [--flags]\n\
                  quantization policy: --scheme \"w:current:8 a:hindsight:8 g:hindsight@pc:4\"\n\
+                 scheme grids: sweep --grid \"g:{{hindsight,current}}@{{pt,pc}}:8\" --seeds 1..5 \
+                 --workers 4 [--store runs] [--no-cache]\n\
                  {}",
                 syntax_help()
             );
@@ -133,12 +148,17 @@ fn cmd_train(args: &mut Args) -> Result<()> {
 
 fn cmd_sweep(args: &mut Args) -> Result<()> {
     let base = parse_cfg(args)?;
+    let seeds = parse_seeds(&args.str_or("seeds", "1,2,3"))
+        .map_err(|e| anyhow::anyhow!("--seeds: {e:#}"))?;
+    if let Some(template) = args.get("grid") {
+        return cmd_sweep_grid(args, base, &template, &seeds);
+    }
+    for flag in ["workers", "resume", "no-cache", "store"] {
+        if args.get(flag).is_some() {
+            bail!("--{flag} applies to grid sweeps — pass a --grid template");
+        }
+    }
     let mode = args.str_or("mode", "full"); // grad | act | full
-    let seeds: Vec<u64> = args
-        .list_or("seeds", &["1", "2", "3"])
-        .iter()
-        .map(|s| s.parse().unwrap())
-        .collect();
     // default: the whole registry (the paper's five plus the literature
     // additions)
     let default_keys = Estimator::keys();
@@ -186,6 +206,85 @@ fn cmd_sweep(args: &mut Args) -> Result<()> {
         ]);
     }
     table.print();
+    Ok(())
+}
+
+/// `sweep --grid`: expand the scheme template × seeds into cells, run
+/// them on the work-queue executor against the resumable run store, and
+/// print one aggregate row per scheme in grid order.
+fn cmd_sweep_grid(
+    args: &mut Args,
+    base: TrainConfig,
+    template: &str,
+    seeds: &[u64],
+) -> Result<()> {
+    let workers = args.usize_or("workers", 1).max(1);
+    let store_dir = args.str_or("store", "runs");
+    // cells are cached by default; --no-cache forces re-execution
+    // (completed cells still write through).  --resume is the explicit
+    // spelling of the default, kept so scripts can state their intent.
+    let resume = args.bool_or("resume", true);
+    let no_cache = args.bool_or("no-cache", false);
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    let spec = GridSpec::new(template, seeds)?;
+    let cells = spec.expand(&base);
+    println!(
+        "grid: {} scheme(s) x {} seed(s) = {} cells, {workers} worker(s), store {store_dir}/",
+        spec.schemes().len(),
+        spec.seeds().len(),
+        cells.len(),
+    );
+    let opts = GridOptions {
+        workers,
+        store: Some(RunStore::open(&store_dir)?),
+        use_cache: resume && !no_cache,
+        fail_fast: false,
+    };
+    let runs = run_grid(&cells, &opts);
+
+    let mut table = Table::new(
+        &format!("{} scheme grid ({} seeds)", base.model, seeds.len()),
+        &["Scheme", "Val. Acc. (%)", "ms/step", "Cells"],
+    );
+    let rows = grid_rows(&runs);
+    for (row, scheme) in rows.iter().zip(spec.schemes()) {
+        let canon = scheme.to_string();
+        let per_row = runs.iter().filter(|r| r.key.scheme == canon);
+        let (mut ran, mut cached, mut failed) = (0, 0, 0);
+        for r in per_row {
+            match r.outcome {
+                CellOutcome::Ran(_) => ran += 1,
+                CellOutcome::Cached(_) => cached += 1,
+                CellOutcome::Failed(_) => failed += 1,
+            }
+        }
+        table.row(&[
+            row.label.clone(),
+            if row.runs.is_empty() {
+                "failed".into()
+            } else {
+                row.cell()
+            },
+            format!("{:.0}", row.sec_per_step * 1e3),
+            format!("{ran} ran / {cached} cached / {failed} failed"),
+        ]);
+    }
+    table.print();
+    let s = hindsight::coordinator::executor::summarize(&runs);
+    println!(
+        "grid complete: {} ran, {} cached, {} failed ({} cells in {}/)",
+        s.ran,
+        s.cached,
+        s.failed,
+        runs.len(),
+        store_dir
+    );
+    for r in runs.iter().filter(|r| r.outcome.is_failed()) {
+        if let CellOutcome::Failed(e) = &r.outcome {
+            eprintln!("  cell {} ({}): {e}", r.index, r.label);
+        }
+    }
     Ok(())
 }
 

@@ -1,13 +1,17 @@
 //! Run records and aggregation: loss curves, eval accuracy, per-seed
-//! aggregation into the paper's "mean ± std" rows, CSV export.
+//! aggregation into the paper's "mean ± std" rows, CSV export, and the
+//! JSON form the resumable run store (`coordinator::store`) persists.
 
 use std::collections::BTreeMap;
 use std::io::Write;
 
+use anyhow::{Context, Result};
+
+use crate::util::json::Value;
 use crate::util::stats;
 
 /// Metrics of a single training run (one seed, one configuration).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct RunRecord {
     pub name: String,
     pub steps: Vec<u64>,
@@ -27,6 +31,23 @@ impl RunRecord {
             name: name.to_string(),
             ..Default::default()
         }
+    }
+
+    /// Deterministic pseudo-run derived only from `name` — a stand-in
+    /// trainer for the grid-executor tests and the `grid_sweep` smoke
+    /// bench, which exercise expansion/executor/store logic without
+    /// compiled artifacts.  Same name → bit-identical record, like a
+    /// real run's dependence on its configuration.
+    pub fn synthetic(name: &str, steps: u64) -> Self {
+        let mut rng = crate::util::rng::Pcg32::fold(0x5EED_CE11, name, steps);
+        let mut r = Self::new(name);
+        for step in 0..steps {
+            let x = rng.uniform();
+            r.log_step(step, 2.0 - x, x);
+        }
+        r.log_eval(steps, 1.0, rng.uniform());
+        r.train_seconds = 0.01;
+        r
     }
 
     pub fn log_step(&mut self, step: u64, loss: f32, acc: f32) {
@@ -82,6 +103,104 @@ impl RunRecord {
         }
         Ok(())
     }
+
+    /// JSON form persisted by the run store.  Round-trips bit-exactly
+    /// through [`RunRecord::from_json`] for finite values (f32 scalars
+    /// widen to f64, and the serializer prints the shortest decimal that
+    /// re-parses to the same f64); a record holding NaN/Inf — a diverged
+    /// run — does not re-parse, so such cells simply never cache-hit.
+    pub fn to_json(&self) -> Value {
+        let nums =
+            |v: &[f32]| Value::Array(v.iter().map(|&x| Value::Num(x as f64)).collect());
+        Value::object(vec![
+            ("name", Value::from(self.name.clone())),
+            (
+                "steps",
+                Value::Array(self.steps.iter().map(|&s| Value::Num(s as f64)).collect()),
+            ),
+            ("losses", nums(&self.losses)),
+            ("accs", nums(&self.accs)),
+            (
+                "evals",
+                Value::Array(
+                    self.evals
+                        .iter()
+                        .map(|&(s, l, a)| {
+                            Value::Array(vec![
+                                Value::Num(s as f64),
+                                Value::Num(l as f64),
+                                Value::Num(a as f64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("train_seconds", Value::Num(self.train_seconds)),
+            ("extra", Value::from_map(&self.extra)),
+        ])
+    }
+
+    /// Parse the [`RunRecord::to_json`] form back.
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let f32s = |key: &str| -> Result<Vec<f32>> {
+            v.req(key)?
+                .as_array()
+                .with_context(|| format!("record '{key}' is not an array"))?
+                .iter()
+                .map(|x| x.as_f64().map(|f| f as f32))
+                .collect::<Option<Vec<f32>>>()
+                .with_context(|| format!("record '{key}' holds a non-number"))
+        };
+        let evals = v
+            .req("evals")?
+            .as_array()
+            .context("record 'evals' is not an array")?
+            .iter()
+            .map(|e| {
+                let t = e.as_array()?;
+                if t.len() != 3 {
+                    return None;
+                }
+                Some((
+                    t[0].as_f64()? as u64,
+                    t[1].as_f64()? as f32,
+                    t[2].as_f64()? as f32,
+                ))
+            })
+            .collect::<Option<Vec<_>>>()
+            .context("record 'evals' holds a malformed triple")?;
+        let extra = v
+            .req("extra")?
+            .as_object()
+            .context("record 'extra' is not an object")?
+            .iter()
+            .map(|(k, x)| x.as_f64().map(|f| (k.clone(), f)))
+            .collect::<Option<BTreeMap<String, f64>>>()
+            .context("record 'extra' holds a non-number")?;
+        Ok(Self {
+            name: v
+                .req("name")?
+                .as_str()
+                .context("record 'name' is not a string")?
+                .to_string(),
+            steps: v
+                .req("steps")?
+                .as_array()
+                .context("record 'steps' is not an array")?
+                .iter()
+                .map(|x| x.as_f64().map(|f| f as u64))
+                .collect::<Option<Vec<u64>>>()
+                .context("record 'steps' holds a non-number")?,
+            losses: f32s("losses")?,
+            accs: f32s("accs")?,
+            evals,
+            train_seconds: v
+                .req("train_seconds")?
+                .as_f64()
+                .context("record 'train_seconds' is not a number")?,
+            extra,
+        })
+    }
 }
 
 /// Aggregate of several seeds of the same configuration.
@@ -89,6 +208,10 @@ impl RunRecord {
 pub struct SeedAggregate {
     pub name: String,
     pub accs: Vec<f64>,
+    /// grid-cell provenance: the run tag of each contributing record,
+    /// in aggregation order — a table cell can always be traced back to
+    /// the exact cells (and store entries) it was computed from
+    pub cells: Vec<String>,
 }
 
 impl SeedAggregate {
@@ -96,6 +219,7 @@ impl SeedAggregate {
         Self {
             name: name.to_string(),
             accs: runs.iter().map(|r| r.final_val_acc()).collect(),
+            cells: runs.iter().map(|r| r.name.clone()).collect(),
         }
     }
 
@@ -152,6 +276,27 @@ mod tests {
         let agg = SeedAggregate::from_runs("hindsight", &runs);
         assert!((agg.mean() - 59.0).abs() < 1e-3);
         assert!(agg.cell().contains("±"));
+        // grid-cell provenance: one entry per contributing record
+        assert_eq!(agg.cells, vec!["t", "t", "t"]);
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        let mut r = run_with(
+            &[(10, 1.25, 0.5), (20, 0.1, 0.62)],
+            &[2.5, 1.0 / 3.0, 0.1], // 1/3 and 0.1 are not exact binary
+        );
+        r.train_seconds = 12.3456789;
+        r.extra.insert("search_evals".into(), 42.0);
+        r.extra.insert("coverage".into(), 0.875);
+        let doc = r.to_json().to_string();
+        let back = RunRecord::from_json(&crate::util::json::parse(&doc).unwrap()).unwrap();
+        assert_eq!(back, r, "round trip must be bit-exact");
+        // malformed documents error instead of panicking
+        let bad = crate::util::json::parse(r#"{"name":"x"}"#).unwrap();
+        assert!(RunRecord::from_json(&bad).is_err());
+        let bad = crate::util::json::parse(r#"{"name":1}"#).unwrap();
+        assert!(RunRecord::from_json(&bad).is_err());
     }
 
     #[test]

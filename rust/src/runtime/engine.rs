@@ -41,6 +41,20 @@ pub struct EngineStats {
     pub marshal_seconds: f64,
 }
 
+/// §Perf (EXPERIMENTS.md): xla_extension 0.5.1's CPU backend at its
+/// default optimization level compiles the train graphs ~26x slower
+/// (388s vs 14.7s for the ResNet train step) AND produces ~1.7x slower
+/// code than level 1 on this testbed — set level 1 unless the user
+/// overrides XLA_FLAGS themselves.  Engine construction calls this; the
+/// sweep executor also calls it *before* spawning workers so the env
+/// mutation never races concurrent `Engine::new` calls on worker
+/// threads.
+pub fn ensure_default_xla_flags() {
+    if std::env::var("XLA_FLAGS").is_err() {
+        std::env::set_var("XLA_FLAGS", "--xla_backend_optimization_level=1");
+    }
+}
+
 impl Engine {
     /// Create the engine over the default artifact dir.
     pub fn new() -> Result<Self> {
@@ -48,14 +62,7 @@ impl Engine {
     }
 
     pub fn with_manifest(manifest: Manifest) -> Result<Self> {
-        // §Perf (EXPERIMENTS.md): xla_extension 0.5.1's CPU backend at its
-        // default optimization level compiles the train graphs ~26x slower
-        // (388s vs 14.7s for the ResNet train step) AND produces ~1.7x
-        // slower code than level 1 on this testbed — set level 1 unless
-        // the user overrides XLA_FLAGS themselves.
-        if std::env::var("XLA_FLAGS").is_err() {
-            std::env::set_var("XLA_FLAGS", "--xla_backend_optimization_level=1");
-        }
+        ensure_default_xla_flags();
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         log::debug!(
             "PJRT client: platform={} devices={}",
