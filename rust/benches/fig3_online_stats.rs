@@ -3,22 +3,30 @@
 //! 1. the **fused single-pass kernel** `quant::kernel::minmax_fq` — one
 //!    traversal computes the online accumulator statistics *and*
 //!    requantizes with the static range, vs the scalar two-pass
-//!    `minmax` + `fake_quant_slice` baseline it replaced — plus the
-//!    per-channel axis (`minmax_fq_axis` vs the scalar gather-per-channel
-//!    reference, with per-tensor timings alongside).  Runs without
-//!    artifacts; the numbers append to `BENCH_kernels.json` so the perf
-//!    trajectory accumulates.
+//!    `minmax` + `fake_quant_slice` baseline it replaced — timed **per
+//!    kernel backend** (scalar reference / lane-chunked SIMD /
+//!    `std::thread` chunked-parallel; all bit-identical, so the table
+//!    is purely a speed ladder), plus the per-channel axis
+//!    (`minmax_fq_axis` vs the scalar gather-per-channel reference).
+//!    Runs without artifacts; the numbers append to
+//!    `BENCH_kernels.json` — one record per (size, backend) with a
+//!    `backend` field, and one `dispatch: true` record timing the
+//!    process-wide dispatched entry point (whatever `--kernel-backend`
+//!    / `HINDSIGHT_KERNEL_BACKEND` resolved to), so CI can assert the
+//!    env-selected backend was really exercised.
 //! 2. the **runtime contract**: static ranges go into the executable,
 //!    online statistics come back out of the same execution, and the
 //!    between-step update is a handful of flops in the coordinator
 //!    (needs built artifacts; skipped otherwise).
 //!
 //!   cargo bench --bench fig3_online_stats
+//!   HINDSIGHT_KERNEL_BACKEND=simd cargo bench --bench fig3_online_stats
 
 use std::time::Instant;
 
 use hindsight::coordinator::{Estimator, TrainConfig, Trainer};
 use hindsight::quant::{self, kernel};
+use hindsight::quant::kernel::KernelBackend;
 use hindsight::runtime::manifest::Manifest;
 use hindsight::runtime::Engine;
 use hindsight::util::bench::{append_bench_record, quick, time_it, Table};
@@ -27,8 +35,8 @@ use hindsight::util::rng::Pcg32;
 
 fn kernel_section() {
     let mut table = Table::new(
-        "Fig. 3 kernel — fused minmax+fake-quant vs scalar two-pass",
-        &["elems", "scalar ms", "fused ms", "speedup"],
+        "Fig. 3 kernel — fused minmax+fake-quant per backend vs scalar two-pass",
+        &["elems", "backend", "scalar ms", "fused ms", "speedup"],
     );
     let iters = if quick() { 5 } else { 30 };
     for n in [65_536usize, 1_048_576, 4_194_304] {
@@ -46,45 +54,85 @@ fn kernel_section() {
             quant::fake_quant_slice(&mut buf, qlo, qhi, 8);
             std::hint::black_box(buf.first());
         });
-        let mut buf2 = src.clone();
-        let fused = time_it("fused", 2, iters, || {
-            let stats = kernel::minmax_fq(&mut buf2, qlo, qhi, 8);
-            std::hint::black_box(stats);
-            std::hint::black_box(buf2.first());
-        });
-        let speedup = scalar.mean_s / fused.mean_s;
-        table.row(&[
-            n.to_string(),
-            format!("{:.3}", scalar.mean_ms()),
-            format!("{:.3}", fused.mean_ms()),
-            format!("{speedup:.2}x"),
-        ]);
-        let rec = Value::object(vec![
-            ("bench", Value::from("fig3_online_stats")),
-            ("kernel", Value::from("minmax_fq")),
-            ("elems", Value::from(n)),
-            ("bits", Value::from(8usize)),
-            ("iters", Value::from(iters)),
-            ("scalar_ms", Value::from(scalar.mean_ms())),
-            ("fused_ms", Value::from(fused.mean_ms())),
-            ("speedup", Value::from(speedup)),
-        ]);
-        match append_bench_record(rec) {
-            Ok(path) => println!("recorded {} elems -> {}", n, path.display()),
-            Err(e) => eprintln!("could not record bench json: {e}"),
+        for b in KernelBackend::ALL {
+            let mut buf2 = src.clone();
+            let fused = time_it(b.key(), 2, iters, || {
+                let stats = kernel::minmax_fq_on(b, &mut buf2, qlo, qhi, 8);
+                std::hint::black_box(stats);
+                std::hint::black_box(buf2.first());
+            });
+            let speedup = scalar.mean_s / fused.mean_s;
+            table.row(&[
+                n.to_string(),
+                b.key().to_string(),
+                format!("{:.3}", scalar.mean_ms()),
+                format!("{:.3}", fused.mean_ms()),
+                format!("{speedup:.2}x"),
+            ]);
+            let rec = Value::object(vec![
+                ("bench", Value::from("fig3_online_stats")),
+                ("kernel", Value::from("minmax_fq")),
+                ("backend", Value::from(b.key())),
+                ("elems", Value::from(n)),
+                ("bits", Value::from(8usize)),
+                ("iters", Value::from(iters)),
+                ("scalar_ms", Value::from(scalar.mean_ms())),
+                ("fused_ms", Value::from(fused.mean_ms())),
+                ("speedup", Value::from(speedup)),
+            ]);
+            match append_bench_record(rec) {
+                Ok(path) => println!("recorded {} elems [{}] -> {}", n, b.key(), path.display()),
+                Err(e) => eprintln!("could not record bench json: {e}"),
+            }
         }
     }
     table.print();
 }
 
+/// Time the *dispatched* entry point — whatever backend the process
+/// resolved (CLI > env > auto) — and record it with `dispatch: true`,
+/// so a sweep's hot path is provably running on the selected backend.
+fn dispatch_section() {
+    let active = kernel::backend();
+    let n = 1_048_576usize;
+    let iters = if quick() { 5 } else { 30 };
+    let mut rng = Pcg32::new(n as u64, 11);
+    let mut buf: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    let fused = time_it("dispatched", 2, iters, || {
+        let stats = kernel::minmax_fq(&mut buf, -3.0, 3.0, 8);
+        std::hint::black_box(stats);
+        std::hint::black_box(buf.first());
+    });
+    println!(
+        "dispatched minmax_fq ({} elems) on backend '{active}': {:.3} ms",
+        n,
+        fused.mean_ms()
+    );
+    let rec = Value::object(vec![
+        ("bench", Value::from("fig3_online_stats")),
+        ("kernel", Value::from("minmax_fq")),
+        ("dispatch", Value::Bool(true)),
+        ("backend", Value::from(active.key())),
+        ("elems", Value::from(n)),
+        ("bits", Value::from(8usize)),
+        ("iters", Value::from(iters)),
+        ("fused_ms", Value::from(fused.mean_ms())),
+    ]);
+    match append_bench_record(rec) {
+        Ok(path) => println!("recorded dispatch [{}] -> {}", active.key(), path.display()),
+        Err(e) => eprintln!("could not record bench json: {e}"),
+    }
+}
+
 /// Per-channel axis of the same Fig. 3 contract: one channel-strided
-/// fused traversal (`minmax_fq_axis`) vs the scalar per-channel
-/// reference (gather each channel, two passes, scatter back), with the
-/// per-tensor `minmax_fq` timing alongside as the granularity axis.
+/// fused traversal (`minmax_fq_axis`, per backend) vs the scalar
+/// per-channel reference (gather each channel, two passes, scatter
+/// back), with the per-tensor `minmax_fq` timing alongside as the
+/// granularity axis.
 fn axis_kernel_section() {
     let mut table = Table::new(
-        "Fig. 3 kernel, per-channel — fused minmax_fq_axis vs scalar gather",
-        &["elems", "channels", "scalar ms", "fused ms", "speedup", "per-tensor ms"],
+        "Fig. 3 kernel, per-channel — fused minmax_fq_axis per backend vs scalar gather",
+        &["elems", "channels", "backend", "scalar ms", "fused ms", "speedup", "per-tensor ms"],
     );
     let iters = if quick() { 5 } else { 30 };
     let channels = 64usize;
@@ -112,44 +160,50 @@ fn axis_kernel_section() {
             }
             std::hint::black_box(buf.first());
         });
-        let mut buf2 = src.clone();
-        let fused = time_it("fused-axis", 2, iters, || {
-            let stats = kernel::minmax_fq_axis(&mut buf2, &ranges, 8);
-            std::hint::black_box(stats.first().copied());
-            std::hint::black_box(buf2.first());
-        });
-        // the granularity axis: same tensor through the per-tensor kernel
-        let mut buf3 = src.clone();
-        let per_tensor = time_it("per-tensor", 2, iters, || {
-            let stats = kernel::minmax_fq(&mut buf3, -3.0, 3.0, 8);
-            std::hint::black_box(stats);
-            std::hint::black_box(buf3.first());
-        });
-        let speedup = scalar.mean_s / fused.mean_s;
-        table.row(&[
-            n.to_string(),
-            channels.to_string(),
-            format!("{:.3}", scalar.mean_ms()),
-            format!("{:.3}", fused.mean_ms()),
-            format!("{speedup:.2}x"),
-            format!("{:.3}", per_tensor.mean_ms()),
-        ]);
-        let rec = Value::object(vec![
-            ("bench", Value::from("fig3_online_stats")),
-            ("kernel", Value::from("minmax_fq_axis")),
-            ("granularity", Value::from("per-channel")),
-            ("elems", Value::from(n)),
-            ("channels", Value::from(channels)),
-            ("bits", Value::from(8usize)),
-            ("iters", Value::from(iters)),
-            ("scalar_ms", Value::from(scalar.mean_ms())),
-            ("fused_ms", Value::from(fused.mean_ms())),
-            ("speedup", Value::from(speedup)),
-            ("per_tensor_ms", Value::from(per_tensor.mean_ms())),
-        ]);
-        match append_bench_record(rec) {
-            Ok(path) => println!("recorded {} elems (axis) -> {}", n, path.display()),
-            Err(e) => eprintln!("could not record bench json: {e}"),
+        for b in KernelBackend::ALL {
+            let mut buf2 = src.clone();
+            let fused = time_it("fused-axis", 2, iters, || {
+                let stats = kernel::minmax_fq_axis_on(b, &mut buf2, &ranges, 8);
+                std::hint::black_box(stats.first().copied());
+                std::hint::black_box(buf2.first());
+            });
+            // the granularity axis: same tensor through the per-tensor kernel
+            let mut buf3 = src.clone();
+            let per_tensor = time_it("per-tensor", 2, iters, || {
+                let stats = kernel::minmax_fq_on(b, &mut buf3, -3.0, 3.0, 8);
+                std::hint::black_box(stats);
+                std::hint::black_box(buf3.first());
+            });
+            let speedup = scalar.mean_s / fused.mean_s;
+            table.row(&[
+                n.to_string(),
+                channels.to_string(),
+                b.key().to_string(),
+                format!("{:.3}", scalar.mean_ms()),
+                format!("{:.3}", fused.mean_ms()),
+                format!("{speedup:.2}x"),
+                format!("{:.3}", per_tensor.mean_ms()),
+            ]);
+            let rec = Value::object(vec![
+                ("bench", Value::from("fig3_online_stats")),
+                ("kernel", Value::from("minmax_fq_axis")),
+                ("backend", Value::from(b.key())),
+                ("granularity", Value::from("per-channel")),
+                ("elems", Value::from(n)),
+                ("channels", Value::from(channels)),
+                ("bits", Value::from(8usize)),
+                ("iters", Value::from(iters)),
+                ("scalar_ms", Value::from(scalar.mean_ms())),
+                ("fused_ms", Value::from(fused.mean_ms())),
+                ("speedup", Value::from(speedup)),
+                ("per_tensor_ms", Value::from(per_tensor.mean_ms())),
+            ]);
+            match append_bench_record(rec) {
+                Ok(path) => {
+                    println!("recorded {} elems (axis) [{}] -> {}", n, b.key(), path.display())
+                }
+                Err(e) => eprintln!("could not record bench json: {e}"),
+            }
         }
     }
     table.print();
@@ -224,5 +278,6 @@ fn main() {
     hindsight::util::logging::init();
     kernel_section();
     axis_kernel_section();
+    dispatch_section();
     contract_section();
 }

@@ -29,8 +29,16 @@ fn run_cells(cells: &[GridCell], opts: &GridOptions, real: bool) -> Vec<CellRun>
         run_grid(cells, opts)
     } else {
         // deterministic synthetic trainer: the record depends only on
-        // the cell's label, like a real run on its configuration
+        // the cell's label, like a real run on its configuration.  It
+        // still runs one fused-kernel pass through the *dispatched*
+        // entry point inside the worker thread, so the `backend` field
+        // recorded below reflects in-worker dispatch even without
+        // artifacts (kernel results are backend-invariant, so the
+        // record stays bit-identical across backends).
         run_grid_with(cells, opts, |_| Ok(()), |_: &mut (), cell: &GridCell| {
+            let mut probe: Vec<f32> = (0..4096).map(|i| (i as f32 * 0.37).sin()).collect();
+            let (lo, hi) = hindsight::quant::kernel::minmax_fq(&mut probe, -1.0, 1.0, 8);
+            anyhow::ensure!(lo < hi, "kernel probe produced a degenerate hull");
             Ok(RunRecord::synthetic(&cell.label, 6))
         })
     }
@@ -115,9 +123,14 @@ fn main() {
         .filter(|r| matches!(r.outcome, CellOutcome::Cached(_)))
         .map(|r| Value::from(r.label.clone()))
         .collect();
+    // the cells' kernel work (real trainers and the simulator alike)
+    // routes through the dispatched quant::kernel entry points: record
+    // which backend this sweep actually ran on, so the perf trajectory
+    // can attribute end-to-end numbers to a backend
     let record = Value::object(vec![
         ("bench", Value::from("grid_sweep")),
         ("template", Value::from(TEMPLATE)),
+        ("backend", Value::from(hindsight::quant::kernel::backend().key())),
         ("cells", Value::from(cells.len())),
         ("workers", Value::from(2usize)),
         ("resumed_cached", Value::from(cached_labels.len())),

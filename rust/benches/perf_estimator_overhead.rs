@@ -5,8 +5,9 @@
 //!
 //! Four sections:
 //!  1. DSGC objective cost, fused (`kernel::fq_cosine`, no allocation)
-//!     vs the scalar alloc-per-probe baseline it replaced — appended to
-//!     `BENCH_kernels.json`; runs without artifacts.
+//!     vs the scalar alloc-per-probe baseline it replaced — timed once
+//!     per kernel backend (records carry a `backend` field) and
+//!     appended to `BENCH_kernels.json`; runs without artifacts.
 //!  2. search-pass cost per estimator family: DSGC's golden-section
 //!     (iters + 3 full passes) vs sampled min-max (one strided
 //!     subsample pass).
@@ -22,6 +23,7 @@ mod common;
 
 use hindsight::coordinator::{Estimator, Trainer};
 use hindsight::estimator::{PerChannel, RangeEstimator, SampledMinMax};
+use hindsight::quant::kernel::KernelBackend;
 use hindsight::quant::{self, dsgc};
 use hindsight::runtime::manifest::Manifest;
 use hindsight::runtime::Engine;
@@ -42,8 +44,8 @@ fn scalar_objective(g: &[f32], qmin: f32, qmax: f32, bits: u32) -> f64 {
 
 fn fused_vs_scalar_objective() {
     let mut table = Table::new(
-        "DSGC search (20 refinement iters): fused objective vs scalar alloc",
-        &["Tensor elems", "scalar ms", "fused ms", "speedup", "evals"],
+        "DSGC search (20 refinement iters): fused objective per backend vs scalar alloc",
+        &["Tensor elems", "backend", "scalar ms", "fused ms", "speedup", "evals"],
     );
     let iters = if quick() { 3 } else { 10 };
     for n in [4_096usize, 65_536, 1_048_576] {
@@ -58,32 +60,42 @@ fn fused_vs_scalar_objective() {
             });
             std::hint::black_box(evals);
         });
-        // search_range's probes go through kernel::fq_cosine
-        let fused = time_it("fused-search", 1, iters, || {
-            std::hint::black_box(dsgc::search_range(&g, 8, 20));
-        });
+        // the eval count is a property of the search, not the backend
         let r = dsgc::search_range(&g, 8, 20);
-        let speedup = scalar.mean_s / fused.mean_s;
-        table.row(&[
-            n.to_string(),
-            format!("{:.2}", scalar.mean_ms()),
-            format!("{:.2}", fused.mean_ms()),
-            format!("{speedup:.2}x"),
-            r.evals.to_string(),
-        ]);
-        let rec = Value::object(vec![
-            ("bench", Value::from("perf_estimator_overhead")),
-            ("kernel", Value::from("fq_cosine")),
-            ("elems", Value::from(n)),
-            ("bits", Value::from(8usize)),
-            ("iters", Value::from(iters)),
-            ("scalar_ms", Value::from(scalar.mean_ms())),
-            ("fused_ms", Value::from(fused.mean_ms())),
-            ("speedup", Value::from(speedup)),
-        ]);
-        match append_bench_record(rec) {
-            Ok(path) => println!("recorded {} elems -> {}", n, path.display()),
-            Err(e) => eprintln!("could not record bench json: {e}"),
+        // time the *real* search (dsgc::search_range_on — one source of
+        // truth with the trainer's path) with the objective pinned to
+        // each backend.  (The parallel backend deliberately shares the
+        // SIMD path here — the f64 reduction cannot fan out without
+        // breaking bit-parity — so its row is a dispatch-overhead
+        // check, not a speedup claim.)
+        for b in KernelBackend::ALL {
+            let fused = time_it(b.key(), 1, iters, || {
+                std::hint::black_box(dsgc::search_range_on(b, &g, 8, 20));
+            });
+            let speedup = scalar.mean_s / fused.mean_s;
+            table.row(&[
+                n.to_string(),
+                b.key().to_string(),
+                format!("{:.2}", scalar.mean_ms()),
+                format!("{:.2}", fused.mean_ms()),
+                format!("{speedup:.2}x"),
+                r.evals.to_string(),
+            ]);
+            let rec = Value::object(vec![
+                ("bench", Value::from("perf_estimator_overhead")),
+                ("kernel", Value::from("fq_cosine")),
+                ("backend", Value::from(b.key())),
+                ("elems", Value::from(n)),
+                ("bits", Value::from(8usize)),
+                ("iters", Value::from(iters)),
+                ("scalar_ms", Value::from(scalar.mean_ms())),
+                ("fused_ms", Value::from(fused.mean_ms())),
+                ("speedup", Value::from(speedup)),
+            ]);
+            match append_bench_record(rec) {
+                Ok(path) => println!("recorded {} elems [{}] -> {}", n, b.key(), path.display()),
+                Err(e) => eprintln!("could not record bench json: {e}"),
+            }
         }
     }
     table.print();

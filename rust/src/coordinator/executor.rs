@@ -137,6 +137,10 @@ where
         return Vec::new();
     }
     let workers = workers.clamp(1, jobs.len());
+    // hint the kernel layer: its auto chunked-parallel fan-out divides
+    // the hardware budget by our worker count, so worker threads and
+    // kernel span threads don't multiply into oversubscription
+    let _kernel_hint = crate::quant::kernel::parallel::external_parallelism_guard(workers);
     let cursor = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<JobOutcome<R>>>> =
         jobs.iter().map(|_| Mutex::new(None)).collect();
@@ -627,6 +631,55 @@ mod tests {
             assert_eq!(a.sec_per_step.to_bits(), b.sec_per_step.to_bits());
             assert_eq!(a.agg.cells, b.agg.cells, "provenance matches");
             assert_eq!(a.runs.len(), 2);
+        }
+    }
+
+    /// Satellite extension of the golden parity test: the *kernel*
+    /// work inside grid cells is also backend-invariant.  A 2-worker
+    /// grid whose cells run the fused quantization kernels on the
+    /// chunked-parallel backend must be bit-identical to a serial
+    /// 1-worker run of the same cells on the scalar reference backend
+    /// — nested parallelism (worker threads spawning kernel span
+    /// threads) included.  The dispatched-global version of this pin
+    /// lives in `tests/kernel_conformance.rs`; this one uses the
+    /// explicit `_on` entry points so it cannot race other tests.
+    #[test]
+    fn parallel_backend_grid_matches_serial_scalar_grid_bit_for_bit() {
+        use crate::quant::kernel::{self, KernelBackend};
+
+        let tensors: Vec<Vec<f32>> = (0..6)
+            .map(|i| {
+                let mut rng = crate::util::rng::Pcg32::new(7 + i as u64, 2);
+                // long enough that the parallel backend's auto path
+                // really fans out inside the worker threads
+                let n = 2 * crate::quant::kernel::parallel::PAR_MIN_LEN + 257 * i;
+                (0..n).map(|_| rng.normal() * 0.02).collect()
+            })
+            .collect();
+        let run_on = |workers: usize, b: KernelBackend| {
+            run_indexed(
+                &tensors,
+                workers,
+                |_| Ok(()),
+                move |_, _, xs: &Vec<f32>| {
+                    let mut buf = xs.clone();
+                    let stats = kernel::minmax_fq_on(b, &mut buf, -0.05, 0.05, 8);
+                    let cos = kernel::fq_cosine_on(b, xs, -0.05, 0.05, 8);
+                    Ok((buf, stats, cos))
+                },
+            )
+        };
+        let serial = run_on(1, KernelBackend::Scalar);
+        let parallel = run_on(2, KernelBackend::Parallel);
+        for (i, (s, p)) in serial.iter().zip(&parallel).enumerate() {
+            match (s, p) {
+                (JobOutcome::Done(a), JobOutcome::Done(b)) => {
+                    assert_eq!(a.0, b.0, "cell {i}: quantized tensor");
+                    assert_eq!(a.1, b.1, "cell {i}: stats");
+                    assert_eq!(a.2.to_bits(), b.2.to_bits(), "cell {i}: objective");
+                }
+                other => panic!("cell {i}: {other:?}"),
+            }
         }
     }
 

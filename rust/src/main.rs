@@ -18,6 +18,13 @@
 //! and rewrite the scheme.  `hindsight estimators` prints the registry
 //! and the full scheme grammar.
 //!
+//! Kernel backends: every fused quantization kernel (the simulator's
+//! static stores, DSGC probes, estimator searches, sweep workers)
+//! dispatches through one process-wide backend — `--kernel-backend
+//! scalar|simd|parallel|auto` beats the `HINDSIGHT_KERNEL_BACKEND` env
+//! var, which beats auto-detection (parallel on multi-core machines).
+//! All backends are bit-identical; the choice is purely about speed.
+//!
 //! Scheme grids: `sweep --grid` takes a scheme template with shell-style
 //! alternations, crossed with `--seeds` (ranges are inclusive), run on
 //! `--workers` threads with deterministic (grid-index) output ordering.
@@ -64,6 +71,14 @@ fn main() {
 }
 
 fn run(mut args: Args) -> Result<()> {
+    // resolve the kernel backend before any kernel can run: the CLI
+    // flag beats HINDSIGHT_KERNEL_BACKEND, which beats auto-detection
+    if let Some(v) = args.get("kernel-backend") {
+        let kind = hindsight::quant::kernel::KernelBackend::parse(&v)
+            .map_err(|e| anyhow::anyhow!("--kernel-backend: {e}"))?;
+        hindsight::quant::kernel::select_backend(kind)
+            .map_err(|e| anyhow::anyhow!("--kernel-backend: {e}"))?;
+    }
     match args.subcommand.clone().as_deref() {
         Some("train") => cmd_train(&mut args),
         Some("sweep") => cmd_sweep(&mut args),
@@ -78,6 +93,8 @@ fn run(mut args: Args) -> Result<()> {
                  quantization policy: --scheme \"w:current:8 a:hindsight:8 g:hindsight@pc:4\"\n\
                  scheme grids: sweep --grid \"g:{{hindsight,current}}@{{pt,pc}}:8\" --seeds 1..5 \
                  --workers 4 [--store runs] [--no-cache]\n\
+                 kernel backend: --kernel-backend scalar|simd|parallel|auto \
+                 (default: auto; env HINDSIGHT_KERNEL_BACKEND)\n\
                  {}",
                 syntax_help()
             );
@@ -475,11 +492,13 @@ fn cmd_bench_step(args: &mut Args) -> Result<()> {
     let dt = t0.elapsed().as_secs_f64();
     let es = engine.stats();
     println!(
-        "{}: {:.1} ms/step over {iters} steps (graph execute {:.1} ms, marshal {:.2} ms per call)",
+        "{}: {:.1} ms/step over {iters} steps (graph execute {:.1} ms, marshal {:.2} ms per call) \
+         [kernel backend: {}]",
         cfg.model,
         dt / iters as f64 * 1e3,
         es.execute_seconds / es.executions as f64 * 1e3,
         es.marshal_seconds / es.executions as f64 * 1e3,
+        hindsight::quant::kernel::backend(),
     );
     Ok(())
 }

@@ -75,6 +75,14 @@ pub fn golden_section_max(
 /// steps (the objective is evaluated `iters + 3` times, each costing a
 /// full fake-quant + cosine pass over `g`).
 pub fn search_range(g: &[f32], bits: u32, iters: u32) -> DsgcResult {
+    search_range_on(kernel::backend(), g, bits, iters)
+}
+
+/// [`search_range`] with the objective pinned to an explicit kernel
+/// backend — the bench surface; results are backend-invariant (the
+/// objective is bit-identical on every backend), so this is a speed
+/// knob only.
+pub fn search_range_on(b: kernel::KernelBackend, g: &[f32], bits: u32, iters: u32) -> DsgcResult {
     let (gmin, gmax) = minmax(g);
     if g.is_empty() || (gmin == 0.0 && gmax == 0.0) {
         return DsgcResult {
@@ -87,7 +95,7 @@ pub fn search_range(g: &[f32], bits: u32, iters: u32) -> DsgcResult {
     }
     let objective = |alpha: f64| -> f64 {
         let a = alpha as f32;
-        kernel::fq_cosine(g, a * gmin, a * gmax, bits) as f64
+        kernel::fq_cosine_on(b, g, a * gmin, a * gmax, bits) as f64
     };
     // alpha in (0, 1]: clipping tighter than min-max can *increase* cosine
     // because it shrinks the grid step over the bulk of the distribution.

@@ -1,0 +1,554 @@
+//! Fused single-pass quantization kernels — the paper's Fig. 3
+//! accelerator contract as coordinator-side code, behind a
+//! backend-dispatched hot path.
+//!
+//! The in-hindsight argument for hardware is that a *static* quantizer
+//! can requantize the accumulator output on the way to memory while
+//! folding the pre-quantization extrema into online statistics
+//! registers: one traversal, no 32-bit round trip.  These kernels do
+//! that work in one pass; the scalar `quant::minmax` +
+//! `quant::fake_quant_slice` pair they replaced walks the tensor twice.
+//!
+//! Three backends implement the four entry points ([`minmax_fq`],
+//! [`minmax_fq_axis`], [`fq_into`], [`fq_cosine`]):
+//!
+//! * [`scalar`] — the sequential reference; its bits are the contract.
+//! * [`simd`] — lane-chunked inner loops (`simd::LANES` f32 lanes,
+//!   scalar tail) shaped for the autovectorizer.
+//! * [`parallel`] — rayon-free `std::thread` spans of cache-sized
+//!   chunks; per-span min/max pairs merge in span order.
+//!
+//! Every backend is **bit-identical** to the scalar reference — the
+//! differential harness in `tests/kernel_conformance.rs` pins it across
+//! adversarial tensors (NaN/±inf payloads, subnormals, lane/chunk
+//! boundary lengths, ragged channel layouts).  Callers therefore never
+//! choose: the process-wide backend is resolved exactly once by
+//! [`backend`], from `--kernel-backend` (the CLI calls
+//! [`select_backend`] before any kernel runs), else the
+//! `HINDSIGHT_KERNEL_BACKEND` env var, else [`auto_backend`] — and
+//! every call site (`dsgc`, the simulator's store paths, the estimator
+//! searches, the sweep executor's workers) picks up the fast path
+//! through the same four functions.
+//!
+//! Numerics are bit-exact with the scalar two-pass path: every kernel
+//! rounds through [`QuantParams::fq`](super::QuantParams::fq) and the min/max folds only
+//! reassociate a commutative, NaN-dropping reduction, so the property
+//! tests require equality, not tolerance.
+
+pub mod parallel;
+pub mod scalar;
+pub mod simd;
+
+use std::sync::OnceLock;
+
+/// Block size for the chunked traversal: small enough to stay
+/// cache-resident, large enough that the reduction loop and the rounding
+/// loop each vectorize over a full block.  A multiple of
+/// [`simd::LANES`], so only a tensor's final block has a scalar tail.
+pub const CHUNK: usize = 1024;
+
+// ---------------------------------------------------------------------------
+// Backend selection
+// ---------------------------------------------------------------------------
+
+/// One of the kernel implementations behind the dispatched entry
+/// points.  All backends are bit-identical; they differ only in speed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelBackend {
+    /// sequential reference loops (the pinned semantics)
+    Scalar,
+    /// lane-chunked loops with a scalar tail (autovectorizer-shaped)
+    Simd,
+    /// `std::thread` chunked-parallel spans over the SIMD inner loops
+    Parallel,
+}
+
+impl KernelBackend {
+    /// Every backend, scalar first (the conformance reference).
+    pub const ALL: [KernelBackend; 3] = [Self::Scalar, Self::Simd, Self::Parallel];
+
+    /// The CLI/env spelling (`scalar` | `simd` | `parallel`).
+    pub fn key(self) -> &'static str {
+        match self {
+            Self::Scalar => "scalar",
+            Self::Simd => "simd",
+            Self::Parallel => "parallel",
+        }
+    }
+
+    /// Parse a CLI/env spelling; `auto` resolves to [`auto_backend`].
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Ok(Self::Scalar),
+            "simd" => Ok(Self::Simd),
+            "parallel" => Ok(Self::Parallel),
+            "auto" | "" => Ok(auto_backend()),
+            other => Err(format!(
+                "unknown kernel backend '{other}' (scalar|simd|parallel|auto)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for KernelBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.key())
+    }
+}
+
+/// The best backend this machine supports: chunked-parallel when more
+/// than one hardware thread exists (it guarantees each worker
+/// [`parallel::PAR_MIN_LEN`] elements of work, so tensors under twice
+/// that run the SIMD path, spawning nothing), SIMD otherwise.
+pub fn auto_backend() -> KernelBackend {
+    let hw = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    if hw > 1 {
+        KernelBackend::Parallel
+    } else {
+        KernelBackend::Simd
+    }
+}
+
+/// Resolve an env-var value (`None` = unset) the way [`backend`] does,
+/// as a pure function so the precedence is unit-testable.
+pub fn backend_from_env(value: Option<&str>) -> Result<KernelBackend, String> {
+    match value {
+        None => Ok(auto_backend()),
+        Some(v) => KernelBackend::parse(v),
+    }
+}
+
+static BACKEND: OnceLock<KernelBackend> = OnceLock::new();
+
+/// The process-wide backend, resolved exactly once: an earlier
+/// [`select_backend`] call (CLI) wins, else `HINDSIGHT_KERNEL_BACKEND`,
+/// else [`auto_backend`].  An unparseable env value logs a warning and
+/// falls back to auto rather than poisoning every kernel call.
+pub fn backend() -> KernelBackend {
+    *BACKEND.get_or_init(|| {
+        let env = std::env::var("HINDSIGHT_KERNEL_BACKEND").ok();
+        backend_from_env(env.as_deref()).unwrap_or_else(|e| {
+            log::warn!("HINDSIGHT_KERNEL_BACKEND: {e}; using auto");
+            auto_backend()
+        })
+    })
+}
+
+/// Pin the process-wide backend (the `--kernel-backend` path; CLI
+/// beats env because the CLI calls this before any kernel runs).
+/// Re-selecting the already-resolved backend is a no-op; conflicting
+/// with an earlier resolution is an error — a half-switched process
+/// would make perf numbers unattributable.
+pub fn select_backend(kind: KernelBackend) -> Result<(), String> {
+    match BACKEND.set(kind) {
+        Ok(()) => Ok(()),
+        Err(_) => {
+            let current = *BACKEND.get().expect("set failed, so the cell is full");
+            if current == kind {
+                Ok(())
+            } else {
+                Err(format!(
+                    "kernel backend already resolved to '{current}' — select \
+                     '{kind}' before the first kernel call"
+                ))
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checked contracts
+// ---------------------------------------------------------------------------
+
+/// Contract violations of the axis kernel, surfaced as values so
+/// callers assembling ranges from external input (schemes, manifests,
+/// stores) can reject them instead of panicking a worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+pub enum KernelError {
+    /// `ranges` was empty — no channel grid to quantize onto.
+    #[error("minmax_fq_axis needs at least one channel (empty ranges)")]
+    NoChannels,
+    /// The tensor does not divide into `channels` channels-last groups:
+    /// quantizing anyway would silently misassign every element after
+    /// the first wrap to a neighbouring channel's grid.
+    #[error(
+        "tensor length {len} not divisible by {channels} channels — ragged \
+         channels-last layout; refusing to misquantize"
+    )]
+    RaggedAxis { len: usize, channels: usize },
+}
+
+// ---------------------------------------------------------------------------
+// Dispatched entry points
+// ---------------------------------------------------------------------------
+
+/// Fused min/max + fake-quantize in place (the Fig. 3 static-store
+/// path): returns the (min, max) of the *original* values while
+/// rewriting `xs` to the `[qmin, qmax]` grid.  `(0.0, 0.0)` on an empty
+/// slice, matching [`super::minmax`].  Runs on the process-wide
+/// [`backend`].
+pub fn minmax_fq(xs: &mut [f32], qmin: f32, qmax: f32, bits: u32) -> (f32, f32) {
+    minmax_fq_on(backend(), xs, qmin, qmax, bits)
+}
+
+/// [`minmax_fq`] on an explicit backend (benches and the conformance
+/// harness; call sites use the dispatched form).
+pub fn minmax_fq_on(
+    b: KernelBackend,
+    xs: &mut [f32],
+    qmin: f32,
+    qmax: f32,
+    bits: u32,
+) -> (f32, f32) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    match b {
+        KernelBackend::Scalar => scalar::minmax_fq(xs, qmin, qmax, bits),
+        KernelBackend::Simd => simd::minmax_fq(xs, qmin, qmax, bits),
+        KernelBackend::Parallel => parallel::minmax_fq(xs, qmin, qmax, bits),
+    }
+}
+
+/// Channel-strided fused min/max + fake-quantize in place — the
+/// per-channel counterpart of [`minmax_fq`].  Channels-last layout: the
+/// channel of flat element `i` is `i % ranges.len()` (the convention the
+/// per-channel estimator adapter and the simulator share).  Returns one
+/// `(min, max)` per channel, `(0.0, 0.0)` rows on an empty slice.
+///
+/// Panics on a ragged layout; [`try_minmax_fq_axis`] is the checked
+/// form for callers whose ranges come from external input.
+pub fn minmax_fq_axis(xs: &mut [f32], ranges: &[[f32; 2]], bits: u32) -> Vec<(f32, f32)> {
+    try_minmax_fq_axis(xs, ranges, bits).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Checked [`minmax_fq_axis`]: rejects an empty channel set and tensors
+/// whose length is not a multiple of the channel count, the two caller
+/// mistakes that would otherwise misquantize silently (or panic a
+/// sweep worker).  Validation happens once here, before dispatch, so
+/// every backend shares the same contract.
+pub fn try_minmax_fq_axis(
+    xs: &mut [f32],
+    ranges: &[[f32; 2]],
+    bits: u32,
+) -> Result<Vec<(f32, f32)>, KernelError> {
+    try_minmax_fq_axis_on(backend(), xs, ranges, bits)
+}
+
+/// [`try_minmax_fq_axis`] on an explicit backend.
+pub fn try_minmax_fq_axis_on(
+    b: KernelBackend,
+    xs: &mut [f32],
+    ranges: &[[f32; 2]],
+    bits: u32,
+) -> Result<Vec<(f32, f32)>, KernelError> {
+    let c = ranges.len();
+    if c == 0 {
+        return Err(KernelError::NoChannels);
+    }
+    if xs.len() % c != 0 {
+        return Err(KernelError::RaggedAxis {
+            len: xs.len(),
+            channels: c,
+        });
+    }
+    if xs.is_empty() {
+        return Ok(vec![(0.0, 0.0); c]);
+    }
+    Ok(match b {
+        KernelBackend::Scalar => scalar::minmax_fq_axis(xs, ranges, bits),
+        KernelBackend::Simd => simd::minmax_fq_axis(xs, ranges, bits),
+        KernelBackend::Parallel => parallel::minmax_fq_axis(xs, ranges, bits),
+    })
+}
+
+/// [`minmax_fq_axis`] on an explicit backend, panicking form.
+pub fn minmax_fq_axis_on(
+    b: KernelBackend,
+    xs: &mut [f32],
+    ranges: &[[f32; 2]],
+    bits: u32,
+) -> Vec<(f32, f32)> {
+    try_minmax_fq_axis_on(b, xs, ranges, bits).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Fake-quantize `src` into a caller-owned buffer (the no-alloc variant
+/// of [`super::fake_quant`]).  Panics if the lengths differ.
+pub fn fq_into(src: &[f32], dst: &mut [f32], qmin: f32, qmax: f32, bits: u32) {
+    fq_into_on(backend(), src, dst, qmin, qmax, bits)
+}
+
+/// [`fq_into`] on an explicit backend.
+pub fn fq_into_on(b: KernelBackend, src: &[f32], dst: &mut [f32], qmin: f32, qmax: f32, bits: u32) {
+    assert_eq!(src.len(), dst.len(), "fq_into buffer length mismatch");
+    match b {
+        KernelBackend::Scalar => scalar::fq_into(src, dst, qmin, qmax, bits),
+        KernelBackend::Simd => simd::fq_into(src, dst, qmin, qmax, bits),
+        KernelBackend::Parallel => parallel::fq_into(src, dst, qmin, qmax, bits),
+    }
+}
+
+/// Fused DSGC objective: `cosine(x, fake_quant(x))` in one traversal,
+/// never materializing the quantized tensor.  Identical accumulation
+/// order to `cosine_similarity(x, &fake_quant(x, ..))` on every backend
+/// (the f64 reduction never reassociates), so results are bit-equal to
+/// the scalar two-pass form (including the zero-vector conventions).
+pub fn fq_cosine(xs: &[f32], qmin: f32, qmax: f32, bits: u32) -> f32 {
+    fq_cosine_on(backend(), xs, qmin, qmax, bits)
+}
+
+/// [`fq_cosine`] on an explicit backend.
+pub fn fq_cosine_on(b: KernelBackend, xs: &[f32], qmin: f32, qmax: f32, bits: u32) -> f32 {
+    match b {
+        KernelBackend::Scalar => scalar::fq_cosine(xs, qmin, qmax, bits),
+        KernelBackend::Simd => simd::fq_cosine(xs, qmin, qmax, bits),
+        KernelBackend::Parallel => parallel::fq_cosine(xs, qmin, qmax, bits),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{cosine_similarity, fake_quant, fake_quant_slice, minmax};
+    use crate::util::testkit::{forall, gens};
+
+    fn case(rng: &mut crate::util::rng::Pcg32) -> (f32, f32, u32, Vec<f32>) {
+        let (lo, hi) = gens::range(rng);
+        let bits = gens::bits(rng);
+        // span several chunks sometimes so the chunked path is exercised
+        let xs = gens::tensor(rng, 3 * CHUNK);
+        (lo, hi, bits, xs)
+    }
+
+    #[test]
+    fn minmax_fq_equals_scalar_two_pass() {
+        forall(96, "minmax_fq-parity", case, |(lo, hi, bits, xs)| {
+            let mut fused = xs.clone();
+            let stats = minmax_fq(&mut fused, *lo, *hi, *bits);
+            let mut scalar = xs.clone();
+            let expect_stats = minmax(&scalar);
+            fake_quant_slice(&mut scalar, *lo, *hi, *bits);
+            stats == expect_stats && fused == scalar
+        });
+    }
+
+    #[test]
+    fn every_backend_equals_the_scalar_two_pass() {
+        // the deep differential coverage lives in
+        // tests/kernel_conformance.rs; this pins the `_on` plumbing
+        forall(32, "backend-parity", case, |(lo, hi, bits, xs)| {
+            KernelBackend::ALL.iter().all(|&b| {
+                let mut fused = xs.clone();
+                let stats = minmax_fq_on(b, &mut fused, *lo, *hi, *bits);
+                let mut scalar = xs.clone();
+                let expect_stats = minmax(&scalar);
+                fake_quant_slice(&mut scalar, *lo, *hi, *bits);
+                stats == expect_stats && fused == scalar
+            })
+        });
+    }
+
+    #[test]
+    fn fq_into_equals_fake_quant() {
+        forall(96, "fq_into-parity", case, |(lo, hi, bits, xs)| {
+            let mut dst = vec![0.0f32; xs.len()];
+            fq_into(xs, &mut dst, *lo, *hi, *bits);
+            dst == fake_quant(xs, *lo, *hi, *bits)
+        });
+    }
+
+    #[test]
+    fn fq_cosine_equals_two_pass_cosine() {
+        forall(96, "fq_cosine-parity", case, |(lo, hi, bits, xs)| {
+            let fused = fq_cosine(xs, *lo, *hi, *bits);
+            let q = fake_quant(xs, *lo, *hi, *bits);
+            fused == cosine_similarity(xs, &q)
+        });
+    }
+
+    #[test]
+    fn empty_and_degenerate_inputs() {
+        for b in KernelBackend::ALL {
+            assert_eq!(minmax_fq_on(b, &mut [], -1.0, 1.0, 8), (0.0, 0.0));
+            fq_into_on(b, &[], &mut [], -1.0, 1.0, 8);
+            // all-zero tensor quantizes to itself: cosine convention is 1
+            assert_eq!(fq_cosine_on(b, &[0.0; 8], -1.0, 1.0, 8), 1.0);
+            // degenerate range: outputs collapse to the guarded near-zero grid
+            let mut xs = [0.5f32, -0.5];
+            let (lo, hi) = minmax_fq_on(b, &mut xs, 0.0, 0.0, 8);
+            assert_eq!((lo, hi), (-0.5, 0.5));
+            assert!(xs.iter().all(|&x| x.is_finite() && x.abs() < 1e-9));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn fq_into_rejects_mismatched_buffers() {
+        let mut dst = [0.0f32; 2];
+        fq_into(&[1.0], &mut dst, -1.0, 1.0, 8);
+    }
+
+    // ------------------------------------------------------------------
+    // Backend selection
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn backend_keys_round_trip() {
+        for b in KernelBackend::ALL {
+            assert_eq!(KernelBackend::parse(b.key()), Ok(b));
+            assert_eq!(format!("{b}"), b.key());
+        }
+        assert_eq!(KernelBackend::parse("SIMD"), Ok(KernelBackend::Simd));
+        assert!(KernelBackend::parse("avx512").is_err());
+    }
+
+    #[test]
+    fn env_resolution_precedence() {
+        // unset -> auto; `auto` -> auto; explicit key -> that backend
+        assert_eq!(backend_from_env(None), Ok(auto_backend()));
+        assert_eq!(backend_from_env(Some("auto")), Ok(auto_backend()));
+        assert_eq!(backend_from_env(Some("scalar")), Ok(KernelBackend::Scalar));
+        assert_eq!(
+            backend_from_env(Some("parallel")),
+            Ok(KernelBackend::Parallel)
+        );
+        assert!(backend_from_env(Some("gpu")).is_err());
+        // auto never picks the reference loops: scalar exists to pin
+        // semantics, not to be the default
+        assert_ne!(auto_backend(), KernelBackend::Scalar);
+    }
+
+    // ------------------------------------------------------------------
+    // Per-channel axis kernel
+    // ------------------------------------------------------------------
+
+    /// The scalar per-channel reference: gather each channel's strided
+    /// slice, two-pass `minmax` + `fake_quant_slice`, scatter back.
+    fn axis_scalar_reference(
+        xs: &[f32],
+        ranges: &[[f32; 2]],
+        bits: u32,
+    ) -> (Vec<f32>, Vec<(f32, f32)>) {
+        let c = ranges.len();
+        let mut out = xs.to_vec();
+        let mut stats = vec![(0.0f32, 0.0f32); c];
+        for ch in 0..c {
+            let mut chan: Vec<f32> = xs.iter().skip(ch).step_by(c).copied().collect();
+            stats[ch] = minmax(&chan);
+            fake_quant_slice(&mut chan, ranges[ch][0], ranges[ch][1], bits);
+            for (k, v) in chan.iter().enumerate() {
+                out[ch + k * c] = *v;
+            }
+        }
+        (out, stats)
+    }
+
+    fn axis_case(rng: &mut crate::util::rng::Pcg32) -> (u32, Vec<[f32; 2]>, Vec<f32>) {
+        let bits = gens::bits(rng);
+        let c = 1 + rng.below(8);
+        let ranges: Vec<[f32; 2]> = (0..c)
+            .map(|_| {
+                let (lo, hi) = gens::range(rng);
+                [lo, hi]
+            })
+            .collect();
+        // sometimes span several channel-aligned blocks
+        let per_chan = rng.below(2 * CHUNK / c + 2);
+        let scale = 10f32.powf(rng.range(-3.0, 3.0));
+        let xs: Vec<f32> = (0..per_chan * c).map(|_| rng.normal() * scale).collect();
+        (bits, ranges, xs)
+    }
+
+    #[test]
+    fn minmax_fq_axis_equals_scalar_per_channel_reference() {
+        forall(96, "minmax_fq_axis-parity", axis_case, |(bits, ranges, xs)| {
+            let mut fused = xs.clone();
+            let stats = minmax_fq_axis(&mut fused, ranges, *bits);
+            let (expect, expect_stats) = axis_scalar_reference(xs, ranges, *bits);
+            stats == expect_stats && fused == expect
+        });
+    }
+
+    #[test]
+    fn minmax_fq_axis_with_one_channel_equals_minmax_fq() {
+        forall(64, "axis-1ch-parity", case, |(lo, hi, bits, xs)| {
+            let mut a = xs.clone();
+            let sa = minmax_fq_axis(&mut a, &[[*lo, *hi]], *bits);
+            let mut b = xs.clone();
+            let sb = minmax_fq(&mut b, *lo, *hi, *bits);
+            sa == vec![sb] && a == b
+        });
+    }
+
+    #[test]
+    fn minmax_fq_axis_empty_and_degenerate() {
+        assert_eq!(minmax_fq_axis(&mut [], &[[-1.0, 1.0]; 3], 8), vec![(0.0, 0.0); 3]);
+        // degenerate per-channel ranges collapse to the guarded grid
+        let mut xs = [0.5f32, -0.5, 0.25, -0.25];
+        let stats = minmax_fq_axis(&mut xs, &[[0.0, 0.0], [0.0, 0.0]], 8);
+        assert_eq!(stats, vec![(0.25, 0.5), (-0.5, -0.25)]);
+        assert!(xs.iter().all(|&x| x.is_finite() && x.abs() < 1e-9));
+    }
+
+    /// Regression (satellite): length-vs-`ranges` mismatches are a
+    /// checked contract on every backend — the dispatcher validates
+    /// before any kernel sees the tensor — not a caller-trusted layout
+    /// that silently misquantizes.
+    #[test]
+    fn ragged_axis_layouts_are_a_checked_error() {
+        for b in KernelBackend::ALL {
+            let mut xs = [1.0f32, 2.0, 3.0];
+            let err = try_minmax_fq_axis_on(b, &mut xs, &[[-1.0, 1.0]; 2], 8).unwrap_err();
+            assert_eq!(err, KernelError::RaggedAxis { len: 3, channels: 2 });
+            assert!(err.to_string().contains("not divisible"), "{err}");
+            assert_eq!(xs, [1.0, 2.0, 3.0], "tensor untouched on rejection");
+
+            let err = try_minmax_fq_axis_on(b, &mut xs, &[], 8).unwrap_err();
+            assert_eq!(err, KernelError::NoChannels);
+            assert!(err.to_string().contains("at least one channel"), "{err}");
+        }
+        // empty tensors are fine with any channel count (0 % c == 0)
+        assert_eq!(
+            try_minmax_fq_axis(&mut [], &[[-1.0, 1.0]; 5], 8).unwrap(),
+            vec![(0.0, 0.0); 5]
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn minmax_fq_axis_rejects_misaligned_tensors() {
+        minmax_fq_axis(&mut [1.0, 2.0, 3.0], &[[-1.0, 1.0], [-1.0, 1.0]], 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one channel")]
+    fn minmax_fq_axis_rejects_empty_ranges() {
+        minmax_fq_axis(&mut [1.0, 2.0], &[], 8);
+    }
+
+    /// NaN policy (pinned): the `f32::min`/`f32::max` fold returns the
+    /// non-NaN operand, so NaN elements are silently *dropped* from the
+    /// statistics — a NaN never reaches the range state (where one EMA
+    /// step would poison it permanently).  The fake-quant side instead
+    /// *saturates*: `fq(NaN)` lands on the grid's lower edge via the
+    /// NaN-to-0 `as u32` cast.  See also `quant::minmax`'s doc.
+    #[test]
+    fn nan_stats_are_dropped_by_the_fused_folds() {
+        for b in KernelBackend::ALL {
+            let mut xs = [1.0f32, f32::NAN, -2.0, 0.5];
+            let (lo, hi) = minmax_fq_on(b, &mut xs, -4.0, 4.0, 8);
+            assert_eq!((lo, hi), (-2.0, 1.0), "NaN must not surface in stats");
+            assert!(xs.iter().all(|x| x.is_finite()), "fq saturates NaN onto the grid");
+
+            let mut xs = [f32::NAN, 1.0, f32::NAN, -3.0];
+            let stats = minmax_fq_axis_on(b, &mut xs, &[[-4.0, 4.0], [-4.0, 4.0]], 8);
+            // channel 0 = {NaN, NaN} -> untouched inf fold (documented
+            // degenerate); channel 1 = {1.0, -3.0} -> NaN-free hull
+            assert_eq!(stats[0], (f32::INFINITY, f32::NEG_INFINITY));
+            assert_eq!(stats[1], (-3.0, 1.0));
+            assert!(xs.iter().all(|x| x.is_finite()));
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Chunked-parallel backend: `std::thread`-scoped workers over
+//! cache-sized spans, rayon-free like the sweep executor.
+//!
+//! The tensor is split into at most `threads` contiguous spans, each a
+//! multiple of `CHUNK` (so every worker's inner loops keep the
+//! cache-resident blocking of the serial backends).  Each worker runs
+//! the [`super::simd`] kernel over its span and reduces a per-span
+//! `(min, max)` pair; the caller merges span pairs **in span order**.
+//! That merge only reassociates the NaN-dropping min/max fold, and the
+//! fake-quant side is element-wise, so the result is bit-identical to
+//! the scalar reference — pinned by `tests/kernel_conformance.rs`
+//! across span counts {1, 2, 7, 16}.
+//!
+//! `fq_cosine` is the one kernel that does *not* fan out: its f64
+//! reduction is order-sensitive (float addition does not reassociate),
+//! so per-span partial sums would break the bit-parity guarantee every
+//! backend carries.  It delegates to the SIMD backend, which keeps the
+//! reference accumulation order.
+//!
+//! The auto path guarantees every worker at least [`PAR_MIN_LEN`]
+//! elements of work — a spawn costs more than it saves below that — so
+//! tensors shorter than *twice* `PAR_MIN_LEN` run on the SIMD path
+//! with zero threads spawned.  Tests pin chunk-count determinism
+//! through the `*_with` entry points, which take an explicit span
+//! count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::{simd, CHUNK};
+
+/// Minimum elements of work per spawned worker: thread spawn + join is
+/// tens of microseconds, a full fused pass over 64Ki floats is
+/// comparable.  The auto path therefore stays serial until a tensor
+/// has two spans' worth (`2 * PAR_MIN_LEN` elements).
+pub const PAR_MIN_LEN: usize = 1 << 16;
+
+/// Worker count the auto path uses for `len` elements: one worker per
+/// full `PAR_MIN_LEN` of work, capped at the hardware parallelism
+/// share this process is hinted to use (see
+/// [`external_parallelism_guard`]).
+pub fn auto_threads(len: usize) -> usize {
+    let hw = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let budget = (hw / EXTERNAL_WORKERS.load(Ordering::Relaxed).max(1)).max(1);
+    budget.min(len / PAR_MIN_LEN).max(1)
+}
+
+/// Concurrently running coordinator workers (the sweep executor's
+/// threads), used to divide the hardware budget so kernel fan-out and
+/// worker fan-out don't multiply: an 8-worker sweep on an 8-core box
+/// must not explode into 64 kernel threads.  1 = no external
+/// parallelism (the default).
+static EXTERNAL_WORKERS: AtomicUsize = AtomicUsize::new(1);
+
+/// RAII hint that `n` coordinator worker threads will be running
+/// kernels concurrently until the guard drops; [`auto_threads`]
+/// divides the hardware budget by it.  A hint, not a lock: concurrent
+/// guards are last-writer-wins, and explicit `*_with` span counts
+/// ignore it entirely.  Bit-parity is unaffected either way — span
+/// counts never change results.
+pub fn external_parallelism_guard(n: usize) -> ExternalParallelism {
+    ExternalParallelism(EXTERNAL_WORKERS.swap(n.max(1), Ordering::Relaxed))
+}
+
+/// Guard returned by [`external_parallelism_guard`]; restores the
+/// previous hint on drop.
+pub struct ExternalParallelism(usize);
+
+impl Drop for ExternalParallelism {
+    fn drop(&mut self) {
+        EXTERNAL_WORKERS.store(self.0, Ordering::Relaxed);
+    }
+}
+
+/// Span length that divides `len` elements over at most `threads`
+/// workers in `align`-multiples (the last span keeps the remainder).
+fn span_len(len: usize, threads: usize, align: usize) -> usize {
+    let per = len.div_ceil(threads.max(1));
+    per.div_ceil(align).max(1) * align
+}
+
+fn gcd(mut a: usize, mut b: usize) -> usize {
+    while b != 0 {
+        (a, b) = (b, a % b);
+    }
+    a
+}
+
+pub fn minmax_fq(xs: &mut [f32], qmin: f32, qmax: f32, bits: u32) -> (f32, f32) {
+    minmax_fq_with(auto_threads(xs.len()), xs, qmin, qmax, bits)
+}
+
+/// [`minmax_fq`] over an explicit number of parallel spans (never more
+/// spans than exist); `threads <= 1` runs serially on the calling
+/// thread.  Empty slices follow the dispatcher's `(0.0, 0.0)`
+/// convention, so the `_with` surface is safe to call directly.
+pub fn minmax_fq_with(
+    threads: usize,
+    xs: &mut [f32],
+    qmin: f32,
+    qmax: f32,
+    bits: u32,
+) -> (f32, f32) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    if threads <= 1 || xs.len() <= CHUNK {
+        return simd::minmax_fq(xs, qmin, qmax, bits);
+    }
+    let span = span_len(xs.len(), threads, CHUNK);
+    let mut stats = vec![(f32::INFINITY, f32::NEG_INFINITY); xs.len().div_ceil(span)];
+    std::thread::scope(|scope| {
+        for (chunk, slot) in xs.chunks_mut(span).zip(stats.iter_mut()) {
+            scope.spawn(move || {
+                *slot = simd::minmax_fq(chunk, qmin, qmax, bits);
+            });
+        }
+    });
+    stats.iter().fold(
+        (f32::INFINITY, f32::NEG_INFINITY),
+        |(lo, hi), &(l, h)| (lo.min(l), hi.max(h)),
+    )
+}
+
+pub fn minmax_fq_axis(xs: &mut [f32], ranges: &[[f32; 2]], bits: u32) -> Vec<(f32, f32)> {
+    minmax_fq_axis_with(auto_threads(xs.len()), xs, ranges, bits)
+}
+
+/// [`minmax_fq_axis`] over an explicit number of parallel spans.  Span
+/// boundaries stay channel-aligned (multiples of `ranges.len()`), so
+/// every span sees the same channels-last phase and per-span stats
+/// merge channel-wise in span order.  Empty slices follow the
+/// dispatcher's `(0.0, 0.0)`-rows convention.
+pub fn minmax_fq_axis_with(
+    threads: usize,
+    xs: &mut [f32],
+    ranges: &[[f32; 2]],
+    bits: u32,
+) -> Vec<(f32, f32)> {
+    let c = ranges.len();
+    debug_assert!(c > 0 && xs.len() % c == 0, "validated by the dispatcher");
+    if xs.is_empty() {
+        return vec![(0.0, 0.0); c];
+    }
+    if threads <= 1 || xs.len() <= CHUNK {
+        return simd::minmax_fq_axis(xs, ranges, bits);
+    }
+    // align spans to lcm(CHUNK, c): CHUNK keeps the inner blocking
+    // cache-aligned, c keeps every span channel-phase 0
+    let align = CHUNK / gcd(CHUNK, c) * c;
+    let span = span_len(xs.len(), threads, align);
+    let n_spans = xs.len().div_ceil(span);
+    let mut stats: Vec<Vec<(f32, f32)>> = vec![Vec::new(); n_spans];
+    std::thread::scope(|scope| {
+        for (chunk, slot) in xs.chunks_mut(span).zip(stats.iter_mut()) {
+            scope.spawn(move || {
+                *slot = simd::minmax_fq_axis(chunk, ranges, bits);
+            });
+        }
+    });
+    (0..c)
+        .map(|ch| {
+            stats.iter().fold(
+                (f32::INFINITY, f32::NEG_INFINITY),
+                |(lo, hi), span_stats| {
+                    let (l, h) = span_stats[ch];
+                    (lo.min(l), hi.max(h))
+                },
+            )
+        })
+        .collect()
+}
+
+pub fn fq_into(src: &[f32], dst: &mut [f32], qmin: f32, qmax: f32, bits: u32) {
+    fq_into_with(auto_threads(src.len()), src, dst, qmin, qmax, bits)
+}
+
+/// [`fq_into`] over an explicit number of parallel spans.  Element-wise
+/// work: spans cannot interact, parity is structural.
+pub fn fq_into_with(threads: usize, src: &[f32], dst: &mut [f32], qmin: f32, qmax: f32, bits: u32) {
+    if threads <= 1 || src.len() <= CHUNK {
+        return simd::fq_into(src, dst, qmin, qmax, bits);
+    }
+    let span = span_len(src.len(), threads, CHUNK);
+    std::thread::scope(|scope| {
+        for (s, d) in src.chunks(span).zip(dst.chunks_mut(span)) {
+            scope.spawn(move || {
+                simd::fq_into(s, d, qmin, qmax, bits);
+            });
+        }
+    });
+}
+
+/// Sequential by design: see the module doc — fanning out the f64
+/// reduction would reassociate an order-sensitive sum and break the
+/// backend bit-parity contract.
+pub fn fq_cosine(xs: &[f32], qmin: f32, qmax: f32, bits: u32) -> f32 {
+    simd::fq_cosine(xs, qmin, qmax, bits)
+}

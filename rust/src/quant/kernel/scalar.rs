@@ -1,0 +1,107 @@
+//! Scalar reference backend — the pinned semantics of every kernel.
+//!
+//! This is the code the original fused kernels shipped as: plain
+//! sequential loops, chunked only for cache residency.  Every other
+//! backend is required (and tested, by `tests/kernel_conformance.rs`)
+//! to be bit-identical to these functions; when the conformance harness
+//! disagrees, *this* file is the one that is right by definition.
+//!
+//! Inputs arrive pre-validated by the dispatch layer in the parent
+//! module: slices are non-empty, axis tensors divide evenly into
+//! channels.  The loops here therefore carry no error paths of their
+//! own.
+
+use super::CHUNK;
+use crate::quant::QuantParams;
+
+/// Fused min/max + fake-quantize in place: returns the (min, max) of
+/// the *original* values while rewriting `xs` onto the `[qmin, qmax]`
+/// grid, folding extrema and rounding chunk by chunk so each block is
+/// cache-resident for both passes.
+pub fn minmax_fq(xs: &mut [f32], qmin: f32, qmax: f32, bits: u32) -> (f32, f32) {
+    let qp = QuantParams::from_range(qmin, qmax, bits);
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for chunk in xs.chunks_mut(CHUNK) {
+        for &x in chunk.iter() {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        for x in chunk.iter_mut() {
+            *x = qp.fq(*x);
+        }
+    }
+    (lo, hi)
+}
+
+/// Channel-strided fused min/max + fake-quantize (channels-last: the
+/// channel of flat element `i` is `i % ranges.len()`).  One traversal
+/// folds each channel's pre-quantization extrema *and* rewrites the
+/// tensor onto its channel's grid; returns one `(min, max)` per
+/// channel.
+pub fn minmax_fq_axis(xs: &mut [f32], ranges: &[[f32; 2]], bits: u32) -> Vec<(f32, f32)> {
+    let c = ranges.len();
+    debug_assert!(c > 0 && xs.len() % c == 0, "validated by the dispatcher");
+    let qps: Vec<QuantParams> = ranges
+        .iter()
+        .map(|r| QuantParams::from_range(r[0], r[1], bits))
+        .collect();
+    let mut stats = vec![(f32::INFINITY, f32::NEG_INFINITY); c];
+    // channel-aligned blocks (block % c == 0, and the trailing chunk is
+    // too since the total length divides by c) let a wrapping counter
+    // replace a per-element `j % c` division, while preserving the
+    // cache-resident reduce-then-round structure
+    let block = (CHUNK / c).max(1) * c;
+    for chunk in xs.chunks_mut(block) {
+        let mut ch = 0usize;
+        for &x in chunk.iter() {
+            let s = &mut stats[ch];
+            s.0 = s.0.min(x);
+            s.1 = s.1.max(x);
+            ch += 1;
+            if ch == c {
+                ch = 0;
+            }
+        }
+        ch = 0;
+        for x in chunk.iter_mut() {
+            *x = qps[ch].fq(*x);
+            ch += 1;
+            if ch == c {
+                ch = 0;
+            }
+        }
+    }
+    stats
+}
+
+/// Fake-quantize `src` into a caller-owned buffer of the same length.
+pub fn fq_into(src: &[f32], dst: &mut [f32], qmin: f32, qmax: f32, bits: u32) {
+    let qp = QuantParams::from_range(qmin, qmax, bits);
+    for (d, &x) in dst.iter_mut().zip(src) {
+        *d = qp.fq(x);
+    }
+}
+
+/// Fused DSGC objective: `cosine(x, fake_quant(x))` in one traversal,
+/// never materializing the quantized tensor.  The f64 accumulation
+/// order (flat element order) is part of the pinned contract — floating
+/// addition does not reassociate, so every backend keeps this exact
+/// order.
+pub fn fq_cosine(xs: &[f32], qmin: f32, qmax: f32, bits: u32) -> f32 {
+    let qp = QuantParams::from_range(qmin, qmax, bits);
+    let (mut dot, mut na, mut nb) = (0f64, 0f64, 0f64);
+    for &x in xs {
+        let q = qp.fq(x);
+        dot += x as f64 * q as f64;
+        na += x as f64 * x as f64;
+        nb += q as f64 * q as f64;
+    }
+    if na == 0.0 && nb == 0.0 {
+        return 1.0;
+    }
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    (dot / (na.sqrt() * nb.sqrt())) as f32
+}

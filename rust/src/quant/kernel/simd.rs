@@ -1,0 +1,237 @@
+//! Explicit-SIMD backend: lane-chunked inner loops with a scalar tail.
+//!
+//! Stable Rust has no `std::simd`, so this backend is written the way
+//! portable-SIMD code lowers: fixed-width lane blocks (`LANES`
+//! elements) with no cross-lane dependency inside the hot loop, so the
+//! autovectorizer emits one vector op per lane statement, plus a scalar
+//! tail for the ragged end.  The structure — per-lane min/max
+//! accumulators folded once at the end, element-wise rounding through
+//! the exact same [`QuantParams::fq`] scalar sequence — keeps every
+//! result bit-identical to the [`super::scalar`] reference:
+//!
+//! * the fake-quant side is element-wise, so lane blocking cannot
+//!   change a single output bit;
+//! * the min/max fold only *reassociates* a reduction whose operator is
+//!   commutative, associative, and NaN-dropping (`f32::min`/`max`
+//!   return the non-NaN operand), so the folded extrema are the same
+//!   values the sequential fold produces;
+//! * the `fq_cosine` f64 accumulation does **not** reassociate (float
+//!   addition is order-sensitive): lanes compute the quantized values,
+//!   the sums run in flat element order, exactly like the reference.
+//!
+//! Cache behaviour matches the scalar backend: lane loops run inside
+//! the same `CHUNK`-sized blocks, reducing then rounding each block
+//! while it is resident.
+
+use super::CHUNK;
+use crate::quant::QuantParams;
+
+/// Lane width of the blocked inner loops — eight f32 lanes (one AVX2
+/// register, two NEON registers); `CHUNK` is a multiple of it, so only
+/// the final chunk ever has a scalar tail.
+pub const LANES: usize = 8;
+
+/// Lane-blocked fused min/max + fake-quantize in place.
+pub fn minmax_fq(xs: &mut [f32], qmin: f32, qmax: f32, bits: u32) -> (f32, f32) {
+    let qp = QuantParams::from_range(qmin, qmax, bits);
+    let mut vlo = [f32::INFINITY; LANES];
+    let mut vhi = [f32::NEG_INFINITY; LANES];
+    let (mut slo, mut shi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for chunk in xs.chunks_mut(CHUNK) {
+        let split = chunk.len() - chunk.len() % LANES;
+        let (blocks, tail) = chunk.split_at_mut(split);
+        for block in blocks.chunks_exact(LANES) {
+            for l in 0..LANES {
+                vlo[l] = vlo[l].min(block[l]);
+                vhi[l] = vhi[l].max(block[l]);
+            }
+        }
+        for &x in tail.iter() {
+            slo = slo.min(x);
+            shi = shi.max(x);
+        }
+        for block in blocks.chunks_exact_mut(LANES) {
+            for x in block.iter_mut() {
+                *x = qp.fq(*x);
+            }
+        }
+        for x in tail.iter_mut() {
+            *x = qp.fq(*x);
+        }
+    }
+    let lo = vlo.iter().fold(slo, |a, &b| a.min(b));
+    let hi = vhi.iter().fold(shi, |a, &b| a.max(b));
+    (lo, hi)
+}
+
+/// Lane-blocked channel-strided fused kernel.  Two gather-free lane
+/// layouts cover the cases that matter:
+///
+/// * `LANES % c == 0` (c in {2, 4, 8}) — each lane position maps to a
+///   *fixed* channel (`l % c` is block-invariant), so per-lane
+///   accumulators and a per-lane `QuantParams` table vectorize the
+///   strided fold (`axis_lane_mapped`);
+/// * `c % LANES == 0` (the common wide case: 16, 64, ... feature
+///   channels) — every LANES-block of consecutive elements sits inside
+///   one contiguous window of channels, so lanes fold straight into a
+///   sliding window of per-channel accumulators (`axis_row_blocked`).
+///
+/// Channel counts fitting neither (non-multiples like 3, 5, 6, 12)
+/// fall back to the scalar wrapped-counter loop — same bits, no lane
+/// win.
+pub fn minmax_fq_axis(xs: &mut [f32], ranges: &[[f32; 2]], bits: u32) -> Vec<(f32, f32)> {
+    let c = ranges.len();
+    debug_assert!(c > 0 && xs.len() % c == 0, "validated by the dispatcher");
+    if c == 1 {
+        let (lo, hi) = minmax_fq(xs, ranges[0][0], ranges[0][1], bits);
+        return vec![(lo, hi)];
+    }
+    if LANES % c == 0 {
+        return axis_lane_mapped(xs, ranges, bits);
+    }
+    if c % LANES == 0 {
+        return axis_row_blocked(xs, ranges, bits);
+    }
+    super::scalar::minmax_fq_axis(xs, ranges, bits)
+}
+
+/// `LANES % c == 0`: lane l always sees channel `l % c` — `CHUNK` and
+/// `LANES` are multiples of `c`, so block starts are channel-aligned
+/// everywhere.
+fn axis_lane_mapped(xs: &mut [f32], ranges: &[[f32; 2]], bits: u32) -> Vec<(f32, f32)> {
+    let c = ranges.len();
+    let lane_qp: Vec<QuantParams> = (0..LANES)
+        .map(|l| QuantParams::from_range(ranges[l % c][0], ranges[l % c][1], bits))
+        .collect();
+    let mut vlo = [f32::INFINITY; LANES];
+    let mut vhi = [f32::NEG_INFINITY; LANES];
+    let mut tail_stats = vec![(f32::INFINITY, f32::NEG_INFINITY); c];
+    for chunk in xs.chunks_mut(CHUNK) {
+        let split = chunk.len() - chunk.len() % LANES;
+        let (blocks, tail) = chunk.split_at_mut(split);
+        for block in blocks.chunks_exact(LANES) {
+            for l in 0..LANES {
+                vlo[l] = vlo[l].min(block[l]);
+                vhi[l] = vhi[l].max(block[l]);
+            }
+        }
+        for block in blocks.chunks_exact_mut(LANES) {
+            for l in 0..LANES {
+                block[l] = lane_qp[l].fq(block[l]);
+            }
+        }
+        // the tail starts channel-aligned (everything before it is a
+        // multiple of LANES, hence of c)
+        let mut ch = 0usize;
+        for x in tail.iter_mut() {
+            let s = &mut tail_stats[ch];
+            s.0 = s.0.min(*x);
+            s.1 = s.1.max(*x);
+            *x = lane_qp[ch].fq(*x);
+            ch += 1;
+            if ch == c {
+                ch = 0;
+            }
+        }
+    }
+    // fold lanes into channels in increasing lane order, then the tail
+    (0..c)
+        .map(|ch| {
+            let mut s = tail_stats[ch];
+            for l in (ch..LANES).step_by(c) {
+                s.0 = s.0.min(vlo[l]);
+                s.1 = s.1.max(vhi[l]);
+            }
+            s
+        })
+        .collect()
+}
+
+/// `c % LANES == 0`: a LANES-block of consecutive elements never wraps
+/// a channel boundary (block starts are multiples of LANES, and LANES
+/// divides c), so lanes fold into a contiguous window of per-channel
+/// accumulators and round through the matching window of the
+/// per-channel `QuantParams` table — no gathers, no per-element
+/// modulo.  Each channel's single accumulator folds its elements in
+/// increasing index order, exactly like the scalar reference.
+fn axis_row_blocked(xs: &mut [f32], ranges: &[[f32; 2]], bits: u32) -> Vec<(f32, f32)> {
+    let c = ranges.len();
+    let qps: Vec<QuantParams> = ranges
+        .iter()
+        .map(|r| QuantParams::from_range(r[0], r[1], bits))
+        .collect();
+    let mut lo = vec![f32::INFINITY; c];
+    let mut hi = vec![f32::NEG_INFINITY; c];
+    // xs.len() is a multiple of c and LANES | c, so there is no tail:
+    // every element lives in a full LANES-block
+    debug_assert_eq!(xs.len() % LANES, 0);
+    let mut base = 0usize;
+    for block in xs.chunks_exact_mut(LANES) {
+        let lo_w = &mut lo[base..base + LANES];
+        let hi_w = &mut hi[base..base + LANES];
+        let qp_w = &qps[base..base + LANES];
+        for l in 0..LANES {
+            lo_w[l] = lo_w[l].min(block[l]);
+            hi_w[l] = hi_w[l].max(block[l]);
+        }
+        for l in 0..LANES {
+            block[l] = qp_w[l].fq(block[l]);
+        }
+        base += LANES;
+        if base == c {
+            base = 0;
+        }
+    }
+    lo.into_iter().zip(hi).collect()
+}
+
+/// Lane-blocked fake-quantize into a caller-owned buffer.
+pub fn fq_into(src: &[f32], dst: &mut [f32], qmin: f32, qmax: f32, bits: u32) {
+    let qp = QuantParams::from_range(qmin, qmax, bits);
+    let split = src.len() - src.len() % LANES;
+    let (sb, st) = src.split_at(split);
+    let (db, dt) = dst.split_at_mut(split);
+    for (d, s) in db.chunks_exact_mut(LANES).zip(sb.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            d[l] = qp.fq(s[l]);
+        }
+    }
+    for (d, &x) in dt.iter_mut().zip(st) {
+        *d = qp.fq(x);
+    }
+}
+
+/// Fused DSGC objective with lane-blocked quantization and the
+/// reference's sequential f64 accumulation (the reduction order is
+/// pinned — see the module doc).
+pub fn fq_cosine(xs: &[f32], qmin: f32, qmax: f32, bits: u32) -> f32 {
+    let qp = QuantParams::from_range(qmin, qmax, bits);
+    let (mut dot, mut na, mut nb) = (0f64, 0f64, 0f64);
+    let split = xs.len() - xs.len() % LANES;
+    let (blocks, tail) = xs.split_at(split);
+    let mut q = [0f32; LANES];
+    for block in blocks.chunks_exact(LANES) {
+        for l in 0..LANES {
+            q[l] = qp.fq(block[l]);
+        }
+        for l in 0..LANES {
+            let x = block[l];
+            dot += x as f64 * q[l] as f64;
+            na += x as f64 * x as f64;
+            nb += q[l] as f64 * q[l] as f64;
+        }
+    }
+    for &x in tail {
+        let qx = qp.fq(x);
+        dot += x as f64 * qx as f64;
+        na += x as f64 * x as f64;
+        nb += qx as f64 * qx as f64;
+    }
+    if na == 0.0 && nb == 0.0 {
+        return 1.0;
+    }
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    (dot / (na.sqrt() * nb.sqrt())) as f32
+}

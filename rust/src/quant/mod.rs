@@ -9,8 +9,12 @@
 
 //!
 //! `kernel` holds the fused single-pass variants of the hot paths
-//! (stats + fake-quant in one traversal, the no-alloc DSGC objective);
-//! the scalar entry points below stay as the reference semantics.
+//! (stats + fake-quant in one traversal, the no-alloc DSGC objective)
+//! behind a backend dispatch (scalar reference / lane-chunked SIMD /
+//! `std::thread` chunked-parallel, selected once per process via
+//! `--kernel-backend` / `HINDSIGHT_KERNEL_BACKEND`); the scalar entry
+//! points below stay as the reference semantics, and every backend is
+//! bit-identical to them (`tests/kernel_conformance.rs`).
 
 pub mod dsgc;
 pub mod kernel;

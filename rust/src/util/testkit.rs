@@ -1,9 +1,12 @@
 //! Mini property-testing harness (proptest stand-in).
 //!
 //! `forall(N, seed, gen, prop)` draws `N` cases from `gen(&mut rng)` and
-//! asserts `prop(case)`; on failure it retries with simpler cases drawn
-//! from `gen_simpler` if provided (a shrinking-lite pass) and reports the
-//! failing seed so the case is reproducible with `HINDSIGHT_PT_SEED`.
+//! asserts `prop(case)`; `forall_shrink` additionally takes a shrinker
+//! (candidate simpler cases) and greedily minimizes the first failing
+//! case before reporting it, so a 3000-element adversarial tensor
+//! failure comes back as the 4-element core that actually trips the
+//! property.  Failures report the reproduction seed
+//! (`HINDSIGHT_PT_SEED`).
 
 use crate::util::rng::Pcg32;
 
@@ -30,16 +33,51 @@ pub fn forall<T: std::fmt::Debug>(
     gen: impl Fn(&mut Pcg32) -> T,
     prop: impl Fn(&T) -> bool,
 ) {
+    forall_shrink(n, label, gen, |_| Vec::new(), prop)
+}
+
+/// Maximum shrink steps before giving up and reporting the current
+/// smallest failure (a safety valve, not a tuning knob).
+const MAX_SHRINK_STEPS: usize = 256;
+
+/// [`forall`] with shrinking: when a case falsifies `prop`, `shrink`
+/// proposes simpler candidates; any candidate that still fails becomes
+/// the new case, greedily, until no candidate fails (a local minimum)
+/// or `MAX_SHRINK_STEPS` is hit.  The panic reports the *minimized*
+/// case plus how many shrink steps it took.
+pub fn forall_shrink<T: std::fmt::Debug>(
+    n: usize,
+    label: &str,
+    gen: impl Fn(&mut Pcg32) -> T,
+    shrink: impl Fn(&T) -> Vec<T>,
+    prop: impl Fn(&T) -> bool,
+) {
     let seed = base_seed();
     for i in 0..n {
         let mut rng = Pcg32::fold(seed, label, i as u64);
         let case = gen(&mut rng);
-        if !prop(&case) {
-            panic!(
-                "property '{label}' falsified on case #{i} \
-                 (HINDSIGHT_PT_SEED={seed}):\n{case:#?}"
-            );
+        if prop(&case) {
+            continue;
         }
+        let mut smallest = case;
+        let mut steps = 0usize;
+        'minimize: while steps < MAX_SHRINK_STEPS {
+            for cand in shrink(&smallest) {
+                steps += 1;
+                if !prop(&cand) {
+                    smallest = cand;
+                    continue 'minimize;
+                }
+                if steps >= MAX_SHRINK_STEPS {
+                    break;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property '{label}' falsified on case #{i} \
+             (HINDSIGHT_PT_SEED={seed}, shrunk in {steps} step(s)):\n{smallest:#?}"
+        );
     }
 }
 
@@ -70,6 +108,95 @@ pub mod gens {
     pub fn bits(rng: &mut Pcg32) -> u32 {
         [2, 3, 4, 6, 8][rng.below(5)]
     }
+
+    /// A tensor length biased onto the edges kernel backends care
+    /// about: empty, tiny, one below / exactly at / one past each of
+    /// the given `boundaries` (SIMD lane width, cache-chunk size,
+    /// parallel span...), or an arbitrary in-between value.
+    pub fn boundary_len(rng: &mut Pcg32, boundaries: &[usize]) -> usize {
+        match rng.below(3) {
+            0 => rng.below(4), // 0..=3: empty and sub-lane tails
+            1 => {
+                let b = boundaries[rng.below(boundaries.len())];
+                // b-1 | b | b+1 | a few lanes past
+                match rng.below(4) {
+                    0 => b.saturating_sub(1),
+                    1 => b,
+                    2 => b + 1,
+                    _ => b + 1 + rng.below(2 * b.max(1)),
+                }
+            }
+            _ => rng.below(boundaries.iter().copied().max().unwrap_or(64) * 3 + 2),
+        }
+    }
+
+    /// Adversarial tensor for kernel-conformance testing: a base shape
+    /// (normal noise / all-negative / all-constant / subnormal-scale /
+    /// zeros) of a boundary-biased length, with NaN and ±inf payloads
+    /// sprinkled in — everything the NaN-dropping fold, the saturating
+    /// fake-quant and the lane/chunk tails must survive.
+    pub fn adversarial(rng: &mut Pcg32, boundaries: &[usize]) -> Vec<f32> {
+        let len = boundary_len(rng, boundaries);
+        let mut xs: Vec<f32> = match rng.below(5) {
+            // gaussian across several decades
+            0 => {
+                let scale = 10f32.powf(rng.range(-3.0, 3.0));
+                (0..len).map(|_| rng.normal() * scale).collect()
+            }
+            // all-negative (one-sided hull, asymmetric grids)
+            1 => {
+                let scale = 10f32.powf(rng.range(-2.0, 2.0));
+                (0..len).map(|_| -rng.uniform().abs() * scale - 1e-3).collect()
+            }
+            // all-constant (zero-width hull; min == max)
+            2 => {
+                let v = rng.normal();
+                vec![v; len]
+            }
+            // subnormal magnitudes (scale guard + flush behaviour)
+            3 => (0..len)
+                .map(|_| rng.normal() * f32::MIN_POSITIVE * 0.5)
+                .collect(),
+            // exact zeros with mixed signs
+            _ => (0..len)
+                .map(|_| if rng.below(2) == 0 { 0.0 } else { -0.0 })
+                .collect(),
+        };
+        // payload injection: NaN / +inf / -inf at random positions
+        if !xs.is_empty() && rng.below(2) == 0 {
+            for _ in 0..1 + rng.below(1 + xs.len() / 8) {
+                let at = rng.below(xs.len());
+                xs[at] = match rng.below(3) {
+                    0 => f32::NAN,
+                    1 => f32::INFINITY,
+                    _ => f32::NEG_INFINITY,
+                };
+            }
+        }
+        xs
+    }
+
+    /// Shrink a tensor: drop halves, then neutralize elements to 0.0 —
+    /// enough to reduce most kernel failures to a handful of elements.
+    pub fn shrink_tensor(xs: &[f32]) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if xs.is_empty() {
+            return out;
+        }
+        let mid = xs.len() / 2;
+        if mid > 0 {
+            out.push(xs[..mid].to_vec());
+            out.push(xs[mid..].to_vec());
+        }
+        // neutralize the first non-zero element (kills payloads one by
+        // one without changing the length/layout)
+        if let Some(i) = xs.iter().position(|&x| x != 0.0 || x.is_nan()) {
+            let mut ys = xs.to_vec();
+            ys[i] = 0.0;
+            out.push(ys);
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -99,5 +226,73 @@ mod tests {
             }
         }
         assert!(seen_degenerate);
+    }
+
+    #[test]
+    fn shrinking_minimizes_the_failing_case() {
+        // property: no element is NaN.  The generator plants one NaN in
+        // a large tensor; shrinking must reduce it to a small core that
+        // still contains the NaN.
+        let caught = std::panic::catch_unwind(|| {
+            forall_shrink(
+                8,
+                "shrinks",
+                |rng| {
+                    let mut xs: Vec<f32> = (0..512).map(|_| rng.normal()).collect();
+                    let at = rng.below(xs.len());
+                    xs[at] = f32::NAN;
+                    xs
+                },
+                |xs| gens::shrink_tensor(xs),
+                |xs| !xs.iter().any(|x| x.is_nan()),
+            )
+        });
+        let msg = match caught {
+            Ok(()) => panic!("property must fail"),
+            Err(p) => *p.downcast::<String>().expect("string panic"),
+        };
+        assert!(msg.contains("falsified"), "{msg}");
+        assert!(msg.contains("shrunk in"), "{msg}");
+        // the reported case is the minimized one: halving 512 down to
+        // the NaN core keeps it under a handful of lines
+        let elements = msg.matches(',').count() + 1;
+        assert!(elements < 64, "shrunk case still large: {msg}");
+    }
+
+    #[test]
+    fn boundary_lengths_hit_the_edges() {
+        let boundaries = [8usize, 1024];
+        let (mut at, mut below, mut above, mut empty) = (false, false, false, false);
+        for i in 0..512 {
+            let mut rng = Pcg32::fold(2, "bounds", i);
+            let len = gens::boundary_len(&mut rng, &boundaries);
+            empty |= len == 0;
+            for b in boundaries {
+                at |= len == b;
+                below |= len == b - 1;
+                above |= len == b + 1;
+            }
+        }
+        assert!(empty && at && below && above, "{empty} {at} {below} {above}");
+    }
+
+    #[test]
+    fn adversarial_tensors_cover_payload_classes() {
+        let boundaries = [8usize, 1024];
+        let (mut nan, mut inf, mut allneg, mut constant, mut subnormal) =
+            (false, false, false, false, false);
+        for i in 0..512 {
+            let mut rng = Pcg32::fold(3, "adv", i);
+            let xs = gens::adversarial(&mut rng, &boundaries);
+            nan |= xs.iter().any(|x| x.is_nan());
+            inf |= xs.iter().any(|x| x.is_infinite());
+            allneg |= !xs.is_empty() && xs.iter().all(|&x| x < 0.0);
+            constant |= xs.len() > 1 && xs.windows(2).all(|w| w[0].to_bits() == w[1].to_bits());
+            subnormal |= xs.iter().any(|x| x.is_subnormal());
+        }
+        assert!(
+            nan && inf && allneg && constant && subnormal,
+            "{nan} {inf} {allneg} {constant} {subnormal}"
+        );
     }
 }

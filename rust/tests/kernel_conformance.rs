@@ -1,0 +1,445 @@
+//! Differential kernel-conformance harness: every kernel backend must
+//! be bit-identical to the scalar reference on every input the
+//! adversarial generators can produce.
+//!
+//! The scalar backend (`quant::kernel::scalar`) is the contract; the
+//! SIMD and chunked-parallel backends are checked against it — not
+//! against each other — across:
+//!
+//! * empty slices and lengths below / at / straddling the SIMD lane
+//!   width (`simd::LANES`), the cache-chunk size (`kernel::CHUNK`) and
+//!   multi-chunk spans (where the parallel backend actually fans out);
+//! * NaN and ±inf payloads (pinning the documented NaN-*dropping*
+//!   statistics policy and the NaN-*saturating* fake-quant policy);
+//! * subnormals, all-negative and all-constant tensors, mixed-sign
+//!   zeros;
+//! * ragged per-channel layouts (checked rejection) and every channel
+//!   count in 1..=9 — covering both the lane-mapped fast path
+//!   (`c | LANES`) and the wrapped-counter fallback;
+//! * explicit parallel span counts {1, 2, 7, 16} (determinism does not
+//!   depend on how many workers the tensor was split across).
+//!
+//! Cases are seeded (`HINDSIGHT_PT_SEED`) and shrink on failure, so a
+//! falsified property reports a minimal core, not a 3000-element dump.
+//!
+//! The final test exercises the *dispatched* path end-to-end: it pins
+//! the process backend to `parallel` via `select_backend` (this
+//! binary's only use of the global — everything else goes through the
+//! explicit `_on`/`_with` entry points) and runs a 2-worker sweep-grid
+//! workload whose results must be bit-identical to a serial
+//! scalar-backend run.
+
+use hindsight::coordinator::executor::{run_indexed, JobOutcome};
+use hindsight::quant::kernel::{
+    self, parallel, simd, KernelBackend, KernelError, CHUNK,
+};
+use hindsight::util::rng::Pcg32;
+use hindsight::util::testkit::{forall_shrink, gens};
+
+/// Boundary lengths the generators aim at: lane width, cache chunk,
+/// and a span long enough that the parallel backend genuinely fans out.
+const BOUNDARIES: [usize; 4] = [simd::LANES, CHUNK, 3 * CHUNK, 5 * CHUNK];
+
+/// Explicit span counts for the chunked-parallel determinism pins.
+const SPAN_COUNTS: [usize; 4] = [1, 2, 7, 16];
+
+/// Bitwise-up-to-zero-sign equality with NaN == NaN: what "bit-identical"
+/// means for f32 results in this repo (the `==` the unit suites use,
+/// plus NaN-position equality so a backend can't hide a stray NaN).
+fn feq(a: f32, b: f32) -> bool {
+    a == b || (a.is_nan() && b.is_nan())
+}
+
+fn slices_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(&x, &y)| feq(x, y))
+}
+
+fn stats_eq(a: &[(f32, f32)], b: &[(f32, f32)]) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .zip(b)
+            .all(|(x, y)| feq(x.0, y.0) && feq(x.1, y.1))
+}
+
+#[derive(Debug, Clone)]
+struct Case {
+    lo: f32,
+    hi: f32,
+    bits: u32,
+    xs: Vec<f32>,
+}
+
+fn gen_case(rng: &mut Pcg32) -> Case {
+    let (lo, hi) = gens::range(rng);
+    Case {
+        lo,
+        hi,
+        bits: gens::bits(rng),
+        xs: gens::adversarial(rng, &BOUNDARIES),
+    }
+}
+
+fn shrink_case(c: &Case) -> Vec<Case> {
+    gens::shrink_tensor(&c.xs)
+        .into_iter()
+        .map(|xs| Case { xs, ..c.clone() })
+        .collect()
+}
+
+/// The non-scalar variants of `minmax_fq` under test, as (label, run).
+fn minmax_fq_variants(c: &Case) -> Vec<(String, Vec<f32>, (f32, f32))> {
+    let mut out = Vec::new();
+    for b in [KernelBackend::Simd, KernelBackend::Parallel] {
+        let mut buf = c.xs.clone();
+        let stats = kernel::minmax_fq_on(b, &mut buf, c.lo, c.hi, c.bits);
+        out.push((b.key().to_string(), buf, stats));
+    }
+    for t in SPAN_COUNTS {
+        let mut buf = c.xs.clone();
+        let stats = parallel::minmax_fq_with(t, &mut buf, c.lo, c.hi, c.bits);
+        out.push((format!("parallel[{t}]"), buf, stats));
+    }
+    out
+}
+
+#[test]
+fn minmax_fq_backends_match_the_scalar_reference() {
+    forall_shrink(128, "conf-minmax_fq", gen_case, shrink_case, |c| {
+        let mut expect = c.xs.clone();
+        let expect_stats = kernel::minmax_fq_on(
+            KernelBackend::Scalar,
+            &mut expect,
+            c.lo,
+            c.hi,
+            c.bits,
+        );
+        minmax_fq_variants(c).into_iter().all(|(_, buf, stats)| {
+            slices_eq(&buf, &expect) && feq(stats.0, expect_stats.0) && feq(stats.1, expect_stats.1)
+        })
+    });
+}
+
+#[test]
+fn fq_into_backends_match_the_scalar_reference() {
+    forall_shrink(128, "conf-fq_into", gen_case, shrink_case, |c| {
+        let mut expect = vec![0.0f32; c.xs.len()];
+        kernel::fq_into_on(KernelBackend::Scalar, &c.xs, &mut expect, c.lo, c.hi, c.bits);
+        let simd_ok = {
+            let mut dst = vec![0.0f32; c.xs.len()];
+            kernel::fq_into_on(KernelBackend::Simd, &c.xs, &mut dst, c.lo, c.hi, c.bits);
+            slices_eq(&dst, &expect)
+        };
+        simd_ok
+            && SPAN_COUNTS.iter().all(|&t| {
+                let mut dst = vec![0.0f32; c.xs.len()];
+                parallel::fq_into_with(t, &c.xs, &mut dst, c.lo, c.hi, c.bits);
+                slices_eq(&dst, &expect)
+            })
+    });
+}
+
+#[test]
+fn fq_cosine_backends_match_the_scalar_reference() {
+    // the f64 accumulation order is pinned on every backend, so the
+    // comparison is exact f32 equality (NaN-aware for inf payloads
+    // whose products make the objective NaN on all backends equally)
+    forall_shrink(128, "conf-fq_cosine", gen_case, shrink_case, |c| {
+        let expect = kernel::fq_cosine_on(KernelBackend::Scalar, &c.xs, c.lo, c.hi, c.bits);
+        KernelBackend::ALL
+            .iter()
+            .all(|&b| feq(kernel::fq_cosine_on(b, &c.xs, c.lo, c.hi, c.bits), expect))
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Per-channel axis kernel
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct AxisCase {
+    bits: u32,
+    ranges: Vec<[f32; 2]>,
+    xs: Vec<f32>,
+}
+
+fn gen_axis_case(rng: &mut Pcg32) -> AxisCase {
+    // covers all three SIMD layouts: {1, 2, 4, 8} lane-mapped,
+    // {16, 24, 64} row-blocked (24 additionally exercises the
+    // lcm-aligned parallel spans, since 24 does not divide CHUNK),
+    // and the rest the wrapped-counter fallback
+    let c = match rng.below(4) {
+        0 => [16, 24, 64][rng.below(3)],
+        _ => 1 + rng.below(9),
+    };
+    let ranges: Vec<[f32; 2]> = (0..c)
+        .map(|_| {
+            let (lo, hi) = gens::range(rng);
+            [lo, hi]
+        })
+        .collect();
+    let mut xs = gens::adversarial(rng, &BOUNDARIES);
+    xs.truncate(xs.len() - xs.len() % c); // channels-last contract
+    AxisCase {
+        bits: gens::bits(rng),
+        ranges,
+        xs,
+    }
+}
+
+fn shrink_axis_case(a: &AxisCase) -> Vec<AxisCase> {
+    let c = a.ranges.len();
+    let rows = a.xs.len() / c;
+    let mut out = Vec::new();
+    // halve the rows (keeps the layout channel-aligned); when only one
+    // row is left the "second half" would be the case itself — skip it
+    if rows / 2 > 0 {
+        out.push(AxisCase {
+            xs: a.xs[..(rows / 2) * c].to_vec(),
+            ..a.clone()
+        });
+        out.push(AxisCase {
+            xs: a.xs[(rows / 2) * c..].to_vec(),
+            ..a.clone()
+        });
+    }
+    // neutralize the first interesting element
+    if let Some(i) = a.xs.iter().position(|&x| x != 0.0 || x.is_nan()) {
+        let mut xs = a.xs.clone();
+        xs[i] = 0.0;
+        out.push(AxisCase { xs, ..a.clone() });
+    }
+    out
+}
+
+#[test]
+fn minmax_fq_axis_backends_match_the_scalar_reference() {
+    forall_shrink(128, "conf-axis", gen_axis_case, shrink_axis_case, |a| {
+        let mut expect = a.xs.clone();
+        let expect_stats =
+            kernel::minmax_fq_axis_on(KernelBackend::Scalar, &mut expect, &a.ranges, a.bits);
+        let simd_ok = {
+            let mut buf = a.xs.clone();
+            let stats =
+                kernel::minmax_fq_axis_on(KernelBackend::Simd, &mut buf, &a.ranges, a.bits);
+            slices_eq(&buf, &expect) && stats_eq(&stats, &expect_stats)
+        };
+        simd_ok
+            && SPAN_COUNTS.iter().all(|&t| {
+                let mut buf = a.xs.clone();
+                let stats = parallel::minmax_fq_axis_with(t, &mut buf, &a.ranges, a.bits);
+                slices_eq(&buf, &expect) && stats_eq(&stats, &expect_stats)
+            })
+    });
+}
+
+#[test]
+fn ragged_axis_layouts_are_rejected_by_every_backend() {
+    // the checked contract: a length that wraps mid-row is an error
+    // value, never a silent misquantization — on all backends alike
+    for b in KernelBackend::ALL {
+        for (len, c) in [(3usize, 2usize), (CHUNK + 1, 2), (10, 3), (8 * CHUNK + 4, 8)] {
+            let mut xs = vec![1.0f32; len];
+            let before = xs.clone();
+            let err = kernel::try_minmax_fq_axis_on(b, &mut xs, &vec![[-1.0, 1.0]; c], 8)
+                .expect_err("ragged layout must be rejected");
+            assert_eq!(err, KernelError::RaggedAxis { len, channels: c });
+            assert_eq!(xs, before, "rejected tensor must be untouched");
+        }
+        let err = kernel::try_minmax_fq_axis_on(b, &mut [1.0, 2.0], &[], 8).unwrap_err();
+        assert_eq!(err, KernelError::NoChannels);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Targeted edge pins (deterministic, not property-driven)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn empty_slices_on_every_backend_and_entry_point() {
+    for b in KernelBackend::ALL {
+        assert_eq!(kernel::minmax_fq_on(b, &mut [], -1.0, 1.0, 8), (0.0, 0.0));
+        assert_eq!(
+            kernel::try_minmax_fq_axis_on(b, &mut [], &[[-1.0, 1.0]; 3], 8).unwrap(),
+            vec![(0.0, 0.0); 3]
+        );
+        kernel::fq_into_on(b, &[], &mut [], -1.0, 1.0, 8);
+        assert_eq!(kernel::fq_cosine_on(b, &[], -1.0, 1.0, 8), 1.0);
+    }
+    // the public `_with` surface shares the dispatcher's empty-slice
+    // convention (it is called directly by tests and benches)
+    for t in SPAN_COUNTS {
+        assert_eq!(parallel::minmax_fq_with(t, &mut [], -1.0, 1.0, 8), (0.0, 0.0));
+        assert_eq!(
+            parallel::minmax_fq_axis_with(t, &mut [], &[[-1.0, 1.0]; 2], 8),
+            vec![(0.0, 0.0); 2]
+        );
+    }
+}
+
+#[test]
+fn nan_and_inf_payload_policy_is_identical_across_backends() {
+    // NaN drops out of the statistics fold; ±inf propagates into it;
+    // the fake-quant side saturates both onto the grid
+    let mut payload = vec![0.5f32; 2 * CHUNK + 3];
+    payload[0] = f32::NAN;
+    payload[CHUNK] = f32::INFINITY;
+    payload[CHUNK + 1] = f32::NEG_INFINITY;
+    payload[2 * CHUNK + 2] = f32::NAN; // in the scalar tail
+    let mut expect = payload.clone();
+    let expect_stats =
+        kernel::minmax_fq_on(KernelBackend::Scalar, &mut expect, -1.0, 1.0, 8);
+    assert_eq!(expect_stats, (f32::NEG_INFINITY, f32::INFINITY));
+    assert!(expect.iter().all(|x| x.is_finite()), "fq saturates payloads");
+    for b in [KernelBackend::Simd, KernelBackend::Parallel] {
+        let mut buf = payload.clone();
+        let stats = kernel::minmax_fq_on(b, &mut buf, -1.0, 1.0, 8);
+        assert_eq!(stats, expect_stats, "{b}");
+        assert!(slices_eq(&buf, &expect), "{b}");
+    }
+    for t in SPAN_COUNTS {
+        let mut buf = payload.clone();
+        let stats = parallel::minmax_fq_with(t, &mut buf, -1.0, 1.0, 8);
+        assert_eq!(stats, expect_stats, "parallel[{t}]");
+        assert!(slices_eq(&buf, &expect), "parallel[{t}]");
+    }
+}
+
+#[test]
+fn subnormal_all_negative_and_all_constant_tensors_conform() {
+    let tensors: Vec<Vec<f32>> = vec![
+        (0..CHUNK + 7).map(|i| (i as f32 + 1.0) * f32::MIN_POSITIVE * 0.25).collect(),
+        (0..3 * CHUNK + 1).map(|i| -1.0 - (i % 17) as f32 * 0.5).collect(),
+        vec![-2.75; 2 * CHUNK + 9],
+        vec![0.0; simd::LANES - 1],
+    ];
+    for xs in &tensors {
+        for &(lo, hi, bits) in &[(-1.0f32, 1.0f32, 8u32), (0.0, 0.0, 4), (-50.0, 0.0, 2)] {
+            let mut expect = xs.clone();
+            let es = kernel::minmax_fq_on(KernelBackend::Scalar, &mut expect, lo, hi, bits);
+            for b in [KernelBackend::Simd, KernelBackend::Parallel] {
+                let mut buf = xs.clone();
+                let s = kernel::minmax_fq_on(b, &mut buf, lo, hi, bits);
+                assert!(feq(s.0, es.0) && feq(s.1, es.1), "{b} stats");
+                assert!(slices_eq(&buf, &expect), "{b} values");
+            }
+        }
+    }
+}
+
+/// Satellite pin: the chunked-parallel backend is deterministic in the
+/// span count — {1, 2, 7, 16} spans all produce the serial scalar bits
+/// on the same tensor, for the per-tensor, per-channel and `fq_into`
+/// kernels alike.
+#[test]
+fn parallel_span_counts_are_bit_equal_to_serial() {
+    let mut rng = Pcg32::new(41, 5);
+    let xs: Vec<f32> = (0..5 * CHUNK + 13).map(|_| rng.normal()).collect();
+    let ranges: Vec<[f32; 2]> = (0..4).map(|c| [-1.0 - c as f32, 1.0 + c as f32]).collect();
+
+    let mut serial = xs.clone();
+    let serial_stats =
+        kernel::minmax_fq_on(KernelBackend::Scalar, &mut serial, -2.0, 2.0, 8);
+    let axis_len = xs.len() - xs.len() % ranges.len();
+    let mut serial_axis = xs[..axis_len].to_vec();
+    let serial_axis_stats =
+        kernel::minmax_fq_axis_on(KernelBackend::Scalar, &mut serial_axis, &ranges, 8);
+    let mut serial_into = vec![0.0f32; xs.len()];
+    kernel::fq_into_on(KernelBackend::Scalar, &xs, &mut serial_into, -2.0, 2.0, 8);
+
+    for t in SPAN_COUNTS {
+        let mut buf = xs.clone();
+        assert_eq!(
+            parallel::minmax_fq_with(t, &mut buf, -2.0, 2.0, 8),
+            serial_stats,
+            "stats diverge at {t} spans"
+        );
+        assert_eq!(buf, serial, "values diverge at {t} spans");
+
+        let mut buf = xs[..axis_len].to_vec();
+        assert_eq!(
+            parallel::minmax_fq_axis_with(t, &mut buf, &ranges, 8),
+            serial_axis_stats,
+            "axis stats diverge at {t} spans"
+        );
+        assert_eq!(buf, serial_axis, "axis values diverge at {t} spans");
+
+        let mut dst = vec![0.0f32; xs.len()];
+        parallel::fq_into_with(t, &xs, &mut dst, -2.0, 2.0, 8);
+        assert_eq!(dst, serial_into, "fq_into diverges at {t} spans");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatched end-to-end: the sweep executor under the parallel backend
+// ---------------------------------------------------------------------------
+
+/// Satellite pin (executor level): a 2-worker grid whose cells run the
+/// *dispatched* kernels under the globally-selected parallel backend is
+/// bit-identical to a serial scalar-backend run of the same cells.
+/// This is the only test in the binary that touches the global
+/// selection, so the pin is race-free.
+#[test]
+fn two_worker_grid_under_parallel_backend_matches_serial_scalar_run() {
+    kernel::select_backend(KernelBackend::Parallel).expect("first selection in this process");
+    assert_eq!(kernel::backend(), KernelBackend::Parallel);
+    // conflicting re-selection is an error; re-selecting the same
+    // backend is a no-op
+    assert!(kernel::select_backend(KernelBackend::Scalar).is_err());
+    kernel::select_backend(KernelBackend::Parallel).expect("idempotent re-select");
+
+    // eight deterministic "gradient tensors" standing in for grid cells
+    let cells: Vec<Vec<f32>> = (0..8)
+        .map(|i| {
+            let mut rng = Pcg32::new(100 + i as u64, 3);
+            let n = 2 * CHUNK + 17 * i;
+            (0..n).map(|_| rng.normal() * 0.01).collect()
+        })
+        .collect();
+    let ranges: Vec<[f32; 2]> = (0..2).map(|c| [-0.05 - c as f32 * 0.01, 0.05]).collect();
+
+    // the per-cell workload every quantized-training step runs: a
+    // static G_X store (minmax_fq), its per-channel variant, and a
+    // DSGC objective probe
+    type CellOut = (Vec<f32>, (f32, f32), Vec<(f32, f32)>, f32);
+    let work = |xs: &Vec<f32>, b: Option<KernelBackend>| -> CellOut {
+        let mut buf = xs.clone();
+        let stats = match b {
+            Some(b) => kernel::minmax_fq_on(b, &mut buf, -0.04, 0.04, 8),
+            None => kernel::minmax_fq(&mut buf, -0.04, 0.04, 8),
+        };
+        let axis_len = xs.len() - xs.len() % ranges.len();
+        let mut axis = xs[..axis_len].to_vec();
+        let axis_stats = match b {
+            Some(b) => kernel::minmax_fq_axis_on(b, &mut axis, &ranges, 8),
+            None => kernel::minmax_fq_axis(&mut axis, &ranges, 8),
+        };
+        let cos = match b {
+            Some(b) => kernel::fq_cosine_on(b, xs, -0.04, 0.04, 8),
+            None => kernel::fq_cosine(xs, -0.04, 0.04, 8),
+        };
+        (buf, stats, axis_stats, cos)
+    };
+
+    // serial scalar reference, in grid order
+    let expect: Vec<_> = cells
+        .iter()
+        .map(|xs| work(xs, Some(KernelBackend::Scalar)))
+        .collect();
+
+    // 2-worker executor run through the *dispatched* entry points
+    let runs = run_indexed(&cells, 2, |_| Ok(()), |_: &mut (), _i, xs: &Vec<f32>| {
+        Ok(work(xs, None))
+    });
+    assert_eq!(runs.len(), expect.len());
+    for (i, (run, want)) in runs.iter().zip(&expect).enumerate() {
+        match run {
+            JobOutcome::Done(got) => {
+                assert_eq!(got.0, want.0, "cell {i}: quantized tensor");
+                assert_eq!(got.1, want.1, "cell {i}: stats");
+                assert_eq!(got.2, want.2, "cell {i}: axis stats");
+                assert_eq!(got.3.to_bits(), want.3.to_bits(), "cell {i}: objective");
+            }
+            JobOutcome::Failed(e) => panic!("cell {i} failed: {e}"),
+        }
+    }
+}
