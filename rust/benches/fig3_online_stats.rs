@@ -209,6 +209,121 @@ fn axis_kernel_section() {
     table.print();
 }
 
+/// Integer-payload stores: one fused traversal computes the stats,
+/// quantizes to code indices and packs them into a `u8` payload
+/// (`fq_store_i8`, nibble-packed `fq_store_i4`) — per backend vs the
+/// scalar reference implementation of the *same* kernel.  Records carry
+/// `payload: true` so the trajectory separates payload stores from the
+/// fake-quant kernels above.
+fn payload_section() {
+    let mut table = Table::new(
+        "Integer-payload stores — fq_store_i8 / fq_store_i4 per backend vs scalar",
+        &["elems", "kernel", "backend", "scalar ms", "fused ms", "speedup"],
+    );
+    let iters = if quick() { 5 } else { 30 };
+    for n in [65_536usize, 1_048_576, 4_194_304] {
+        let mut rng = Pcg32::new(n as u64, 13);
+        let src: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        for (kname, bits) in [("fq_store_i8", 8u32), ("fq_store_i4", 4)] {
+            let store = |b: KernelBackend, dst: &mut [u8]| {
+                let stats = if bits <= 4 {
+                    kernel::fq_store_i4_on(b, &src, dst, -3.0, 3.0, bits)
+                } else {
+                    kernel::fq_store_i8_on(b, &src, dst, -3.0, 3.0, bits)
+                };
+                std::hint::black_box(stats);
+                std::hint::black_box(dst.first());
+            };
+            let mut dst = vec![0u8; kernel::payload_bytes(n, bits)];
+            let scalar =
+                time_it("scalar", 2, iters, || store(KernelBackend::Scalar, &mut dst));
+            for b in KernelBackend::ALL {
+                let mut dst2 = vec![0u8; kernel::payload_bytes(n, bits)];
+                let fused = time_it(b.key(), 2, iters, || store(b, &mut dst2));
+                let speedup = scalar.mean_s / fused.mean_s;
+                table.row(&[
+                    n.to_string(),
+                    kname.to_string(),
+                    b.key().to_string(),
+                    format!("{:.3}", scalar.mean_ms()),
+                    format!("{:.3}", fused.mean_ms()),
+                    format!("{speedup:.2}x"),
+                ]);
+                let rec = Value::object(vec![
+                    ("bench", Value::from("fig3_online_stats")),
+                    ("kernel", Value::from(kname)),
+                    ("payload", Value::Bool(true)),
+                    ("backend", Value::from(b.key())),
+                    ("elems", Value::from(n)),
+                    ("bits", Value::from(bits as usize)),
+                    ("iters", Value::from(iters)),
+                    ("scalar_ms", Value::from(scalar.mean_ms())),
+                    ("fused_ms", Value::from(fused.mean_ms())),
+                    ("speedup", Value::from(speedup)),
+                ]);
+                match append_bench_record(rec) {
+                    Ok(path) => println!(
+                        "recorded {} elems ({kname}) [{}] -> {}",
+                        n,
+                        b.key(),
+                        path.display()
+                    ),
+                    Err(e) => eprintln!("could not record bench json: {e}"),
+                }
+            }
+        }
+    }
+    table.print();
+}
+
+/// Per-site autotuning evidence: run the calibration-time backend
+/// shootout on representative site shapes and record the measured
+/// winner with `autotune: true` — proving which backend won per shape,
+/// exactly the record the trainer caches per quantizer site.
+fn autotune_section() {
+    let mut table = Table::new(
+        "Per-site kernel autotuning — measured winner per tensor shape",
+        &["elems", "bits", "winner", "winner ms", "scalar ms", "speedup"],
+    );
+    let shapes: &[(usize, u32)] = if quick() {
+        &[(65_536, 8), (262_144, 4)]
+    } else {
+        &[(65_536, 8), (1_048_576, 8), (1_048_576, 4), (4_194_304, 8)]
+    };
+    for &(elems, bits) in shapes {
+        let at = kernel::autotune_minmax_fq(elems, bits);
+        table.row(&[
+            elems.to_string(),
+            bits.to_string(),
+            at.backend.key().to_string(),
+            format!("{:.3}", at.best_s * 1e3),
+            format!("{:.3}", at.scalar_s * 1e3),
+            format!("{:.2}x", at.speedup()),
+        ]);
+        let rec = Value::object(vec![
+            ("bench", Value::from("fig3_online_stats")),
+            ("kernel", Value::from("minmax_fq")),
+            ("autotune", Value::Bool(true)),
+            ("backend", Value::from(at.backend.key())),
+            ("elems", Value::from(at.elems)),
+            ("bits", Value::from(at.bits as usize)),
+            ("scalar_ms", Value::from(at.scalar_s * 1e3)),
+            ("fused_ms", Value::from(at.best_s * 1e3)),
+            ("speedup", Value::from(at.speedup())),
+        ]);
+        match append_bench_record(rec) {
+            Ok(path) => println!(
+                "recorded autotune {} elems @ {bits}b -> {} [{}]",
+                elems,
+                path.display(),
+                at.backend.key()
+            ),
+            Err(e) => eprintln!("could not record bench json: {e}"),
+        }
+    }
+    table.print();
+}
+
 fn contract_section() {
     if !Manifest::default_dir().join("manifest.json").exists() {
         println!("\nartifacts not built; skipping the runtime-contract section");
@@ -277,7 +392,9 @@ fn contract_section() {
 fn main() {
     hindsight::util::logging::init();
     kernel_section();
+    payload_section();
     axis_kernel_section();
     dispatch_section();
+    autotune_section();
     contract_section();
 }

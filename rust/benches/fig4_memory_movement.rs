@@ -4,6 +4,7 @@
 //!
 //!   cargo bench --bench fig4_memory_movement
 
+use hindsight::quant::kernel;
 use hindsight::quant::QuantParams;
 use hindsight::simulator::backward::{self, BwdBits};
 use hindsight::simulator::machine::{MacArray, Policy};
@@ -69,4 +70,26 @@ fn main() {
         bits_moved as f64 / 8.0 / 1024.0,
     );
     assert_eq!(bits_moved, geom.cin * geom.w * geom.h * bits.b_g);
+
+    // tentpole invariant: static-store traffic is the *measured* size of
+    // the integer payload buffer the store emitted, not f32 accounting.
+    // The forward static output store billed exactly one code byte per
+    // output element...
+    assert_eq!(
+        st.phases.output_store,
+        kernel::payload_bytes(m * n, 8) as u64,
+        "static output store must bill the integer payload buffer"
+    );
+    // ...and a 4-bit backward store bills the nibble-packed buffer: two
+    // codes per byte, half the bytes of the 8-bit store above.
+    let mut gx4: Vec<f32> = (0..gx_elems).map(|_| rng.normal() * 0.01).collect();
+    let (_, moved4) =
+        backward::store_gx_static(&mut gx4, -0.04, 0.04, BwdBits { b_g: 4, ..bits });
+    assert_eq!(moved4, kernel::payload_bytes(gx_elems, 4) as u64 * 8);
+    println!(
+        "4-bit G_X store packs two codes per byte: {gx_elems} elems -> {} payload bytes \
+         ({:.0} KB, half the 8-bit store)",
+        moved4 / 8,
+        moved4 as f64 / 8.0 / 1024.0,
+    );
 }

@@ -32,6 +32,7 @@
 
 use crate::coordinator::config::Estimator;
 use crate::estimator::{RangeEstimator, StepCtx};
+use crate::quant::kernel;
 use crate::runtime::manifest::{ModelSpec, SiteKind};
 use crate::runtime::tensor::Tensor;
 use crate::scheme::{QuantScheme, QuantSpec, TensorClass};
@@ -68,6 +69,8 @@ pub struct RangeManager {
     sites: Vec<Box<dyn RangeEstimator>>,
     /// last raw stats observed per row (diagnostics, saturation tracking)
     last_stats: Vec<[f32; 2]>,
+    /// per-site measured kernel pick (filled by calibration autotuning)
+    tuned: Vec<Option<kernel::Autotune>>,
     calibrated: bool,
 }
 
@@ -93,6 +96,7 @@ impl RangeManager {
         }
         Self {
             last_stats: vec![[0.0, 0.0]; ranges.len()],
+            tuned: vec![None; kinds.len()],
             ranges,
             offsets,
             kinds,
@@ -252,6 +256,30 @@ impl RangeManager {
 
     pub fn is_calibrated(&self) -> bool {
         self.calibrated
+    }
+
+    /// Record the measured kernel pick for site `i` (calibration-time
+    /// autotuning over the site's actual tensor shape).
+    pub fn set_site_autotune(&mut self, i: usize, at: kernel::Autotune) {
+        self.tuned[i] = Some(at);
+    }
+
+    /// Site `i`'s measured kernel pick, if autotuning ran.
+    pub fn site_autotune(&self, i: usize) -> Option<kernel::Autotune> {
+        self.tuned[i]
+    }
+
+    /// The measured backend of the *largest* tuned site — the pick a
+    /// process-wide `--kernel-backend auto` adopts (the biggest tensor
+    /// dominates traffic, so its winner is the least-bad single choice).
+    pub fn tuned_backend(&self) -> Option<kernel::KernelBackend> {
+        let mut best: Option<kernel::Autotune> = None;
+        for at in self.tuned.iter().flatten() {
+            if best.map(|b| at.elems > b.elems).unwrap_or(true) {
+                best = Some(*at);
+            }
+        }
+        best.map(|b| b.backend)
     }
 
     /// Site indices the periodic search pass must visit: gradient sites

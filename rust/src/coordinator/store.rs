@@ -17,8 +17,21 @@
 //! to a cache miss, never to a wrong record.  Writes go through a
 //! temp-file rename, so an interrupted run never leaves a torn cell
 //! behind.
+//!
+//! An `index.json` sidecar lists every cell file (name -> key id) so
+//! resume-time cache lookups answer misses from one in-memory map
+//! instead of probing a `cell-*.json` path per cell, and `len()` reads
+//! one file instead of scanning the directory.  The sidecar is pure
+//! cache: `put` keeps it in sync, a missing or corrupt sidecar degrades
+//! to one directory scan (then persists the rebuilt index), and a stale
+//! entry can only turn a would-be hit into a re-run — never a wrong
+//! record, because the cell document's own key fields stay the source
+//! of truth.  Cross-process writers can race the sidecar; delete
+//! `index.json` (or just re-open the store) to force a rescan.
 
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Mutex;
 
 use anyhow::{Context, Result};
 
@@ -104,10 +117,17 @@ fn fnv1a64(bytes: &[u8]) -> u64 {
     h
 }
 
+/// The sidecar file listing every cell in the store.
+const INDEX_FILE: &str = "index.json";
+
 /// A directory of persisted cell records.
 #[derive(Debug)]
 pub struct RunStore {
     dir: PathBuf,
+    /// lazily-loaded `index.json` entries: cell file name -> key id
+    /// (`""` when the entry came from a bare directory-scan rebuild).
+    /// `None` until first use; kept in sync by `put`.
+    index: Mutex<Option<HashMap<String, String>>>,
 }
 
 impl RunStore {
@@ -116,17 +136,99 @@ impl RunStore {
         let dir = dir.into();
         std::fs::create_dir_all(&dir)
             .with_context(|| format!("creating run store {}", dir.display()))?;
-        Ok(Self { dir })
+        Ok(Self { dir, index: Mutex::new(None) })
     }
 
     pub fn dir(&self) -> &Path {
         &self.dir
     }
 
+    /// Run `f` over the index entries, loading (or rebuilding from a
+    /// directory scan) the sidecar on first use.
+    fn with_index<T>(&self, f: impl FnOnce(&mut HashMap<String, String>) -> T) -> T {
+        let mut guard = self.index.lock().unwrap_or_else(|e| e.into_inner());
+        if guard.is_none() {
+            *guard = Some(self.load_or_rebuild_index());
+        }
+        f(guard.as_mut().expect("just loaded"))
+    }
+
+    fn load_or_rebuild_index(&self) -> HashMap<String, String> {
+        if let Some(entries) = self.read_index_file() {
+            return entries;
+        }
+        // missing, torn or wrong-version sidecar: one directory scan
+        // rebuilds it (ids unknown — advisory-only anyway), then the
+        // rebuilt index is persisted so the next open skips the scan
+        let mut entries = HashMap::new();
+        if let Ok(rd) = std::fs::read_dir(&self.dir) {
+            for e in rd.filter_map(|e| e.ok()) {
+                let name = e.file_name().to_string_lossy().into_owned();
+                if name.starts_with("cell-") && name.ends_with(".json") {
+                    entries.insert(name, String::new());
+                }
+            }
+        }
+        if let Err(e) = self.write_index_file(&entries) {
+            log::warn!(
+                "run store {}: could not persist rebuilt index: {e:#}",
+                self.dir.display()
+            );
+        }
+        entries
+    }
+
+    fn read_index_file(&self) -> Option<HashMap<String, String>> {
+        let text = std::fs::read_to_string(self.dir.join(INDEX_FILE)).ok()?;
+        let doc = json::parse(&text).ok()?;
+        if doc.get("version")?.as_f64()? != STORE_VERSION {
+            return None;
+        }
+        match doc.get("cells")? {
+            Value::Object(kv) => Some(
+                kv.iter()
+                    .map(|(k, v)| (k.clone(), v.as_str().unwrap_or("").to_string()))
+                    .collect(),
+            ),
+            _ => None,
+        }
+    }
+
+    /// Atomically rewrite the sidecar (sorted, so the bytes are
+    /// deterministic for a given cell population).
+    fn write_index_file(&self, entries: &HashMap<String, String>) -> Result<()> {
+        let mut cells: Vec<(String, Value)> = entries
+            .iter()
+            .map(|(k, v)| (k.clone(), Value::from(v.clone())))
+            .collect();
+        cells.sort_by(|a, b| a.0.cmp(&b.0));
+        let doc = Value::Object(vec![
+            ("version".to_string(), Value::Num(STORE_VERSION)),
+            ("cells".to_string(), Value::Object(cells)),
+        ]);
+        let tmp = self.dir.join(format!(".tmp-{}-{INDEX_FILE}", std::process::id()));
+        std::fs::write(&tmp, format!("{doc}\n"))
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, self.dir.join(INDEX_FILE))
+            .with_context(|| format!("committing {}", self.dir.join(INDEX_FILE).display()))?;
+        Ok(())
+    }
+
     /// Look a cell up; any mismatch (absent, torn, wrong version, key
     /// fields disagreeing with `key`) is a cache miss, never an error.
+    /// Misses are answered from the in-memory index — no per-cell file
+    /// probe; only an indexed cell's document is actually read.
     pub fn get(&self, key: &CellKey) -> Option<RunRecord> {
-        let path = self.dir.join(key.file_name());
+        let file = key.file_name();
+        // a recorded id must match; "" (scan-rebuilt) defers entirely to
+        // the document's verified key fields below
+        let known = self.with_index(|idx| {
+            idx.get(&file).is_some_and(|id| id.is_empty() || *id == key.id())
+        });
+        if !known {
+            return None;
+        }
+        let path = self.dir.join(&file);
         let text = std::fs::read_to_string(&path).ok()?;
         let doc = json::parse(&text).ok()?;
         if doc.get("version")?.as_f64()? != STORE_VERSION {
@@ -175,21 +277,21 @@ impl RunStore {
             .with_context(|| format!("writing {}", tmp.display()))?;
         std::fs::rename(&tmp, &path)
             .with_context(|| format!("committing {}", path.display()))?;
+        // keep the sidecar in sync; a failed index write only costs the
+        // next open a rescan, never the committed cell
+        self.with_index(|idx| {
+            idx.insert(key.file_name(), key.id());
+            if let Err(e) = self.write_index_file(idx) {
+                log::warn!("run store index update failed: {e:#}");
+            }
+        });
         Ok(path)
     }
 
-    /// Number of cell documents in the store (any key).
+    /// Number of cell documents in the store (any key) — answered from
+    /// the index sidecar (one file) instead of a directory scan.
     pub fn len(&self) -> usize {
-        let Ok(rd) = std::fs::read_dir(&self.dir) else {
-            return 0;
-        };
-        rd.filter_map(|e| e.ok())
-            .filter(|e| {
-                let name = e.file_name();
-                let name = name.to_string_lossy();
-                name.starts_with("cell-") && name.ends_with(".json")
-            })
-            .count()
+        self.with_index(|idx| idx.len())
     }
 
     pub fn is_empty(&self) -> bool {
@@ -330,6 +432,77 @@ mod tests {
         std::fs::write(&path, doc.to_string()).unwrap();
         assert!(store.get(&key).is_none(), "key fields must be verified");
         assert!(store.get(&other).is_none(), "lives under the wrong file name");
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn index_sidecar_tracks_puts_and_answers_len() {
+        let store = tmp_store("index");
+        let k1 = key("w:fp32:8 a:fp32:8 g:hindsight:8", 1, 10);
+        let k2 = key("w:fp32:8 a:fp32:8 g:current:8", 1, 10);
+        store.put(&k1, &record("a")).unwrap();
+        store.put(&k2, &record("b")).unwrap();
+        assert_eq!(store.len(), 2);
+        let idx_path = store.dir().join(INDEX_FILE);
+        assert!(idx_path.exists(), "put must maintain the sidecar");
+        let doc = json::parse(&std::fs::read_to_string(&idx_path).unwrap()).unwrap();
+        assert_eq!(doc.get("version").unwrap().as_f64(), Some(STORE_VERSION));
+        let cells = doc.get("cells").unwrap();
+        assert_eq!(
+            cells.get(&k1.file_name()).and_then(|v| v.as_str()),
+            Some(k1.id().as_str()),
+            "sidecar records the key id"
+        );
+        // a fresh store on the same dir serves hits straight off the
+        // sidecar (no rebuild scan needed — but behavior is identical)
+        let store2 = RunStore::open(store.dir()).unwrap();
+        assert_eq!(store2.len(), 2);
+        assert!(store2.get(&k1).is_some());
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn missing_or_corrupt_index_degrades_to_a_directory_scan() {
+        let store = tmp_store("index_degrade");
+        let k = key("w:fp32:8 a:fp32:8 g:hindsight:8", 4, 20);
+        let rec = record("cell");
+        store.put(&k, &rec).unwrap();
+        // missing sidecar: a fresh store must still find the cell
+        std::fs::remove_file(store.dir().join(INDEX_FILE)).unwrap();
+        let store2 = RunStore::open(store.dir()).unwrap();
+        assert_eq!(store2.get(&k).unwrap(), rec, "scan rebuild must find the cell");
+        assert_eq!(store2.len(), 1);
+        assert!(
+            store2.dir().join(INDEX_FILE).exists(),
+            "rebuilt index must be persisted"
+        );
+        // corrupt sidecar: same degradation
+        std::fs::write(store.dir().join(INDEX_FILE), "not json at all").unwrap();
+        let store3 = RunStore::open(store.dir()).unwrap();
+        assert_eq!(store3.get(&k).unwrap(), rec);
+        // wrong-version sidecar: treated as stale, rebuilt by scan
+        std::fs::write(
+            store.dir().join(INDEX_FILE),
+            "{\"version\": 99, \"cells\": {}}",
+        )
+        .unwrap();
+        let store4 = RunStore::open(store.dir()).unwrap();
+        assert_eq!(store4.len(), 1);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn unindexed_keys_miss_without_a_file_probe() {
+        let store = tmp_store("index_miss");
+        let k1 = key("w:fp32:8 a:fp32:8 g:hindsight:8", 1, 10);
+        store.put(&k1, &record("a")).unwrap();
+        // a key the index has never seen is a miss straight from memory
+        let absent = key("w:fp32:8 a:fp32:8 g:tqt:8", 9, 10);
+        assert!(store.get(&absent).is_none());
+        // an index entry whose file vanished is a plain miss too (the
+        // document read fails), never a panic
+        std::fs::remove_file(store.dir().join(k1.file_name())).unwrap();
+        assert!(store.get(&k1).is_none());
         let _ = std::fs::remove_dir_all(store.dir());
     }
 

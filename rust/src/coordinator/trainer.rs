@@ -15,6 +15,7 @@ use crate::coordinator::config::{Estimator, TrainConfig};
 use crate::coordinator::ranges::RangeManager;
 use crate::data::{Batcher, SynthSpec, SynthVision};
 use crate::metrics::RunRecord;
+use crate::quant::kernel;
 use crate::runtime::engine::{Engine, Graph};
 use crate::runtime::manifest::ModelSpec;
 use crate::runtime::tensor::Tensor;
@@ -277,7 +278,45 @@ impl<'e> Trainer<'e> {
                 self.ranges.coverage()
             );
         }
+        // measured-auto backend selection piggybacks on calibration: the
+        // sites' shapes are known, training hasn't started, and a few
+        // timed passes here are amortized over the whole run
+        if kernel::measured_auto_requested() {
+            self.autotune_sites();
+        }
         Ok(())
+    }
+
+    /// Time every candidate kernel backend on each site's actual tensor
+    /// shape and cache the measured winner in the range manager's site
+    /// table.  If `--kernel-backend auto` asked for a measured pick and
+    /// nothing pinned the process-wide backend yet (env overrides win),
+    /// adopt the largest site's winner instead of the core-count
+    /// heuristic.
+    pub fn autotune_sites(&mut self) {
+        let bs = self.model.batch_size;
+        for i in 0..self.model.sites.len() {
+            let site = &self.model.sites[i];
+            let elems = bs * site.feature_shape.iter().product::<usize>().max(1);
+            let bits = self.ranges.site_spec(i).bits.clamp(1, 8);
+            let at = kernel::autotune_minmax_fq(elems, bits);
+            log::debug!(
+                "autotune {}: {} ({} elems @ {bits}b, {:.2}x over scalar)",
+                site.name,
+                at.backend.key(),
+                at.elems,
+                at.speedup()
+            );
+            self.ranges.set_site_autotune(i, at);
+        }
+        if kernel::measured_auto_requested() && kernel::resolved_backend().is_none() {
+            if let Some(b) = self.ranges.tuned_backend() {
+                // a concurrent select_backend can win the race; the
+                // measured pick is best-effort, never an error
+                let _ = kernel::select_backend(b);
+                log::info!("kernel backend '{}' picked by per-site autotuning", b.key());
+            }
+        }
     }
 
     /// Assemble inputs and run the train graph.  Returns the raw outputs.

@@ -8,6 +8,8 @@
 //!   mem-report  static-vs-dynamic memory traffic (paper Table 5 / Sec. 6)
 //!   inspect     print a model's manifest ABI and quantizer sites
 //!   bench-step  time the train-step hot path for one model
+//!   bench-report  render the kernel-perf trajectory (BENCH_kernels.json)
+//!               as Markdown speedup tables and gate on a speedup floor
 //!
 //! Quantization policy is a typed scheme: one clause per tensor class
 //! (`w:` weights, `a:` activations, `g:` gradients), each naming a
@@ -22,7 +24,10 @@
 //! static stores, DSGC probes, estimator searches, sweep workers)
 //! dispatches through one process-wide backend — `--kernel-backend
 //! scalar|simd|parallel|auto` beats the `HINDSIGHT_KERNEL_BACKEND` env
-//! var, which beats auto-detection (parallel on multi-core machines).
+//! var, which beats auto-detection.  `auto` is *measured*: the trainer's
+//! calibration pass times every backend on each quantizer site's actual
+//! tensor shape and pins the largest site's winner; paths that never
+//! calibrate fall back to the core-count heuristic on first kernel use.
 //! All backends are bit-identical; the choice is purely about speed.
 //!
 //! Scheme grids: `sweep --grid` takes a scheme template with shell-style
@@ -74,10 +79,18 @@ fn run(mut args: Args) -> Result<()> {
     // resolve the kernel backend before any kernel can run: the CLI
     // flag beats HINDSIGHT_KERNEL_BACKEND, which beats auto-detection
     if let Some(v) = args.get("kernel-backend") {
-        let kind = hindsight::quant::kernel::KernelBackend::parse(&v)
-            .map_err(|e| anyhow::anyhow!("--kernel-backend: {e}"))?;
-        hindsight::quant::kernel::select_backend(kind)
-            .map_err(|e| anyhow::anyhow!("--kernel-backend: {e}"))?;
+        if v.trim().eq_ignore_ascii_case("auto") {
+            // don't pin anything yet: the trainer's calibration pass
+            // autotunes each site's actual shape and adopts the measured
+            // winner; paths that never calibrate resolve lazily (env var,
+            // then the core-count heuristic) on first kernel use
+            hindsight::quant::kernel::request_measured_auto();
+        } else {
+            let kind = hindsight::quant::kernel::KernelBackend::parse(&v)
+                .map_err(|e| anyhow::anyhow!("--kernel-backend: {e}"))?;
+            hindsight::quant::kernel::select_backend(kind)
+                .map_err(|e| anyhow::anyhow!("--kernel-backend: {e}"))?;
+        }
     }
     match args.subcommand.clone().as_deref() {
         Some("train") => cmd_train(&mut args),
@@ -86,15 +99,17 @@ fn run(mut args: Args) -> Result<()> {
         Some("mem-report") => cmd_mem_report(&mut args),
         Some("inspect") => cmd_inspect(&mut args),
         Some("bench-step") => cmd_bench_step(&mut args),
+        Some("bench-report") => cmd_bench_report(&mut args),
         Some(other) => bail!("unknown subcommand '{other}'"),
         None => {
             eprintln!(
-                "usage: hindsight <train|sweep|estimators|mem-report|inspect|bench-step> [--flags]\n\
+                "usage: hindsight <train|sweep|estimators|mem-report|inspect|bench-step|bench-report> [--flags]\n\
                  quantization policy: --scheme \"w:current:8 a:hindsight:8 g:hindsight@pc:4\"\n\
                  scheme grids: sweep --grid \"g:{{hindsight,current}}@{{pt,pc}}:8\" --seeds 1..5 \
                  --workers 4 [--store runs] [--no-cache]\n\
                  kernel backend: --kernel-backend scalar|simd|parallel|auto \
-                 (default: auto; env HINDSIGHT_KERNEL_BACKEND)\n\
+                 (default: auto; env HINDSIGHT_KERNEL_BACKEND; auto = measured per-site pick)\n\
+                 bench gate: bench-report [--json BENCH_kernels.json] [--floor 1.0]\n\
                  {}",
                 syntax_help()
             );
@@ -501,4 +516,156 @@ fn cmd_bench_step(args: &mut Args) -> Result<()> {
         hindsight::quant::kernel::backend(),
     );
     Ok(())
+}
+
+/// One speedup record pulled out of the trajectory file (records
+/// without a `kernel`/`speedup` pair — grid-sweep smoke rows — are
+/// reporting-only and skipped).
+struct BenchRec {
+    kernel: String,
+    backend: String,
+    bits: usize,
+    elems: usize,
+    speedup: f64,
+    autotune: bool,
+}
+
+/// `bench-report`: render the kernel-perf trajectory as Markdown
+/// speedup tables (per backend, per bit-width, autotune picks) and gate
+/// on a speedup floor — the CI regression gate fails the run when a
+/// kernel shape's best backend no longer beats scalar by `--floor`.
+fn cmd_bench_report(args: &mut Args) -> Result<()> {
+    use hindsight::util::json;
+    use std::collections::BTreeMap;
+
+    let default_path = std::env::var("HINDSIGHT_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_kernels.json".into());
+    let path = args.str_or("json", &default_path);
+    let floor: f64 = match args.get("floor") {
+        Some(s) => s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--floor: not a number: '{s}'"))?,
+        None => 1.0,
+    };
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    let doc = json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {path}: {e:#}"))?;
+    let runs = doc.get("runs").and_then(|v| v.as_array()).unwrap_or(&[]);
+    let mut recs: Vec<BenchRec> = Vec::new();
+    for r in runs {
+        let (Some(kernel), Some(speedup)) = (
+            r.get("kernel").and_then(|v| v.as_str()),
+            r.get("speedup").and_then(|v| v.as_f64()),
+        ) else {
+            continue;
+        };
+        recs.push(BenchRec {
+            kernel: kernel.to_string(),
+            backend: r
+                .get("backend")
+                .and_then(|v| v.as_str())
+                .unwrap_or("-")
+                .to_string(),
+            bits: r.get("bits").and_then(|v| v.as_usize()).unwrap_or(0),
+            elems: r.get("elems").and_then(|v| v.as_usize()).unwrap_or(0),
+            speedup,
+            autotune: r.get("autotune").and_then(|v| v.as_bool()).unwrap_or(false),
+        });
+    }
+    println!(
+        "# Kernel bench report\n\n{} speedup record(s) in `{path}` ({} run entries total)\n",
+        recs.len(),
+        runs.len()
+    );
+    if recs.is_empty() {
+        println!("no kernel speedup records — nothing to gate");
+        return Ok(());
+    }
+
+    let stats = |v: &[f64]| {
+        let mean = v.iter().sum::<f64>() / v.len() as f64;
+        let max = v.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        (mean, max)
+    };
+    // per-backend table: how each backend fares vs scalar, per kernel
+    let mut by_backend: BTreeMap<(String, String), Vec<f64>> = BTreeMap::new();
+    // per-bitwidth table: speedup by code width, per kernel
+    let mut by_bits: BTreeMap<(String, usize), Vec<f64>> = BTreeMap::new();
+    for r in &recs {
+        by_backend
+            .entry((r.kernel.clone(), r.backend.clone()))
+            .or_default()
+            .push(r.speedup);
+        by_bits.entry((r.kernel.clone(), r.bits)).or_default().push(r.speedup);
+    }
+    println!("## Speedup over scalar, per backend\n");
+    let mut t = Table::new("", &["Kernel", "Backend", "Records", "Mean", "Max"]);
+    for ((kernel, backend), v) in &by_backend {
+        let (mean, max) = stats(v);
+        t.row(&[
+            kernel.clone(),
+            backend.clone(),
+            v.len().to_string(),
+            format!("{mean:.2}x"),
+            format!("{max:.2}x"),
+        ]);
+    }
+    println!("{}\n", t.markdown());
+    println!("## Speedup over scalar, per bit-width\n");
+    let mut t = Table::new("", &["Kernel", "Bits", "Records", "Mean", "Max"]);
+    for ((kernel, bits), v) in &by_bits {
+        let (mean, max) = stats(v);
+        t.row(&[
+            kernel.clone(),
+            bits.to_string(),
+            v.len().to_string(),
+            format!("{mean:.2}x"),
+            format!("{max:.2}x"),
+        ]);
+    }
+    println!("{}\n", t.markdown());
+    let picks: Vec<&BenchRec> = recs.iter().filter(|r| r.autotune).collect();
+    if !picks.is_empty() {
+        println!("## Autotune picks (measured per-site winners)\n");
+        let mut t = Table::new("", &["Kernel", "Winner", "Elems", "Bits", "Speedup"]);
+        for r in &picks {
+            t.row(&[
+                r.kernel.clone(),
+                r.backend.clone(),
+                r.elems.to_string(),
+                r.bits.to_string(),
+                format!("{:.2}x", r.speedup),
+            ]);
+        }
+        println!("{}\n", t.markdown());
+    }
+
+    // Regression gate: per (kernel, elems, bits) shape, the BEST backend
+    // must clear the floor.  Taking the max across backends keeps the
+    // gate robust to one backend being slow on one shape (expected —
+    // that's what dispatch is for) while still catching a kernel whose
+    // fused path lost to scalar everywhere.
+    let mut by_shape: BTreeMap<(String, usize, usize), f64> = BTreeMap::new();
+    for r in &recs {
+        let e = by_shape.entry((r.kernel.clone(), r.elems, r.bits)).or_insert(f64::NEG_INFINITY);
+        *e = e.max(r.speedup);
+    }
+    let failures: Vec<String> = by_shape
+        .iter()
+        .filter(|(_, &best)| best < floor)
+        .map(|((k, elems, bits), best)| {
+            format!("{k} ({elems} elems @ {bits}b): best backend {best:.2}x < floor {floor:.2}x")
+        })
+        .collect();
+    if failures.is_empty() {
+        println!(
+            "gate: all {} kernel shape(s) clear the {floor:.2}x speedup floor",
+            by_shape.len()
+        );
+        Ok(())
+    } else {
+        bail!("speedup floor violated:\n  {}", failures.join("\n  "))
+    }
 }

@@ -9,8 +9,11 @@
 //! that work in one pass; the scalar `quant::minmax` +
 //! `quant::fake_quant_slice` pair they replaced walks the tensor twice.
 //!
-//! Three backends implement the four entry points ([`minmax_fq`],
-//! [`minmax_fq_axis`], [`fq_into`], [`fq_cosine`]):
+//! Three backends implement the fused entry points ([`minmax_fq`],
+//! [`minmax_fq_axis`], [`fq_into`], [`fq_cosine`]) and the
+//! integer-payload family ([`fq_store_i8`], [`fq_store_i4`], their
+//! `_axis` forms and the `dequant_*` readbacks — see "Integer
+//! payloads" below):
 //!
 //! * [`scalar`] — the sequential reference; its bits are the contract.
 //! * [`simd`] — lane-chunked inner loops (`simd::LANES` f32 lanes,
@@ -34,6 +37,22 @@
 //! rounds through [`QuantParams::fq`](super::QuantParams::fq) and the min/max folds only
 //! reassociate a commutative, NaN-dropping reduction, so the property
 //! tests require equality, not tolerance.
+//!
+//! # Integer payloads
+//!
+//! The fake-quant kernels model a low-bit store by rewriting f32
+//! values onto the grid; the payload kernels *materialize* it: the
+//! `bits`-bit grid index of each element is written to a `u8` buffer —
+//! one code byte per element for 5..=8 bits ([`fq_store_i8`]), two
+//! codes per byte for 1..=4 bits ([`fq_store_i4`]; low nibble = even
+//! flat index, final high nibble zero on odd lengths) — while the same
+//! pre-quantization extrema fold into the Fig. 3 statistics.
+//! [`payload_bytes`] gives the buffer size, and `dequant_*` of a
+//! payload reproduces `fq(x)` bit-for-bit (both sides round through
+//! [`QuantParams::index_of`](super::QuantParams::index_of) /
+//! [`value_of`](super::QuantParams::value_of)), so the simulator's
+//! store paths can emit real buffers whose *sizes* are the traffic
+//! numbers, without changing a single output bit.
 
 pub mod parallel;
 pub mod scalar;
@@ -156,6 +175,32 @@ pub fn select_backend(kind: KernelBackend) -> Result<(), String> {
             }
         }
     }
+}
+
+/// The already-resolved process-wide backend, if any — `None` while the
+/// choice is still open (no CLI selection, no kernel call yet).  Lets
+/// calibration-time autotuning pin a *measured* winner without racing
+/// the lazy env/heuristic resolution in [`backend`].
+pub fn resolved_backend() -> Option<KernelBackend> {
+    BACKEND.get().copied()
+}
+
+static MEASURED_AUTO: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+/// Ask for the *measured* auto policy: the CLI calls this for
+/// `--kernel-backend auto` instead of pinning the core-count heuristic,
+/// leaving the process backend unresolved so that calibration can
+/// autotune the candidate backends on real site shapes and
+/// [`select_backend`] the winner.  Subcommands that never calibrate
+/// still resolve lazily through [`backend`]'s heuristic.
+pub fn request_measured_auto() {
+    MEASURED_AUTO.store(true, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// Whether [`request_measured_auto`] was called (the trainer's
+/// calibration hook checks this before pinning its measured winner).
+pub fn measured_auto_requested() -> bool {
+    MEASURED_AUTO.load(std::sync::atomic::Ordering::Relaxed)
 }
 
 // ---------------------------------------------------------------------------
@@ -308,6 +353,407 @@ pub fn fq_cosine_on(b: KernelBackend, xs: &[f32], qmin: f32, qmax: f32, bits: u3
     }
 }
 
+// ---------------------------------------------------------------------------
+// Integer-payload stores
+// ---------------------------------------------------------------------------
+
+/// Payload buffer size in bytes for `elems` codes at `bits` bits: two
+/// codes per byte up to 4 bits (the [`fq_store_i4`] packing), one code
+/// byte each for 5..=8 bits ([`fq_store_i8`]).
+pub fn payload_bytes(elems: usize, bits: u32) -> usize {
+    assert!(
+        (1..=8).contains(&bits),
+        "integer payloads cover 1..=8 bits (got {bits})"
+    );
+    if bits <= 4 {
+        elems.div_ceil(2)
+    } else {
+        elems
+    }
+}
+
+/// Fused min/max + integer store: quantize `xs` onto the `[qmin, qmax]`
+/// grid, writing one `bits`-bit code byte per element into `dst`
+/// (`bits <= 8`; `dst.len() == xs.len()`), and return the
+/// pre-quantization `(min, max)` exactly like [`minmax_fq`] —
+/// `(0.0, 0.0)` on an empty slice.  `xs` is untouched; the grid values
+/// come back via [`dequant_i8`], bit-identical to `fq`.
+pub fn fq_store_i8(xs: &[f32], dst: &mut [u8], qmin: f32, qmax: f32, bits: u32) -> (f32, f32) {
+    fq_store_i8_on(backend(), xs, dst, qmin, qmax, bits)
+}
+
+/// [`fq_store_i8`] on an explicit backend.
+pub fn fq_store_i8_on(
+    b: KernelBackend,
+    xs: &[f32],
+    dst: &mut [u8],
+    qmin: f32,
+    qmax: f32,
+    bits: u32,
+) -> (f32, f32) {
+    assert!(
+        (1..=8).contains(&bits),
+        "fq_store_i8 encodes 1..=8-bit codes (got {bits})"
+    );
+    assert_eq!(xs.len(), dst.len(), "fq_store_i8 payload length mismatch");
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    match b {
+        KernelBackend::Scalar => scalar::fq_store_i8(xs, dst, qmin, qmax, bits),
+        KernelBackend::Simd => simd::fq_store_i8(xs, dst, qmin, qmax, bits),
+        KernelBackend::Parallel => parallel::fq_store_i8(xs, dst, qmin, qmax, bits),
+    }
+}
+
+/// Bit-packed 4-bit payload store: two codes per byte (`bits <= 4`,
+/// `dst.len() == xs.len().div_ceil(2)`; low nibble = even flat index,
+/// the final byte's high nibble stays zero on odd lengths).  Stats and
+/// empty-slice conventions as in [`fq_store_i8`].
+pub fn fq_store_i4(xs: &[f32], dst: &mut [u8], qmin: f32, qmax: f32, bits: u32) -> (f32, f32) {
+    fq_store_i4_on(backend(), xs, dst, qmin, qmax, bits)
+}
+
+/// [`fq_store_i4`] on an explicit backend.
+pub fn fq_store_i4_on(
+    b: KernelBackend,
+    xs: &[f32],
+    dst: &mut [u8],
+    qmin: f32,
+    qmax: f32,
+    bits: u32,
+) -> (f32, f32) {
+    assert!(
+        (1..=4).contains(&bits),
+        "fq_store_i4 packs 1..=4-bit codes (got {bits})"
+    );
+    assert_eq!(
+        xs.len().div_ceil(2),
+        dst.len(),
+        "fq_store_i4 payload length mismatch"
+    );
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    match b {
+        KernelBackend::Scalar => scalar::fq_store_i4(xs, dst, qmin, qmax, bits),
+        KernelBackend::Simd => simd::fq_store_i4(xs, dst, qmin, qmax, bits),
+        KernelBackend::Parallel => parallel::fq_store_i4(xs, dst, qmin, qmax, bits),
+    }
+}
+
+/// Channel-strided payload store (channels-last, one code byte per
+/// element).  Returns per-channel pre-quantization stats; `(0.0, 0.0)`
+/// rows on an empty slice.  Panicking form of
+/// [`try_fq_store_i8_axis`].
+pub fn fq_store_i8_axis(
+    xs: &[f32],
+    dst: &mut [u8],
+    ranges: &[[f32; 2]],
+    bits: u32,
+) -> Vec<(f32, f32)> {
+    try_fq_store_i8_axis(xs, dst, ranges, bits).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Checked [`fq_store_i8_axis`]: same channel-layout contract as
+/// [`try_minmax_fq_axis`], plus the payload length check.
+pub fn try_fq_store_i8_axis(
+    xs: &[f32],
+    dst: &mut [u8],
+    ranges: &[[f32; 2]],
+    bits: u32,
+) -> Result<Vec<(f32, f32)>, KernelError> {
+    try_fq_store_i8_axis_on(backend(), xs, dst, ranges, bits)
+}
+
+/// [`try_fq_store_i8_axis`] on an explicit backend.
+pub fn try_fq_store_i8_axis_on(
+    b: KernelBackend,
+    xs: &[f32],
+    dst: &mut [u8],
+    ranges: &[[f32; 2]],
+    bits: u32,
+) -> Result<Vec<(f32, f32)>, KernelError> {
+    assert!(
+        (1..=8).contains(&bits),
+        "fq_store_i8_axis encodes 1..=8-bit codes (got {bits})"
+    );
+    assert_eq!(
+        xs.len(),
+        dst.len(),
+        "fq_store_i8_axis payload length mismatch"
+    );
+    let c = ranges.len();
+    if c == 0 {
+        return Err(KernelError::NoChannels);
+    }
+    if xs.len() % c != 0 {
+        return Err(KernelError::RaggedAxis {
+            len: xs.len(),
+            channels: c,
+        });
+    }
+    if xs.is_empty() {
+        return Ok(vec![(0.0, 0.0); c]);
+    }
+    Ok(match b {
+        KernelBackend::Scalar => scalar::fq_store_i8_axis(xs, dst, ranges, bits),
+        KernelBackend::Simd => simd::fq_store_i8_axis(xs, dst, ranges, bits),
+        KernelBackend::Parallel => parallel::fq_store_i8_axis(xs, dst, ranges, bits),
+    })
+}
+
+/// Channel-strided bit-packed store; packing is flat-index based, so an
+/// odd channel count simply drifts the byte boundary across channels.
+/// Panicking form of [`try_fq_store_i4_axis`].
+pub fn fq_store_i4_axis(
+    xs: &[f32],
+    dst: &mut [u8],
+    ranges: &[[f32; 2]],
+    bits: u32,
+) -> Vec<(f32, f32)> {
+    try_fq_store_i4_axis(xs, dst, ranges, bits).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Checked [`fq_store_i4_axis`].
+pub fn try_fq_store_i4_axis(
+    xs: &[f32],
+    dst: &mut [u8],
+    ranges: &[[f32; 2]],
+    bits: u32,
+) -> Result<Vec<(f32, f32)>, KernelError> {
+    try_fq_store_i4_axis_on(backend(), xs, dst, ranges, bits)
+}
+
+/// [`try_fq_store_i4_axis`] on an explicit backend.
+pub fn try_fq_store_i4_axis_on(
+    b: KernelBackend,
+    xs: &[f32],
+    dst: &mut [u8],
+    ranges: &[[f32; 2]],
+    bits: u32,
+) -> Result<Vec<(f32, f32)>, KernelError> {
+    assert!(
+        (1..=4).contains(&bits),
+        "fq_store_i4_axis packs 1..=4-bit codes (got {bits})"
+    );
+    assert_eq!(
+        xs.len().div_ceil(2),
+        dst.len(),
+        "fq_store_i4_axis payload length mismatch"
+    );
+    let c = ranges.len();
+    if c == 0 {
+        return Err(KernelError::NoChannels);
+    }
+    if xs.len() % c != 0 {
+        return Err(KernelError::RaggedAxis {
+            len: xs.len(),
+            channels: c,
+        });
+    }
+    if xs.is_empty() {
+        return Ok(vec![(0.0, 0.0); c]);
+    }
+    Ok(match b {
+        KernelBackend::Scalar => scalar::fq_store_i4_axis(xs, dst, ranges, bits),
+        KernelBackend::Simd => simd::fq_store_i4_axis(xs, dst, ranges, bits),
+        KernelBackend::Parallel => parallel::fq_store_i4_axis(xs, dst, ranges, bits),
+    })
+}
+
+/// Payload readback: decode an [`fq_store_i8`] buffer into grid values
+/// (`dst.len() == codes.len()`), bit-identical to what `fq` would have
+/// produced from the original tensor.
+pub fn dequant_i8(codes: &[u8], dst: &mut [f32], qmin: f32, qmax: f32, bits: u32) {
+    dequant_i8_on(backend(), codes, dst, qmin, qmax, bits)
+}
+
+/// [`dequant_i8`] on an explicit backend.
+pub fn dequant_i8_on(
+    b: KernelBackend,
+    codes: &[u8],
+    dst: &mut [f32],
+    qmin: f32,
+    qmax: f32,
+    bits: u32,
+) {
+    assert!(
+        (1..=8).contains(&bits),
+        "dequant_i8 decodes 1..=8-bit codes (got {bits})"
+    );
+    assert_eq!(codes.len(), dst.len(), "dequant_i8 payload length mismatch");
+    match b {
+        KernelBackend::Scalar => scalar::dequant_i8(codes, dst, qmin, qmax, bits),
+        KernelBackend::Simd => simd::dequant_i8(codes, dst, qmin, qmax, bits),
+        KernelBackend::Parallel => parallel::dequant_i8(codes, dst, qmin, qmax, bits),
+    }
+}
+
+/// Bit-packed readback: decode an [`fq_store_i4`] buffer; `dst.len()`
+/// is the element count (`codes.len() == dst.len().div_ceil(2)`).
+pub fn dequant_i4(codes: &[u8], dst: &mut [f32], qmin: f32, qmax: f32, bits: u32) {
+    dequant_i4_on(backend(), codes, dst, qmin, qmax, bits)
+}
+
+/// [`dequant_i4`] on an explicit backend.
+pub fn dequant_i4_on(
+    b: KernelBackend,
+    codes: &[u8],
+    dst: &mut [f32],
+    qmin: f32,
+    qmax: f32,
+    bits: u32,
+) {
+    assert!(
+        (1..=4).contains(&bits),
+        "dequant_i4 decodes 1..=4-bit codes (got {bits})"
+    );
+    assert_eq!(
+        codes.len(),
+        dst.len().div_ceil(2),
+        "dequant_i4 payload length mismatch"
+    );
+    match b {
+        KernelBackend::Scalar => scalar::dequant_i4(codes, dst, qmin, qmax, bits),
+        KernelBackend::Simd => simd::dequant_i4(codes, dst, qmin, qmax, bits),
+        KernelBackend::Parallel => parallel::dequant_i4(codes, dst, qmin, qmax, bits),
+    }
+}
+
+/// Channel-strided readback of an [`fq_store_i8_axis`] payload.  The
+/// layout was validated by the paired store, so this form panics on a
+/// mismatch rather than returning a `Result`.
+pub fn dequant_i8_axis(codes: &[u8], dst: &mut [f32], ranges: &[[f32; 2]], bits: u32) {
+    dequant_i8_axis_on(backend(), codes, dst, ranges, bits)
+}
+
+/// [`dequant_i8_axis`] on an explicit backend.
+pub fn dequant_i8_axis_on(
+    b: KernelBackend,
+    codes: &[u8],
+    dst: &mut [f32],
+    ranges: &[[f32; 2]],
+    bits: u32,
+) {
+    assert_eq!(
+        codes.len(),
+        dst.len(),
+        "dequant_i8_axis payload length mismatch"
+    );
+    let c = ranges.len();
+    assert!(c > 0 && dst.len() % c == 0, "dequant_i8_axis channel layout");
+    if dst.is_empty() {
+        return;
+    }
+    match b {
+        KernelBackend::Scalar => scalar::dequant_i8_axis(codes, dst, ranges, bits),
+        KernelBackend::Simd => simd::dequant_i8_axis(codes, dst, ranges, bits),
+        KernelBackend::Parallel => parallel::dequant_i8_axis(codes, dst, ranges, bits),
+    }
+}
+
+/// Channel-strided readback of an [`fq_store_i4_axis`] payload.
+pub fn dequant_i4_axis(codes: &[u8], dst: &mut [f32], ranges: &[[f32; 2]], bits: u32) {
+    dequant_i4_axis_on(backend(), codes, dst, ranges, bits)
+}
+
+/// [`dequant_i4_axis`] on an explicit backend.
+pub fn dequant_i4_axis_on(
+    b: KernelBackend,
+    codes: &[u8],
+    dst: &mut [f32],
+    ranges: &[[f32; 2]],
+    bits: u32,
+) {
+    assert_eq!(
+        codes.len(),
+        dst.len().div_ceil(2),
+        "dequant_i4_axis payload length mismatch"
+    );
+    let c = ranges.len();
+    assert!(c > 0 && dst.len() % c == 0, "dequant_i4_axis channel layout");
+    if dst.is_empty() {
+        return;
+    }
+    match b {
+        KernelBackend::Scalar => scalar::dequant_i4_axis(codes, dst, ranges, bits),
+        KernelBackend::Simd => simd::dequant_i4_axis(codes, dst, ranges, bits),
+        KernelBackend::Parallel => parallel::dequant_i4_axis(codes, dst, ranges, bits),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-site autotuning
+// ---------------------------------------------------------------------------
+
+/// One measured backend pick for a tensor shape: which backend won a
+/// timed fused-store shootout on `elems` elements at `bits` bits, and
+/// the timings that prove it.  Cached per site by the range manager at
+/// calibration; surfaced as the `autotune` field of bench records.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Autotune {
+    /// the measured winner
+    pub backend: KernelBackend,
+    pub elems: usize,
+    pub bits: u32,
+    /// mean seconds per fused pass for the winner
+    pub best_s: f64,
+    /// mean seconds per fused pass for the scalar reference
+    pub scalar_s: f64,
+}
+
+impl Autotune {
+    /// Measured speedup of the winner over the scalar reference.
+    pub fn speedup(&self) -> f64 {
+        if self.best_s > 0.0 {
+            self.scalar_s / self.best_s
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Time every backend's fused `minmax_fq` pass on a synthetic tensor of
+/// `elems` elements and return the measured winner.  Bit-parity makes
+/// the choice purely a speed question, so the pick is safe whatever the
+/// timings say; the input is deterministic (seeded), only the timings —
+/// and on a loaded machine possibly the winner — vary run to run.
+/// Iteration count scales inversely with `elems` to keep calibration
+/// cheap on large sites without starving small ones of samples.
+pub fn autotune_minmax_fq(elems: usize, bits: u32) -> Autotune {
+    let mut rng = crate::util::rng::Pcg32::new(0x7A_0E, elems as u64);
+    let mut xs: Vec<f32> = (0..elems).map(|_| rng.normal()).collect();
+    let iters = ((1usize << 21) / elems.max(1)).clamp(2, 16);
+    let mut scalar_s = f64::INFINITY;
+    let mut best = (KernelBackend::Scalar, f64::INFINITY);
+    for b in KernelBackend::ALL {
+        // warmup pass, then timed passes; re-quantizing an already
+        // on-grid tensor costs the same traversal, so no reset needed
+        let _ = minmax_fq_on(b, &mut xs, -3.0, 3.0, bits);
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            let _ = minmax_fq_on(b, &mut xs, -3.0, 3.0, bits);
+        }
+        let dt = t0.elapsed().as_secs_f64() / iters as f64;
+        if b == KernelBackend::Scalar {
+            scalar_s = dt;
+        }
+        // strict < keeps the earlier (ALL-order) backend on a tie, so
+        // the pick is deterministic given the timings
+        if dt < best.1 {
+            best = (b, dt);
+        }
+    }
+    Autotune {
+        backend: best.0,
+        elems,
+        bits,
+        best_s: best.1,
+        scalar_s,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -388,6 +834,144 @@ mod tests {
     fn fq_into_rejects_mismatched_buffers() {
         let mut dst = [0.0f32; 2];
         fq_into(&[1.0], &mut dst, -1.0, 1.0, 8);
+    }
+
+    // ------------------------------------------------------------------
+    // Integer payloads
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn payload_bytes_policy() {
+        assert_eq!(payload_bytes(10, 8), 10);
+        assert_eq!(payload_bytes(10, 6), 10); // unpacked: a byte per code
+        assert_eq!(payload_bytes(10, 4), 5);
+        assert_eq!(payload_bytes(11, 4), 6); // odd length rounds up
+        assert_eq!(payload_bytes(11, 2), 6);
+        assert_eq!(payload_bytes(0, 4), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "1..=8 bits")]
+    fn payload_bytes_rejects_wide_codes() {
+        payload_bytes(4, 16);
+    }
+
+    #[test]
+    fn i8_payload_round_trip_equals_fake_quant() {
+        forall(96, "i8-roundtrip", case, |(lo, hi, bits, xs)| {
+            let mut codes = vec![0u8; xs.len()];
+            let stats = fq_store_i8(xs, &mut codes, *lo, *hi, *bits);
+            let mut back = vec![0.0f32; xs.len()];
+            dequant_i8(&codes, &mut back, *lo, *hi, *bits);
+            stats == minmax(xs) && back == fake_quant(xs, *lo, *hi, *bits)
+        });
+    }
+
+    #[test]
+    fn i4_payload_round_trip_equals_fake_quant() {
+        forall(96, "i4-roundtrip", case, |(lo, hi, bits, xs)| {
+            let bits = (*bits).min(4);
+            let mut codes = vec![0u8; xs.len().div_ceil(2)];
+            let stats = fq_store_i4(xs, &mut codes, *lo, *hi, bits);
+            let mut back = vec![0.0f32; xs.len()];
+            dequant_i4(&codes, &mut back, *lo, *hi, bits);
+            stats == minmax(xs) && back == fake_quant(xs, *lo, *hi, bits)
+        });
+    }
+
+    #[test]
+    fn i4_odd_length_parks_the_last_high_nibble_at_zero() {
+        let xs = [0.5f32, -0.5, 0.25];
+        let mut codes = vec![0xFFu8; 2];
+        fq_store_i4(&xs, &mut codes, -1.0, 1.0, 4);
+        assert_eq!(codes[1] >> 4, 0, "odd tail must zero the spare nibble");
+    }
+
+    #[test]
+    fn axis_payload_round_trips_on_every_backend() {
+        let ranges = [[-1.0f32, 1.0], [-2.0, 2.0], [0.0, 4.0]];
+        let xs: Vec<f32> = (0..3 * 7).map(|i| (i as f32) * 0.17 - 1.5).collect();
+        for b in KernelBackend::ALL {
+            let mut c8 = vec![0u8; xs.len()];
+            let s8 = try_fq_store_i8_axis_on(b, &xs, &mut c8, &ranges, 8).unwrap();
+            let mut back8 = vec![0.0f32; xs.len()];
+            dequant_i8_axis_on(b, &c8, &mut back8, &ranges, 8);
+            let mut expect = xs.clone();
+            let expect_stats = minmax_fq_axis(&mut expect, &ranges, 8);
+            assert_eq!(s8, expect_stats);
+            assert_eq!(back8, expect);
+
+            let mut c4 = vec![0u8; xs.len().div_ceil(2)];
+            let s4 = try_fq_store_i4_axis_on(b, &xs, &mut c4, &ranges, 4).unwrap();
+            let mut back4 = vec![0.0f32; xs.len()];
+            dequant_i4_axis_on(b, &c4, &mut back4, &ranges, 4);
+            let mut expect4 = xs.clone();
+            let expect4_stats = minmax_fq_axis(&mut expect4, &ranges, 4);
+            assert_eq!(s4, expect4_stats);
+            assert_eq!(back4, expect4);
+        }
+    }
+
+    #[test]
+    fn payload_axis_contracts_match_the_fq_axis_ones() {
+        let xs = [1.0f32, 2.0, 3.0];
+        let mut dst = vec![0u8; 3];
+        assert_eq!(
+            try_fq_store_i8_axis(&xs, &mut dst, &[[-1.0, 1.0]; 2], 8).unwrap_err(),
+            KernelError::RaggedAxis { len: 3, channels: 2 }
+        );
+        assert_eq!(
+            try_fq_store_i8_axis(&xs, &mut dst, &[], 8).unwrap_err(),
+            KernelError::NoChannels
+        );
+        let mut dst4 = vec![0u8; 2];
+        assert_eq!(
+            try_fq_store_i4_axis(&xs, &mut dst4, &[[-1.0, 1.0]; 2], 4).unwrap_err(),
+            KernelError::RaggedAxis { len: 3, channels: 2 }
+        );
+        // empty slices: stats rows by convention, payloads untouched
+        assert_eq!(
+            try_fq_store_i4_axis(&[], &mut [], &[[-1.0, 1.0]; 5], 4).unwrap(),
+            vec![(0.0, 0.0); 5]
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "payload length mismatch")]
+    fn fq_store_i8_rejects_short_payload_buffers() {
+        let mut dst = [0u8; 1];
+        fq_store_i8(&[1.0, 2.0], &mut dst, -1.0, 1.0, 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "payload length mismatch")]
+    fn fq_store_i4_rejects_unpacked_buffers() {
+        // an i8-sized buffer for a packed store is the classic caller bug
+        let mut dst = [0u8; 4];
+        fq_store_i4(&[1.0, 2.0, 3.0, 4.0], &mut dst, -1.0, 1.0, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "1..=4-bit")]
+    fn fq_store_i4_rejects_wide_codes() {
+        let mut dst = [0u8; 1];
+        fq_store_i4(&[1.0, 2.0], &mut dst, -1.0, 1.0, 8);
+    }
+
+    // ------------------------------------------------------------------
+    // Autotune
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn autotune_measures_every_backend_and_picks_one() {
+        let at = autotune_minmax_fq(4 * CHUNK, 8);
+        assert_eq!(at.elems, 4 * CHUNK);
+        assert_eq!(at.bits, 8);
+        assert!(at.best_s > 0.0 && at.scalar_s > 0.0);
+        // the winner can never be slower than the scalar sample
+        assert!(at.best_s <= at.scalar_s);
+        assert!(at.speedup() >= 1.0);
+        assert!(KernelBackend::ALL.contains(&at.backend));
     }
 
     // ------------------------------------------------------------------

@@ -172,6 +172,284 @@ pub fn minmax_fq_axis_with(
         .collect()
 }
 
+pub fn fq_store_i8(xs: &[f32], dst: &mut [u8], qmin: f32, qmax: f32, bits: u32) -> (f32, f32) {
+    fq_store_i8_with(auto_threads(xs.len()), xs, dst, qmin, qmax, bits)
+}
+
+/// [`fq_store_i8`] over an explicit number of parallel spans: one code
+/// byte per element, so payload spans mirror the element spans exactly;
+/// per-span stats merge in span order like [`minmax_fq_with`].
+pub fn fq_store_i8_with(
+    threads: usize,
+    xs: &[f32],
+    dst: &mut [u8],
+    qmin: f32,
+    qmax: f32,
+    bits: u32,
+) -> (f32, f32) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    if threads <= 1 || xs.len() <= CHUNK {
+        return simd::fq_store_i8(xs, dst, qmin, qmax, bits);
+    }
+    let span = span_len(xs.len(), threads, CHUNK);
+    let mut stats = vec![(f32::INFINITY, f32::NEG_INFINITY); xs.len().div_ceil(span)];
+    std::thread::scope(|scope| {
+        for ((chunk, codes), slot) in xs
+            .chunks(span)
+            .zip(dst.chunks_mut(span))
+            .zip(stats.iter_mut())
+        {
+            scope.spawn(move || {
+                *slot = simd::fq_store_i8(chunk, codes, qmin, qmax, bits);
+            });
+        }
+    });
+    stats.iter().fold(
+        (f32::INFINITY, f32::NEG_INFINITY),
+        |(lo, hi), &(l, h)| (lo.min(l), hi.max(h)),
+    )
+}
+
+pub fn fq_store_i4(xs: &[f32], dst: &mut [u8], qmin: f32, qmax: f32, bits: u32) -> (f32, f32) {
+    fq_store_i4_with(auto_threads(xs.len()), xs, dst, qmin, qmax, bits)
+}
+
+/// [`fq_store_i4`] over an explicit number of parallel spans.  Spans
+/// align to `CHUNK` (even), so every span boundary lands on a byte
+/// boundary of the packed stream: worker k owns exactly `span / 2`
+/// payload bytes and no two workers share a byte.
+pub fn fq_store_i4_with(
+    threads: usize,
+    xs: &[f32],
+    dst: &mut [u8],
+    qmin: f32,
+    qmax: f32,
+    bits: u32,
+) -> (f32, f32) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    if threads <= 1 || xs.len() <= CHUNK {
+        return simd::fq_store_i4(xs, dst, qmin, qmax, bits);
+    }
+    let span = span_len(xs.len(), threads, CHUNK);
+    let mut stats = vec![(f32::INFINITY, f32::NEG_INFINITY); xs.len().div_ceil(span)];
+    std::thread::scope(|scope| {
+        for ((chunk, codes), slot) in xs
+            .chunks(span)
+            .zip(dst.chunks_mut(span / 2))
+            .zip(stats.iter_mut())
+        {
+            scope.spawn(move || {
+                *slot = simd::fq_store_i4(chunk, codes, qmin, qmax, bits);
+            });
+        }
+    });
+    stats.iter().fold(
+        (f32::INFINITY, f32::NEG_INFINITY),
+        |(lo, hi), &(l, h)| (lo.min(l), hi.max(h)),
+    )
+}
+
+pub fn fq_store_i8_axis(
+    xs: &[f32],
+    dst: &mut [u8],
+    ranges: &[[f32; 2]],
+    bits: u32,
+) -> Vec<(f32, f32)> {
+    fq_store_i8_axis_with(auto_threads(xs.len()), xs, dst, ranges, bits)
+}
+
+/// [`fq_store_i8_axis`] over an explicit span count; span boundaries
+/// stay channel-aligned like [`minmax_fq_axis_with`]'s.
+pub fn fq_store_i8_axis_with(
+    threads: usize,
+    xs: &[f32],
+    dst: &mut [u8],
+    ranges: &[[f32; 2]],
+    bits: u32,
+) -> Vec<(f32, f32)> {
+    let c = ranges.len();
+    debug_assert!(c > 0 && xs.len() % c == 0, "validated by the dispatcher");
+    if xs.is_empty() {
+        return vec![(0.0, 0.0); c];
+    }
+    if threads <= 1 || xs.len() <= CHUNK {
+        return simd::fq_store_i8_axis(xs, dst, ranges, bits);
+    }
+    let align = CHUNK / gcd(CHUNK, c) * c;
+    let span = span_len(xs.len(), threads, align);
+    let n_spans = xs.len().div_ceil(span);
+    let mut stats: Vec<Vec<(f32, f32)>> = vec![Vec::new(); n_spans];
+    std::thread::scope(|scope| {
+        for ((chunk, codes), slot) in xs
+            .chunks(span)
+            .zip(dst.chunks_mut(span))
+            .zip(stats.iter_mut())
+        {
+            scope.spawn(move || {
+                *slot = simd::fq_store_i8_axis(chunk, codes, ranges, bits);
+            });
+        }
+    });
+    merge_axis_stats(c, &stats)
+}
+
+pub fn fq_store_i4_axis(
+    xs: &[f32],
+    dst: &mut [u8],
+    ranges: &[[f32; 2]],
+    bits: u32,
+) -> Vec<(f32, f32)> {
+    fq_store_i4_axis_with(auto_threads(xs.len()), xs, dst, ranges, bits)
+}
+
+/// [`fq_store_i4_axis`] over an explicit span count.  Spans align to
+/// `lcm(CHUNK, c)` — a multiple of `CHUNK`, hence even — so every span
+/// starts at channel phase 0 *and* on a packed-byte boundary.
+pub fn fq_store_i4_axis_with(
+    threads: usize,
+    xs: &[f32],
+    dst: &mut [u8],
+    ranges: &[[f32; 2]],
+    bits: u32,
+) -> Vec<(f32, f32)> {
+    let c = ranges.len();
+    debug_assert!(c > 0 && xs.len() % c == 0, "validated by the dispatcher");
+    if xs.is_empty() {
+        return vec![(0.0, 0.0); c];
+    }
+    if threads <= 1 || xs.len() <= CHUNK {
+        return simd::fq_store_i4_axis(xs, dst, ranges, bits);
+    }
+    let align = CHUNK / gcd(CHUNK, c) * c;
+    let span = span_len(xs.len(), threads, align);
+    let n_spans = xs.len().div_ceil(span);
+    let mut stats: Vec<Vec<(f32, f32)>> = vec![Vec::new(); n_spans];
+    std::thread::scope(|scope| {
+        for ((chunk, codes), slot) in xs
+            .chunks(span)
+            .zip(dst.chunks_mut(span / 2))
+            .zip(stats.iter_mut())
+        {
+            scope.spawn(move || {
+                *slot = simd::fq_store_i4_axis(chunk, codes, ranges, bits);
+            });
+        }
+    });
+    merge_axis_stats(c, &stats)
+}
+
+/// Channel-wise merge of per-span axis stats, in span order.
+fn merge_axis_stats(c: usize, stats: &[Vec<(f32, f32)>]) -> Vec<(f32, f32)> {
+    (0..c)
+        .map(|ch| {
+            stats.iter().fold(
+                (f32::INFINITY, f32::NEG_INFINITY),
+                |(lo, hi), span_stats| {
+                    let (l, h) = span_stats[ch];
+                    (lo.min(l), hi.max(h))
+                },
+            )
+        })
+        .collect()
+}
+
+pub fn dequant_i8(codes: &[u8], dst: &mut [f32], qmin: f32, qmax: f32, bits: u32) {
+    dequant_i8_with(auto_threads(dst.len()), codes, dst, qmin, qmax, bits)
+}
+
+/// [`dequant_i8`] over an explicit span count (element-wise decode:
+/// spans cannot interact, parity is structural).
+pub fn dequant_i8_with(
+    threads: usize,
+    codes: &[u8],
+    dst: &mut [f32],
+    qmin: f32,
+    qmax: f32,
+    bits: u32,
+) {
+    if threads <= 1 || dst.len() <= CHUNK {
+        return simd::dequant_i8(codes, dst, qmin, qmax, bits);
+    }
+    let span = span_len(dst.len(), threads, CHUNK);
+    std::thread::scope(|scope| {
+        for (c, d) in codes.chunks(span).zip(dst.chunks_mut(span)) {
+            scope.spawn(move || {
+                simd::dequant_i8(c, d, qmin, qmax, bits);
+            });
+        }
+    });
+}
+
+pub fn dequant_i4(codes: &[u8], dst: &mut [f32], qmin: f32, qmax: f32, bits: u32) {
+    dequant_i4_with(auto_threads(dst.len()), codes, dst, qmin, qmax, bits)
+}
+
+/// [`dequant_i4`] over an explicit span count; `CHUNK`-aligned element
+/// spans keep every worker on whole payload bytes.
+pub fn dequant_i4_with(
+    threads: usize,
+    codes: &[u8],
+    dst: &mut [f32],
+    qmin: f32,
+    qmax: f32,
+    bits: u32,
+) {
+    if threads <= 1 || dst.len() <= CHUNK {
+        return simd::dequant_i4(codes, dst, qmin, qmax, bits);
+    }
+    let span = span_len(dst.len(), threads, CHUNK);
+    std::thread::scope(|scope| {
+        for (c, d) in codes.chunks(span / 2).zip(dst.chunks_mut(span)) {
+            scope.spawn(move || {
+                simd::dequant_i4(c, d, qmin, qmax, bits);
+            });
+        }
+    });
+}
+
+/// Channel-strided readback over channel-aligned spans.
+pub fn dequant_i8_axis(codes: &[u8], dst: &mut [f32], ranges: &[[f32; 2]], bits: u32) {
+    let c = ranges.len();
+    debug_assert!(c > 0 && dst.len() % c == 0, "validated by the dispatcher");
+    let threads = auto_threads(dst.len());
+    if threads <= 1 || dst.len() <= CHUNK {
+        return simd::dequant_i8_axis(codes, dst, ranges, bits);
+    }
+    let align = CHUNK / gcd(CHUNK, c) * c;
+    let span = span_len(dst.len(), threads, align);
+    std::thread::scope(|scope| {
+        for (cs, d) in codes.chunks(span).zip(dst.chunks_mut(span)) {
+            scope.spawn(move || {
+                simd::dequant_i8_axis(cs, d, ranges, bits);
+            });
+        }
+    });
+}
+
+/// Channel-strided bit-packed readback over `lcm(CHUNK, c)`-aligned
+/// spans (channel phase 0 and byte-aligned at every span start).
+pub fn dequant_i4_axis(codes: &[u8], dst: &mut [f32], ranges: &[[f32; 2]], bits: u32) {
+    let c = ranges.len();
+    debug_assert!(c > 0 && dst.len() % c == 0, "validated by the dispatcher");
+    let threads = auto_threads(dst.len());
+    if threads <= 1 || dst.len() <= CHUNK {
+        return simd::dequant_i4_axis(codes, dst, ranges, bits);
+    }
+    let align = CHUNK / gcd(CHUNK, c) * c;
+    let span = span_len(dst.len(), threads, align);
+    std::thread::scope(|scope| {
+        for (cs, d) in codes.chunks(span / 2).zip(dst.chunks_mut(span)) {
+            scope.spawn(move || {
+                simd::dequant_i4_axis(cs, d, ranges, bits);
+            });
+        }
+    });
+}
+
 pub fn fq_into(src: &[f32], dst: &mut [f32], qmin: f32, qmax: f32, bits: u32) {
     fq_into_with(auto_threads(src.len()), src, dst, qmin, qmax, bits)
 }

@@ -75,6 +75,209 @@ pub fn minmax_fq_axis(xs: &mut [f32], ranges: &[[f32; 2]], bits: u32) -> Vec<(f3
     stats
 }
 
+/// Fused min/max + integer store: the payload form of [`minmax_fq`].
+/// Instead of rewriting `xs` onto the grid, the `bits`-bit grid *index*
+/// of each element is written to `dst` (one code byte per element —
+/// `bits <= 8`, so every index fits), while the pre-quantization
+/// extrema fold exactly like [`minmax_fq`]'s.  `dequant_i8` of the
+/// payload reproduces `fq(x)` bit-for-bit, because both sides round
+/// through the same [`QuantParams::index_of`]/`value_of` pair.
+pub fn fq_store_i8(xs: &[f32], dst: &mut [u8], qmin: f32, qmax: f32, bits: u32) -> (f32, f32) {
+    let qp = QuantParams::from_range(qmin, qmax, bits);
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for (chunk, codes) in xs.chunks(CHUNK).zip(dst.chunks_mut(CHUNK)) {
+        for &x in chunk.iter() {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        for (d, &x) in codes.iter_mut().zip(chunk) {
+            *d = qp.index_of(x) as u8;
+        }
+    }
+    (lo, hi)
+}
+
+/// Bit-packed 4-bit payload store: two codes per byte (`bits <= 4`).
+/// Flat element `2k` lands in the low nibble of byte `k`, element
+/// `2k + 1` in the high nibble; on an odd-length tensor the final
+/// byte's high nibble stays zero.  `dst` holds `xs.len().div_ceil(2)`
+/// bytes (validated by the dispatcher).
+pub fn fq_store_i4(xs: &[f32], dst: &mut [u8], qmin: f32, qmax: f32, bits: u32) -> (f32, f32) {
+    let qp = QuantParams::from_range(qmin, qmax, bits);
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    // CHUNK is even, so chunk boundaries always land on byte boundaries
+    // of the packed stream; only the final chunk can end mid-byte.
+    for (chunk, codes) in xs.chunks(CHUNK).zip(dst.chunks_mut(CHUNK / 2)) {
+        for &x in chunk.iter() {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        let rem = chunk.chunks_exact(2).remainder();
+        for (d, p) in codes.iter_mut().zip(chunk.chunks_exact(2)) {
+            *d = qp.index_of(p[0]) as u8 | ((qp.index_of(p[1]) as u8) << 4);
+        }
+        if let [x] = rem {
+            codes[chunk.len() / 2] = qp.index_of(*x) as u8;
+        }
+    }
+    (lo, hi)
+}
+
+/// Channel-strided payload store (channels-last, like
+/// [`minmax_fq_axis`]): per-channel extrema plus one code byte per
+/// element, each element encoded on its channel's grid.
+pub fn fq_store_i8_axis(
+    xs: &[f32],
+    dst: &mut [u8],
+    ranges: &[[f32; 2]],
+    bits: u32,
+) -> Vec<(f32, f32)> {
+    let c = ranges.len();
+    debug_assert!(c > 0 && xs.len() % c == 0, "validated by the dispatcher");
+    let qps: Vec<QuantParams> = ranges
+        .iter()
+        .map(|r| QuantParams::from_range(r[0], r[1], bits))
+        .collect();
+    let mut stats = vec![(f32::INFINITY, f32::NEG_INFINITY); c];
+    let block = (CHUNK / c).max(1) * c;
+    for (chunk, codes) in xs.chunks(block).zip(dst.chunks_mut(block)) {
+        let mut ch = 0usize;
+        for &x in chunk.iter() {
+            let s = &mut stats[ch];
+            s.0 = s.0.min(x);
+            s.1 = s.1.max(x);
+            ch += 1;
+            if ch == c {
+                ch = 0;
+            }
+        }
+        ch = 0;
+        for (d, &x) in codes.iter_mut().zip(chunk) {
+            *d = qps[ch].index_of(x) as u8;
+            ch += 1;
+            if ch == c {
+                ch = 0;
+            }
+        }
+    }
+    stats
+}
+
+/// Channel-strided bit-packed store.  Packing is flat-index based: with
+/// an odd channel count the byte boundary drifts across channels, which
+/// is fine — the channel of flat element `i` is `i % c` regardless of
+/// which nibble holds its code.
+pub fn fq_store_i4_axis(
+    xs: &[f32],
+    dst: &mut [u8],
+    ranges: &[[f32; 2]],
+    bits: u32,
+) -> Vec<(f32, f32)> {
+    let c = ranges.len();
+    debug_assert!(c > 0 && xs.len() % c == 0, "validated by the dispatcher");
+    let qps: Vec<QuantParams> = ranges
+        .iter()
+        .map(|r| QuantParams::from_range(r[0], r[1], bits))
+        .collect();
+    let mut stats = vec![(f32::INFINITY, f32::NEG_INFINITY); c];
+    let mut ch = 0usize;
+    for &x in xs.iter() {
+        let s = &mut stats[ch];
+        s.0 = s.0.min(x);
+        s.1 = s.1.max(x);
+        ch += 1;
+        if ch == c {
+            ch = 0;
+        }
+    }
+    ch = 0;
+    let rem = xs.chunks_exact(2).remainder();
+    for (d, p) in dst.iter_mut().zip(xs.chunks_exact(2)) {
+        let lo_n = qps[ch].index_of(p[0]) as u8;
+        ch += 1;
+        if ch == c {
+            ch = 0;
+        }
+        let hi_n = qps[ch].index_of(p[1]) as u8;
+        ch += 1;
+        if ch == c {
+            ch = 0;
+        }
+        *d = lo_n | (hi_n << 4);
+    }
+    if let [x] = rem {
+        dst[xs.len() / 2] = qps[ch].index_of(*x) as u8;
+    }
+    stats
+}
+
+/// Payload readback: decode one code byte per element back to the grid
+/// values `fq` would have produced.
+pub fn dequant_i8(codes: &[u8], dst: &mut [f32], qmin: f32, qmax: f32, bits: u32) {
+    let qp = QuantParams::from_range(qmin, qmax, bits);
+    for (x, &code) in dst.iter_mut().zip(codes) {
+        *x = qp.value_of(code as u32);
+    }
+}
+
+/// Bit-packed readback: low nibble first, matching [`fq_store_i4`]'s
+/// packing; `dst.len()` is the element count (the final high nibble is
+/// ignored on odd lengths).
+pub fn dequant_i4(codes: &[u8], dst: &mut [f32], qmin: f32, qmax: f32, bits: u32) {
+    let qp = QuantParams::from_range(qmin, qmax, bits);
+    for (pair, &byte) in dst.chunks_mut(2).zip(codes) {
+        pair[0] = qp.value_of((byte & 0x0F) as u32);
+        if let Some(x) = pair.get_mut(1) {
+            *x = qp.value_of((byte >> 4) as u32);
+        }
+    }
+}
+
+/// Channel-strided readback of [`fq_store_i8_axis`] payloads.
+pub fn dequant_i8_axis(codes: &[u8], dst: &mut [f32], ranges: &[[f32; 2]], bits: u32) {
+    let c = ranges.len();
+    debug_assert!(c > 0 && dst.len() % c == 0, "validated by the dispatcher");
+    let qps: Vec<QuantParams> = ranges
+        .iter()
+        .map(|r| QuantParams::from_range(r[0], r[1], bits))
+        .collect();
+    let mut ch = 0usize;
+    for (x, &code) in dst.iter_mut().zip(codes) {
+        *x = qps[ch].value_of(code as u32);
+        ch += 1;
+        if ch == c {
+            ch = 0;
+        }
+    }
+}
+
+/// Channel-strided readback of [`fq_store_i4_axis`] payloads.
+pub fn dequant_i4_axis(codes: &[u8], dst: &mut [f32], ranges: &[[f32; 2]], bits: u32) {
+    let c = ranges.len();
+    debug_assert!(c > 0 && dst.len() % c == 0, "validated by the dispatcher");
+    let qps: Vec<QuantParams> = ranges
+        .iter()
+        .map(|r| QuantParams::from_range(r[0], r[1], bits))
+        .collect();
+    let mut ch = 0usize;
+    for (pair, &byte) in dst.chunks_mut(2).zip(codes) {
+        pair[0] = qps[ch].value_of((byte & 0x0F) as u32);
+        ch += 1;
+        if ch == c {
+            ch = 0;
+        }
+        if let Some(x) = pair.get_mut(1) {
+            *x = qps[ch].value_of((byte >> 4) as u32);
+            ch += 1;
+            if ch == c {
+                ch = 0;
+            }
+        }
+    }
+}
+
 /// Fake-quantize `src` into a caller-owned buffer of the same length.
 pub fn fq_into(src: &[f32], dst: &mut [f32], qmin: f32, qmax: f32, bits: u32) {
     let qp = QuantParams::from_range(qmin, qmax, bits);

@@ -185,6 +185,227 @@ fn axis_row_blocked(xs: &mut [f32], ranges: &[[f32; 2]], bits: u32) -> Vec<(f32,
     lo.into_iter().zip(hi).collect()
 }
 
+/// Lane-blocked fused min/max + integer store.  The stats fold is the
+/// same per-lane accumulator structure as [`minmax_fq`]; the encode
+/// side is element-wise (`index_of` then a `u8` narrow), so lane
+/// blocking cannot change a payload bit.
+pub fn fq_store_i8(xs: &[f32], dst: &mut [u8], qmin: f32, qmax: f32, bits: u32) -> (f32, f32) {
+    let qp = QuantParams::from_range(qmin, qmax, bits);
+    let mut vlo = [f32::INFINITY; LANES];
+    let mut vhi = [f32::NEG_INFINITY; LANES];
+    let (mut slo, mut shi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for (chunk, codes) in xs.chunks(CHUNK).zip(dst.chunks_mut(CHUNK)) {
+        let split = chunk.len() - chunk.len() % LANES;
+        let (blocks, tail) = chunk.split_at(split);
+        let (cb, ct) = codes.split_at_mut(split);
+        for block in blocks.chunks_exact(LANES) {
+            for l in 0..LANES {
+                vlo[l] = vlo[l].min(block[l]);
+                vhi[l] = vhi[l].max(block[l]);
+            }
+        }
+        for &x in tail.iter() {
+            slo = slo.min(x);
+            shi = shi.max(x);
+        }
+        for (d, block) in cb.chunks_exact_mut(LANES).zip(blocks.chunks_exact(LANES)) {
+            for l in 0..LANES {
+                d[l] = qp.index_of(block[l]) as u8;
+            }
+        }
+        for (d, &x) in ct.iter_mut().zip(tail) {
+            *d = qp.index_of(x) as u8;
+        }
+    }
+    let lo = vlo.iter().fold(slo, |a, &b| a.min(b));
+    let hi = vhi.iter().fold(shi, |a, &b| a.max(b));
+    (lo, hi)
+}
+
+/// Lane-blocked bit-packed store: each LANES-block of elements encodes
+/// into `LANES / 2` packed bytes (the lane split is a multiple of
+/// `LANES`, hence even, so the packed stream stays byte-aligned at
+/// every block and chunk boundary — only the tensor's final tail can
+/// end mid-byte).
+pub fn fq_store_i4(xs: &[f32], dst: &mut [u8], qmin: f32, qmax: f32, bits: u32) -> (f32, f32) {
+    let qp = QuantParams::from_range(qmin, qmax, bits);
+    let mut vlo = [f32::INFINITY; LANES];
+    let mut vhi = [f32::NEG_INFINITY; LANES];
+    let (mut slo, mut shi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for (chunk, codes) in xs.chunks(CHUNK).zip(dst.chunks_mut(CHUNK / 2)) {
+        let split = chunk.len() - chunk.len() % LANES;
+        let (blocks, tail) = chunk.split_at(split);
+        let (cb, ct) = codes.split_at_mut(split / 2);
+        for block in blocks.chunks_exact(LANES) {
+            for l in 0..LANES {
+                vlo[l] = vlo[l].min(block[l]);
+                vhi[l] = vhi[l].max(block[l]);
+            }
+        }
+        for &x in tail.iter() {
+            slo = slo.min(x);
+            shi = shi.max(x);
+        }
+        for (d, block) in cb.chunks_exact_mut(LANES / 2).zip(blocks.chunks_exact(LANES)) {
+            for l in 0..LANES / 2 {
+                d[l] = qp.index_of(block[2 * l]) as u8
+                    | ((qp.index_of(block[2 * l + 1]) as u8) << 4);
+            }
+        }
+        let rem = tail.chunks_exact(2).remainder();
+        for (d, p) in ct.iter_mut().zip(tail.chunks_exact(2)) {
+            *d = qp.index_of(p[0]) as u8 | ((qp.index_of(p[1]) as u8) << 4);
+        }
+        if let [x] = rem {
+            ct[tail.len() / 2] = qp.index_of(*x) as u8;
+        }
+    }
+    let lo = vlo.iter().fold(slo, |a, &b| a.min(b));
+    let hi = vhi.iter().fold(shi, |a, &b| a.max(b));
+    (lo, hi)
+}
+
+/// Channel-strided payload store.  `LANES % c == 0` layouts get the
+/// lane-mapped fast path (per-lane `QuantParams` table, like
+/// [`minmax_fq_axis`]); everything else falls back to the scalar
+/// wrapped-counter loop — the encode side is store-bound, so gathered
+/// layouts have no lane win.  Same bits either way.
+pub fn fq_store_i8_axis(
+    xs: &[f32],
+    dst: &mut [u8],
+    ranges: &[[f32; 2]],
+    bits: u32,
+) -> Vec<(f32, f32)> {
+    let c = ranges.len();
+    debug_assert!(c > 0 && xs.len() % c == 0, "validated by the dispatcher");
+    if c == 1 {
+        let (lo, hi) = fq_store_i8(xs, dst, ranges[0][0], ranges[0][1], bits);
+        return vec![(lo, hi)];
+    }
+    if LANES % c != 0 {
+        return super::scalar::fq_store_i8_axis(xs, dst, ranges, bits);
+    }
+    // lane l always sees channel l % c (CHUNK and LANES are multiples
+    // of c, so block starts are channel-aligned everywhere)
+    let lane_qp: Vec<QuantParams> = (0..LANES)
+        .map(|l| QuantParams::from_range(ranges[l % c][0], ranges[l % c][1], bits))
+        .collect();
+    let mut vlo = [f32::INFINITY; LANES];
+    let mut vhi = [f32::NEG_INFINITY; LANES];
+    let mut tail_stats = vec![(f32::INFINITY, f32::NEG_INFINITY); c];
+    for (chunk, codes) in xs.chunks(CHUNK).zip(dst.chunks_mut(CHUNK)) {
+        let split = chunk.len() - chunk.len() % LANES;
+        let (blocks, tail) = chunk.split_at(split);
+        let (cb, ct) = codes.split_at_mut(split);
+        for block in blocks.chunks_exact(LANES) {
+            for l in 0..LANES {
+                vlo[l] = vlo[l].min(block[l]);
+                vhi[l] = vhi[l].max(block[l]);
+            }
+        }
+        for (d, block) in cb.chunks_exact_mut(LANES).zip(blocks.chunks_exact(LANES)) {
+            for l in 0..LANES {
+                d[l] = lane_qp[l].index_of(block[l]) as u8;
+            }
+        }
+        let mut ch = 0usize;
+        for (d, &x) in ct.iter_mut().zip(tail) {
+            let s = &mut tail_stats[ch];
+            s.0 = s.0.min(x);
+            s.1 = s.1.max(x);
+            *d = lane_qp[ch].index_of(x) as u8;
+            ch += 1;
+            if ch == c {
+                ch = 0;
+            }
+        }
+    }
+    (0..c)
+        .map(|ch| {
+            let mut s = tail_stats[ch];
+            for l in (ch..LANES).step_by(c) {
+                s.0 = s.0.min(vlo[l]);
+                s.1 = s.1.max(vhi[l]);
+            }
+            s
+        })
+        .collect()
+}
+
+/// Channel-strided bit-packed store: one channel runs the per-tensor
+/// packed kernel; multi-channel layouts delegate to the scalar
+/// reference — nibble packing across a channel stride leaves no lane
+/// structure worth blocking for.
+pub fn fq_store_i4_axis(
+    xs: &[f32],
+    dst: &mut [u8],
+    ranges: &[[f32; 2]],
+    bits: u32,
+) -> Vec<(f32, f32)> {
+    let c = ranges.len();
+    debug_assert!(c > 0 && xs.len() % c == 0, "validated by the dispatcher");
+    if c == 1 {
+        let (lo, hi) = fq_store_i4(xs, dst, ranges[0][0], ranges[0][1], bits);
+        return vec![(lo, hi)];
+    }
+    super::scalar::fq_store_i4_axis(xs, dst, ranges, bits)
+}
+
+/// Lane-blocked payload readback (element-wise decode — parity is
+/// structural).
+pub fn dequant_i8(codes: &[u8], dst: &mut [f32], qmin: f32, qmax: f32, bits: u32) {
+    let qp = QuantParams::from_range(qmin, qmax, bits);
+    let split = dst.len() - dst.len() % LANES;
+    let (db, dt) = dst.split_at_mut(split);
+    let (cb, ct) = codes.split_at(split);
+    for (d, c) in db.chunks_exact_mut(LANES).zip(cb.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            d[l] = qp.value_of(c[l] as u32);
+        }
+    }
+    for (x, &code) in dt.iter_mut().zip(ct) {
+        *x = qp.value_of(code as u32);
+    }
+}
+
+/// Lane-blocked bit-packed readback: `LANES / 2` bytes unpack to one
+/// LANES-block of values, scalar tail for the ragged end.
+pub fn dequant_i4(codes: &[u8], dst: &mut [f32], qmin: f32, qmax: f32, bits: u32) {
+    let qp = QuantParams::from_range(qmin, qmax, bits);
+    let split = dst.len() - dst.len() % LANES;
+    let (db, dt) = dst.split_at_mut(split);
+    let (cb, ct) = codes.split_at(split / 2);
+    for (d, c) in db.chunks_exact_mut(LANES).zip(cb.chunks_exact(LANES / 2)) {
+        for l in 0..LANES / 2 {
+            d[2 * l] = qp.value_of((c[l] & 0x0F) as u32);
+            d[2 * l + 1] = qp.value_of((c[l] >> 4) as u32);
+        }
+    }
+    for (pair, &byte) in dt.chunks_mut(2).zip(ct) {
+        pair[0] = qp.value_of((byte & 0x0F) as u32);
+        if let Some(x) = pair.get_mut(1) {
+            *x = qp.value_of((byte >> 4) as u32);
+        }
+    }
+}
+
+/// Channel-strided readback: decode is load-bound, so multi-channel
+/// layouts delegate to the scalar reference (same bits).
+pub fn dequant_i8_axis(codes: &[u8], dst: &mut [f32], ranges: &[[f32; 2]], bits: u32) {
+    if ranges.len() == 1 {
+        return dequant_i8(codes, dst, ranges[0][0], ranges[0][1], bits);
+    }
+    super::scalar::dequant_i8_axis(codes, dst, ranges, bits)
+}
+
+/// Channel-strided bit-packed readback (scalar delegate past c == 1).
+pub fn dequant_i4_axis(codes: &[u8], dst: &mut [f32], ranges: &[[f32; 2]], bits: u32) {
+    if ranges.len() == 1 {
+        return dequant_i4(codes, dst, ranges[0][0], ranges[0][1], bits);
+    }
+    super::scalar::dequant_i4_axis(codes, dst, ranges, bits)
+}
+
 /// Lane-blocked fake-quantize into a caller-owned buffer.
 pub fn fq_into(src: &[f32], dst: &mut [f32], qmin: f32, qmax: f32, bits: u32) {
     let qp = QuantParams::from_range(qmin, qmax, bits);

@@ -87,29 +87,64 @@ pub fn bwd_compare(g: &Conv2dGeom, b: BwdBits) -> TrafficCost {
 }
 
 /// Numeric counterpart of the `G_X` term in [`bwd_static_cost`]: quantize
-/// and "store" an input-gradient tensor the way the static (in-hindsight)
-/// accelerator does — one fused `minmax_fq` pass produces the `b_g`-bit
-/// tensor *and* the Fig. 3 statistics the next range update consumes.
-/// Returns `((lo, hi), bits_moved)` so callers can tie the numeric path
-/// back to the closed-form accounting.
+/// and store an input-gradient tensor the way the static (in-hindsight)
+/// accelerator does — one fused pass emits the `b_g`-bit **integer
+/// payload** (packed two-per-byte at ≤ 4 bits) *and* the Fig. 3
+/// statistics the next range update consumes, then the payload is read
+/// back in place of `gx` — bit-identical to the fake-quant grid, because
+/// `dequant(store(x)) == fq(x)` by construction.  Returns
+/// `((lo, hi), bits_moved)` where `bits_moved` is `8 *` the payload
+/// buffer's real size: a measured quantity, not accounting.  For 8-bit
+/// (and even-length ≤ 4-bit) tensors it coincides with the closed-form
+/// `len * b_g` term; 5..=7-bit codes occupy a whole byte each, and a
+/// `b_g > 8` (fp16/fp32) class keeps the fake-quant path and the
+/// closed-form count — there is no integer payload to measure.
 pub fn store_gx_static(gx: &mut [f32], qmin: f32, qmax: f32, b: BwdBits) -> ((f32, f32), u64) {
-    let stats = kernel::minmax_fq(gx, qmin, qmax, b.b_g as u32);
-    (stats, gx.len() as u64 * b.b_g)
+    let bits = b.b_g as u32;
+    if b.b_g > 8 {
+        let stats = kernel::minmax_fq(gx, qmin, qmax, bits);
+        return (stats, gx.len() as u64 * b.b_g);
+    }
+    let mut payload = vec![0u8; kernel::payload_bytes(gx.len(), bits)];
+    let stats = if bits <= 4 {
+        let s = kernel::fq_store_i4(gx, &mut payload, qmin, qmax, bits);
+        kernel::dequant_i4(&payload, gx, qmin, qmax, bits);
+        s
+    } else {
+        let s = kernel::fq_store_i8(gx, &mut payload, qmin, qmax, bits);
+        kernel::dequant_i8(&payload, gx, qmin, qmax, bits);
+        s
+    };
+    (stats, payload.len() as u64 * 8)
 }
 
 /// Per-channel-group variant of [`store_gx_static`]: `ranges[c]` covers
 /// the gradient elements with flat index ≡ c (mod `ranges.len()`)
 /// (channels-last, the layout the per-channel estimator adapter feeds).
-/// Traffic is identical to the per-tensor store — per-channel
-/// granularity only widens the statistics register file, the store is
-/// still a single fused traversal.
+/// Traffic is identical to the per-tensor store — the payload buffer has
+/// the same size; per-channel granularity only widens the statistics
+/// register file, the store is still a single fused traversal.
 pub fn store_gx_static_axis(
     gx: &mut [f32],
     ranges: &[[f32; 2]],
     b: BwdBits,
 ) -> (Vec<(f32, f32)>, u64) {
-    let stats = kernel::minmax_fq_axis(gx, ranges, b.b_g as u32);
-    (stats, gx.len() as u64 * b.b_g)
+    let bits = b.b_g as u32;
+    if b.b_g > 8 {
+        let stats = kernel::minmax_fq_axis(gx, ranges, bits);
+        return (stats, gx.len() as u64 * b.b_g);
+    }
+    let mut payload = vec![0u8; kernel::payload_bytes(gx.len(), bits)];
+    let stats = if bits <= 4 {
+        let s = kernel::fq_store_i4_axis(gx, &mut payload, ranges, bits);
+        kernel::dequant_i4_axis(&payload, gx, ranges, bits);
+        s
+    } else {
+        let s = kernel::fq_store_i8_axis(gx, &mut payload, ranges, bits);
+        kernel::dequant_i8_axis(&payload, gx, ranges, bits);
+        s
+    };
+    (stats, payload.len() as u64 * 8)
 }
 
 /// Full training-step (fwd + bwd) traffic for a network under each

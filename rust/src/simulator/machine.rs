@@ -6,10 +6,13 @@
 //! accumulator is where static and dynamic quantization part ways:
 //!
 //! * **static** — ranges are known up front: each completed accumulator
-//!   slice is requantized immediately and written to memory at `b_a`
-//!   bits; in-hindsight additionally folds the slice min/max into the
-//!   online statistics registers (paper Fig. 3) at zero extra traffic —
-//!   realized as one fused `quant::kernel::minmax_fq` pass;
+//!   slice is requantized immediately and written to memory as a real
+//!   integer payload (one code byte per element at 5..=8 bits, packed
+//!   two-per-byte at <= 4 — `quant::kernel::fq_store_i8`/`fq_store_i4`),
+//!   so the store counter is the payload buffer's measured size;
+//!   in-hindsight additionally folds the slice min/max into the online
+//!   statistics registers (paper Fig. 3) at zero extra traffic — one
+//!   fused pass either way;
 //! * **dynamic** — every slice is written at `b_acc` bits; once the full
 //!   tensor is out, min/max are computed, the tensor is read *back*,
 //!   quantized, and written again at `b_a` bits — two passes by
@@ -194,20 +197,55 @@ impl MacArray {
         let mut acc_stats_axis = Vec::new();
         let acc_stats = match policy {
             Policy::Static { qmin, qmax } => {
-                // requantize at the accumulator; only b_a-bit data leaves.
-                // One fused pass quantizes the outgoing tensor *and* folds
-                // the pre-quantization extrema into the Fig. 3 statistics
+                // requantize at the accumulator; only the integer payload
+                // leaves.  One fused pass emits the out_bits-bit codes
+                // (packed two-per-byte at <= 4 bits) *and* folds the
+                // pre-quantization extrema into the Fig. 3 statistics
                 // registers — the single-traversal contract the paper's
-                // accelerator sketch relies on.
-                phases.output_store = out_elems * self.b_a / 8;
-                kernel::minmax_fq(&mut real, qmin, qmax, out_bits)
+                // accelerator sketch relies on.  The store counter is the
+                // payload buffer's real size; `real` continues as the
+                // readback, bit-identical to the fake-quant grid.
+                if out_bits <= 8 {
+                    let mut payload =
+                        vec![0u8; kernel::payload_bytes(real.len(), out_bits)];
+                    let stats = if out_bits <= 4 {
+                        let s = kernel::fq_store_i4(&real, &mut payload, qmin, qmax, out_bits);
+                        kernel::dequant_i4(&payload, &mut real, qmin, qmax, out_bits);
+                        s
+                    } else {
+                        let s = kernel::fq_store_i8(&real, &mut payload, qmin, qmax, out_bits);
+                        kernel::dequant_i8(&payload, &mut real, qmin, qmax, out_bits);
+                        s
+                    };
+                    phases.output_store = payload.len() as u64;
+                    stats
+                } else {
+                    phases.output_store = out_elems * self.b_a / 8;
+                    kernel::minmax_fq(&mut real, qmin, qmax, out_bits)
+                }
             }
             Policy::StaticPerChannel { ranges } => {
-                // identical traffic to Static: per-channel granularity
-                // only widens the statistics register file, the store is
-                // still one fused traversal (now channel-strided).
-                phases.output_store = out_elems * self.b_a / 8;
-                acc_stats_axis = kernel::minmax_fq_axis(&mut real, &ranges, out_bits);
+                // identical traffic to Static — the payload buffer has the
+                // same size; per-channel granularity only widens the
+                // statistics register file, the store is still one fused
+                // traversal (now channel-strided).
+                if out_bits <= 8 {
+                    let mut payload =
+                        vec![0u8; kernel::payload_bytes(real.len(), out_bits)];
+                    acc_stats_axis = if out_bits <= 4 {
+                        let s = kernel::fq_store_i4_axis(&real, &mut payload, &ranges, out_bits);
+                        kernel::dequant_i4_axis(&payload, &mut real, &ranges, out_bits);
+                        s
+                    } else {
+                        let s = kernel::fq_store_i8_axis(&real, &mut payload, &ranges, out_bits);
+                        kernel::dequant_i8_axis(&payload, &mut real, &ranges, out_bits);
+                        s
+                    };
+                    phases.output_store = payload.len() as u64;
+                } else {
+                    phases.output_store = out_elems * self.b_a / 8;
+                    acc_stats_axis = kernel::minmax_fq_axis(&mut real, &ranges, out_bits);
+                }
                 acc_stats_axis.iter().fold(
                     (f32::INFINITY, f32::NEG_INFINITY),
                     |(lo, hi), &(l, h)| (lo.min(l), hi.max(h)),

@@ -81,8 +81,9 @@ pub fn forward_gemm(
 /// Quantize-and-store one backward `G_X` tensor under `scheme`: the
 /// gradient spec picks the bit-width and granularity of the fused store
 /// (`rows` as in [`forward_gemm`]).  Returns the per-row Fig. 3
-/// statistics and the bits moved — `gx.len() * g_bits`, which is how a
-/// mixed-precision `g:4` scheme is verified end-to-end.
+/// statistics and the bits moved — `8 *` the integer payload buffer the
+/// store emitted (`gx.len() * g_bits` for byte-aligned widths), which
+/// is how a mixed-precision `g:4` scheme is verified end-to-end.
 pub fn store_gradient(
     scheme: &QuantScheme,
     gx: &mut [f32],

@@ -17,7 +17,13 @@
 //!   count in 1..=9 — covering both the lane-mapped fast path
 //!   (`c | LANES`) and the wrapped-counter fallback;
 //! * explicit parallel span counts {1, 2, 7, 16} (determinism does not
-//!   depend on how many workers the tensor was split across).
+//!   depend on how many workers the tensor was split across);
+//! * integer-payload stores (`fq_store_i8`, nibble-packed
+//!   `fq_store_i4`, their `_axis` variants and the `dequant_*`
+//!   readbacks): pack -> unpack round trips must produce byte-identical
+//!   payloads and bit-identical decodes on every backend, including odd
+//!   lengths straddling the i4 pack boundary, empty slices and odd
+//!   channel counts.
 //!
 //! Cases are seeded (`HINDSIGHT_PT_SEED`) and shrink on failure, so a
 //! falsified property reports a minimal core, not a 3000-element dump.
@@ -366,6 +372,271 @@ fn parallel_span_counts_are_bit_equal_to_serial() {
         let mut dst = vec![0.0f32; xs.len()];
         parallel::fq_into_with(t, &xs, &mut dst, -2.0, 2.0, 8);
         assert_eq!(dst, serial_into, "fq_into diverges at {t} spans");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Integer-payload stores: pack -> unpack round trips, bit-identical
+// across backends
+// ---------------------------------------------------------------------------
+
+fn bytes_eq(a: &[u8], b: &[u8], what: &str) -> bool {
+    if a != b {
+        eprintln!("{what}: payload bytes diverge");
+        return false;
+    }
+    true
+}
+
+/// Scalar-reference i8 round trip: (payload, stats, decoded values).
+fn i8_reference(xs: &[f32], lo: f32, hi: f32, bits: u32) -> (Vec<u8>, (f32, f32), Vec<f32>) {
+    let mut payload = vec![0u8; xs.len()];
+    let stats = kernel::fq_store_i8_on(KernelBackend::Scalar, xs, &mut payload, lo, hi, bits);
+    let mut decoded = vec![0.0f32; xs.len()];
+    kernel::dequant_i8_on(KernelBackend::Scalar, &payload, &mut decoded, lo, hi, bits);
+    (payload, stats, decoded)
+}
+
+/// Scalar-reference i4 round trip (nibble-packed payload).
+fn i4_reference(xs: &[f32], lo: f32, hi: f32, bits: u32) -> (Vec<u8>, (f32, f32), Vec<f32>) {
+    let mut payload = vec![0u8; xs.len().div_ceil(2)];
+    let stats = kernel::fq_store_i4_on(KernelBackend::Scalar, xs, &mut payload, lo, hi, bits);
+    let mut decoded = vec![0.0f32; xs.len()];
+    kernel::dequant_i4_on(KernelBackend::Scalar, &payload, &mut decoded, lo, hi, bits);
+    (payload, stats, decoded)
+}
+
+#[test]
+fn i8_payload_round_trips_match_the_scalar_reference() {
+    forall_shrink(128, "conf-i8-payload", gen_case, shrink_case, |c| {
+        let (ep, es, ed) = i8_reference(&c.xs, c.lo, c.hi, c.bits);
+        let mut ok = true;
+        for b in [KernelBackend::Simd, KernelBackend::Parallel] {
+            let mut p = vec![0u8; c.xs.len()];
+            let s = kernel::fq_store_i8_on(b, &c.xs, &mut p, c.lo, c.hi, c.bits);
+            let mut d = vec![0.0f32; c.xs.len()];
+            kernel::dequant_i8_on(b, &p, &mut d, c.lo, c.hi, c.bits);
+            ok &= bytes_eq(&p, &ep, b.key())
+                && feq(s.0, es.0)
+                && feq(s.1, es.1)
+                && slices_eq(&d, &ed);
+        }
+        for t in SPAN_COUNTS {
+            let mut p = vec![0u8; c.xs.len()];
+            let s = parallel::fq_store_i8_with(t, &c.xs, &mut p, c.lo, c.hi, c.bits);
+            let mut d = vec![0.0f32; c.xs.len()];
+            parallel::dequant_i8_with(t, &p, &mut d, c.lo, c.hi, c.bits);
+            ok &= bytes_eq(&p, &ep, &format!("parallel[{t}]"))
+                && feq(s.0, es.0)
+                && feq(s.1, es.1)
+                && slices_eq(&d, &ed);
+        }
+        ok
+    });
+}
+
+#[test]
+fn i4_payload_round_trips_match_the_scalar_reference() {
+    forall_shrink(128, "conf-i4-payload", gen_case, shrink_case, |c| {
+        // the adversarial generator draws bits in 2..=8; pack-width codes
+        // are 1..=4, so clamp (the range/payload adversaries still apply)
+        let bits = c.bits.min(4);
+        let (ep, es, ed) = i4_reference(&c.xs, c.lo, c.hi, bits);
+        let mut ok = true;
+        for b in [KernelBackend::Simd, KernelBackend::Parallel] {
+            let mut p = vec![0u8; c.xs.len().div_ceil(2)];
+            let s = kernel::fq_store_i4_on(b, &c.xs, &mut p, c.lo, c.hi, bits);
+            let mut d = vec![0.0f32; c.xs.len()];
+            kernel::dequant_i4_on(b, &p, &mut d, c.lo, c.hi, bits);
+            ok &= bytes_eq(&p, &ep, b.key())
+                && feq(s.0, es.0)
+                && feq(s.1, es.1)
+                && slices_eq(&d, &ed);
+        }
+        for t in SPAN_COUNTS {
+            let mut p = vec![0u8; c.xs.len().div_ceil(2)];
+            let s = parallel::fq_store_i4_with(t, &c.xs, &mut p, c.lo, c.hi, bits);
+            let mut d = vec![0.0f32; c.xs.len()];
+            parallel::dequant_i4_with(t, &p, &mut d, c.lo, c.hi, bits);
+            ok &= bytes_eq(&p, &ep, &format!("parallel[{t}]"))
+                && feq(s.0, es.0)
+                && feq(s.1, es.1)
+                && slices_eq(&d, &ed);
+        }
+        ok
+    });
+}
+
+#[test]
+fn axis_payload_round_trips_match_the_scalar_reference() {
+    forall_shrink(96, "conf-axis-payload", gen_axis_case, shrink_axis_case, |a| {
+        let bits4 = a.bits.min(4);
+        // scalar references, both widths
+        let mut ep8 = vec![0u8; a.xs.len()];
+        let es8 = kernel::try_fq_store_i8_axis_on(
+            KernelBackend::Scalar,
+            &a.xs,
+            &mut ep8,
+            &a.ranges,
+            a.bits,
+        )
+        .unwrap();
+        let mut ed8 = vec![0.0f32; a.xs.len()];
+        kernel::dequant_i8_axis_on(KernelBackend::Scalar, &ep8, &mut ed8, &a.ranges, a.bits);
+        let mut ep4 = vec![0u8; a.xs.len().div_ceil(2)];
+        let es4 = kernel::try_fq_store_i4_axis_on(
+            KernelBackend::Scalar,
+            &a.xs,
+            &mut ep4,
+            &a.ranges,
+            bits4,
+        )
+        .unwrap();
+        let mut ed4 = vec![0.0f32; a.xs.len()];
+        kernel::dequant_i4_axis_on(KernelBackend::Scalar, &ep4, &mut ed4, &a.ranges, bits4);
+
+        let mut ok = true;
+        for b in [KernelBackend::Simd, KernelBackend::Parallel] {
+            let mut p = vec![0u8; a.xs.len()];
+            let s = kernel::try_fq_store_i8_axis_on(b, &a.xs, &mut p, &a.ranges, a.bits).unwrap();
+            let mut d = vec![0.0f32; a.xs.len()];
+            kernel::dequant_i8_axis_on(b, &p, &mut d, &a.ranges, a.bits);
+            ok &= bytes_eq(&p, &ep8, b.key()) && stats_eq(&s, &es8) && slices_eq(&d, &ed8);
+
+            let mut p = vec![0u8; a.xs.len().div_ceil(2)];
+            let s = kernel::try_fq_store_i4_axis_on(b, &a.xs, &mut p, &a.ranges, bits4).unwrap();
+            let mut d = vec![0.0f32; a.xs.len()];
+            kernel::dequant_i4_axis_on(b, &p, &mut d, &a.ranges, bits4);
+            ok &= bytes_eq(&p, &ep4, b.key()) && stats_eq(&s, &es4) && slices_eq(&d, &ed4);
+        }
+        for t in SPAN_COUNTS {
+            let mut p = vec![0u8; a.xs.len()];
+            let s = parallel::fq_store_i8_axis_with(t, &a.xs, &mut p, &a.ranges, a.bits);
+            ok &= bytes_eq(&p, &ep8, &format!("parallel[{t}] i8 axis")) && stats_eq(&s, &es8);
+
+            let mut p = vec![0u8; a.xs.len().div_ceil(2)];
+            let s = parallel::fq_store_i4_axis_with(t, &a.xs, &mut p, &a.ranges, bits4);
+            ok &= bytes_eq(&p, &ep4, &format!("parallel[{t}] i4 axis")) && stats_eq(&s, &es4);
+        }
+        ok
+    });
+}
+
+/// Satellite pin: every odd length around the nibble-pack boundaries —
+/// the final byte's high nibble must be zero on every backend, so odd
+/// payloads are byte-comparable (and hashable) across backends.
+#[test]
+fn i4_odd_lengths_straddling_the_pack_boundary_conform() {
+    let mut rng = Pcg32::new(77, 3);
+    for base in [1usize, 3, simd::LANES - 1, simd::LANES + 1, CHUNK - 1, CHUNK + 1, 2 * CHUNK + 3]
+    {
+        let xs: Vec<f32> = (0..base).map(|_| rng.normal()).collect();
+        let (ep, es, _) = i4_reference(&xs, -2.0, 2.0, 4);
+        if base % 2 == 1 {
+            assert_eq!(ep.last().unwrap() >> 4, 0, "odd length {base}: high nibble parked");
+        }
+        for b in [KernelBackend::Simd, KernelBackend::Parallel] {
+            let mut p = vec![0u8; base.div_ceil(2)];
+            let s = kernel::fq_store_i4_on(b, &xs, &mut p, -2.0, 2.0, 4);
+            assert_eq!(p, ep, "{b} @ len {base}");
+            assert_eq!(s, es, "{b} stats @ len {base}");
+        }
+        for t in SPAN_COUNTS {
+            let mut p = vec![0u8; base.div_ceil(2)];
+            let s = parallel::fq_store_i4_with(t, &xs, &mut p, -2.0, 2.0, 4);
+            assert_eq!(p, ep, "parallel[{t}] @ len {base}");
+            assert_eq!(s, es, "parallel[{t}] stats @ len {base}");
+        }
+    }
+}
+
+/// Satellite pin: empty slices on every payload entry point, every
+/// backend — no panics, neutral stats, untouched buffers.
+#[test]
+fn empty_payload_slices_on_every_backend_and_entry_point() {
+    for b in KernelBackend::ALL {
+        assert_eq!(kernel::fq_store_i8_on(b, &[], &mut [], -1.0, 1.0, 8), (0.0, 0.0));
+        assert_eq!(kernel::fq_store_i4_on(b, &[], &mut [], -1.0, 1.0, 4), (0.0, 0.0));
+        kernel::dequant_i8_on(b, &[], &mut [], -1.0, 1.0, 8);
+        kernel::dequant_i4_on(b, &[], &mut [], -1.0, 1.0, 4);
+        let ranges = [[-1.0, 1.0]; 3];
+        assert_eq!(
+            kernel::try_fq_store_i8_axis_on(b, &[], &mut [], &ranges, 8).unwrap(),
+            vec![(0.0, 0.0); 3]
+        );
+        assert_eq!(
+            kernel::try_fq_store_i4_axis_on(b, &[], &mut [], &ranges, 4).unwrap(),
+            vec![(0.0, 0.0); 3]
+        );
+        kernel::dequant_i8_axis_on(b, &[], &mut [], &ranges, 8);
+        kernel::dequant_i4_axis_on(b, &[], &mut [], &ranges, 4);
+    }
+    for t in SPAN_COUNTS {
+        assert_eq!(parallel::fq_store_i8_with(t, &[], &mut [], -1.0, 1.0, 8), (0.0, 0.0));
+        assert_eq!(parallel::fq_store_i4_with(t, &[], &mut [], -1.0, 1.0, 4), (0.0, 0.0));
+        parallel::dequant_i8_with(t, &[], &mut [], -1.0, 1.0, 8);
+        parallel::dequant_i4_with(t, &[], &mut [], -1.0, 1.0, 4);
+    }
+}
+
+/// Satellite pin: per-channel payload stores with an *odd* channel
+/// count — channel phase and nibble phase drift apart (lcm(c, 2) = 2c),
+/// the hardest alignment case for the packed axis kernels.
+#[test]
+fn odd_channel_count_axis_payload_stores_conform() {
+    let mut rng = Pcg32::new(91, 7);
+    for c in [3usize, 5, 7, 9] {
+        let rows = (2 * CHUNK) / c + 1; // deliberately not chunk-aligned
+        let xs: Vec<f32> = (0..rows * c).map(|_| rng.normal()).collect();
+        let ranges: Vec<[f32; 2]> =
+            (0..c).map(|i| [-1.0 - i as f32 * 0.3, 1.0 + i as f32 * 0.2]).collect();
+        let mut ep = vec![0u8; xs.len().div_ceil(2)];
+        let es = kernel::try_fq_store_i4_axis_on(
+            KernelBackend::Scalar,
+            &xs,
+            &mut ep,
+            &ranges,
+            4,
+        )
+        .unwrap();
+        let mut ed = vec![0.0f32; xs.len()];
+        kernel::dequant_i4_axis_on(KernelBackend::Scalar, &ep, &mut ed, &ranges, 4);
+        // the decode must round-trip the scalar store exactly
+        let mut fq_ref = xs.clone();
+        kernel::minmax_fq_axis_on(KernelBackend::Scalar, &mut fq_ref, &ranges, 4);
+        assert!(slices_eq(&ed, &fq_ref), "c={c}: dequant(store(x)) != fq(x)");
+        for b in [KernelBackend::Simd, KernelBackend::Parallel] {
+            let mut p = vec![0u8; xs.len().div_ceil(2)];
+            let s = kernel::try_fq_store_i4_axis_on(b, &xs, &mut p, &ranges, 4).unwrap();
+            assert_eq!(p, ep, "{b} @ c={c}");
+            assert!(stats_eq(&s, &es), "{b} stats @ c={c}");
+            let mut d = vec![0.0f32; xs.len()];
+            kernel::dequant_i4_axis_on(b, &p, &mut d, &ranges, 4);
+            assert!(slices_eq(&d, &ed), "{b} decode @ c={c}");
+        }
+        for t in SPAN_COUNTS {
+            let mut p = vec![0u8; xs.len().div_ceil(2)];
+            let s = parallel::fq_store_i4_axis_with(t, &xs, &mut p, &ranges, 4);
+            assert_eq!(p, ep, "parallel[{t}] @ c={c}");
+            assert!(stats_eq(&s, &es), "parallel[{t}] stats @ c={c}");
+        }
+    }
+}
+
+/// Ragged and short-buffer payload contracts reject on every backend,
+/// leaving the destination untouched.
+#[test]
+fn ragged_axis_payload_layouts_are_rejected_by_every_backend() {
+    for b in KernelBackend::ALL {
+        let xs = [1.0f32; 7];
+        let mut dst = [0u8; 7];
+        let err = kernel::try_fq_store_i8_axis_on(b, &xs, &mut dst, &[[-1.0, 1.0]; 2], 8)
+            .expect_err("ragged layout must be rejected");
+        assert_eq!(err, KernelError::RaggedAxis { len: 7, channels: 2 });
+        assert_eq!(dst, [0u8; 7], "rejected payload must be untouched");
+        let mut dst4 = [0u8; 4];
+        let err = kernel::try_fq_store_i4_axis_on(b, &xs, &mut dst4, &[], 4).unwrap_err();
+        assert_eq!(err, KernelError::NoChannels);
     }
 }
 
