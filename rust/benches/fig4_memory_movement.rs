@@ -9,7 +9,9 @@ use hindsight::quant::QuantParams;
 use hindsight::simulator::backward::{self, BwdBits};
 use hindsight::simulator::machine::{MacArray, Policy};
 use hindsight::simulator::traffic;
-use hindsight::util::bench::Table;
+use hindsight::simulator::LayerGeom;
+use hindsight::util::bench::{append_bench_record, Table};
+use hindsight::util::json::Value;
 use hindsight::util::rng::Pcg32;
 
 fn main() {
@@ -58,18 +60,18 @@ fn main() {
     // the bytes moved back to the closed-form bwd accounting
     let geom = traffic::table5_layers()[0];
     let bits = BwdBits::default();
-    let gx_elems = (geom.cin * geom.w * geom.h) as usize;
+    let gx_elems = geom.input_elems() as usize;
     let mut gx: Vec<f32> = (0..gx_elems).map(|_| rng.normal() * 0.01).collect();
     let (stats, bits_moved) = backward::store_gx_static(&mut gx, -0.04, 0.04, bits);
     println!(
         "backward G_X store ({}, fused single pass): stats [{:+.4}, {:+.4}], \
          {:.0} KB moved == the closed-form G_X store term",
-        geom.name,
+        geom.name(),
         stats.0,
         stats.1,
         bits_moved as f64 / 8.0 / 1024.0,
     );
-    assert_eq!(bits_moved, geom.cin * geom.w * geom.h * bits.b_g);
+    assert_eq!(bits_moved, geom.input_elems() * bits.b_g);
 
     // tentpole invariant: static-store traffic is the *measured* size of
     // the integer payload buffer the store emitted, not f32 accounting.
@@ -92,4 +94,32 @@ fn main() {
         moved4 / 8,
         moved4 as f64 / 8.0 / 1024.0,
     );
+
+    // transformer leg: an attention block's input-gradient store goes
+    // through the same fused kernel — bill the nibble-packed payload and
+    // drop a transformer-labelled record into the bench trajectory
+    // (no kernel/speedup pair, so the bench-report gate skips it)
+    let attn = LayerGeom::attention("attn (mhsa)", 197, 384, 6, 64);
+    let n = attn.input_elems() as usize;
+    let mut agx: Vec<f32> = (0..n).map(|_| rng.normal() * 0.01).collect();
+    let (astats, amoved) =
+        backward::store_gx_static(&mut agx, -0.04, 0.04, BwdBits { b_g: 4, ..bits });
+    assert_eq!(amoved, kernel::payload_bytes(n, 4) as u64 * 8);
+    println!(
+        "transformer G_X store ({}, 4-bit): stats [{:+.4}, {:+.4}], {:.0} KB moved",
+        attn.name(),
+        astats.0,
+        astats.1,
+        amoved as f64 / 8.0 / 1024.0,
+    );
+    let path = append_bench_record(Value::object(vec![
+        ("bench", "fig4_memory_movement".into()),
+        ("workload", "vit_s16".into()),
+        ("layer_kind", "attention".into()),
+        ("layer", attn.name().into()),
+        ("gx_elems", n.into()),
+        ("payload_kb", (amoved as f64 / 8.0 / 1024.0).into()),
+    ]))
+    .expect("bench record");
+    println!("transformer record appended to {}", path.display());
 }

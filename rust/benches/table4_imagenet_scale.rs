@@ -58,4 +58,13 @@ fn main() {
          within 0.5% of FP32, with the static method matching the dynamic ones."
     );
     common::assert_rows_close_to_fp32(&table, 25.0);
+
+    // scale context: the memory-analysis workload zoo the mem-report /
+    // traffic benches run at full ImageNet scale (convs + transformers)
+    println!("\nworkload zoo GMACs (mem-report networks):");
+    for name in hindsight::models::names() {
+        let layers = hindsight::models::by_name(name).expect("zoo name");
+        let gmacs = layers.iter().map(|g| g.macs()).sum::<u64>() as f64 / 1e9;
+        println!("  {name:>12}: {gmacs:.2} GMACs over {} layers", layers.len());
+    }
 }

@@ -1,12 +1,26 @@
 //! Paper Table 5: memory-movement cost of static vs dynamic quantization
 //! (eqs. 4 & 5) for the five highlighted layers — an exact analytic
-//! reproduction, cross-checked against the MAC-array machine.
+//! reproduction, cross-checked against the MAC-array machine — plus the
+//! same accounting over a transformer workload (ViT-S/16), whose rows
+//! land in the bench JSON for the CI smoke gate.
 //!
 //!   cargo bench --bench table5_memory_transfer
 
+use hindsight::models;
 use hindsight::simulator::machine::MacArray;
 use hindsight::simulator::traffic::{self, BitWidths};
-use hindsight::util::bench::Table;
+use hindsight::simulator::LayerGeom;
+use hindsight::util::bench::{append_bench_record, Table};
+use hindsight::util::json::Value;
+
+fn kind_label(g: &LayerGeom) -> &'static str {
+    match g {
+        LayerGeom::Conv2d(c) if c.depthwise => "dw-conv",
+        LayerGeom::Conv2d(_) => "conv",
+        LayerGeom::Linear(_) => "linear",
+        LayerGeom::Attention(_) => "attention",
+    }
+}
 
 fn main() {
     let b = BitWidths::default();
@@ -24,20 +38,20 @@ fn main() {
     let mut t = Table::new(
         "Table 5 — memory movement, static vs dynamic (b_w=b_a=8, b_acc=32)",
         &[
-            "Layer", "Cin", "Cout", "WxH", "Static", "Dynamic", "Delta",
+            "Layer", "In", "Out", "Shape", "Static", "Dynamic", "Delta",
             "paper static", "paper dynamic", "paper delta",
         ],
     );
     for (g, (ps, pd, pdelta)) in traffic::table5_layers().iter().zip(paper) {
         let c = traffic::compare(g, b);
         // machine-level cross-check: byte-for-byte agreement with eqs. 4/5
-        assert_eq!(mac.conv_traffic(g, true).total() * 8, c.static_bits);
-        assert_eq!(mac.conv_traffic(g, false).total() * 8, c.dynamic_bits);
+        assert_eq!(mac.layer_phases(g, true).total() * 8, c.static_bits);
+        assert_eq!(mac.layer_phases(g, false).total() * 8, c.dynamic_bits);
         t.row(&[
-            g.name.to_string(),
-            g.cin.to_string(),
-            g.cout.to_string(),
-            format!("{}x{}", g.w, g.h),
+            g.name().to_string(),
+            g.fan_in().to_string(),
+            g.fan_out().to_string(),
+            g.spatial(),
             format!("{:.0} KB", c.static_kb()),
             format!("{:.0} KB", c.dynamic_kb()),
             format!("+{:.0}%", c.delta_percent()),
@@ -58,4 +72,74 @@ fn main() {
          own eq. (4); the scale-invariant delta matches exactly."
     );
     assert!(worst > 7.5 && worst < 8.1);
+
+    // transformer leg: the same eqs. 4/5 on ViT-S/16 — every layer
+    // (conv patch embed, attention, MLP linears) cross-checked against
+    // the machine's phase totals
+    let layers = models::vit_s16();
+    let (mut tot_s, mut tot_d) = (0u64, 0u64);
+    for g in &layers {
+        let c = traffic::compare(g, b);
+        assert_eq!(mac.layer_phases(g, true).total() * 8, c.static_bits);
+        assert_eq!(mac.layer_phases(g, false).total() * 8, c.dynamic_bits);
+        tot_s += c.static_bits;
+        tot_d += c.dynamic_bits;
+    }
+    let mut t2 = Table::new(
+        "ViT-S/16 under the same accounting (patch embed + block 0 shown)",
+        &["Layer", "Kind", "Static", "Dynamic", "Delta"],
+    );
+    for g in layers.iter().take(4) {
+        let c = traffic::compare(g, b);
+        t2.row(&[
+            g.name().to_string(),
+            kind_label(g).to_string(),
+            format!("{:.0} KB", c.static_kb()),
+            format!("{:.0} KB", c.dynamic_kb()),
+            format!("+{:.0}%", c.delta_percent()),
+        ]);
+    }
+    t2.row(&[
+        "TOTAL (38 layers)".into(),
+        "".into(),
+        format!("{:.0} KB", tot_s as f64 / 8.0 / 1024.0),
+        format!("{:.0} KB", tot_d as f64 / 8.0 / 1024.0),
+        format!("+{:.0}%", (tot_d as f64 / tot_s as f64 - 1.0) * 100.0),
+    ]);
+    t2.print();
+    println!(
+        "network ratio (dynamic/static): {:.2}x over the full ViT-S/16",
+        tot_d as f64 / tot_s as f64
+    );
+    assert!(tot_d > tot_s, "dynamic must move strictly more than static");
+
+    // drop the transformer rows into the bench trajectory: one record
+    // for the first attention layer, one for the network total (no
+    // kernel/speedup pair, so the bench-report gate skips them)
+    let attn = layers
+        .iter()
+        .find(|g| matches!(g, LayerGeom::Attention(_)))
+        .expect("ViT-S/16 has attention layers");
+    let c = traffic::compare(attn, b);
+    let path = append_bench_record(Value::object(vec![
+        ("bench", "table5_memory_transfer".into()),
+        ("workload", "vit_s16".into()),
+        ("layer_kind", "attention".into()),
+        ("layer", attn.name().into()),
+        ("static_kb", c.static_kb().into()),
+        ("dynamic_kb", c.dynamic_kb().into()),
+        ("ratio", c.ratio().into()),
+    ]))
+    .expect("bench record");
+    append_bench_record(Value::object(vec![
+        ("bench", "table5_memory_transfer".into()),
+        ("workload", "vit_s16".into()),
+        ("layer_kind", "network".into()),
+        ("layer", "TOTAL".into()),
+        ("static_kb", (tot_s as f64 / 8.0 / 1024.0).into()),
+        ("dynamic_kb", (tot_d as f64 / 8.0 / 1024.0).into()),
+        ("ratio", (tot_d as f64 / tot_s as f64).into()),
+    ]))
+    .expect("bench record");
+    println!("transformer records appended to {}", path.display());
 }

@@ -34,4 +34,4 @@ pub use grid::{parse_seeds, GridCell, GridSpec};
 pub use ranges::RangeManager;
 pub use store::{CellKey, RunStore};
 pub use sweep::{sweep_row, SweepOutcome};
-pub use trainer::Trainer;
+pub use trainer::{validate_scheme_sites, Trainer};

@@ -107,6 +107,20 @@ impl RangeManager {
         }
     }
 
+    /// Manager over an *analytic* workload: builds the synthetic
+    /// [`ModelSpec`] of a [`LayerGeom`](crate::simulator::LayerGeom)
+    /// graph (one site per quantizer of each layer's site plan, heads as
+    /// the trailing channel axis for attention) and resolves `scheme`
+    /// against it — the entry point for end-to-end range estimation on
+    /// workloads with no compiled artifacts.
+    pub fn for_workload(
+        name: &str,
+        layers: &[crate::simulator::LayerGeom],
+        scheme: &QuantScheme,
+    ) -> Self {
+        Self::new(&crate::simulator::workload_spec(name, layers), scheme)
+    }
+
     /// The scheme this manager was built from.
     pub fn scheme(&self) -> &QuantScheme {
         &self.scheme
@@ -611,6 +625,43 @@ mod tests {
         assert!(rows[0][1] < 1.5 && rows[1][1] > 3.0, "{rows:?}");
     }
 
+    /// Satellite acceptance: an `@pc` gradient scheme on the attention
+    /// workload yields one range row per *head* on the score-gradient
+    /// site — heads are the trailing channel axis of the site plan.
+    #[test]
+    fn attention_workload_groups_gradient_rows_per_head() {
+        use crate::simulator::LayerGeom;
+        let layers = [LayerGeom::attention("attn", 16, 32, 4, 8)];
+        let scheme = scheme2(Estimator::HINDSIGHT, Estimator::HINDSIGHT.per_channel());
+        let mut rm = RangeManager::for_workload("toy-attn", &layers, &scheme);
+        // sites: probs (act), ctx (act), scores.gx (grad), gx (grad)
+        assert_eq!(rm.n_sites(), 4);
+        // per-tensor acts contribute 1 row each; @pc grads group by
+        // head (4) on the score site and by feature (32) on gx
+        assert_eq!(rm.n_rows(), 1 + 1 + 4 + 32);
+        assert_eq!(rm.site_rows(2).len(), 4);
+        assert_eq!(rm.site_rows(3).len(), 32);
+        assert_eq!(rm.row_offset(2), 2);
+        // per-head rows update independently: feed head-varying stats
+        let r = rm.n_rows();
+        let mut st = vec![0.0f32; 2 * r];
+        for h in 0..4 {
+            let row = rm.row_offset(2) + h;
+            st[2 * row] = -(h as f32 + 1.0);
+            st[2 * row + 1] = h as f32 + 1.0;
+        }
+        let nr = vec![0.0f32; 2 * r];
+        rm.update(
+            &Tensor::from_f32(&[r, 2], nr),
+            &Tensor::from_f32(&[r, 2], st),
+            true,
+        );
+        assert_eq!(
+            rm.site_rows(2),
+            &[[-1.0, 1.0], [-2.0, 2.0], [-3.0, 3.0], [-4.0, 4.0]]
+        );
+    }
+
     /// Tentpole acceptance: every per-channel estimator pinned to one
     /// channel reproduces the per-tensor row sequence bit-for-bit over
     /// random calibration + step sequences.
@@ -625,6 +676,7 @@ mod tests {
             Estimator::MAX_HISTORY,
             Estimator::SAMPLED_MINMAX,
             Estimator::TQT,
+            Estimator::BANNER,
         ] {
             forall(
                 32,

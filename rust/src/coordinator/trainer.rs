@@ -31,6 +31,75 @@ fn search_due(step: u64, period: u64) -> bool {
     }
 }
 
+/// Validate a scheme's site-level coupling against a model's quantizer
+/// sites — shared by the engine-backed [`Trainer`] and analytic
+/// workloads built through
+/// [`workload_spec`](crate::simulator::workload_spec):
+///
+/// * every per-site override must name a real quantizer site (a typo'd
+///   key would otherwise be silently inert);
+/// * search-based estimators are rejected on activation sites (the
+///   dump-graph search pass materializes gradient tensors only);
+/// * a per-site override must keep its class's graph mode and enable
+///   bit (the train graph has one mode/enable scalar per class).
+pub fn validate_scheme_sites(
+    model: &ModelSpec,
+    scheme: &crate::scheme::QuantScheme,
+) -> Result<()> {
+    use crate::runtime::manifest::SiteKind;
+    for (site, _) in scheme.overrides() {
+        if !model.sites.iter().any(|s| s.name == site) {
+            let names: Vec<&str> = model.sites.iter().map(|s| s.name.as_str()).collect();
+            anyhow::bail!(
+                "scheme override '@{site}' matches no quantizer site of model '{}' \
+                 (sites: {})",
+                model.name,
+                names.join(", ")
+            );
+        }
+    }
+    for s in &model.sites {
+        let class = match s.kind {
+            SiteKind::Act => crate::scheme::TensorClass::Activations,
+            SiteKind::Grad => crate::scheme::TensorClass::Gradients,
+        };
+        let spec = scheme.site_spec(class, &s.name);
+        // the periodic search pass only materializes gradient
+        // tensors, so a search-based estimator on an activation site
+        // would freeze at its init row forever — reject it instead
+        if spec.estimator.needs_search() && s.kind == SiteKind::Act {
+            anyhow::bail!(
+                "activation site '{}' uses search-based estimator '{}' — the dump-graph \
+                 search pass visits gradient sites only (paper Table 3 runs DSGC-style \
+                 estimators on gradients, activations fall back to 'current')",
+                s.name,
+                spec.estimator.spec()
+            );
+        }
+        // the train graph has ONE mode/enable scalar per class, so a
+        // per-site override may refine semantics only within the same
+        // graph mode (e.g. hindsight -> tqt/dsgc, all static); a
+        // dynamic override under a static class (or vice versa) would
+        // silently quantize with the wrong in-graph rule
+        let class_est = scheme.spec(class).estimator;
+        if spec.estimator.mode() != class_est.mode()
+            || spec.estimator.enabled() != class_est.enabled()
+        {
+            anyhow::bail!(
+                "site '{}' override '{}' runs in graph mode {} but its class \
+                 estimator '{}' runs in mode {} — per-site overrides must keep \
+                 the class's graph mode (static/dynamic) and enable bit",
+                s.name,
+                spec.estimator.spec(),
+                spec.estimator.mode(),
+                class_est.spec(),
+                class_est.mode()
+            );
+        }
+    }
+    Ok(())
+}
+
 /// One model + one configuration training session.
 pub struct Trainer<'e> {
     engine: &'e Engine,
@@ -112,19 +181,9 @@ impl<'e> Trainer<'e> {
         if cfg.scheme.weights.enabled() {
             check("weights", cfg.scheme.weights.bits, m.bits_w)?;
         }
-        // overrides are keyed by site name: a typo'd key would otherwise
-        // be silently inert (and dodge every check below)
-        for (site, _) in cfg.scheme.overrides() {
-            if !model.sites.iter().any(|s| s.name == site) {
-                let names: Vec<&str> = model.sites.iter().map(|s| s.name.as_str()).collect();
-                anyhow::bail!(
-                    "scheme override '@{site}' matches no quantizer site of model '{}' \
-                     (sites: {})",
-                    model.name,
-                    names.join(", ")
-                );
-            }
-        }
+        // site-level coupling (override names, act-search rejection,
+        // graph-mode drift) — shared with analytic workloads
+        validate_scheme_sites(&model, &cfg.scheme)?;
         for s in &model.sites {
             use crate::runtime::manifest::SiteKind;
             let (class, have, what) = match s.kind {
@@ -134,38 +193,6 @@ impl<'e> Trainer<'e> {
             let spec = cfg.scheme.site_spec(class, &s.name);
             if spec.enabled() {
                 check(what, spec.bits, have)?;
-            }
-            // the periodic search pass only materializes gradient
-            // tensors, so a search-based estimator on an activation site
-            // would freeze at its init row forever — reject it instead
-            if spec.estimator.needs_search() && s.kind == SiteKind::Act {
-                anyhow::bail!(
-                    "activation site '{}' uses search-based estimator '{}' — the dump-graph \
-                     search pass visits gradient sites only (paper Table 3 runs DSGC-style \
-                     estimators on gradients, activations fall back to 'current')",
-                    s.name,
-                    spec.estimator.spec()
-                );
-            }
-            // the train graph has ONE mode/enable scalar per class, so a
-            // per-site override may refine semantics only within the same
-            // graph mode (e.g. hindsight -> tqt/dsgc, all static); a
-            // dynamic override under a static class (or vice versa) would
-            // silently quantize with the wrong in-graph rule
-            let class_est = cfg.scheme.spec(class).estimator;
-            if spec.estimator.mode() != class_est.mode()
-                || spec.estimator.enabled() != class_est.enabled()
-            {
-                anyhow::bail!(
-                    "site '{}' override '{}' runs in graph mode {} but its class \
-                     estimator '{}' runs in mode {} — per-site overrides must keep \
-                     the class's graph mode (static/dynamic) and enable bit",
-                    s.name,
-                    spec.estimator.spec(),
-                    spec.estimator.mode(),
-                    class_est.spec(),
-                    class_est.mode()
-                );
             }
         }
         // the train graph has a single EMA scalar (graph_eta == the

@@ -18,6 +18,13 @@
 //!   raw gradient tensors and holds its range in between) — but where
 //!   DSGC spends `iters + 3` full fake-quant + cosine passes per search,
 //!   a sampled search is one pass over ~`budget` elements.
+//! * [`Banner`] — the layer-wise gradient range rule of Banner et al.,
+//!   "Scalable Methods for 8-bit Training of Neural Networks"
+//!   (arXiv:1805.11046): an EMA-smoothed absolute maximum snapped up to
+//!   the next power of two — GEMMLOWP-style ranges whose scale is a pure
+//!   exponent, so requantization is a shift.  A static scheme like
+//!   hindsight (the range at step `t` was computed from steps `< t`),
+//!   but symmetric and quantized-to-pow2 rather than a raw min/max hull.
 
 use std::collections::VecDeque;
 
@@ -175,6 +182,85 @@ impl RangeEstimator for SampledMinMax {
     }
 }
 
+/// Banner et al. layer-wise gradient ranges: EMA of the absolute
+/// maximum, snapped up to the next power of two.
+///
+/// Update rule (per row):
+///
+/// ```text
+///   a_t = max(|lo_t|, |hi_t|, 0)          observed absmax
+///   m_t = eta * m_{t-1} + (1 - eta) * a_t  (adopted raw on bootstrap)
+///   range_t = [-2^ceil(log2 m_t), +2^ceil(log2 m_t)]
+/// ```
+///
+/// The pow2 snap makes the quantization scale a pure exponent
+/// (GEMMLOWP convention), and also gives the EMA slack: the range only
+/// *moves* when the smoothed absmax crosses a power of two, so the grid
+/// is stable across steps even while the EMA drifts.
+#[derive(Debug, Clone)]
+pub struct Banner {
+    eta: f32,
+    /// EMA state of the absolute maximum (pre-snap)
+    absmax: Option<f32>,
+}
+
+impl Banner {
+    pub fn new(eta: f32) -> Self {
+        Self { eta, absmax: None }
+    }
+
+    fn absorb(&mut self, stats: [f32; 2], eta: f32, adopt: bool) -> [f32; 2] {
+        // NaN policy: `f32::max` drops NaN operands, so a NaN stats side
+        // contributes nothing (same convention as the MaxHistory hull)
+        let a = (-stats[0]).max(stats[1]).max(0.0);
+        let m = match self.absmax {
+            Some(m) if !adopt => eta * m + (1.0 - eta) * a,
+            _ => a,
+        };
+        self.absmax = Some(m);
+        let p = pow2_ceil(m);
+        [-p, p]
+    }
+}
+
+/// Smallest power of two >= `m` (0 for non-positive or non-finite input;
+/// exact powers stay put).
+fn pow2_ceil(m: f32) -> f32 {
+    if m <= 0.0 || !m.is_finite() {
+        0.0
+    } else {
+        m.log2().ceil().exp2()
+    }
+}
+
+impl RangeEstimator for Banner {
+    fn name(&self) -> &'static str {
+        "banner"
+    }
+
+    fn absorb_step(&mut self, ctx: StepCtx) -> [f32; 2] {
+        let adopt = ctx.bootstrap() || self.absmax.is_none();
+        self.absorb(ctx.stats, self.eta, adopt)
+    }
+
+    fn absorb_calibration(
+        &mut self,
+        _current: [f32; 2],
+        stats: [f32; 2],
+        eta: f32,
+        first_batch: bool,
+    ) -> [f32; 2] {
+        // calibration blends with the site's eta (the coordinator-side
+        // knob), steps with the constructor's; both share the EMA state
+        let adopt = first_batch || self.absmax.is_none();
+        self.absorb(stats, eta, adopt)
+    }
+
+    fn clone_box(&self) -> Box<dyn RangeEstimator> {
+        Box::new(self.clone())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -245,6 +331,41 @@ mod tests {
         // identical state)
         let out2 = e.search(&g, 8, 0);
         assert_eq!(out2.evals, 1);
+    }
+
+    #[test]
+    fn banner_ema_absmax_snaps_to_pow2() {
+        let mut e = Banner::new(0.5);
+        // bootstrap adopts raw: absmax 3 -> 2^ceil(log2 3) = 4
+        assert_eq!(e.absorb_step(ctx([-3.0, 2.0])), [-4.0, 4.0]);
+        // EMA: 0.5*3 + 0.5*5 = 4 (exact power stays put)
+        assert_eq!(e.absorb_step(ctx([-1.0, 5.0])), [-4.0, 4.0]);
+        // EMA: 0.5*4 + 0.5*0.2 = 2.1 -> snaps up to 4, not down to 2
+        assert_eq!(e.absorb_step(ctx([-0.1, 0.2])), [-4.0, 4.0]);
+    }
+
+    #[test]
+    fn banner_calibration_shares_the_ema_state() {
+        let mut e = Banner::new(0.5);
+        // first batch adopts raw (site eta 0.9 unused): absmax 2 -> [-2, 2]
+        assert_eq!(e.absorb_calibration([-1.0, 1.0], [-2.0, 2.0], 0.9, true), [-2.0, 2.0]);
+        // second batch EMAs with the *site* eta: 0.9*2 + 0.1*12 = 3 -> 4
+        assert_eq!(e.absorb_calibration([-2.0, 2.0], [-12.0, 1.0], 0.9, false), [-4.0, 4.0]);
+        // a following step EMAs the calibrated state with the ctor eta:
+        // 0.5*3 + 0.5*0.5 = 1.75 -> snaps to 2
+        assert_eq!(e.absorb_step(ctx([-0.5, 0.5])), [-2.0, 2.0]);
+    }
+
+    #[test]
+    fn banner_zero_and_nan_guards() {
+        let mut e = Banner::new(0.5);
+        // all-zero stats: degenerate [0, 0] range, no NaN from log2(0)
+        assert_eq!(e.absorb_step(ctx([0.0, 0.0])), [0.0, 0.0]);
+        // NaN sides drop out of the absmax (f32::max convention)
+        assert_eq!(e.absorb_step(ctx([f32::NAN, f32::NAN])), [0.0, 0.0]);
+        let r = e.absorb_step(ctx([f32::NAN, 3.0]));
+        assert_eq!(r, [-2.0, 2.0]); // EMA 0.5*0 + 0.5*3 = 1.5 -> 2
+        assert!(r[0].is_finite() && r[1].is_finite());
     }
 
     #[test]

@@ -36,7 +36,8 @@
 //! Submodules: [`classic`] carries the five estimators of the paper's
 //! comparison (FP32 / current / running / in-hindsight / DSGC);
 //! [`literature`] adds comparison estimators from the wider literature
-//! (window max-history, Banner et al.-style sampled min-max);
+//! (window max-history, Banner et al.-style sampled min-max, and the
+//! Banner et al. layer-wise EMA-absmax/pow2 gradient rule);
 //! [`trained`] the TQT-style trained-threshold estimator;
 //! [`perchannel`] holds the channel-replicating adapter;
 //! [`registry`] owns the name table and the [`Estimator`] handle.
@@ -48,7 +49,7 @@ pub mod registry;
 pub mod trained;
 
 pub use classic::{Current, Dsgc, Fp32, Hindsight, Running};
-pub use literature::{MaxHistory, SampledMinMax};
+pub use literature::{Banner, MaxHistory, SampledMinMax};
 pub use perchannel::PerChannel;
 pub use registry::{Estimator, EstimatorInfo, Granularity, REGISTRY};
 pub use trained::TrainedThreshold;

@@ -16,7 +16,7 @@
 use anyhow::{bail, Result};
 
 use super::classic::{Current, Dsgc, Fp32, Hindsight, Running};
-use super::literature::{MaxHistory, SampledMinMax};
+use super::literature::{Banner, MaxHistory, SampledMinMax};
 use super::perchannel::PerChannel;
 use super::trained::TrainedThreshold;
 use super::{RangeEstimator, SiteParams};
@@ -80,6 +80,9 @@ fn make_sampled(_p: SiteParams) -> Box<dyn RangeEstimator> {
 }
 fn make_tqt(p: SiteParams) -> Box<dyn RangeEstimator> {
     Box::new(TrainedThreshold::from_params(p))
+}
+fn make_banner(p: SiteParams) -> Box<dyn RangeEstimator> {
+    Box::new(Banner::new(p.eta))
 }
 
 const FP32_INFO: EstimatorInfo = EstimatorInfo {
@@ -178,6 +181,18 @@ const TQT_INFO: EstimatorInfo = EstimatorInfo {
     make: make_tqt,
 };
 
+const BANNER_INFO: EstimatorInfo = EstimatorInfo {
+    key: "banner",
+    display: "Layer-wise max (Banner et al.)",
+    mode: 2.0, // coordinator-side EMA state: the graph runs static
+    enabled: true,
+    is_static: true,
+    needs_search: false,
+    stateful: true,
+    bootstrap_dynamic: true,
+    make: make_banner,
+};
+
 /// Every registered estimator, in presentation order (the paper's five,
 /// then the literature additions).
 pub static REGISTRY: &[&EstimatorInfo] = &[
@@ -189,6 +204,7 @@ pub static REGISTRY: &[&EstimatorInfo] = &[
     &MAX_HISTORY_INFO,
     &SAMPLED_INFO,
     &TQT_INFO,
+    &BANNER_INFO,
 ];
 
 /// Cheap `Copy` handle to one registry row plus a granularity tag.
@@ -211,6 +227,7 @@ impl Estimator {
     pub const MAX_HISTORY: Self = per_tensor(&MAX_HISTORY_INFO);
     pub const SAMPLED_MINMAX: Self = per_tensor(&SAMPLED_INFO);
     pub const TQT: Self = per_tensor(&TQT_INFO);
+    pub const BANNER: Self = per_tensor(&BANNER_INFO);
 
     /// Resolve a registry key (the CLI / config string form), with an
     /// optional granularity suffix: `hindsight` is per-tensor,
@@ -430,7 +447,12 @@ mod tests {
 
     #[test]
     fn new_estimators_are_static_plugins() {
-        for est in [Estimator::MAX_HISTORY, Estimator::SAMPLED_MINMAX, Estimator::TQT] {
+        for est in [
+            Estimator::MAX_HISTORY,
+            Estimator::SAMPLED_MINMAX,
+            Estimator::TQT,
+            Estimator::BANNER,
+        ] {
             assert!(est.enabled());
             assert!(est.is_static());
             assert_eq!(est.mode(), 2.0);
@@ -443,6 +465,12 @@ mod tests {
         assert!(Estimator::TQT.stateful());
         assert!(Estimator::TQT.bootstrap_dynamic());
         assert_eq!(Estimator::parse("tqt").unwrap(), Estimator::TQT);
+        // banner: search-free stateful EMA-absmax/pow2 plugin
+        assert!(!Estimator::BANNER.needs_search());
+        assert!(Estimator::BANNER.stateful());
+        assert!(Estimator::BANNER.bootstrap_dynamic());
+        assert_eq!(Estimator::parse("banner").unwrap(), Estimator::BANNER);
+        assert_eq!(Estimator::BANNER.name(), "Layer-wise max (Banner et al.)");
     }
 
     #[test]

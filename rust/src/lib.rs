@@ -21,15 +21,18 @@
 //! * [`estimator`] — the pluggable range-estimator subsystem: the
 //!   `RangeEstimator` trait, the string-keyed registry, the paper's five
 //!   estimators and the literature additions (max-history, sampled,
-//!   TQT-style trained thresholds).
+//!   TQT-style trained thresholds, the Banner et al. layer-wise
+//!   EMA-absmax/pow2 rule).
 //! * [`scheme`] — typed per-tensor-class quantization schemes: one
 //!   `QuantSpec` (estimator, bits, eta, symmetry) per tensor class plus
 //!   per-site overrides, with a builder and a canonical string form
 //!   (`w:current:8 a:hindsight:8 g:hindsight@pc:4`).
-//! * [`simulator`] — fixed-point accelerator model: MAC-array execution
+//! * [`simulator`] — fixed-point accelerator model: the `LayerGeom`
+//!   workload graph (conv / linear / attention), MAC-array execution
 //!   and the static-vs-dynamic memory-traffic accounting of paper §6.
 //! * [`models`] — architecture geometry zoo (full-size ResNet18 / VGG16 /
-//!   MobileNetV2 for Table 5, plus the reduced training variants).
+//!   MobileNetV2 for Table 5 plus the ViT-S/16 and DeiT-T/16
+//!   transformers; the reduced training variants live in the manifest).
 //! * [`data`] — deterministic synthetic vision datasets (the Tiny
 //!   ImageNet stand-in; DESIGN.md §3 documents the substitution).
 //! * [`metrics`] — run records, seed aggregation, table emitters.

@@ -46,6 +46,7 @@
 //!   hindsight sweep --model cnn --grid "g:{hindsight,current,tqt}@{pt,pc}:8" \
 //!       --seeds 1..5 --workers 4
 //!   hindsight mem-report --network mobilenet_v2
+//!   hindsight mem-report --network vit_s16 --scheme "w:current:8 a:hindsight:8 g:hindsight@pc:4"
 
 use anyhow::{bail, Result};
 
@@ -120,6 +121,16 @@ fn run(mut args: Args) -> Result<()> {
 
 fn parse_cfg(args: &mut Args) -> Result<TrainConfig> {
     let model = args.str_or("model", "cnn");
+    // the geometry zoo (mem-report workloads) and the trainable manifest
+    // models are different namespaces — catch the mixup early with a
+    // pointer to the right subcommand instead of a manifest-lookup error
+    if models::names().contains(&model.as_str()) {
+        bail!(
+            "'{model}' is a memory-analysis workload, not a trainable model — \
+             use `hindsight mem-report --network {model}`; trainable models come \
+             from the artifact manifest (see `hindsight inspect`)"
+        );
+    }
     let mut cfg = TrainConfig::new(&model);
     cfg.steps = args.u64_or("steps", cfg.steps);
     // the typed scheme is the source of truth; the legacy flags rewrite
@@ -372,13 +383,14 @@ fn cmd_mem_report(args: &mut Args) -> Result<()> {
     } else {
         models::by_name(&network).ok_or_else(|| {
             anyhow::anyhow!(
-                "unknown network '{network}' (table5|resnet18|vgg16|mobilenet_v2)"
+                "unknown network '{network}' (table5|{})",
+                models::names().join("|")
             )
         })?
     };
     let mut table = Table::new(
         &format!("Memory movement, static vs dynamic quantization ({network})"),
-        &["Layer", "Cin", "Cout", "WxH", "Static", "Dynamic", "Delta"],
+        &["Layer", "Kind", "In", "Out", "Shape", "Static", "Dynamic", "Delta"],
     );
     let mut tot_s = 0u64;
     let mut tot_d = 0u64;
@@ -387,10 +399,11 @@ fn cmd_mem_report(args: &mut Args) -> Result<()> {
         tot_s += c.static_bits;
         tot_d += c.dynamic_bits;
         table.row(&[
-            g.name.to_string(),
-            g.cin.to_string(),
-            g.cout.to_string(),
-            format!("{}x{}", g.w, g.h),
+            g.name().to_string(),
+            g.kind_str().to_string(),
+            g.fan_in().to_string(),
+            g.fan_out().to_string(),
+            g.spatial(),
             format!("{:.0} KB", c.static_kb()),
             format!("{:.0} KB", c.dynamic_kb()),
             format!("+{:.0}%", c.delta_percent()),
@@ -398,6 +411,7 @@ fn cmd_mem_report(args: &mut Args) -> Result<()> {
     }
     table.row(&[
         "TOTAL".into(),
+        "".into(),
         "".into(),
         "".into(),
         "".into(),
@@ -429,7 +443,7 @@ fn cmd_mem_report(args: &mut Args) -> Result<()> {
             bs += c.static_bits;
             bd += c.dynamic_bits;
             bt.row(&[
-                g.name.to_string(),
+                g.name().to_string(),
                 format!("{:.0} KB", c.static_kb()),
                 format!("{:.0} KB", c.dynamic_kb()),
                 format!("+{:.0}%", c.delta_percent()),

@@ -1,20 +1,24 @@
 //! Architecture geometry zoo.
 //!
-//! Full-size ImageNet-scale layer geometries for ResNet18, VGG16 and
-//! MobileNetV2 — used by the traffic simulator (Table 5, the
-//! memory_report example and fig4 bench).  The *training* variants are
-//! defined on the Python side and described by the artifact manifest;
-//! this module is about the memory-movement analysis, which the paper
-//! performs at full ImageNet scale.
+//! Full-size ImageNet-scale layer graphs for ResNet18, VGG16,
+//! MobileNetV2 and the ViT-S/16 / DeiT-T/16 transformers — used by the
+//! traffic simulator (Table 5, the memory_report example and the
+//! fig4/table5 benches).  The *training* variants are defined on the
+//! Python side and described by the artifact manifest; this module is
+//! about the memory-movement analysis, which the paper performs at full
+//! ImageNet scale.  Everything is a [`LayerGeom`] graph: the conv nets
+//! are pure `Conv2d` chains, the transformers mix a conv patch embed
+//! with `Attention` and `Linear` layers (heads are the `@pc`
+//! channel-group axis).
 
-use crate::simulator::Conv2dGeom;
+use crate::simulator::LayerGeom;
 
 /// All conv layers of ResNet18 at 224x224 input (output-map sizes).
-pub fn resnet18() -> Vec<Conv2dGeom> {
-    let mut v = vec![Conv2dGeom::new("conv1 7x7/2", 3, 64, 7, 112, 112, false)];
+pub fn resnet18() -> Vec<LayerGeom> {
+    let mut v = vec![LayerGeom::conv("conv1 7x7/2", 3, 64, 7, 112, 112, false)];
     // layer1: 2 basic blocks @ 64ch, 56x56
     for i in 0..4 {
-        v.push(Conv2dGeom::new(
+        v.push(LayerGeom::conv(
             match i {
                 0 => "layer1 3x3 a",
                 1 => "layer1 3x3 b",
@@ -30,28 +34,28 @@ pub fn resnet18() -> Vec<Conv2dGeom> {
         ));
     }
     // layer2: downsample to 128ch, 28x28
-    v.push(Conv2dGeom::new("layer2 3x3/2", 64, 128, 3, 28, 28, false));
-    v.push(Conv2dGeom::new("layer2 1x1/2 (sc)", 64, 128, 1, 28, 28, false));
+    v.push(LayerGeom::conv("layer2 3x3/2", 64, 128, 3, 28, 28, false));
+    v.push(LayerGeom::conv("layer2 1x1/2 (sc)", 64, 128, 1, 28, 28, false));
     for _ in 0..3 {
-        v.push(Conv2dGeom::new("layer2 3x3", 128, 128, 3, 28, 28, false));
+        v.push(LayerGeom::conv("layer2 3x3", 128, 128, 3, 28, 28, false));
     }
     // layer3: 256ch, 14x14
-    v.push(Conv2dGeom::new("layer3 3x3/2", 128, 256, 3, 14, 14, false));
-    v.push(Conv2dGeom::new("layer3 1x1/2 (sc)", 128, 256, 1, 14, 14, false));
+    v.push(LayerGeom::conv("layer3 3x3/2", 128, 256, 3, 14, 14, false));
+    v.push(LayerGeom::conv("layer3 1x1/2 (sc)", 128, 256, 1, 14, 14, false));
     for _ in 0..3 {
-        v.push(Conv2dGeom::new("layer3 3x3", 256, 256, 3, 14, 14, false));
+        v.push(LayerGeom::conv("layer3 3x3", 256, 256, 3, 14, 14, false));
     }
     // layer4: 512ch, 7x7
-    v.push(Conv2dGeom::new("layer4 3x3/2", 256, 512, 3, 7, 7, false));
-    v.push(Conv2dGeom::new("layer4 1x1/2 (sc)", 256, 512, 1, 7, 7, false));
+    v.push(LayerGeom::conv("layer4 3x3/2", 256, 512, 3, 7, 7, false));
+    v.push(LayerGeom::conv("layer4 1x1/2 (sc)", 256, 512, 1, 7, 7, false));
     for _ in 0..3 {
-        v.push(Conv2dGeom::new("layer4 3x3", 512, 512, 3, 7, 7, false));
+        v.push(LayerGeom::conv("layer4 3x3", 512, 512, 3, 7, 7, false));
     }
     v
 }
 
 /// All conv layers of VGG16 at 224x224 input.
-pub fn vgg16() -> Vec<Conv2dGeom> {
+pub fn vgg16() -> Vec<LayerGeom> {
     let plan: &[(&'static str, u64, u64, u64)] = &[
         ("block1 conv1", 3, 64, 224),
         ("block1 conv2", 64, 64, 224),
@@ -68,14 +72,14 @@ pub fn vgg16() -> Vec<Conv2dGeom> {
         ("block5 conv3", 512, 512, 14),
     ];
     plan.iter()
-        .map(|&(name, cin, cout, hw)| Conv2dGeom::new(name, cin, cout, 3, hw, hw, false))
+        .map(|&(name, cin, cout, hw)| LayerGeom::conv(name, cin, cout, 3, hw, hw, false))
         .collect()
 }
 
 /// All conv layers of MobileNetV2 at 224x224 input (expand/depthwise/
 /// project per inverted-residual block, t=6).
-pub fn mobilenet_v2() -> Vec<Conv2dGeom> {
-    let mut v = vec![Conv2dGeom::new("conv 3x3/2", 3, 32, 3, 112, 112, false)];
+pub fn mobilenet_v2() -> Vec<LayerGeom> {
+    let mut v = vec![LayerGeom::conv("conv 3x3/2", 3, 32, 3, 112, 112, false)];
     // (t, cin, cout, n, first-stride, in_hw)
     let blocks: &[(u64, u64, u64, u64, u64, u64)] = &[
         (1, 32, 16, 1, 1, 112),
@@ -94,26 +98,68 @@ pub fn mobilenet_v2() -> Vec<Conv2dGeom> {
             let hw_out = hw / stride;
             let mid = cin * t;
             if t != 1 {
-                v.push(Conv2dGeom::new("expand 1x1", cin, mid, 1, hw, hw, false));
+                v.push(LayerGeom::conv("expand 1x1", cin, mid, 1, hw, hw, false));
             }
             // depthwise geometry recorded at its *input* resolution, the
             // convention of the paper's Table 5 (96ch DW at 112x112)
-            v.push(Conv2dGeom::new("dw 3x3", mid, mid, 3, hw, hw, true));
-            v.push(Conv2dGeom::new("project 1x1", mid, cout, 1, hw_out, hw_out, false));
+            v.push(LayerGeom::conv("dw 3x3", mid, mid, 3, hw, hw, true));
+            v.push(LayerGeom::conv("project 1x1", mid, cout, 1, hw_out, hw_out, false));
             cin = cout;
             hw = hw_out;
         }
     }
-    v.push(Conv2dGeom::new("conv 1x1", 320, 1280, 1, 7, 7, false));
+    v.push(LayerGeom::conv("conv 1x1", 320, 1280, 1, 7, 7, false));
     v
 }
 
+/// ViT-style encoder at 224x224 / patch 16: a conv patch embed
+/// (16x16/16 -> 14x14 = 196 patches, +1 cls token => t=197), 12 pre-norm
+/// blocks of multi-head self-attention + 4x MLP, and a classifier head.
+/// `d_model` and `n_heads` select the variant; `head_dim` is 64 in both.
+fn vit_like(d_model: u64, n_heads: u64) -> Vec<LayerGeom> {
+    const TOKENS: u64 = 197;
+    let mut v = vec![LayerGeom::conv(
+        "patch-embed 16x16/16",
+        3,
+        d_model,
+        16,
+        14,
+        14,
+        false,
+    )];
+    for _ in 0..12 {
+        v.push(LayerGeom::attention("attn (mhsa)", TOKENS, d_model, n_heads, 64));
+        v.push(LayerGeom::linear("mlp fc1", d_model, 4 * d_model, TOKENS));
+        v.push(LayerGeom::linear("mlp fc2", 4 * d_model, d_model, TOKENS));
+    }
+    v.push(LayerGeom::linear("head fc", d_model, 1000, 1));
+    v
+}
+
+/// ViT-S/16: d=384, 6 heads x 64, 12 blocks (~4.6 GMACs at t=197).
+pub fn vit_s16() -> Vec<LayerGeom> {
+    vit_like(384, 6)
+}
+
+/// DeiT-T/16: d=192, 3 heads x 64, 12 blocks (~1.3 GMACs at t=197).
+pub fn deit_t16() -> Vec<LayerGeom> {
+    vit_like(192, 3)
+}
+
+/// Every workload name [`by_name`] resolves — the single source of
+/// truth the CLI error paths and docs enumerate.
+pub fn names() -> &'static [&'static str] {
+    &["resnet18", "vgg16", "mobilenet_v2", "vit_s16", "deit_t16"]
+}
+
 /// Named lookup used by the CLI / memory_report example.
-pub fn by_name(name: &str) -> Option<Vec<Conv2dGeom>> {
+pub fn by_name(name: &str) -> Option<Vec<LayerGeom>> {
     match name {
         "resnet18" => Some(resnet18()),
         "vgg16" => Some(vgg16()),
         "mobilenet_v2" => Some(mobilenet_v2()),
+        "vit_s16" => Some(vit_s16()),
+        "deit_t16" => Some(deit_t16()),
         _ => None,
     }
 }
@@ -130,15 +176,19 @@ mod tests {
         // paper Table 5 rows exist in the zoo
         assert!(layers
             .iter()
+            .filter_map(|l| l.as_conv())
             .any(|g| g.cin == 64 && g.cout == 64 && g.w == 56 && g.k == 3));
         assert!(layers
             .iter()
+            .filter_map(|l| l.as_conv())
             .any(|g| g.cin == 256 && g.cout == 256 && g.w == 14 && g.k == 3));
     }
 
     #[test]
     fn vgg16_has_13_convs() {
-        assert_eq!(vgg16().len(), 13);
+        let layers = vgg16();
+        assert_eq!(layers.len(), 13);
+        assert!(layers.iter().all(|l| l.as_conv().is_some()));
     }
 
     #[test]
@@ -150,9 +200,10 @@ mod tests {
         // paper Table 5's 96-channel 112x112 depthwise exists
         assert!(layers
             .iter()
+            .filter_map(|l| l.as_conv())
             .any(|g| g.depthwise && g.cin == 96 && g.w == 112));
         // depthwise layers never mix channels
-        for g in &layers {
+        for g in layers.iter().filter_map(|l| l.as_conv()) {
             if g.depthwise {
                 assert_eq!(g.cin, g.cout);
             }
@@ -167,8 +218,46 @@ mod tests {
     }
 
     #[test]
+    fn vit_s16_structure_and_macs() {
+        let layers = vit_s16();
+        // patch embed + 12 * (attn, fc1, fc2) + head
+        assert_eq!(layers.len(), 38);
+        let attn: Vec<_> = layers
+            .iter()
+            .filter(|l| matches!(l, LayerGeom::Attention(_)))
+            .collect();
+        assert_eq!(attn.len(), 12);
+        // every attention block groups ranges by head under @pc
+        for a in &attn {
+            assert_eq!(a.channels(), 6);
+            assert_eq!(a.kind_str(), "attn");
+        }
+        // ViT-S/16 is ~4.6 GMACs at 224x224 (t=197)
+        let total: u64 = layers.iter().map(|g| g.macs()).sum();
+        assert!(total > 4_300_000_000 && total < 4_900_000_000, "{total}");
+    }
+
+    #[test]
+    fn deit_t16_is_the_tiny_variant() {
+        let layers = deit_t16();
+        assert_eq!(layers.len(), 38);
+        // DeiT-T/16 is ~1.3 GMACs
+        let total: u64 = layers.iter().map(|g| g.macs()).sum();
+        assert!(total > 1_100_000_000 && total < 1_400_000_000, "{total}");
+        // 3 heads of 64 at d=192
+        assert!(layers
+            .iter()
+            .any(|l| matches!(l, LayerGeom::Attention(a) if a.n_heads == 3 && a.d_model == 192)));
+    }
+
+    #[test]
     fn lookup_by_name() {
         assert!(by_name("resnet18").is_some());
+        assert!(by_name("vit_s16").is_some());
         assert!(by_name("nope").is_none());
+        // names() is the source of truth: every listed workload resolves
+        for name in names() {
+            assert!(by_name(name).is_some(), "{name} listed but unresolvable");
+        }
     }
 }

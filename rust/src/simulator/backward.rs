@@ -16,7 +16,8 @@
 //!   3.1), so its store is always full-precision — static and dynamic
 //!   pay it equally.
 
-use super::traffic::{BitWidths, Conv2dGeom, TrafficCost};
+use super::layer::LayerGeom;
+use super::traffic::{BitWidths, TrafficCost};
 use crate::quant::kernel;
 
 /// Bit-widths of the backward datapath.
@@ -60,9 +61,9 @@ impl BwdBits {
 /// Eq. (4)-analogue for the backward pass, static `Q_G`:
 /// weights + incoming G_Y + store quantized G_X + (G_W path: re-read X,
 /// store FP32 G_W).
-pub fn bwd_static_cost(g: &Conv2dGeom, b: BwdBits) -> u64 {
+pub fn bwd_static_cost(g: &LayerGeom, b: BwdBits) -> u64 {
     let gy = g.output_elems() * b.b_g; // load quantized output-gradient
-    let gx_store = g.cin * g.w * g.h * b.b_g; // store quantized G_X
+    let gx_store = g.input_elems() * b.b_g; // store quantized G_X
     let x_reload = g.input_bits(b.b_a); // re-read saved activations
     let gw_store = g.weight_bits(b.b_acc); // FP32 weight gradient out
     g.weight_bits(b.b_w) + gy + gx_store + x_reload + gw_store
@@ -70,8 +71,8 @@ pub fn bwd_static_cost(g: &Conv2dGeom, b: BwdBits) -> u64 {
 
 /// Eq. (5)-analogue: dynamic `Q_G` must round-trip the G_X accumulator
 /// output at `b_acc` before it can be quantized.
-pub fn bwd_dynamic_cost(g: &Conv2dGeom, b: BwdBits) -> u64 {
-    let gx_elems = g.cin * g.w * g.h;
+pub fn bwd_dynamic_cost(g: &LayerGeom, b: BwdBits) -> u64 {
+    let gx_elems = g.input_elems();
     bwd_static_cost(g, b)
         - gx_elems * b.b_g                 // replace the direct store...
         + gx_elems * b.b_acc               // ...with acc store
@@ -79,7 +80,7 @@ pub fn bwd_dynamic_cost(g: &Conv2dGeom, b: BwdBits) -> u64 {
         + gx_elems * b.b_g // quantized store
 }
 
-pub fn bwd_compare(g: &Conv2dGeom, b: BwdBits) -> TrafficCost {
+pub fn bwd_compare(g: &LayerGeom, b: BwdBits) -> TrafficCost {
     TrafficCost {
         static_bits: bwd_static_cost(g, b),
         dynamic_bits: bwd_dynamic_cost(g, b),
@@ -151,7 +152,7 @@ pub fn store_gx_static_axis(
 /// policy; the deployment-level number the paper's Sec. 6 argument
 /// implies.  Returns (static_bits, dynamic_bits).
 pub fn training_step_cost(
-    layers: &[Conv2dGeom],
+    layers: &[LayerGeom],
     fwd: BitWidths,
     bwd: BwdBits,
 ) -> (u64, u64) {
@@ -175,7 +176,7 @@ pub struct NetworkTraffic {
 }
 
 impl NetworkTraffic {
-    pub fn analyze(name: &str, layers: &[Conv2dGeom]) -> Self {
+    pub fn analyze(name: &str, layers: &[LayerGeom]) -> Self {
         let fwd_b = BitWidths::default();
         let bwd_b = BwdBits::default();
         let fwd = TrafficCost {
@@ -214,7 +215,7 @@ mod tests {
             let st = bwd_static_cost(&g, b);
             let dy = bwd_dynamic_cost(&g, b);
             // the gap is exactly two b_acc round trips of G_X
-            assert_eq!(dy - st, 2 * g.cin * g.w * g.h * b.b_acc);
+            assert_eq!(dy - st, 2 * g.input_elems() * b.b_acc);
         }
     }
 
@@ -250,7 +251,7 @@ mod tests {
         use crate::util::rng::Pcg32;
         let g = traffic::table5_layers()[0];
         let b = BwdBits::default();
-        let n = (g.cin * g.w * g.h) as usize;
+        let n = g.input_elems() as usize;
         let mut rng = Pcg32::new(17, 1);
         let mut gx: Vec<f32> = (0..n).map(|_| rng.normal() * 0.01).collect();
         let expect_stats = minmax(&gx);
@@ -258,7 +259,7 @@ mod tests {
         // the single pass reports the pre-quantization extrema ...
         assert_eq!(stats, expect_stats);
         // ... moves exactly the closed-form G_X store term ...
-        assert_eq!(bits_moved, g.cin * g.w * g.h * b.b_g);
+        assert_eq!(bits_moved, g.input_elems() * b.b_g);
         // ... and leaves the tensor on the b_g grid
         let qp = QuantParams::from_range(-0.05, 0.05, b.b_g as u32);
         assert!(gx.iter().all(|&x| (qp.fq(x) - x).abs() < 1e-7));
@@ -311,6 +312,21 @@ mod tests {
             assert!(t.step_ratio() > 1.2, "{net}: ratio {}", t.step_ratio());
             assert!(t.step_static_mb > 1.0);
             // fwd + bwd decompose the step totals
+            let total_s = (t.fwd.static_bits + t.bwd.static_bits) as f64 / 8e6;
+            assert!((total_s - t.step_static_mb).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn training_step_transformer_totals() {
+        // the layer-graph refactor's new workloads go through the same
+        // closed-form accounting: attention blocks pay the static/dynamic
+        // asymmetry on every GEMM-stage store
+        for net in ["vit_s16", "deit_t16"] {
+            let layers = models::by_name(net).unwrap();
+            let t = NetworkTraffic::analyze(net, &layers);
+            assert!(t.step_ratio() > 1.2, "{net}: ratio {}", t.step_ratio());
+            assert!(t.step_static_mb > 1.0, "{net}: {} MB", t.step_static_mb);
             let total_s = (t.fwd.static_bits + t.bwd.static_bits) as f64 / 8e6;
             assert!((total_s - t.step_static_mb).abs() < 1e-9);
         }

@@ -1,0 +1,458 @@
+//! Layer-graph abstraction over workload geometry.
+//!
+//! The paper pitches in-hindsight estimation as a drop-in range
+//! estimator for *any* quantized-training workload, but the original
+//! traffic stack was hardwired to [`Conv2dGeom`].  [`LayerGeom`] is the
+//! interface the rest of the stack actually consumes — MAC counts,
+//! per-tensor-class traffic volumes, quantizer-site plans, and trailing
+//! channel/head counts for `@pc` granularity — with three variants:
+//!
+//! * [`LayerGeom::Conv2d`] — the original conv geometry, unchanged.
+//!   Every cost formula consumes only `weight_bits` / `input_bits` /
+//!   `output_elems`, so the conv path is bit-for-bit identical to the
+//!   pre-refactor accounting (pinned by the golden parity tests below).
+//! * [`LayerGeom::Linear`] — a token-batched fully connected layer
+//!   (transformer MLP halves, classifier heads, patch embeddings when
+//!   expressed as matmul).
+//! * [`LayerGeom::Attention`] — one multi-head self-attention block:
+//!   the QKV projections, the softmax-scaled score matmul `Q K^T`, the
+//!   value matmul `P V`, and the output projection, accounted as four
+//!   GEMM stages.  `n_heads` is the channel-group axis: per-head range
+//!   rows are exactly the per-channel machinery with heads as the
+//!   trailing axis.
+//!
+//! [`workload_spec`] turns a layer list into a synthetic [`ModelSpec`]
+//! whose quantizer sites carry head-last feature shapes, so
+//! `RangeManager` discovers per-head row groups with zero new code.
+
+use crate::runtime::manifest::{ModelSpec, SiteKind, SiteSpec};
+
+pub use super::traffic::Conv2dGeom;
+
+/// Token-batched fully connected layer: `tokens x d_in  @  d_in x d_out`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinearGeom {
+    pub name: &'static str,
+    pub d_in: u64,
+    pub d_out: u64,
+    /// rows of the input matrix (sequence length x batch; 1 for a head)
+    pub tokens: u64,
+}
+
+/// One multi-head self-attention block (pre-norm ViT convention).
+///
+/// Four GEMM stages per block:
+///
+/// ```text
+///   QKV:    tokens x d_model  @  d_model x 3*inner      (inner = heads * head_dim)
+///   scores: per head, tokens x head_dim @ head_dim x tokens   (softmax fused)
+///   ctx:    per head, tokens x tokens   @ tokens x head_dim
+///   out:    tokens x inner    @  inner x d_model
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AttentionGeom {
+    pub name: &'static str,
+    pub tokens: u64,
+    pub d_model: u64,
+    pub n_heads: u64,
+    pub head_dim: u64,
+}
+
+impl AttentionGeom {
+    /// The projected inner width, `n_heads * head_dim` (== `d_model` in
+    /// the standard ViT configs, but not required to be).
+    pub const fn inner(&self) -> u64 {
+        self.n_heads * self.head_dim
+    }
+}
+
+/// Geometry of one layer of a workload graph.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LayerGeom {
+    Conv2d(Conv2dGeom),
+    Linear(LinearGeom),
+    Attention(AttentionGeom),
+}
+
+impl LayerGeom {
+    /// Conv constructor (same argument order as [`Conv2dGeom::new`]).
+    pub const fn conv(
+        name: &'static str,
+        cin: u64,
+        cout: u64,
+        k: u64,
+        w: u64,
+        h: u64,
+        depthwise: bool,
+    ) -> Self {
+        Self::Conv2d(Conv2dGeom::new(name, cin, cout, k, w, h, depthwise))
+    }
+
+    pub const fn linear(name: &'static str, d_in: u64, d_out: u64, tokens: u64) -> Self {
+        Self::Linear(LinearGeom {
+            name,
+            d_in,
+            d_out,
+            tokens,
+        })
+    }
+
+    pub const fn attention(
+        name: &'static str,
+        tokens: u64,
+        d_model: u64,
+        n_heads: u64,
+        head_dim: u64,
+    ) -> Self {
+        Self::Attention(AttentionGeom {
+            name,
+            tokens,
+            d_model,
+            n_heads,
+            head_dim,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Conv2d(g) => g.name,
+            Self::Linear(g) => g.name,
+            Self::Attention(g) => g.name,
+        }
+    }
+
+    /// Short layer-kind tag for reports and bench records.
+    pub fn kind_str(&self) -> &'static str {
+        match self {
+            Self::Conv2d(g) if g.depthwise => "dw-conv",
+            Self::Conv2d(_) => "conv",
+            Self::Linear(_) => "linear",
+            Self::Attention(_) => "attn",
+        }
+    }
+
+    /// The conv geometry, when this layer is one.
+    pub fn as_conv(&self) -> Option<&Conv2dGeom> {
+        match self {
+            Self::Conv2d(g) => Some(g),
+            _ => None,
+        }
+    }
+
+    /// Weight tensor footprint in *bits* at width `b_w`.  Attention
+    /// counts the QKV and output projection matrices (the score/value
+    /// matmuls are activation-activation, no weights).
+    pub fn weight_bits(&self, b_w: u64) -> u64 {
+        match self {
+            Self::Conv2d(g) => g.weight_bits(b_w),
+            Self::Linear(g) => g.d_in * g.d_out * b_w,
+            Self::Attention(g) => {
+                (g.d_model * 3 * g.inner() + g.inner() * g.d_model) * b_w
+            }
+        }
+    }
+
+    /// Elements streamed *into* the layer's GEMM stages at activation
+    /// width.  For attention that is the block input plus the Q/K/V/P
+    /// operands the score and value matmuls re-read (Q, K for scores;
+    /// P, V for context; ctx for the output projection):
+    /// `t*d + 4*t*inner + heads*t^2`.
+    pub fn input_elems(&self) -> u64 {
+        match self {
+            Self::Conv2d(g) => g.cin * g.w * g.h,
+            Self::Linear(g) => g.tokens * g.d_in,
+            Self::Attention(g) => {
+                let (t, h) = (g.tokens, g.n_heads);
+                t * g.d_model + 4 * t * g.inner() + h * t * t
+            }
+        }
+    }
+
+    pub fn input_bits(&self, b_a: u64) -> u64 {
+        self.input_elems() * b_a
+    }
+
+    /// Elements each GEMM stage writes through the output quantizer.
+    /// For attention: QKV out (`3*t*inner`), softmaxed scores
+    /// (`heads*t^2`, the softmax is fused into the score store), context
+    /// (`t*inner`), and the output projection (`t*d`).
+    pub fn output_elems(&self) -> u64 {
+        match self {
+            Self::Conv2d(g) => g.output_elems(),
+            Self::Linear(g) => g.tokens * g.d_out,
+            Self::Attention(g) => {
+                let (t, h) = (g.tokens, g.n_heads);
+                3 * t * g.inner() + h * t * t + t * g.inner() + t * g.d_model
+            }
+        }
+    }
+
+    /// MAC count of the layer (roofline-style reporting).
+    pub fn macs(&self) -> u64 {
+        match self {
+            Self::Conv2d(g) => g.macs(),
+            Self::Linear(g) => g.tokens * g.d_in * g.d_out,
+            Self::Attention(g) => {
+                let t = g.tokens;
+                // QKV (3) + out projection (1) = 4 weight GEMMs, plus the
+                // score and context matmuls (t^2 * head_dim each, per head)
+                4 * t * g.d_model * g.inner() + 2 * t * t * g.inner()
+            }
+        }
+    }
+
+    /// Channel-group count for `@pc` granularity: output channels for
+    /// convs, output features for linears, **heads** for attention.
+    pub fn channels(&self) -> u64 {
+        match self {
+            Self::Conv2d(g) => g.cout,
+            Self::Linear(g) => g.d_out,
+            Self::Attention(g) => g.n_heads,
+        }
+    }
+
+    /// Input-side width (report column).
+    pub fn fan_in(&self) -> u64 {
+        match self {
+            Self::Conv2d(g) => g.cin,
+            Self::Linear(g) => g.d_in,
+            Self::Attention(g) => g.d_model,
+        }
+    }
+
+    /// Output-side width (report column).
+    pub fn fan_out(&self) -> u64 {
+        match self {
+            Self::Conv2d(g) => g.cout,
+            Self::Linear(g) => g.d_out,
+            Self::Attention(g) => g.d_model,
+        }
+    }
+
+    /// Spatial/sequence extent for reports: `WxH` for convs, token and
+    /// head counts otherwise.
+    pub fn spatial(&self) -> String {
+        match self {
+            Self::Conv2d(g) => format!("{}x{}", g.w, g.h),
+            Self::Linear(g) => format!("t={}", g.tokens),
+            Self::Attention(g) => format!("t={}/h={}", g.tokens, g.n_heads),
+        }
+    }
+
+    /// Quantizer-site plan: `(suffix, kind, feature_shape)` per site,
+    /// channels-last (the trailing axis is the `@pc` group axis — heads
+    /// for the attention score/context sites).  Site suffixes contain no
+    /// whitespace so `@<site>:<spec>` overrides can always address them.
+    pub fn sites(&self) -> Vec<(&'static str, SiteKind, Vec<usize>)> {
+        match self {
+            Self::Conv2d(g) => vec![
+                (
+                    "out",
+                    SiteKind::Act,
+                    vec![g.h as usize, g.w as usize, g.cout as usize],
+                ),
+                (
+                    "gx",
+                    SiteKind::Grad,
+                    vec![g.h as usize, g.w as usize, g.cin as usize],
+                ),
+            ],
+            Self::Linear(g) => vec![
+                (
+                    "out",
+                    SiteKind::Act,
+                    vec![g.tokens as usize, g.d_out as usize],
+                ),
+                (
+                    "gx",
+                    SiteKind::Grad,
+                    vec![g.tokens as usize, g.d_in as usize],
+                ),
+            ],
+            Self::Attention(g) => {
+                let (t, h, hd) = (g.tokens as usize, g.n_heads as usize, g.head_dim as usize);
+                vec![
+                    // softmaxed attention probabilities, head-last
+                    ("probs", SiteKind::Act, vec![t, t, h]),
+                    // per-head context output of the value matmul
+                    ("ctx", SiteKind::Act, vec![t, hd, h]),
+                    // score gradients — the per-head gradient quantizer
+                    ("scores.gx", SiteKind::Grad, vec![t, t, h]),
+                    // block-input gradient, per-feature
+                    ("gx", SiteKind::Grad, vec![t, g.d_model as usize]),
+                ]
+            }
+        }
+    }
+}
+
+/// Build a synthetic [`ModelSpec`] whose quantizer sites are the layer
+/// graph's site plans — enough manifest for `RangeManager` (and the
+/// trainer's scheme-site validation) to run on an analytic workload with
+/// no compiled artifacts.  Site names are `L<idx>.<suffix>` (`L03.gx`),
+/// whitespace-free so the scheme grammar's `@<site>:<spec>` overrides
+/// address them.
+pub fn workload_spec(name: &str, layers: &[LayerGeom]) -> ModelSpec {
+    let mut sites = Vec::new();
+    let mut index = 0usize;
+    for (li, layer) in layers.iter().enumerate() {
+        for (suffix, kind, feature_shape) in layer.sites() {
+            sites.push(SiteSpec {
+                index,
+                name: format!("L{li:02}.{suffix}"),
+                kind,
+                feature_shape,
+            });
+            index += 1;
+        }
+    }
+    ModelSpec {
+        name: name.to_string(),
+        batch_size: 1,
+        input_shape: vec![],
+        n_classes: 0,
+        n_params: layers.iter().map(|l| l.weight_bits(1) as usize).sum(),
+        pallas: "analytic".to_string(),
+        params: vec![],
+        state: vec![],
+        sites,
+        graphs: vec![],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::traffic::{self, BitWidths};
+
+    /// Golden conv parity: the generalized accessors reproduce the
+    /// legacy `Conv2dGeom` formulas verbatim — same u64 expressions, so
+    /// bit-identical, not merely close.
+    #[test]
+    fn conv_parity_is_bit_exact() {
+        let mut convs: Vec<Conv2dGeom> = traffic::table5_layers()
+            .iter()
+            .filter_map(|l| l.as_conv().copied())
+            .collect();
+        for net in ["resnet18", "vgg16", "mobilenet_v2"] {
+            convs.extend(
+                crate::models::by_name(net)
+                    .unwrap()
+                    .iter()
+                    .filter_map(|l| l.as_conv().copied()),
+            );
+        }
+        assert!(convs.len() > 80);
+        for g in convs {
+            let l = LayerGeom::Conv2d(g);
+            for bits in [1u64, 4, 8, 16, 32] {
+                // legacy formulas, inlined verbatim
+                let legacy_w = if g.depthwise {
+                    g.cin * g.k * g.k * bits
+                } else {
+                    g.cin * g.cout * g.k * g.k * bits
+                };
+                assert_eq!(l.weight_bits(bits), legacy_w);
+                assert_eq!(l.input_bits(bits), g.cin * g.w * g.h * bits);
+            }
+            assert_eq!(l.input_elems(), g.cin * g.w * g.h);
+            assert_eq!(l.output_elems(), g.cout * g.w * g.h);
+            assert_eq!(l.macs(), g.macs());
+            assert_eq!(l.channels(), g.cout);
+            assert_eq!(l.name(), g.name);
+            // full forward cost identity at the Table 5 bit-widths
+            let c = traffic::compare(&l, BitWidths::default());
+            let b = BitWidths::default();
+            assert_eq!(
+                c.static_bits,
+                legacy_static(&g, b),
+                "{}: static cost drifted",
+                g.name
+            );
+            assert_eq!(c.dynamic_bits, legacy_dynamic(&g, b));
+        }
+    }
+
+    fn legacy_static(g: &Conv2dGeom, b: BitWidths) -> u64 {
+        g.weight_bits(b.b_w) + g.input_bits(b.b_a) + g.output_elems() * b.b_a
+    }
+
+    fn legacy_dynamic(g: &Conv2dGeom, b: BitWidths) -> u64 {
+        g.weight_bits(b.b_w)
+            + g.input_bits(b.b_a)
+            + g.output_elems() * b.b_acc * 2
+            + g.output_elems() * b.b_a
+    }
+
+    #[test]
+    fn attention_accounting_identities() {
+        // ViT-S/16 block: t=197, d=384, 6 heads x 64
+        let a = LayerGeom::attention("attn", 197, 384, 6, 64);
+        let (t, d, h, inner) = (197u64, 384u64, 6u64, 384u64);
+        assert_eq!(a.macs(), 4 * t * d * inner + 2 * t * t * inner);
+        assert_eq!(a.input_elems(), t * d + 4 * t * inner + h * t * t);
+        assert_eq!(a.output_elems(), 3 * t * inner + h * t * t + t * inner + t * d);
+        assert_eq!(a.weight_bits(8), (d * 3 * inner + inner * d) * 8);
+        // heads are the channel-group axis
+        assert_eq!(a.channels(), 6);
+        assert_eq!(a.kind_str(), "attn");
+        assert_eq!(a.spatial(), "t=197/h=6");
+        // the score matmuls dominate neither MACs nor traffic at t=197
+        assert!(4 * t * d * inner > 2 * t * t * inner);
+    }
+
+    #[test]
+    fn linear_accounting() {
+        let l = LayerGeom::linear("fc", 384, 1536, 197);
+        assert_eq!(l.macs(), 197 * 384 * 1536);
+        assert_eq!(l.weight_bits(4), 384 * 1536 * 4);
+        assert_eq!(l.input_elems(), 197 * 384);
+        assert_eq!(l.output_elems(), 197 * 1536);
+        assert_eq!(l.channels(), 1536);
+        assert_eq!(l.kind_str(), "linear");
+    }
+
+    #[test]
+    fn workload_spec_sites_and_head_groups() {
+        let layers = [
+            LayerGeom::conv("stem", 3, 64, 7, 112, 112, false),
+            LayerGeom::attention("attn", 16, 32, 4, 8),
+            LayerGeom::linear("head", 32, 10, 1),
+        ];
+        let spec = workload_spec("toy", &layers);
+        assert_eq!(spec.name, "toy");
+        // 2 conv sites + 4 attention sites + 2 linear sites
+        assert_eq!(spec.sites.len(), 8);
+        let names: Vec<&str> = spec.sites.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(
+            names,
+            [
+                "L00.out",
+                "L00.gx",
+                "L01.probs",
+                "L01.ctx",
+                "L01.scores.gx",
+                "L01.gx",
+                "L02.out",
+                "L02.gx"
+            ]
+        );
+        // indices dense, names whitespace-free (override-addressable)
+        for (i, s) in spec.sites.iter().enumerate() {
+            assert_eq!(s.index, i);
+            assert!(!s.name.contains(' '));
+        }
+        // the attention score/probs sites group by *head* under @pc
+        let probs = &spec.sites[2];
+        assert_eq!(probs.kind, SiteKind::Act);
+        assert_eq!(probs.channels(), 4);
+        let sgx = &spec.sites[4];
+        assert_eq!(sgx.kind, SiteKind::Grad);
+        assert_eq!(sgx.channels(), 4);
+        // the block-input gradient groups per feature
+        assert_eq!(spec.sites[5].channels(), 32);
+        // conv sites keep the channels-last conv convention
+        assert_eq!(spec.sites[0].channels(), 64);
+        assert_eq!(spec.sites[1].channels(), 3);
+    }
+}

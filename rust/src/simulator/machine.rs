@@ -274,11 +274,14 @@ impl MacArray {
         }
     }
 
-    /// Run a conv layer as an im2col GEMM (geometry-level; used to bridge
-    /// machine-level accounting to the closed-form eqs. 4/5).
-    pub fn conv_traffic(
+    /// Per-phase traffic of one layer run as (a sequence of) GEMMs —
+    /// convs via im2col, linears directly, attention as its four GEMM
+    /// stages (geometry-level; used to bridge machine-level accounting
+    /// to the closed-form eqs. 4/5 over any [`LayerGeom`](super::LayerGeom)
+    /// variant).
+    pub fn layer_phases(
         &self,
-        g: &super::Conv2dGeom,
+        g: &super::LayerGeom,
         policy_static: bool,
     ) -> Phases {
         let out_elems = g.output_elems();
@@ -364,11 +367,22 @@ mod tests {
     fn machine_traffic_matches_closed_form() {
         let mac = MacArray::default();
         for g in traffic::table5_layers() {
-            let st = mac.conv_traffic(&g, true);
-            let dy = mac.conv_traffic(&g, false);
+            let st = mac.layer_phases(&g, true);
+            let dy = mac.layer_phases(&g, false);
             let closed = traffic::compare(&g, BitWidths::default());
-            assert_eq!(st.total() * 8, closed.static_bits, "{}", g.name);
-            assert_eq!(dy.total() * 8, closed.dynamic_bits, "{}", g.name);
+            assert_eq!(st.total() * 8, closed.static_bits, "{}", g.name());
+            assert_eq!(dy.total() * 8, closed.dynamic_bits, "{}", g.name());
+        }
+        // the bridge holds for the transformer variants too
+        for g in [
+            crate::simulator::LayerGeom::attention("attn", 197, 384, 6, 64),
+            crate::simulator::LayerGeom::linear("fc1", 384, 1536, 197),
+        ] {
+            let st = mac.layer_phases(&g, true);
+            let dy = mac.layer_phases(&g, false);
+            let closed = traffic::compare(&g, BitWidths::default());
+            assert_eq!(st.total() * 8, closed.static_bits, "{}", g.name());
+            assert_eq!(dy.total() * 8, closed.dynamic_bits, "{}", g.name());
         }
     }
 

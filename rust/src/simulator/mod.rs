@@ -13,10 +13,16 @@
 //! * [`scheme`] — the bridge from the typed `QuantScheme` API: per-class
 //!   bit-widths and policies resolve from a scheme, so mixed-precision
 //!   settings (`g:hindsight@pc:4`) execute end-to-end here.
+//! * [`layer`] — the layer-graph abstraction the traffic stack is
+//!   written over: conv / linear / attention variants of [`LayerGeom`]
+//!   expose MAC counts, traffic volumes and quantizer-site plans
+//!   (heads are the `@pc` channel-group axis for attention).
 
 pub mod backward;
+pub mod layer;
 pub mod machine;
 pub mod scheme;
 pub mod traffic;
 
+pub use layer::{workload_spec, AttentionGeom, LayerGeom, LinearGeom};
 pub use traffic::{Conv2dGeom, TrafficCost};

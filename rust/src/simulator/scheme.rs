@@ -14,8 +14,9 @@
 use crate::quant::QuantParams;
 use crate::scheme::QuantScheme;
 use crate::simulator::backward::{bwd_compare, store_gx_static, store_gx_static_axis, BwdBits};
+use crate::simulator::layer::LayerGeom;
 use crate::simulator::machine::{MacArray, Policy, RunResult};
-use crate::simulator::traffic::{compare, BitWidths, Conv2dGeom, TrafficCost};
+use crate::simulator::traffic::{compare, BitWidths, TrafficCost};
 
 /// Traffic accounting of one layer under one scheme: forward eq. (4)/(5)
 /// at the scheme's W/A bits, backward analogue at its G bits.
@@ -37,8 +38,10 @@ impl LayerTraffic {
     }
 }
 
-/// Closed-form eq. (4)/(5) traffic of `geom` under `scheme`.
-pub fn layer_traffic(scheme: &QuantScheme, geom: &Conv2dGeom) -> LayerTraffic {
+/// Closed-form eq. (4)/(5) traffic of `geom` under `scheme` — any
+/// [`LayerGeom`] variant; attention blocks pay the asymmetry on every
+/// GEMM-stage store.
+pub fn layer_traffic(scheme: &QuantScheme, geom: &LayerGeom) -> LayerTraffic {
     let fwd_bits = BitWidths::from_scheme(scheme);
     let bwd_bits = BwdBits::from_scheme(scheme);
     LayerTraffic {
@@ -171,7 +174,7 @@ mod tests {
         // ... and in the backward accounting: the G_X store term is
         // 4-bit, so static backward traffic drops vs the 8-bit scheme
         let t8 = layer_traffic(&QuantScheme::w8a8g8(), &g);
-        let gx_elems = g.cin * g.w * g.h;
+        let gx_elems = g.input_elems();
         assert_eq!(
             t8.bwd.static_bits - t.bwd.static_bits,
             gx_elems * 4 + g.output_elems() * 4, // G_X store + G_Y load at 4 bits less
@@ -208,6 +211,23 @@ mod tests {
             let qp = QuantParams::from_range(rows[i % c][0], rows[i % c][1], 4);
             assert_eq!(q, qp.fq(orig));
         }
+    }
+
+    #[test]
+    fn attention_layer_traffic_resolves_per_class_bits() {
+        // the ViT-S/16 attention block through the same closed form the
+        // conv rows use: 4-bit gradients shrink only the static G_X/G_Y
+        // terms, so the step ratio widens exactly like a conv layer's
+        let scheme = QuantScheme::parse("w:current:8 a:hindsight:8 g:hindsight@pc:4").unwrap();
+        let g = LayerGeom::attention("attn", 197, 384, 6, 64);
+        let t = layer_traffic(&scheme, &g);
+        assert_eq!(t.bwd_bits.b_g, 4);
+        let t8 = layer_traffic(&QuantScheme::w8a8g8(), &g);
+        assert_eq!(
+            t8.bwd.static_bits - t.bwd.static_bits,
+            g.input_elems() * 4 + g.output_elems() * 4,
+        );
+        assert!(t.step_ratio() > t8.step_ratio());
     }
 
     #[test]

@@ -20,6 +20,13 @@
 //!
 //! `W x H` is the *output* feature-map size; depthwise convolutions use
 //! `Cin * k^2 * b_w` weights (one filter per channel).
+//!
+//! The cost formulas are written over the [`LayerGeom`] abstraction —
+//! any layer kind exposing weight/input/output volumes pays the same
+//! static-vs-dynamic asymmetry; the conv variant reproduces eqs. (4)/(5)
+//! bit-for-bit (golden parity test in `simulator::layer`).
+
+use super::layer::LayerGeom;
 
 /// Geometry of one conv layer (paper Table 5 columns).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -143,12 +150,12 @@ impl TrafficCost {
 }
 
 /// Eq. (4): static quantization memory movement in bits.
-pub fn static_cost(g: &Conv2dGeom, b: BitWidths) -> u64 {
+pub fn static_cost(g: &LayerGeom, b: BitWidths) -> u64 {
     g.weight_bits(b.b_w) + g.input_bits(b.b_a) + g.output_elems() * b.b_a
 }
 
 /// Eq. (5): dynamic quantization memory movement in bits.
-pub fn dynamic_cost(g: &Conv2dGeom, b: BitWidths) -> u64 {
+pub fn dynamic_cost(g: &LayerGeom, b: BitWidths) -> u64 {
     g.weight_bits(b.b_w)
         + g.input_bits(b.b_a)
         + g.output_elems() * b.b_acc // save accumulator output
@@ -156,7 +163,7 @@ pub fn dynamic_cost(g: &Conv2dGeom, b: BitWidths) -> u64 {
         + g.output_elems() * b.b_a // save quantized output
 }
 
-pub fn compare(g: &Conv2dGeom, b: BitWidths) -> TrafficCost {
+pub fn compare(g: &LayerGeom, b: BitWidths) -> TrafficCost {
     TrafficCost {
         static_bits: static_cost(g, b),
         dynamic_bits: dynamic_cost(g, b),
@@ -164,13 +171,13 @@ pub fn compare(g: &Conv2dGeom, b: BitWidths) -> TrafficCost {
 }
 
 /// The five rows of paper Table 5 (ImageNet-size layers).
-pub fn table5_layers() -> Vec<Conv2dGeom> {
+pub fn table5_layers() -> Vec<LayerGeom> {
     vec![
-        Conv2dGeom::new("ResNet18 3x3", 64, 64, 3, 56, 56, false),
-        Conv2dGeom::new("ResNet18 3x3", 256, 256, 3, 14, 14, false),
-        Conv2dGeom::new("MobileNetV2 1x1", 16, 96, 1, 112, 112, false),
-        Conv2dGeom::new("MobileNetV2 3x3 (DW)", 96, 96, 3, 112, 112, true),
-        Conv2dGeom::new("MobileNetV2 3x3 (DW)", 960, 960, 3, 7, 7, true),
+        LayerGeom::conv("ResNet18 3x3", 64, 64, 3, 56, 56, false),
+        LayerGeom::conv("ResNet18 3x3", 256, 256, 3, 14, 14, false),
+        LayerGeom::conv("MobileNetV2 1x1", 16, 96, 1, 112, 112, false),
+        LayerGeom::conv("MobileNetV2 3x3 (DW)", 96, 96, 3, 112, 112, true),
+        LayerGeom::conv("MobileNetV2 3x3 (DW)", 960, 960, 3, 7, 7, true),
     ]
 }
 
@@ -202,21 +209,21 @@ mod tests {
             assert!(
                 (c.static_kb() - s_kb).abs() < 1.0,
                 "{}: static {} vs paper {}",
-                g.name,
+                g.name(),
                 c.static_kb(),
                 s_kb
             );
             assert!(
                 (c.dynamic_kb() - d_kb).abs() < 1.0,
                 "{}: dynamic {} vs paper {}",
-                g.name,
+                g.name(),
                 c.dynamic_kb(),
                 d_kb
             );
             assert!(
                 (c.delta_percent() - delta).abs() < 1.5,
                 "{}: delta {} vs paper {}",
-                g.name,
+                g.name(),
                 c.delta_percent(),
                 delta
             );

@@ -1,0 +1,120 @@
+//! End-to-end acceptance for the transformer workload path: an
+//! attention layer under `g:hindsight@pc:4` gets one range row per head,
+//! the hindsight update adopts per-head ranges one step late (eqs. 2-3),
+//! and the 4-bit gradient store bills the nibble-packed integer payload.
+//! Engine-free: everything runs on the analytic workload spec.
+
+use hindsight::coordinator::{validate_scheme_sites, RangeManager};
+use hindsight::quant::kernel::{self, KernelError};
+use hindsight::runtime::{SiteKind, Tensor};
+use hindsight::scheme::QuantScheme;
+use hindsight::simulator::scheme::store_gradient;
+use hindsight::simulator::{workload_spec, LayerGeom};
+
+const T: u64 = 16; // tokens
+const D: u64 = 32; // d_model
+const H: u64 = 4; // heads
+const HD: u64 = 8; // head_dim
+
+fn layers() -> Vec<LayerGeom> {
+    vec![LayerGeom::attention("attn", T, D, H, HD)]
+}
+
+fn scheme() -> QuantScheme {
+    QuantScheme::parse("w:current:8 a:hindsight:8 g:hindsight@pc:4").unwrap()
+}
+
+#[test]
+fn attention_spec_exposes_per_head_sites() {
+    let spec = workload_spec("attn-e2e", &layers());
+    let names: Vec<&str> = spec.sites.iter().map(|s| s.name.as_str()).collect();
+    assert_eq!(names, ["L00.probs", "L00.ctx", "L00.scores.gx", "L00.gx"]);
+    // site names are single tokens — the scheme override grammar keys
+    // on them (`@L00.scores.gx:<spec>`)
+    for s in &spec.sites {
+        assert!(!s.name.contains(char::is_whitespace), "{}", s.name);
+    }
+    assert_eq!(spec.sites[2].kind, SiteKind::Grad);
+    // heads are the trailing channel-group axis: scores are (t, t, h)
+    assert_eq!(spec.sites[2].feature_shape, vec![T as usize, T as usize, H as usize]);
+    assert_eq!(spec.sites[2].channels(), H as usize);
+    assert_eq!(spec.sites[3].channels(), D as usize);
+
+    // a per-site override naming an attention site validates...
+    let with_override = QuantScheme::parse(
+        "w:current:8 a:hindsight:8 g:hindsight@pc:4 @L00.scores.gx:hindsight@pc:4",
+    )
+    .unwrap();
+    validate_scheme_sites(&spec, &with_override).unwrap();
+    // ...and a typo'd site errors, listing the real quantizer sites
+    let bogus =
+        QuantScheme::parse("w:current:8 a:hindsight:8 g:hindsight@pc:4 @L9.gx:hindsight@pc:4")
+            .unwrap();
+    let err = validate_scheme_sites(&spec, &bogus).unwrap_err().to_string();
+    assert!(err.contains("matches no quantizer site"), "{err}");
+    assert!(err.contains("L00.scores.gx"), "{err}");
+}
+
+#[test]
+fn per_head_hindsight_ranges_drive_the_payload_store() {
+    let layers = layers();
+    let scheme = scheme();
+    let mut rm = RangeManager::for_workload("attn-e2e", &layers, &scheme);
+    assert_eq!(rm.n_sites(), 4);
+    // per-tensor act sites (1 row each) + per-channel grad sites
+    // (one row per head for scores, one per model channel for gx)
+    let rows = 1 + 1 + H as usize + D as usize;
+    assert_eq!(rm.n_rows(), rows);
+    let scores = 2; // site index of L00.scores.gx
+    assert_eq!(rm.site_rows(scores).len(), H as usize);
+
+    // step 0, uncalibrated: hindsight seeds each head row from its own
+    // first-batch statistics (paper Sec. 4.1, q^0 = minmax(G^0))
+    let mut nr = vec![0.0f32; rows * 2];
+    let mut st = vec![0.0f32; rows * 2];
+    let off = rm.row_offset(scores);
+    for h in 0..H as usize {
+        st[(off + h) * 2] = -(h as f32 + 1.0);
+        st[(off + h) * 2 + 1] = h as f32 + 1.0;
+    }
+    rm.update(
+        &Tensor::from_f32(&[rows, 2], nr.clone()),
+        &Tensor::from_f32(&[rows, 2], st.clone()),
+        true,
+    );
+    assert_eq!(rm.site_rows(scores), &[[-1.0, 1.0], [-2.0, 2.0], [-3.0, 3.0], [-4.0, 4.0]]);
+
+    // step 1: the in-graph EMA hands back new per-head ranges; the
+    // coordinator adopts them *after* this step quantized with the old
+    for h in 0..H as usize {
+        nr[(off + h) * 2] = -2.0 * (h as f32 + 1.0);
+        nr[(off + h) * 2 + 1] = 2.0 * (h as f32 + 1.0);
+    }
+    let before = rm.site_rows(scores).to_vec();
+    let gx_len = (T * T * H) as usize;
+    let mut gx: Vec<f32> = (0..gx_len).map(|i| (i % 7) as f32 * 0.01 - 0.03).collect();
+    let (stats, bits_moved) = store_gradient(&scheme, &mut gx, &before);
+    // one stats pair per head, and the traffic is the measured 4-bit
+    // nibble-packed payload: two codes per byte
+    assert_eq!(stats.len(), H as usize);
+    assert_eq!(bits_moved, kernel::payload_bytes(gx_len, 4) as u64 * 8);
+    assert_eq!(bits_moved, gx_len as u64 * 4);
+    rm.update(
+        &Tensor::from_f32(&[rows, 2], nr),
+        &Tensor::from_f32(&[rows, 2], st),
+        false,
+    );
+    assert_eq!(rm.site_rows(scores), &[[-2.0, 2.0], [-4.0, 4.0], [-6.0, 6.0], [-8.0, 8.0]]);
+}
+
+#[test]
+fn ragged_head_layout_is_rejected() {
+    // a stats tensor whose length the head count doesn't divide must be
+    // refused, not silently misquantized against the wrong head's range
+    let ranges = vec![[-1.0f32, 1.0]; H as usize];
+    let xs = vec![0.1f32; (T * T * H) as usize - 1];
+    let mut dst = vec![0u8; kernel::payload_bytes(xs.len(), 4)];
+    let err = kernel::try_fq_store_i4_axis(&xs, &mut dst, &ranges, 4).unwrap_err();
+    assert_eq!(err, KernelError::RaggedAxis { len: xs.len(), channels: H as usize });
+    assert!(err.to_string().contains("not divisible"), "{err}");
+}
