@@ -1,0 +1,127 @@
+//! Sweep-service smoke + throughput probe: bind `hindsight serve`'s
+//! [`Server`] on an ephemeral port with the synthetic runner, measure
+//! raw HTTP request overhead (`GET /healthz` round-trips), then drive a
+//! 16-cell grid submission end-to-end over real TCP and record the
+//! sweep wall time and the cache-hit behaviour of a resubmission.
+//!
+//! No artifacts needed: cells produce deterministic synthetic records,
+//! so the bench exercises exactly the service plumbing (protocol, job
+//! registry, cost queue, workers, store write-through) and none of the
+//! training stack.
+//!
+//!   cargo bench --bench serve_http
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use hindsight::service::protocol::read_response;
+use hindsight::service::{CellRunner, ServeOptions, Server, ShardSpec};
+use hindsight::util::bench::{append_bench_record, quick};
+use hindsight::util::json::{self, Value};
+
+const SUBMIT: &str =
+    r#"{"grid":"g:{hindsight,current,tqt,banner}:{4,8}","model":"mlp","seeds":[1,2],"steps":8}"#;
+const CELLS: usize = 16;
+
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, Value) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .expect("read timeout");
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: bench\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .expect("request write");
+    let (status, bytes) = read_response(&mut stream).expect("response read");
+    let text = String::from_utf8(bytes).expect("utf8 body");
+    (status, json::parse(text.trim()).expect("json body"))
+}
+
+fn get_usize(doc: &Value, key: &str) -> usize {
+    doc.get(key)
+        .and_then(|v| v.as_usize())
+        .unwrap_or_else(|| panic!("missing '{key}' in {doc}"))
+}
+
+fn main() {
+    hindsight::util::logging::init();
+    let store_dir = std::env::var("HINDSIGHT_SERVE_STORE")
+        .unwrap_or_else(|_| "serve_bench_store".to_string());
+    // fresh store: the first pass must execute every cell
+    let _ = std::fs::remove_dir_all(&store_dir);
+
+    let server = Server::bind(ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        store_dir: store_dir.clone().into(),
+        shard: ShardSpec::solo(),
+        runner: CellRunner::Synthetic,
+        poll_ms: 500,
+    })
+    .expect("bind");
+    let addr = server.local_addr().expect("local addr");
+    let handle = std::thread::spawn(move || server.run().expect("server run"));
+
+    // raw protocol overhead: healthz round-trips on fresh connections
+    let reqs = if quick() { 25 } else { 200 };
+    let t0 = Instant::now();
+    for _ in 0..reqs {
+        let (status, _) = http(addr, "GET", "/healthz", "");
+        assert_eq!(status, 200);
+    }
+    let us_per_req = t0.elapsed().as_micros() as f64 / reqs as f64;
+    println!("healthz: {reqs} round-trips, {us_per_req:.0} us/request");
+
+    // the sweep: submit, poll to completion, fetch results
+    let t0 = Instant::now();
+    let (status, doc) = http(addr, "POST", "/jobs", SUBMIT);
+    assert_eq!(status, 202, "first submission is created: {doc}");
+    let job = doc.get("job").and_then(|j| j.as_str()).expect("job id").to_string();
+    assert_eq!(get_usize(&doc, "total"), CELLS);
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let done = loop {
+        let (status, doc) = http(addr, "GET", &format!("/jobs/{job}"), "");
+        assert_eq!(status, 200);
+        if doc.get("complete").and_then(|c| c.as_bool()) == Some(true) {
+            break doc;
+        }
+        assert!(Instant::now() < deadline, "sweep did not complete: {doc}");
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    let sweep_ms = t0.elapsed().as_millis() as usize;
+    assert_eq!(get_usize(&done, "executed"), CELLS, "fresh store: all cells execute");
+    assert_eq!(get_usize(&done, "failed"), 0);
+    let (status, results) = http(addr, "GET", &format!("/jobs/{job}/results"), "");
+    assert_eq!(status, 200);
+    let rows = results.get("rows").and_then(|r| r.as_array()).expect("rows").len();
+    assert_eq!(rows, 8, "one aggregated row per scheme");
+    println!("sweep: {CELLS} cells -> {rows} rows in {sweep_ms} ms");
+
+    // resubmission: idempotent id, zero new executions
+    let (status, doc) = http(addr, "POST", "/jobs", SUBMIT);
+    assert_eq!(status, 200, "resubmission of a known job: {doc}");
+    assert_eq!(doc.get("job").and_then(|j| j.as_str()), Some(job.as_str()));
+    assert_eq!(get_usize(&doc, "executed"), CELLS, "resubmission executes nothing new");
+
+    let (status, _) = http(addr, "POST", "/shutdown", "{}");
+    assert_eq!(status, 200);
+    handle.join().expect("server thread");
+
+    let record = Value::object(vec![
+        ("bench", Value::from("serve_http")),
+        ("cells", Value::from(CELLS)),
+        ("rows", Value::from(rows)),
+        ("healthz_requests", Value::from(reqs)),
+        ("healthz_us_per_request", Value::from(us_per_req)),
+        ("sweep_ms", Value::from(sweep_ms)),
+        ("workers", Value::from(2usize)),
+        ("store", Value::from(store_dir)),
+    ]);
+    match append_bench_record(record) {
+        Ok(path) => println!("recorded serve smoke to {}", path.display()),
+        Err(e) => eprintln!("warning: could not append bench record: {e}"),
+    }
+}

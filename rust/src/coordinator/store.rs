@@ -26,8 +26,19 @@
 //! to one directory scan (then persists the rebuilt index), and a stale
 //! entry can only turn a would-be hit into a re-run — never a wrong
 //! record, because the cell document's own key fields stay the source
-//! of truth.  Cross-process writers can race the sidecar; delete
-//! `index.json` (or just re-open the store) to force a rescan.
+//! of truth.
+//!
+//! Concurrent writers are safe: every sidecar write goes through a
+//! per-process temp file + atomic rename, *after* merging the entries
+//! currently on disk, so two processes `put`ting into the same store
+//! can at worst cost each other one stale entry on the final racing
+//! write (served correctly anyway via the in-document key check after
+//! a [`RunStore::refresh`] or re-open).  Cell writes themselves are
+//! last-writer-wins safe because keys are content-derived: both racers
+//! are writing the same record.  [`RunStore::refresh`] unions the
+//! on-disk sidecar and a directory scan into the in-memory index so a
+//! long-lived process (the sweep service) can observe cells completed
+//! by sibling shards.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -107,8 +118,9 @@ impl CellKey {
 }
 
 /// 64-bit FNV-1a (the store needs a stable, dependency-free hash; the
-/// key fields inside each document guard against collisions).
-fn fnv1a64(bytes: &[u8]) -> u64 {
+/// key fields inside each document guard against collisions).  Shared
+/// with the service layer for content-derived job ids.
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for &b in bytes {
         h ^= b as u64;
@@ -169,7 +181,7 @@ impl RunStore {
                 }
             }
         }
-        if let Err(e) = self.write_index_file(&entries) {
+        if let Err(e) = self.write_index_file(&mut entries) {
             log::warn!(
                 "run store {}: could not persist rebuilt index: {e:#}",
                 self.dir.display()
@@ -195,8 +207,28 @@ impl RunStore {
     }
 
     /// Atomically rewrite the sidecar (sorted, so the bytes are
-    /// deterministic for a given cell population).
-    fn write_index_file(&self, entries: &HashMap<String, String>) -> Result<()> {
+    /// deterministic for a given cell population).  Before writing,
+    /// entries already on disk are merged in, so a concurrent writer's
+    /// additions survive this write — a lost race can only leave one
+    /// *stale* entry (fixed by the next write or a rescan), never drop
+    /// a committed cell from the index.
+    fn write_index_file(&self, entries: &mut HashMap<String, String>) -> Result<()> {
+        if let Some(disk) = self.read_index_file() {
+            for (file, id) in disk {
+                match entries.get(&file) {
+                    // another writer's cell we have never seen
+                    None => {
+                        entries.insert(file, id);
+                    }
+                    // we only know it from a bare scan; the disk id is
+                    // richer (it answers misses without a file probe)
+                    Some(ours) if ours.is_empty() && !id.is_empty() => {
+                        entries.insert(file, id);
+                    }
+                    _ => {}
+                }
+            }
+        }
         let mut cells: Vec<(String, Value)> = entries
             .iter()
             .map(|(k, v)| (k.clone(), Value::from(v.clone())))
@@ -297,6 +329,175 @@ impl RunStore {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Union the on-disk sidecar and a directory scan into the
+    /// in-memory index, making cells written by *other* processes
+    /// (sibling shards over a shared store dir) visible to `get`.
+    /// Entries discovered only by the scan carry an empty id, so the
+    /// document's verified key fields still gate every hit.
+    pub fn refresh(&self) {
+        let disk = self.read_index_file();
+        let mut scanned: Vec<String> = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(&self.dir) {
+            for e in rd.filter_map(|e| e.ok()) {
+                let name = e.file_name().to_string_lossy().into_owned();
+                if name.starts_with("cell-") && name.ends_with(".json") {
+                    scanned.push(name);
+                }
+            }
+        }
+        self.with_index(|idx| {
+            if let Some(disk) = disk {
+                for (file, id) in disk {
+                    let keep_ours =
+                        idx.get(&file).is_some_and(|ours| !ours.is_empty()) && id.is_empty();
+                    if !keep_ours {
+                        idx.insert(file, id);
+                    }
+                }
+            }
+            for file in scanned {
+                idx.entry(file).or_default();
+            }
+        });
+    }
+
+    /// Indexed cells as `(file name, key id)` pairs, sorted by file
+    /// name (the id is `""` for scan-discovered entries).
+    pub fn entries(&self) -> Vec<(String, String)> {
+        let mut out: Vec<(String, String)> =
+            self.with_index(|idx| idx.iter().map(|(k, v)| (k.clone(), v.clone())).collect());
+        out.sort();
+        out
+    }
+
+    /// Cell file names currently on disk (directory scan, sorted) —
+    /// the ground truth `gc`/`verify` reconcile the index against.
+    pub fn files(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(&self.dir) {
+            for e in rd.filter_map(|e| e.ok()) {
+                let name = e.file_name().to_string_lossy().into_owned();
+                if name.starts_with("cell-") && name.ends_with(".json") {
+                    out.push(name);
+                }
+            }
+        }
+        out.sort();
+        out
+    }
+
+    /// Read one cell document by file name, returning its stored key
+    /// and record.  Errors (instead of the miss-mapping `get`) so
+    /// inspection tooling can report *why* a cell is unreadable.
+    pub fn read_cell_file(&self, file: &str) -> Result<(CellKey, RunRecord)> {
+        let path = self.dir.join(file);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let doc = json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        let version = doc
+            .get("version")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("{}: missing version", path.display()))?;
+        if version != STORE_VERSION {
+            anyhow::bail!("{}: store version {version} != {STORE_VERSION}", path.display());
+        }
+        let field = |name: &str| -> Result<&Value> {
+            doc.get(name)
+                .ok_or_else(|| anyhow::anyhow!("{}: missing field '{name}'", path.display()))
+        };
+        let key = CellKey {
+            model: field("model")?.as_str().unwrap_or_default().to_string(),
+            scheme: field("scheme")?.as_str().unwrap_or_default().to_string(),
+            seed: field("seed")?.as_f64().unwrap_or_default() as u64,
+            steps: field("steps")?.as_f64().unwrap_or_default() as u64,
+            config: field("config")?.as_str().unwrap_or_default().to_string(),
+        };
+        let record = RunRecord::from_json(field("record")?)
+            .map_err(|e| anyhow::anyhow!("{}: {e:#}", path.display()))?;
+        Ok((key, record))
+    }
+
+    /// Prune version-skewed and key-mismatched cell files (plus stale
+    /// `.tmp-*` droppings) and rebuild the sidecar with verified key
+    /// ids.  Unparseable cell files are *kept* (and counted) — `gc`
+    /// removes cells that are provably not servable under this store
+    /// version, not data that merely failed to parse.
+    pub fn gc(&self) -> Result<GcReport> {
+        let mut report = GcReport::default();
+        let mut rebuilt: HashMap<String, String> = HashMap::new();
+        if let Ok(rd) = std::fs::read_dir(&self.dir) {
+            for e in rd.filter_map(|e| e.ok()) {
+                let name = e.file_name().to_string_lossy().into_owned();
+                if name.starts_with(".tmp-") {
+                    if std::fs::remove_file(e.path()).is_ok() {
+                        report.removed_tmp += 1;
+                    }
+                    continue;
+                }
+                if !(name.starts_with("cell-") && name.ends_with(".json")) {
+                    continue;
+                }
+                match self.read_cell_file(&name) {
+                    Ok((key, _)) => {
+                        if key.file_name() == name {
+                            report.kept += 1;
+                            rebuilt.insert(name, key.id());
+                        } else {
+                            // the document's own key hashes elsewhere:
+                            // unservable under any lookup, safe to drop
+                            std::fs::remove_file(e.path())
+                                .with_context(|| format!("removing mismatched {name}"))?;
+                            report.removed_mismatched += 1;
+                        }
+                    }
+                    Err(err) => {
+                        let msg = format!("{err:#}");
+                        if msg.contains("store version") {
+                            std::fs::remove_file(e.path())
+                                .with_context(|| format!("removing version-skewed {name}"))?;
+                            report.removed_skewed += 1;
+                        } else {
+                            report.corrupt += 1;
+                        }
+                    }
+                }
+            }
+        }
+        self.with_index(|idx| {
+            *idx = rebuilt.clone();
+            // drop the old sidecar first so the merge-before-write
+            // can't resurrect entries for the files just removed
+            let _ = std::fs::remove_file(self.dir.join(INDEX_FILE));
+            if let Err(e) = self.write_index_file(&mut rebuilt) {
+                log::warn!("run store gc: could not persist rebuilt index: {e:#}");
+            }
+        });
+        Ok(report)
+    }
+
+    /// Re-read every cell file on disk and report the unreadable ones
+    /// as `(file name, error)` pairs (empty = store fully healthy).
+    pub fn verify(&self) -> Vec<(String, String)> {
+        self.files()
+            .into_iter()
+            .filter_map(|file| match self.read_cell_file(&file) {
+                Ok(_) => None,
+                Err(e) => Some((file, format!("{e:#}"))),
+            })
+            .collect()
+    }
+}
+
+/// What [`RunStore::gc`] did: cells kept, files removed per reason,
+/// and unparseable cells left in place.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct GcReport {
+    pub kept: usize,
+    pub removed_skewed: usize,
+    pub removed_mismatched: usize,
+    pub removed_tmp: usize,
+    pub corrupt: usize,
 }
 
 #[cfg(test)]
@@ -503,6 +704,154 @@ mod tests {
         // document read fails), never a panic
         std::fs::remove_file(store.dir().join(k1.file_name())).unwrap();
         assert!(store.get(&k1).is_none());
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn concurrent_writers_merge_instead_of_clobbering_the_sidecar() {
+        // two *store handles* on one dir model two processes: each
+        // caches its own in-memory index, so without merge-before-write
+        // the second handle's put would drop the first handle's entry
+        let store_a = tmp_store("two_writers");
+        let store_b = RunStore::open(store_a.dir()).unwrap();
+        let ka = key("w:fp32:8 a:fp32:8 g:hindsight:8", 1, 10);
+        let kb = key("w:fp32:8 a:fp32:8 g:current:8", 1, 10);
+        // interleave: A loads its index (empty), B loads its index
+        // (empty), A puts, B puts — B's sidecar write races A's
+        assert!(store_a.is_empty());
+        assert!(store_b.is_empty());
+        store_a.put(&ka, &record("a")).unwrap();
+        store_b.put(&kb, &record("b")).unwrap();
+        // a third, fresh reader sees BOTH cells straight off the sidecar
+        let reader = RunStore::open(store_a.dir()).unwrap();
+        assert_eq!(reader.len(), 2, "merge-before-write must keep A's entry");
+        assert!(reader.get(&ka).is_some());
+        assert!(reader.get(&kb).is_some());
+        // and the sidecar ids are the real key ids, not scan stubs
+        let doc = json::parse(
+            &std::fs::read_to_string(store_a.dir().join(INDEX_FILE)).unwrap(),
+        )
+        .unwrap();
+        let cells = doc.get("cells").unwrap();
+        assert_eq!(cells.get(&ka.file_name()).and_then(|v| v.as_str()), Some(ka.id().as_str()));
+        assert_eq!(cells.get(&kb.file_name()).and_then(|v| v.as_str()), Some(kb.id().as_str()));
+        let _ = std::fs::remove_dir_all(store_a.dir());
+    }
+
+    #[test]
+    fn threaded_writers_stress_the_sidecar_race() {
+        let store = tmp_store("threaded_writers");
+        let dir = store.dir().to_path_buf();
+        let n_per = 8usize;
+        let handles: Vec<_> = (0..2u64)
+            .map(|t| {
+                let dir = dir.clone();
+                std::thread::spawn(move || {
+                    let s = RunStore::open(dir).unwrap();
+                    for i in 0..n_per {
+                        let k = key(
+                            &format!("w:fp32:8 a:fp32:8 g:hindsight:{}", 2 + i),
+                            t,
+                            10,
+                        );
+                        s.put(&k, &record(&format!("t{t}i{i}"))).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // every written cell must be servable from a fresh store; the
+        // worst a lost sidecar race may cost is a *stale* (missing)
+        // entry — refresh's directory scan recovers exactly those
+        let fresh = RunStore::open(&dir).unwrap();
+        fresh.refresh();
+        for t in 0..2u64 {
+            for i in 0..n_per {
+                let k = key(&format!("w:fp32:8 a:fp32:8 g:hindsight:{}", 2 + i), t, 10);
+                assert!(
+                    fresh.get(&k).is_some(),
+                    "cell t{t}i{i} lost — sidecar race dropped a committed cell"
+                );
+            }
+        }
+        assert_eq!(fresh.len(), 2 * n_per);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn refresh_sees_cells_written_by_another_handle() {
+        let store = tmp_store("refresh");
+        let other = RunStore::open(store.dir()).unwrap();
+        let k1 = key("w:fp32:8 a:fp32:8 g:hindsight:8", 1, 10);
+        let k2 = key("w:fp32:8 a:fp32:8 g:current:8", 1, 10);
+        store.put(&k1, &record("mine")).unwrap();
+        assert!(store.get(&k2).is_none(), "not written yet");
+        other.put(&k2, &record("theirs")).unwrap();
+        // without refresh, `store`'s in-memory index predates k2
+        assert!(store.get(&k2).is_none(), "index answer is stale by design");
+        store.refresh();
+        assert!(store.get(&k2).is_some(), "refresh must surface the sibling's cell");
+        assert!(store.get(&k1).is_some(), "refresh must not lose own entries");
+        assert_eq!(store.len(), 2);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn gc_prunes_skewed_and_mismatched_keeps_corrupt_and_rebuilds_index() {
+        let store = tmp_store("gc");
+        let good = key("w:fp32:8 a:fp32:8 g:hindsight:8", 1, 10);
+        store.put(&good, &record("good")).unwrap();
+        // version-skewed cell file
+        std::fs::write(
+            store.dir().join("cell-00000000000000aa.json"),
+            "{\"version\": 99, \"model\": \"mlp\"}",
+        )
+        .unwrap();
+        // key-mismatched: a valid document copied under the wrong name
+        let stray = key("w:fp32:8 a:fp32:8 g:current:8", 2, 10);
+        let src = store.put(&stray, &record("stray")).unwrap();
+        let wrong_name = store.dir().join("cell-00000000000000bb.json");
+        std::fs::copy(&src, &wrong_name).unwrap();
+        // corrupt (unparseable) cell file — must be kept, only counted
+        let corrupt_name = store.dir().join("cell-00000000000000cc.json");
+        std::fs::write(&corrupt_name, "{\"version\":").unwrap();
+        // stale temp dropping from an interrupted writer
+        std::fs::write(store.dir().join(".tmp-999-cell-x.json"), "{}").unwrap();
+        let report = store.gc().unwrap();
+        assert_eq!(report.kept, 2, "good + stray-at-its-own-name survive");
+        assert_eq!(report.removed_skewed, 1);
+        assert_eq!(report.removed_mismatched, 1);
+        assert_eq!(report.removed_tmp, 1);
+        assert_eq!(report.corrupt, 1);
+        assert!(!wrong_name.exists());
+        assert!(corrupt_name.exists(), "gc must not delete unparseable data");
+        // the rebuilt sidecar lists exactly the kept cells with real ids
+        let fresh = RunStore::open(store.dir()).unwrap();
+        assert!(fresh.get(&good).is_some());
+        assert!(fresh.get(&stray).is_some());
+        let entries = fresh.entries();
+        assert!(entries.iter().any(|(f, id)| *f == good.file_name() && *id == good.id()));
+        // verify reports exactly the kept-but-corrupt file
+        let bad = store.verify();
+        assert_eq!(bad.len(), 1);
+        assert!(bad[0].0.contains("00000000000000cc"));
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn read_cell_file_round_trips_and_entries_lists_sorted() {
+        let store = tmp_store("read_cell");
+        let k = key("w:fp32:8 a:fp32:8 g:hindsight:8", 5, 30);
+        let rec = record("inspect");
+        store.put(&k, &rec).unwrap();
+        let files = store.files();
+        assert_eq!(files, vec![k.file_name()]);
+        let (stored_key, stored_rec) = store.read_cell_file(&files[0]).unwrap();
+        assert_eq!(stored_key, k);
+        assert_eq!(stored_rec, rec);
+        assert!(store.read_cell_file("cell-nope.json").is_err());
         let _ = std::fs::remove_dir_all(store.dir());
     }
 

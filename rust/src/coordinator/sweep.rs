@@ -53,6 +53,23 @@ impl SweepOutcome {
     pub fn cell(&self) -> String {
         self.agg.cell()
     }
+
+    /// JSON form for the sweep service's result endpoint: the row's
+    /// aggregate plus per-cell provenance tags.
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::Value;
+        Value::object(vec![
+            ("scheme", Value::from(self.label.clone())),
+            ("acc_mean", Value::Num(self.agg.mean())),
+            ("acc_std", Value::Num(self.agg.std())),
+            ("n", Value::from(self.runs.len())),
+            ("sec_per_step", Value::Num(self.sec_per_step)),
+            (
+                "cells",
+                Value::Array(self.agg.cells.iter().map(|c| Value::from(c.clone())).collect()),
+            ),
+        ])
+    }
 }
 
 /// Run `cfg` across `seeds` on one shared engine, returning the
@@ -130,6 +147,24 @@ mod tests {
         rec.train_seconds = 3.0;
         let out = SweepOutcome::from_runs("ok", vec![rec]);
         assert_eq!(out.sec_per_step, 1.5);
+    }
+
+    #[test]
+    fn to_json_carries_the_row_aggregate_and_provenance() {
+        let runs = vec![
+            RunRecord::synthetic("g:hindsight:8#s1", 4),
+            RunRecord::synthetic("g:hindsight:8#s2", 4),
+        ];
+        let out = SweepOutcome::from_runs("g:hindsight:8", runs);
+        let v = out.to_json();
+        assert_eq!(v.get("scheme").and_then(|s| s.as_str()), Some("g:hindsight:8"));
+        assert_eq!(v.get("n").and_then(|n| n.as_usize()), Some(2));
+        assert_eq!(v.get("acc_mean").and_then(|m| m.as_f64()), Some(out.agg.mean()));
+        assert_eq!(v.get("acc_std").and_then(|s| s.as_f64()), Some(out.agg.std()));
+        assert_eq!(v.get("cells").and_then(|c| c.as_array()).map(|c| c.len()), Some(2));
+        // serialized form survives a parse round-trip
+        let back = crate::util::json::parse(&v.to_string()).unwrap();
+        assert_eq!(back, v);
     }
 
     #[test]

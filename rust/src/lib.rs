@@ -43,6 +43,10 @@
 //!   calibration, the training driver, and the sweep-grid engine
 //!   (brace-expanded scheme grids, a deterministic parallel executor,
 //!   a resumable run store).
+//! * [`service`] — the sweep service (`hindsight serve`): a
+//!   dependency-free HTTP/1.1 front end over the grid executor and
+//!   run store, with cost-prioritized scheduling and deterministic
+//!   `index % N` sharding across processes sharing one store.
 
 pub mod coordinator;
 pub mod data;
@@ -52,5 +56,6 @@ pub mod models;
 pub mod quant;
 pub mod runtime;
 pub mod scheme;
+pub mod service;
 pub mod simulator;
 pub mod util;

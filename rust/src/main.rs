@@ -10,6 +10,10 @@
 //!   bench-step  time the train-step hot path for one model
 //!   bench-report  render the kernel-perf trajectory (BENCH_kernels.json)
 //!               as Markdown speedup tables and gate on a speedup floor
+//!   serve       long-running sweep service: HTTP job submission over the
+//!               grid executor + run store, sharded via --shard i/N
+//!   runs        inspect the run store: list cached cells, --gc prunes
+//!               skewed/mismatched files, --verify re-reads every cell
 //!
 //! Quantization policy is a typed scheme: one clause per tensor class
 //! (`w:` weights, `a:` activations, `g:` gradients), each naming a
@@ -101,16 +105,21 @@ fn run(mut args: Args) -> Result<()> {
         Some("inspect") => cmd_inspect(&mut args),
         Some("bench-step") => cmd_bench_step(&mut args),
         Some("bench-report") => cmd_bench_report(&mut args),
+        Some("serve") => cmd_serve(&mut args),
+        Some("runs") => cmd_runs(&mut args),
         Some(other) => bail!("unknown subcommand '{other}'"),
         None => {
             eprintln!(
-                "usage: hindsight <train|sweep|estimators|mem-report|inspect|bench-step|bench-report> [--flags]\n\
+                "usage: hindsight <train|sweep|estimators|mem-report|inspect|bench-step|bench-report|serve|runs> [--flags]\n\
                  quantization policy: --scheme \"w:current:8 a:hindsight:8 g:hindsight@pc:4\"\n\
                  scheme grids: sweep --grid \"g:{{hindsight,current}}@{{pt,pc}}:8\" --seeds 1..5 \
                  --workers 4 [--store runs] [--no-cache]\n\
                  kernel backend: --kernel-backend scalar|simd|parallel|auto \
                  (default: auto; env HINDSIGHT_KERNEL_BACKEND; auto = measured per-site pick)\n\
                  bench gate: bench-report [--json BENCH_kernels.json] [--floor 1.0]\n\
+                 sweep service: serve [--addr 127.0.0.1:8080] [--workers 2] [--store runs] \
+                 [--shard i/N] [--synthetic] [--poll-ms 500]\n\
+                 store inspection: runs [--store runs] [--gc] [--verify]\n\
                  {}",
                 syntax_help()
             );
@@ -681,5 +690,124 @@ fn cmd_bench_report(args: &mut Args) -> Result<()> {
         Ok(())
     } else {
         bail!("speedup floor violated:\n  {}", failures.join("\n  "))
+    }
+}
+
+/// `serve`: the long-running sweep service.  Binds, prints the bound
+/// address (scripts parse this line to discover an ephemeral `:0`
+/// port), then serves until a drain shutdown completes.
+fn cmd_serve(args: &mut Args) -> Result<()> {
+    use hindsight::service::{CellRunner, ServeOptions, Server, ShardSpec};
+    let addr = args.str_or("addr", "127.0.0.1:8080");
+    let workers = args.usize_or("workers", 2).max(1);
+    let store_dir = args.str_or("store", "runs");
+    let shard = match args.get("shard") {
+        Some(s) => ShardSpec::parse(&s).map_err(|e| anyhow::anyhow!("--shard: {e:#}"))?,
+        None => ShardSpec::solo(),
+    };
+    // --synthetic runs deterministic synthetic cells (CI smoke, demos)
+    // instead of engine training, so the service is exercisable end to
+    // end on machines without compiled artifacts
+    let synthetic = args.bool_or("synthetic", false);
+    let poll_ms = args.u64_or("poll-ms", 500);
+    args.finish().map_err(anyhow::Error::msg)?;
+    let runner = if synthetic {
+        CellRunner::Synthetic
+    } else {
+        CellRunner::Engine
+    };
+    let server = Server::bind(ServeOptions {
+        addr,
+        workers,
+        store_dir: store_dir.clone().into(),
+        shard,
+        runner,
+        poll_ms,
+    })?;
+    println!(
+        "serving on http://{} (shard {shard}, {workers} worker(s), store {store_dir}/, {} cells)",
+        server.local_addr()?,
+        if synthetic { "synthetic" } else { "engine" },
+    );
+    server.run()
+}
+
+/// `runs`: inspect the run store.  Lists cached cells; `--gc` prunes
+/// version-skewed and key-mismatched files and rebuilds the index;
+/// `--verify` re-reads every cell and fails on corrupt ones.
+fn cmd_runs(args: &mut Args) -> Result<()> {
+    let store_dir = args.str_or("store", "runs");
+    let gc = args.bool_or("gc", false);
+    let verify = args.bool_or("verify", false);
+    args.finish().map_err(anyhow::Error::msg)?;
+    let store = RunStore::open(&store_dir)?;
+    store.refresh();
+    if gc {
+        let r = store.gc()?;
+        println!(
+            "gc: kept {} cell(s), removed {} version-skewed + {} key-mismatched + {} temp file(s), \
+             kept {} corrupt (unparseable) file(s)",
+            r.kept, r.removed_skewed, r.removed_mismatched, r.removed_tmp, r.corrupt,
+        );
+    }
+    if verify {
+        let bad = store.verify();
+        if !bad.is_empty() {
+            for (file, err) in &bad {
+                eprintln!("  corrupt: {file}: {err}");
+            }
+            bail!("{} corrupt cell(s) in {store_dir}/", bad.len());
+        }
+        println!("verify: every cell file in {store_dir}/ reads back cleanly");
+    }
+    let files = store.files();
+    let mut table = Table::new(
+        &format!("Run store {store_dir}/ ({} cells)", files.len()),
+        &["Model", "Scheme", "Seed", "Steps", "Age", "File"],
+    );
+    let now = std::time::SystemTime::now();
+    for file in &files {
+        let Ok((key, _record)) = store.read_cell_file(file) else {
+            table.row(&[
+                "?".into(),
+                "(unreadable — see --verify)".into(),
+                "".into(),
+                "".into(),
+                "".into(),
+                file.clone(),
+            ]);
+            continue;
+        };
+        let age = std::fs::metadata(store.dir().join(file))
+            .and_then(|m| m.modified())
+            .ok()
+            .and_then(|t| now.duration_since(t).ok())
+            .map(format_age)
+            .unwrap_or_else(|| "?".into());
+        table.row(&[
+            key.model,
+            key.scheme,
+            key.seed.to_string(),
+            key.steps.to_string(),
+            age,
+            file.clone(),
+        ]);
+    }
+    table.print();
+    println!("{} cell(s) in {store_dir}/", files.len());
+    Ok(())
+}
+
+/// Compact duration rendering for the `runs` age column.
+fn format_age(d: std::time::Duration) -> String {
+    let s = d.as_secs();
+    if s < 60 {
+        format!("{s}s")
+    } else if s < 3600 {
+        format!("{}m", s / 60)
+    } else if s < 86_400 {
+        format!("{}h", s / 3600)
+    } else {
+        format!("{}d", s / 86_400)
     }
 }

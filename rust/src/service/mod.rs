@@ -1,0 +1,24 @@
+//! The sweep service: `hindsight serve` as a library.
+//!
+//! Turns the batch sweep stack (grid expansion, the deterministic
+//! executor's cache discipline, the resumable run store) into a
+//! long-running, sharded serving layer:
+//!
+//! * [`protocol`] — hand-rolled HTTP/1.1 request/response framing in
+//!   the crate's no-deps style, hardened for untrusted input.
+//! * [`queue`] — the shared cost-prioritized work queue (scheme
+//!   datapath bits × model MACs × steps, heaviest first).
+//! * [`shard`] — deterministic `index % N` cell ownership, so N
+//!   processes over one store split a grid with zero coordination.
+//! * [`server`] — the service itself: job registration and
+//!   persistence, worker threads with store write-through, status /
+//!   results / cache-inspection endpoints, graceful drain.
+
+pub mod protocol;
+pub mod queue;
+pub mod server;
+pub mod shard;
+
+pub use queue::{cell_cost, QueueItem, WorkQueue};
+pub use server::{synthetic_cell_record, CellRunner, JobSpec, ServeOptions, Server};
+pub use shard::ShardSpec;

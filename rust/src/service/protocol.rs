@@ -1,0 +1,335 @@
+//! Minimal HTTP/1.1 wire protocol, hand-rolled in the crate's no-deps
+//! style (the server speaks exactly as much HTTP as `curl` needs).
+//!
+//! Supported: request line + headers + `Content-Length` bodies, close
+//! semantics (`Connection: close` on every response — one request per
+//! connection keeps the state machine trivial), JSON and plain-text
+//! response bodies.  Deliberately absent: keep-alive, chunked encoding,
+//! TLS, multipart.  Inputs are untrusted: header and body sizes are
+//! capped ([`MAX_HEADER_BYTES`], [`MAX_BODY_BYTES`]) and JSON bodies go
+//! through the hardened [`crate::util::json::parse`].
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// Cap on request line + headers (a `curl` submit is well under 1 KiB).
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+
+/// Cap on request bodies (a grid submission is tens of bytes).
+pub const MAX_BODY_BYTES: usize = 1024 * 1024;
+
+/// One parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    /// decoded path without the query string, e.g. `/jobs/abc`
+    pub path: String,
+    /// decoded query parameters in order of appearance
+    pub query: Vec<(String, String)>,
+    /// header `(name, value)` pairs, names lowercased
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn query_param(&self, name: &str) -> Option<&str> {
+        self.query
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Parse the body as JSON (the hardened parser: depth + size caps).
+    pub fn json(&self) -> Result<Value> {
+        let text = std::str::from_utf8(&self.body).context("request body is not UTF-8")?;
+        json::parse(text).map_err(|e| anyhow::anyhow!("bad JSON body: {e}"))
+    }
+}
+
+/// Read one request off `r`.  Byte-at-a-time up to the blank line (the
+/// header section is tiny and this keeps the reader dependency-free and
+/// un-overreadable), then an exact `Content-Length` body read.
+pub fn read_request<R: Read>(r: &mut R) -> Result<Request> {
+    let head = read_until_blank_line(r)?;
+    let head = std::str::from_utf8(&head).context("request head is not UTF-8")?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or_default();
+    let mut parts = request_line.split_ascii_whitespace();
+    let method = parts.next().unwrap_or_default().to_string();
+    let target = parts.next().unwrap_or_default();
+    let version = parts.next().unwrap_or_default();
+    if method.is_empty() || target.is_empty() || !version.starts_with("HTTP/1.") {
+        bail!("malformed request line '{request_line}'");
+    }
+    let (raw_path, raw_query) = match target.split_once('?') {
+        Some((p, q)) => (p, Some(q)),
+        None => (target, None),
+    };
+    let path = percent_decode(raw_path);
+    let mut query = Vec::new();
+    if let Some(q) = raw_query {
+        for pair in q.split('&').filter(|p| !p.is_empty()) {
+            let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+            query.push((percent_decode(k), percent_decode(v)));
+        }
+    }
+    let mut headers = Vec::new();
+    for line in lines.filter(|l| !l.is_empty()) {
+        let Some((name, value)) = line.split_once(':') else {
+            bail!("malformed header line '{line}'");
+        };
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let content_length = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .map(|(_, v)| v.parse::<usize>().context("bad Content-Length"))
+        .transpose()?
+        .unwrap_or(0);
+    if content_length > MAX_BODY_BYTES {
+        bail!("body of {content_length} bytes exceeds cap of {MAX_BODY_BYTES}");
+    }
+    let mut body = vec![0u8; content_length];
+    r.read_exact(&mut body).context("reading request body")?;
+    Ok(Request { method, path, query, headers, body })
+}
+
+/// Read bytes until the `\r\n\r\n` header terminator (exclusive),
+/// erroring past [`MAX_HEADER_BYTES`] or on EOF mid-head.
+fn read_until_blank_line<R: Read>(r: &mut R) -> Result<Vec<u8>> {
+    let mut buf = Vec::with_capacity(256);
+    let mut byte = [0u8; 1];
+    loop {
+        let n = r.read(&mut byte).context("reading request head")?;
+        if n == 0 {
+            bail!("connection closed mid-request");
+        }
+        buf.push(byte[0]);
+        if buf.ends_with(b"\r\n\r\n") {
+            buf.truncate(buf.len() - 4);
+            return Ok(buf);
+        }
+        if buf.len() > MAX_HEADER_BYTES {
+            bail!("request head exceeds cap of {MAX_HEADER_BYTES} bytes");
+        }
+    }
+}
+
+/// Minimal percent-decoding (`%41` → `A`, `+` → space); invalid
+/// escapes pass through literally.
+fn percent_decode(s: &str) -> String {
+    let b = s.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'%' if i + 2 < b.len() => {
+                let hex = std::str::from_utf8(&b[i + 1..i + 3]).unwrap_or("");
+                if let Ok(v) = u8::from_str_radix(hex, 16) {
+                    out.push(v);
+                    i += 3;
+                } else {
+                    out.push(b'%');
+                    i += 1;
+                }
+            }
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            c => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// One response, written with `Connection: close`.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, v: &Value) -> Self {
+        Self {
+            status,
+            content_type: "application/json",
+            body: format!("{v}\n").into_bytes(),
+        }
+    }
+
+    pub fn text(status: u16, body: &str) -> Self {
+        Self {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    /// A JSON error envelope: `{"error": msg}`.
+    pub fn error(status: u16, msg: &str) -> Self {
+        Self::json(status, &Value::object(vec![("error", Value::from(msg))]))
+    }
+
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        let reason = reason_phrase(self.status);
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            self.status,
+            reason,
+            self.content_type,
+            self.body.len()
+        )?;
+        w.write_all(&self.body)?;
+        w.flush()?;
+        Ok(())
+    }
+}
+
+fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Status",
+    }
+}
+
+/// Client-side helper (tests, smoke tools): read one full response,
+/// returning `(status, body)`.
+pub fn read_response<R: Read>(r: &mut R) -> Result<(u16, Vec<u8>)> {
+    let head = read_until_blank_line(r)?;
+    let head = std::str::from_utf8(&head).context("response head is not UTF-8")?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or_default();
+    let status: u16 = status_line
+        .split_ascii_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .with_context(|| format!("malformed status line '{status_line}'"))?;
+    let mut content_length = None;
+    for line in lines.filter(|l| !l.is_empty()) {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse::<usize>().ok();
+            }
+        }
+    }
+    let mut body = Vec::new();
+    match content_length {
+        Some(n) => {
+            body.resize(n, 0);
+            r.read_exact(&mut body).context("reading response body")?;
+        }
+        None => {
+            r.read_to_end(&mut body).context("reading response body")?;
+        }
+    }
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_a_get_with_query() {
+        let raw = b"GET /jobs/abc?verbose=1&tag=a%20b HTTP/1.1\r\nHost: x\r\n\r\n";
+        let req = read_request(&mut Cursor::new(&raw[..])).unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/jobs/abc");
+        assert_eq!(req.query_param("verbose"), Some("1"));
+        assert_eq!(req.query_param("tag"), Some("a b"));
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("HOST"), Some("x"));
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn parses_a_post_with_json_body() {
+        let body = r#"{"grid":"g:hindsight:8","seeds":[1,2]}"#;
+        let raw = format!(
+            "POST /jobs HTTP/1.1\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        let req = read_request(&mut Cursor::new(raw.as_bytes())).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/jobs");
+        let v = req.json().unwrap();
+        assert_eq!(v.get("grid").and_then(|g| g.as_str()), Some("g:hindsight:8"));
+        assert_eq!(v.get("seeds").unwrap().as_usize_vec(), Some(vec![1, 2]));
+    }
+
+    #[test]
+    fn rejects_malformed_oversized_and_truncated() {
+        assert!(read_request(&mut Cursor::new(&b"NOPE\r\n\r\n"[..])).is_err());
+        assert!(read_request(&mut Cursor::new(&b"GET / FTP/9\r\n\r\n"[..])).is_err());
+        // truncated: head never terminates
+        assert!(read_request(&mut Cursor::new(&b"GET / HTTP/1.1\r\n"[..])).is_err());
+        // oversized head
+        let huge = format!("GET / HTTP/1.1\r\nX: {}\r\n\r\n", "a".repeat(MAX_HEADER_BYTES));
+        assert!(read_request(&mut Cursor::new(huge.as_bytes())).is_err());
+        // oversized declared body
+        let raw = format!(
+            "POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        );
+        assert!(read_request(&mut Cursor::new(raw.as_bytes())).is_err());
+        // body shorter than declared
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc";
+        assert!(read_request(&mut Cursor::new(&raw[..])).is_err());
+    }
+
+    #[test]
+    fn response_round_trips_through_the_client_reader() {
+        let v = Value::object(vec![("job", Value::from("abc")), ("total", Value::from(4usize))]);
+        let resp = Response::json(202, &v);
+        let mut wire = Vec::new();
+        resp.write_to(&mut wire).unwrap();
+        let text = String::from_utf8(wire.clone()).unwrap();
+        assert!(text.starts_with("HTTP/1.1 202 Accepted\r\n"), "{text}");
+        assert!(text.contains("Connection: close\r\n"));
+        let (status, body) = read_response(&mut Cursor::new(&wire[..])).unwrap();
+        assert_eq!(status, 202);
+        let parsed = crate::util::json::parse(std::str::from_utf8(&body).unwrap().trim()).unwrap();
+        assert_eq!(parsed.get("job").and_then(|j| j.as_str()), Some("abc"));
+        assert_eq!(parsed.get("total").and_then(|t| t.as_usize()), Some(4));
+    }
+
+    #[test]
+    fn error_envelope_and_reason_phrases() {
+        let resp = Response::error(404, "no such job");
+        let mut wire = Vec::new();
+        resp.write_to(&mut wire).unwrap();
+        let text = String::from_utf8(wire).unwrap();
+        assert!(text.starts_with("HTTP/1.1 404 Not Found\r\n"));
+        assert!(text.contains(r#"{"error":"no such job"}"#));
+        assert_eq!(reason_phrase(503), "Service Unavailable");
+        assert_eq!(reason_phrase(999), "Status");
+    }
+}

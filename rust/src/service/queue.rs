@@ -1,0 +1,255 @@
+//! Shared, cost-prioritized work queue for the sweep service.
+//!
+//! Cells are ordered heaviest-first so the most expensive runs start
+//! earliest and stragglers don't tail the sweep (the classic LPT
+//! heuristic).  The cost estimate multiplies the scheme's datapath
+//! bits (wider datapaths cost proportionally more in the simulated
+//! fixed-point pipeline) by the model's MAC count from the
+//! architecture-geometry zoo ([`crate::models`]) and the step count —
+//! a deliberate *ranking* proxy, not a clock model.
+//!
+//! Persistence is job-level, not item-level: submitted jobs land as
+//! files under `<store>/jobs/` and completed cells in the run store,
+//! so a restarted service re-registers every job and re-queues exactly
+//! the cells the store can't serve.  The in-memory queue itself is a
+//! `Mutex<Vec>` + `Condvar` — workers block in [`WorkQueue::pop`];
+//! [`WorkQueue::close`] drains (pops continue until empty), while
+//! [`WorkQueue::clear_and_close`] aborts pending work immediately.
+
+use std::sync::{Condvar, Mutex};
+
+use crate::coordinator::GridCell;
+use crate::scheme::QuantScheme;
+
+/// Estimated relative cost of one cell: `steps × datapath bits ×
+/// model MMACs`, saturating.  Unknown models (e.g. the reduced
+/// trainable manifest variants, which have no zoo geometry) count as
+/// 1 MMAC, so their cells still order by bits × steps.
+pub fn cell_cost(model: &str, scheme: &QuantScheme, steps: u64) -> u64 {
+    let bits = scheme.weights.datapath_bits()
+        + scheme.activations.datapath_bits()
+        + scheme.gradients.datapath_bits();
+    let mmacs = crate::models::by_name(model)
+        .map(|layers| {
+            layers
+                .iter()
+                .map(|l| l.macs())
+                .fold(0u64, |acc, m| acc.saturating_add(m))
+                / 1_000_000
+        })
+        .unwrap_or(0)
+        .max(1);
+    steps.max(1).saturating_mul(bits).saturating_mul(mmacs)
+}
+
+/// One queued unit of work: a grid cell owned by a job.
+#[derive(Debug, Clone)]
+pub struct QueueItem {
+    /// id of the job this cell belongs to
+    pub job: String,
+    pub cell: GridCell,
+    /// precomputed [`cell_cost`] priority (higher pops first)
+    pub cost: u64,
+}
+
+#[derive(Debug, Default)]
+struct QueueState {
+    items: Vec<QueueItem>,
+    /// false once closed: pushes are refused and (after the drain)
+    /// pops return `None` instead of blocking
+    open: bool,
+}
+
+/// A blocking, cost-prioritized multi-producer multi-consumer queue.
+#[derive(Debug)]
+pub struct WorkQueue {
+    state: Mutex<QueueState>,
+    ready: Condvar,
+}
+
+impl Default for WorkQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WorkQueue {
+    pub fn new() -> Self {
+        Self {
+            state: Mutex::new(QueueState { items: Vec::new(), open: true }),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Enqueue items; returns `false` (dropping them) once closed.
+    pub fn push(&self, items: Vec<QueueItem>) -> bool {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        if !st.open {
+            return false;
+        }
+        st.items.extend(items);
+        drop(st);
+        self.ready.notify_all();
+        true
+    }
+
+    /// Block until an item is available (heaviest first; ties break by
+    /// `(job, cell index)` so the order is deterministic), or return
+    /// `None` once the queue is closed and drained.
+    pub fn pop(&self) -> Option<QueueItem> {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if let Some(best) = Self::best_index(&st.items) {
+                return Some(st.items.swap_remove(best));
+            }
+            if !st.open {
+                return None;
+            }
+            st = self.ready.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    fn best_index(items: &[QueueItem]) -> Option<usize> {
+        items
+            .iter()
+            .enumerate()
+            .max_by(|(_, a), (_, b)| {
+                a.cost
+                    .cmp(&b.cost)
+                    // reversed: *lower* (job, index) wins a cost tie
+                    .then_with(|| b.job.cmp(&a.job))
+                    .then_with(|| b.cell.index.cmp(&a.cell.index))
+            })
+            .map(|(i, _)| i)
+    }
+
+    /// Stop accepting work but let workers drain what's queued.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.open = false;
+        drop(st);
+        self.ready.notify_all();
+    }
+
+    /// Abort: discard queued items and close.
+    pub fn clear_and_close(&self) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.items.clear();
+        st.open = false;
+        drop(st);
+        self.ready.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True once `close`/`clear_and_close` has been called.
+    pub fn is_closed(&self) -> bool {
+        !self.state.lock().unwrap_or_else(|e| e.into_inner()).open
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{GridSpec, TrainConfig};
+
+    fn items(job: &str, template: &str, steps: u64) -> Vec<QueueItem> {
+        let mut base = TrainConfig::new("mlp");
+        base.steps = steps;
+        let spec = GridSpec::new(template, &[1]).unwrap();
+        spec.expand(&base)
+            .into_iter()
+            .map(|cell| {
+                let cost = cell_cost(&cell.cfg.model, &cell.cfg.scheme, cell.cfg.steps);
+                QueueItem { job: job.into(), cell, cost }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn cost_scales_with_bits_model_and_steps() {
+        let spec = GridSpec::new("g:{hindsight}:{4,8}", &[1]).unwrap();
+        let narrow = &spec.schemes()[0];
+        let wide = &spec.schemes()[1];
+        assert!(
+            cell_cost("mlp", wide, 100) > cell_cost("mlp", narrow, 100),
+            "wider gradient datapath must cost more"
+        );
+        assert!(cell_cost("mlp", wide, 200) > cell_cost("mlp", wide, 100));
+        // a zoo model with real GMACs dominates the unknown-model floor
+        assert!(cell_cost("resnet18", wide, 100) > cell_cost("mlp", wide, 100));
+        // vgg16 is the heaviest zoo entry; ordering must reflect it
+        assert!(cell_cost("vgg16", wide, 100) > cell_cost("mobilenet_v2", wide, 100));
+    }
+
+    #[test]
+    fn pop_orders_heaviest_first_with_deterministic_ties() {
+        let q = WorkQueue::new();
+        // 4-bit and 8-bit gradient cells: 8-bit must pop first
+        assert!(q.push(items("job-a", "g:{hindsight,current}:{4,8}", 10)));
+        let first = q.pop().unwrap();
+        let second = q.pop().unwrap();
+        assert!(first.cost >= second.cost);
+        assert!(first.cell.label.contains(":8"), "heaviest (8-bit) first: {}", first.cell.label);
+        // ties (same cost) break by lowest (job, cell index)
+        let q = WorkQueue::new();
+        let mut batch = items("job-b", "g:{hindsight,current}:8", 10);
+        batch.extend(items("job-a", "g:{hindsight,current}:8", 10));
+        q.push(batch);
+        let order: Vec<(String, usize)> =
+            std::iter::from_fn(|| {
+                if q.is_empty() {
+                    None
+                } else {
+                    q.pop().map(|it| (it.job, it.cell.index))
+                }
+            })
+            .collect();
+        assert_eq!(
+            order,
+            vec![
+                ("job-a".to_string(), 0),
+                ("job-a".to_string(), 1),
+                ("job-b".to_string(), 0),
+                ("job-b".to_string(), 1),
+            ]
+        );
+    }
+
+    #[test]
+    fn pop_blocks_until_push_and_close_drains() {
+        let q = std::sync::Arc::new(WorkQueue::new());
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            let mut got = Vec::new();
+            while let Some(it) = q2.pop() {
+                got.push(it.cell.label.clone());
+            }
+            got
+        });
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        q.push(items("j", "g:{hindsight,current}:8", 10));
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        q.close();
+        let got = h.join().unwrap();
+        assert_eq!(got.len(), 2, "close must drain queued items first");
+        assert!(!q.push(items("j", "g:tqt:8", 10)), "closed queue refuses pushes");
+    }
+
+    #[test]
+    fn clear_and_close_aborts_pending_work() {
+        let q = WorkQueue::new();
+        q.push(items("j", "g:{hindsight,current,tqt}:8", 10));
+        assert_eq!(q.len(), 3);
+        q.clear_and_close();
+        assert!(q.pop().is_none());
+        assert!(q.is_empty());
+        assert!(q.is_closed());
+    }
+}

@@ -1,0 +1,802 @@
+//! The sweep service: a long-running HTTP front end over the grid
+//! executor and the resumable run store.
+//!
+//! One process = one shard ([`ShardSpec`]).  Submitted jobs (a grid
+//! template + model + seeds + steps) are expanded through
+//! [`GridSpec`], the shard's claimed cells are queued heaviest-first
+//! on the [`WorkQueue`], and worker threads execute them with
+//! write-through to the shared [`RunStore`] — exactly the executor's
+//! cache discipline, so service results are bit-identical to a serial
+//! `run_grid` of the same grid.  Jobs persist as `job-<id>.json` files
+//! under `<store>/jobs/`; sibling shards discover them by polling that
+//! directory, so N processes pointed at one store split a grid with no
+//! coordinator.  Completion of *foreign* cells (owned by another
+//! shard) is observed through the store via [`RunStore::refresh`].
+//!
+//! Endpoints (all JSON; see rust/README.md for curl examples):
+//!
+//! * `POST /jobs` — submit `{"grid", "model", "seeds", "steps"}`;
+//!   202 on first submission, 200 (same id) on resubmission.
+//! * `GET /jobs` — all known jobs with progress counts.
+//! * `GET /jobs/<id>` — one job's progress.
+//! * `GET /jobs/<id>/results` — per-scheme `grid_rows` aggregation
+//!   plus per-cell records; 409 until every cell is in the store.
+//! * `GET /cells` — the store's cell index (cache inspection).
+//! * `GET /healthz` — liveness + shard identity.
+//! * `POST /shutdown` — `{"drain": true}` finishes queued work first;
+//!   `{"drain": false}` aborts queued cells.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::executor::panic_message;
+use crate::coordinator::store::fnv1a64;
+use crate::coordinator::{
+    grid_rows, parse_seeds, CellKey, CellOutcome, CellRun, GridCell, GridSpec, RunStore,
+    TrainConfig, Trainer,
+};
+use crate::metrics::RunRecord;
+use crate::runtime::engine::Engine;
+use crate::service::protocol::{read_request, Request, Response};
+use crate::service::queue::{cell_cost, QueueItem, WorkQueue};
+use crate::service::shard::ShardSpec;
+use crate::util::json::Value;
+
+/// How a worker turns a claimed cell into a [`RunRecord`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CellRunner {
+    /// real training through the PJRT engine (needs artifacts)
+    Engine,
+    /// deterministic synthetic records (tests, CI smoke, benches)
+    Synthetic,
+}
+
+/// The synthetic cell record: shared by the service, its tests and the
+/// benches so "bit-identical to a serial run" is checkable without
+/// artifacts.  Must stay in lockstep with the grid benches' runner.
+pub fn synthetic_cell_record(cell: &GridCell) -> RunRecord {
+    RunRecord::synthetic(&cell.label, cell.cfg.steps)
+}
+
+/// A submitted sweep: the JSON body of `POST /jobs`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    /// grid template, e.g. `g:{hindsight,current,tqt,banner}@{pt,pc}:{4,8}`
+    pub grid: String,
+    /// model name (default `mlp`)
+    pub model: String,
+    /// seed axis (default `[1]`)
+    pub seeds: Vec<u64>,
+    /// training steps per cell (default: the model config's default)
+    pub steps: Option<u64>,
+}
+
+impl JobSpec {
+    /// Parse a submission body.  `seeds` accepts both a JSON array
+    /// (`[1,2,3]`) and the CLI string form (`"1..5"`).
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let grid = v
+            .get("grid")
+            .and_then(|g| g.as_str())
+            .context("submission needs a string 'grid' template")?
+            .to_string();
+        let model = v
+            .get("model")
+            .and_then(|m| m.as_str())
+            .unwrap_or("mlp")
+            .to_string();
+        let seeds = match v.get("seeds") {
+            None => vec![1],
+            Some(Value::Str(s)) => parse_seeds(s)?,
+            Some(Value::Array(a)) => {
+                let seeds: Option<Vec<u64>> =
+                    a.iter().map(|x| x.as_f64().map(|f| f as u64)).collect();
+                seeds.context("'seeds' array must be numeric")?
+            }
+            Some(_) => bail!("'seeds' must be an array or a range string"),
+        };
+        let steps = v.get("steps").and_then(|s| s.as_f64()).map(|f| f as u64);
+        Ok(Self { grid, model, seeds, steps })
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut kv = vec![
+            ("grid", Value::from(self.grid.clone())),
+            ("model", Value::from(self.model.clone())),
+            (
+                "seeds",
+                Value::Array(self.seeds.iter().map(|&s| Value::Num(s as f64)).collect()),
+            ),
+        ];
+        if let Some(steps) = self.steps {
+            kv.push(("steps", Value::Num(steps as f64)));
+        }
+        Value::object(kv)
+    }
+
+    /// Content-derived job id (16 hex chars): identical submissions
+    /// map to the same job, so `POST /jobs` is idempotent.
+    pub fn id(&self) -> String {
+        let seeds: Vec<String> = self.seeds.iter().map(|s| s.to_string()).collect();
+        let flat = format!(
+            "{}|{}|{}|{}",
+            self.grid,
+            self.model,
+            seeds.join(","),
+            self.steps.map(|s| s.to_string()).unwrap_or_default()
+        );
+        format!("{:016x}", fnv1a64(flat.as_bytes()))
+    }
+
+    /// The base config the grid expands over.
+    pub fn base_config(&self) -> TrainConfig {
+        let mut cfg = TrainConfig::new(&self.model);
+        if let Some(steps) = self.steps {
+            cfg.steps = steps;
+        }
+        cfg
+    }
+
+    /// Expand into grid cells (validates the template and seeds).
+    pub fn expand(&self) -> Result<Vec<GridCell>> {
+        let spec = GridSpec::new(&self.grid, &self.seeds)?;
+        Ok(spec.expand(&self.base_config()))
+    }
+}
+
+/// Where this process stands on one cell of a job.
+#[derive(Debug, Clone, PartialEq)]
+enum LocalState {
+    /// another shard owns this cell; we watch the store for it
+    Foreign,
+    Queued,
+    Running,
+    /// executed here this session
+    Ran,
+    /// served from the store (registration pre-pass or late check)
+    Cached,
+    Failed(String),
+}
+
+#[derive(Debug)]
+struct JobState {
+    spec: JobSpec,
+    cells: Vec<GridCell>,
+    /// indexed by dense grid index, parallel to `cells`
+    local: Vec<LocalState>,
+}
+
+/// State shared between the accept loop, workers, poller and handlers.
+struct Shared {
+    store: RunStore,
+    jobs_dir: PathBuf,
+    shard: ShardSpec,
+    runner: CellRunner,
+    queue: WorkQueue,
+    jobs: Mutex<HashMap<String, JobState>>,
+    /// cells executed (not cache-served) by this process
+    executed: AtomicUsize,
+    /// workers currently inside a cell
+    active: AtomicUsize,
+    draining: AtomicBool,
+    stop: AtomicBool,
+}
+
+impl Shared {
+    /// Register a job: expand, cache pre-pass over claimed cells,
+    /// queue the rest, persist the job file.  Returns `(id, created)`;
+    /// re-registration of a known id is a no-op.
+    fn register_job(&self, spec: JobSpec) -> Result<(String, bool)> {
+        let id = spec.id();
+        {
+            let jobs = self.jobs.lock().unwrap_or_else(|e| e.into_inner());
+            if jobs.contains_key(&id) {
+                return Ok((id, false));
+            }
+        }
+        let cells = spec.expand()?;
+        let mut local = Vec::with_capacity(cells.len());
+        let mut items = Vec::new();
+        for cell in &cells {
+            if !self.shard.claims(cell.index) {
+                local.push(LocalState::Foreign);
+            } else if self.store.get(&CellKey::of(&cell.cfg)).is_some() {
+                local.push(LocalState::Cached);
+            } else {
+                local.push(LocalState::Queued);
+                items.push(QueueItem {
+                    job: id.clone(),
+                    cell: cell.clone(),
+                    cost: cell_cost(&cell.cfg.model, &cell.cfg.scheme, cell.cfg.steps),
+                });
+            }
+        }
+        {
+            let mut jobs = self.jobs.lock().unwrap_or_else(|e| e.into_inner());
+            // a concurrent submit of the same spec may have won the race
+            if jobs.contains_key(&id) {
+                return Ok((id, false));
+            }
+            jobs.insert(id.clone(), JobState { spec: spec.clone(), cells, local });
+        }
+        if !items.is_empty() && !self.queue.push(items) {
+            let mut jobs = self.jobs.lock().unwrap_or_else(|e| e.into_inner());
+            if let Some(job) = jobs.get_mut(&id) {
+                for st in job.local.iter_mut() {
+                    if *st == LocalState::Queued {
+                        *st = LocalState::Failed("queue closed".into());
+                    }
+                }
+            }
+        }
+        self.persist_job_file(&id, &spec);
+        Ok((id, true))
+    }
+
+    /// Write `job-<id>.json` (atomic tmp + rename) unless present.
+    fn persist_job_file(&self, id: &str, spec: &JobSpec) {
+        let path = self.jobs_dir.join(format!("job-{id}.json"));
+        if path.exists() {
+            return;
+        }
+        let tmp = self
+            .jobs_dir
+            .join(format!(".tmp-{}-job-{id}.json", std::process::id()));
+        let write = std::fs::write(&tmp, format!("{}\n", spec.to_json()))
+            .and_then(|_| std::fs::rename(&tmp, &path));
+        if let Err(e) = write {
+            log::warn!("serve: could not persist job file {}: {e:#}", path.display());
+        }
+    }
+
+    /// Scan `<store>/jobs/` and register any job this process doesn't
+    /// know yet (startup recovery + cross-shard job discovery).
+    fn register_jobs_from_dir(&self) {
+        let Ok(rd) = std::fs::read_dir(&self.jobs_dir) else {
+            return;
+        };
+        for e in rd.filter_map(|e| e.ok()) {
+            let name = e.file_name().to_string_lossy().into_owned();
+            let Some(id) = name.strip_prefix("job-").and_then(|n| n.strip_suffix(".json"))
+            else {
+                continue;
+            };
+            let known = self
+                .jobs
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .contains_key(id);
+            if known {
+                continue;
+            }
+            let spec = std::fs::read_to_string(e.path())
+                .map_err(anyhow::Error::from)
+                .and_then(|text| {
+                    crate::util::json::parse(&text)
+                        .map_err(anyhow::Error::from)
+                        .and_then(|v| JobSpec::from_json(&v))
+                });
+            match spec {
+                Ok(spec) => {
+                    if let Err(err) = self.register_job(spec) {
+                        log::warn!("serve: job file {name} failed to register: {err:#}");
+                    }
+                }
+                Err(err) => log::warn!("serve: unreadable job file {name}: {err:#}"),
+            }
+        }
+    }
+
+    fn set_state(&self, job: &str, grid_index: usize, st: LocalState) {
+        let mut jobs = self.jobs.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(j) = jobs.get_mut(job) {
+            if let Some(slot) = j.local.get_mut(grid_index) {
+                *slot = st;
+            }
+        }
+    }
+
+    /// One worker: pop-execute-store until the queue closes and drains.
+    fn worker_loop(&self) {
+        let mut engine: Option<Engine> = None;
+        while let Some(item) = self.queue.pop() {
+            self.active.fetch_add(1, Ordering::SeqCst);
+            let key = CellKey::of(&item.cell.cfg);
+            // late cache check: another shard (or an earlier failure's
+            // retry) may have stored this cell since registration
+            if self.store.get(&key).is_some() {
+                self.set_state(&item.job, item.cell.index, LocalState::Cached);
+                self.active.fetch_sub(1, Ordering::SeqCst);
+                continue;
+            }
+            self.set_state(&item.job, item.cell.index, LocalState::Running);
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                run_one_cell(self.runner, &mut engine, &item.cell)
+            }));
+            let state = match outcome {
+                Ok(Ok(record)) => {
+                    if let Err(e) = self.store.put(&key, &record) {
+                        log::warn!("serve: store write for '{}' failed: {e:#}", item.cell.label);
+                    }
+                    self.executed.fetch_add(1, Ordering::SeqCst);
+                    LocalState::Ran
+                }
+                Ok(Err(e)) => LocalState::Failed(format!("{e:#}")),
+                Err(p) => LocalState::Failed(format!("panicked: {}", panic_message(&*p))),
+            };
+            self.set_state(&item.job, item.cell.index, state);
+            self.active.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Execute one claimed cell under the configured runner.
+fn run_one_cell(
+    runner: CellRunner,
+    engine: &mut Option<Engine>,
+    cell: &GridCell,
+) -> Result<RunRecord> {
+    match runner {
+        CellRunner::Synthetic => Ok(synthetic_cell_record(cell)),
+        CellRunner::Engine => {
+            if engine.is_none() {
+                *engine = Some(Engine::new().context("creating worker engine")?);
+            }
+            Trainer::new(engine.as_ref().expect("just created"), cell.cfg.clone())?.run()
+        }
+    }
+}
+
+/// Configuration of one service process.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// bind address, e.g. `127.0.0.1:8080` (`:0` = ephemeral port)
+    pub addr: String,
+    /// worker threads executing cells
+    pub workers: usize,
+    /// shared run-store directory (job files land in `<dir>/jobs/`)
+    pub store_dir: PathBuf,
+    pub shard: ShardSpec,
+    pub runner: CellRunner,
+    /// job-directory poll cadence for cross-shard discovery
+    pub poll_ms: u64,
+}
+
+/// A bound (not yet running) service.
+pub struct Server {
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    workers: usize,
+    poll_ms: u64,
+}
+
+impl Server {
+    /// Bind the listener and open the store; `run` starts serving.
+    pub fn bind(opts: ServeOptions) -> Result<Self> {
+        let store = RunStore::open(&opts.store_dir)?;
+        let jobs_dir = opts.store_dir.join("jobs");
+        std::fs::create_dir_all(&jobs_dir)
+            .with_context(|| format!("creating jobs dir {}", jobs_dir.display()))?;
+        let listener = TcpListener::bind(&opts.addr)
+            .with_context(|| format!("binding {}", opts.addr))?;
+        // nonblocking accept so the loop can watch the shutdown flags
+        listener.set_nonblocking(true).context("setting nonblocking accept")?;
+        Ok(Self {
+            listener,
+            shared: Arc::new(Shared {
+                store,
+                jobs_dir,
+                shard: opts.shard,
+                runner: opts.runner,
+                queue: WorkQueue::new(),
+                jobs: Mutex::new(HashMap::new()),
+                executed: AtomicUsize::new(0),
+                active: AtomicUsize::new(0),
+                draining: AtomicBool::new(false),
+                stop: AtomicBool::new(false),
+            }),
+            workers: opts.workers.max(1),
+            poll_ms: opts.poll_ms.max(10),
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Serve until drained (`POST /shutdown`): accept loop + workers +
+    /// the job-directory poller.  Returns once all in-flight work has
+    /// finished and every thread has joined.
+    pub fn run(self) -> Result<()> {
+        if self.shared.runner == CellRunner::Engine {
+            crate::runtime::engine::ensure_default_xla_flags();
+        }
+        // the fused kernels' chunked-parallel backend splits threads
+        // with the executor; tell it how many workers surround it
+        let _guard = crate::quant::kernel::parallel::external_parallelism_guard(self.workers);
+        self.shared.register_jobs_from_dir();
+        let workers: Vec<_> = (0..self.workers)
+            .map(|_| {
+                let shared = self.shared.clone();
+                std::thread::spawn(move || shared.worker_loop())
+            })
+            .collect();
+        let poller = {
+            let shared = self.shared.clone();
+            let poll_ms = self.poll_ms;
+            std::thread::spawn(move || {
+                while !shared.stop.load(Ordering::SeqCst)
+                    && !shared.draining.load(Ordering::SeqCst)
+                    && !shared.queue.is_closed()
+                {
+                    std::thread::sleep(Duration::from_millis(poll_ms));
+                    shared.register_jobs_from_dir();
+                }
+            })
+        };
+        loop {
+            if self.shared.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            if self.shared.draining.load(Ordering::SeqCst)
+                && self.shared.queue.is_empty()
+                && self.shared.active.load(Ordering::SeqCst) == 0
+            {
+                break;
+            }
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    let shared = self.shared.clone();
+                    std::thread::spawn(move || handle_conn(stream, &shared));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(e) => {
+                    log::warn!("serve: accept failed: {e}");
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        }
+        // release any still-blocked workers, then wait for in-flight
+        // cells: run() returning means the store is fully written
+        self.shared.queue.close();
+        for w in workers {
+            let _ = w.join();
+        }
+        let _ = poller.join();
+        Ok(())
+    }
+}
+
+/// Serve one connection (one request: `Connection: close` semantics).
+fn handle_conn(mut stream: TcpStream, shared: &Shared) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    let response = match read_request(&mut stream) {
+        Ok(req) => route(&req, shared),
+        Err(e) => Response::error(400, &format!("{e:#}")),
+    };
+    if let Err(e) = response.write_to(&mut stream) {
+        log::debug!("serve: response write failed: {e:#}");
+    }
+}
+
+fn route(req: &Request, shared: &Shared) -> Response {
+    let segments: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+    match (req.method.as_str(), segments.as_slice()) {
+        ("GET", ["healthz"]) => healthz(shared),
+        ("POST", ["jobs"]) => submit(req, shared),
+        ("GET", ["jobs"]) => list_jobs(shared),
+        ("GET", ["jobs", id]) => job_status(shared, id),
+        ("GET", ["jobs", id, "results"]) => job_results(shared, id),
+        ("GET", ["cells"]) => cells(shared),
+        ("POST", ["shutdown"]) => shutdown(req, shared),
+        ("GET", _) | ("POST", _) => Response::error(404, &format!("no route for {}", req.path)),
+        _ => Response::error(405, &format!("method {} not allowed", req.method)),
+    }
+}
+
+fn healthz(shared: &Shared) -> Response {
+    let jobs = shared.jobs.lock().unwrap_or_else(|e| e.into_inner()).len();
+    Response::json(
+        200,
+        &Value::object(vec![
+            ("status", Value::from("ok")),
+            ("shard", Value::from(shared.shard.to_string())),
+            ("jobs", Value::from(jobs)),
+            ("queue", Value::from(shared.queue.len())),
+            ("active", Value::from(shared.active.load(Ordering::SeqCst))),
+            ("executed", Value::from(shared.executed.load(Ordering::SeqCst))),
+            ("draining", Value::from(shared.draining.load(Ordering::SeqCst))),
+        ]),
+    )
+}
+
+fn submit(req: &Request, shared: &Shared) -> Response {
+    if shared.draining.load(Ordering::SeqCst) || shared.stop.load(Ordering::SeqCst) {
+        return Response::error(503, "shutting down: not accepting submissions");
+    }
+    let spec = match req.json().and_then(|v| JobSpec::from_json(&v)) {
+        Ok(spec) => spec,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    match shared.register_job(spec) {
+        Ok((id, created)) => {
+            let status = if created { 202 } else { 200 };
+            match status_doc(shared, &id) {
+                Some(doc) => Response::json(status, &doc),
+                None => Response::error(500, "job vanished during registration"),
+            }
+        }
+        Err(e) => Response::error(400, &format!("{e:#}")),
+    }
+}
+
+fn list_jobs(shared: &Shared) -> Response {
+    let ids: Vec<String> = {
+        let jobs = shared.jobs.lock().unwrap_or_else(|e| e.into_inner());
+        let mut ids: Vec<String> = jobs.keys().cloned().collect();
+        ids.sort();
+        ids
+    };
+    shared.store.refresh();
+    let docs: Vec<Value> = ids.iter().filter_map(|id| status_doc(shared, id)).collect();
+    Response::json(
+        200,
+        &Value::object(vec![
+            ("count", Value::from(docs.len())),
+            ("jobs", Value::Array(docs)),
+        ]),
+    )
+}
+
+fn job_status(shared: &Shared, id: &str) -> Response {
+    // foreign cells complete through the store: pick up sibling writes
+    shared.store.refresh();
+    match status_doc(shared, id) {
+        Some(doc) => Response::json(200, &doc),
+        None => Response::error(404, &format!("no job '{id}'")),
+    }
+}
+
+/// Build one job's status document (None = unknown id).
+fn status_doc(shared: &Shared, id: &str) -> Option<Value> {
+    let jobs = shared.jobs.lock().unwrap_or_else(|e| e.into_inner());
+    let job = jobs.get(id)?;
+    let total = job.cells.len();
+    let (mut queued, mut running, mut ran, mut cached, mut failed) = (0, 0, 0, 0, 0);
+    let (mut stored, mut pending) = (0, 0);
+    for (cell, st) in job.cells.iter().zip(&job.local) {
+        match st {
+            LocalState::Queued => queued += 1,
+            LocalState::Running => running += 1,
+            LocalState::Ran => ran += 1,
+            LocalState::Cached => cached += 1,
+            LocalState::Failed(_) => failed += 1,
+            LocalState::Foreign => {
+                if shared.store.get(&CellKey::of(&cell.cfg)).is_some() {
+                    stored += 1;
+                } else {
+                    pending += 1;
+                }
+            }
+        }
+    }
+    let done = ran + cached + stored;
+    let failures: Vec<Value> = job
+        .cells
+        .iter()
+        .zip(&job.local)
+        .filter_map(|(cell, st)| match st {
+            LocalState::Failed(e) => Some(Value::object(vec![
+                ("label", Value::from(cell.label.clone())),
+                ("error", Value::from(e.clone())),
+            ])),
+            _ => None,
+        })
+        .collect();
+    Some(Value::object(vec![
+        ("job", Value::from(id)),
+        ("grid", Value::from(job.spec.grid.clone())),
+        ("model", Value::from(job.spec.model.clone())),
+        ("shard", Value::from(shared.shard.to_string())),
+        ("total", Value::from(total)),
+        ("claimed", Value::from(total - (stored + pending))),
+        ("queued", Value::from(queued)),
+        ("running", Value::from(running)),
+        ("ran", Value::from(ran)),
+        ("cached", Value::from(cached)),
+        ("stored", Value::from(stored)),
+        ("pending", Value::from(pending)),
+        ("failed", Value::from(failed)),
+        ("done", Value::from(done)),
+        ("complete", Value::from(done == total)),
+        ("executed", Value::from(shared.executed.load(Ordering::SeqCst))),
+        ("failures", Value::Array(failures)),
+    ]))
+}
+
+fn job_results(shared: &Shared, id: &str) -> Response {
+    shared.store.refresh();
+    let cells: Vec<GridCell> = {
+        let jobs = shared.jobs.lock().unwrap_or_else(|e| e.into_inner());
+        match jobs.get(id) {
+            Some(job) => job.cells.clone(),
+            None => return Response::error(404, &format!("no job '{id}'")),
+        }
+    };
+    // every cell must be servable from the shared store — the *merged*
+    // result across shards, never just this process's slice
+    let mut runs: Vec<CellRun> = Vec::with_capacity(cells.len());
+    for cell in &cells {
+        let key = CellKey::of(&cell.cfg);
+        match shared.store.get(&key) {
+            Some(record) => runs.push(CellRun {
+                index: cell.index,
+                label: cell.label.clone(),
+                key,
+                outcome: CellOutcome::Cached(record),
+            }),
+            None => {
+                return Response::error(409, &format!("cell '{}' not complete yet", cell.label))
+            }
+        }
+    }
+    let rows: Vec<Value> = grid_rows(&runs).iter().map(|row| row.to_json()).collect();
+    let records: Vec<Value> = runs
+        .iter()
+        .map(|run| {
+            Value::object(vec![
+                ("label", Value::from(run.label.clone())),
+                (
+                    "record",
+                    run.outcome.record().expect("cached outcome has a record").to_json(),
+                ),
+            ])
+        })
+        .collect();
+    Response::json(
+        200,
+        &Value::object(vec![
+            ("job", Value::from(id)),
+            ("rows", Value::Array(rows)),
+            ("cells", Value::Array(records)),
+        ]),
+    )
+}
+
+fn cells(shared: &Shared) -> Response {
+    shared.store.refresh();
+    let entries: Vec<Value> = shared
+        .store
+        .entries()
+        .into_iter()
+        .map(|(file, key_id)| {
+            Value::object(vec![
+                ("file", Value::from(file)),
+                ("id", Value::from(key_id)),
+            ])
+        })
+        .collect();
+    Response::json(
+        200,
+        &Value::object(vec![
+            ("count", Value::from(entries.len())),
+            ("cells", Value::Array(entries)),
+        ]),
+    )
+}
+
+fn shutdown(req: &Request, shared: &Shared) -> Response {
+    // default: drain (finish queued work); {"drain": false} aborts
+    let drain = req
+        .json()
+        .ok()
+        .and_then(|v| v.get("drain").and_then(|d| d.as_bool()))
+        .unwrap_or(true);
+    shared.draining.store(true, Ordering::SeqCst);
+    if drain {
+        shared.queue.close();
+    } else {
+        shared.queue.clear_and_close();
+        shared.stop.store(true, Ordering::SeqCst);
+    }
+    Response::json(
+        200,
+        &Value::object(vec![
+            ("shutting_down", Value::from(true)),
+            ("drain", Value::from(drain)),
+        ]),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_spec_parses_defaults_ranges_and_rejects_bad_bodies() {
+        let v = crate::util::json::parse(r#"{"grid":"g:hindsight:8"}"#).unwrap();
+        let spec = JobSpec::from_json(&v).unwrap();
+        assert_eq!(spec.model, "mlp");
+        assert_eq!(spec.seeds, vec![1]);
+        assert_eq!(spec.steps, None);
+        let v = crate::util::json::parse(
+            r#"{"grid":"g:{hindsight,current}:8","model":"cnn","seeds":"1..3","steps":12}"#,
+        )
+        .unwrap();
+        let spec = JobSpec::from_json(&v).unwrap();
+        assert_eq!(spec.model, "cnn");
+        assert_eq!(spec.seeds, vec![1, 2, 3]);
+        assert_eq!(spec.steps, Some(12));
+        let v = crate::util::json::parse(r#"{"grid":"g:hindsight:8","seeds":[4,5]}"#).unwrap();
+        assert_eq!(JobSpec::from_json(&v).unwrap().seeds, vec![4, 5]);
+        for bad in [
+            r#"{}"#,
+            r#"{"grid":12}"#,
+            r#"{"grid":"g:hindsight:8","seeds":{"a":1}}"#,
+            r#"{"grid":"g:hindsight:8","seeds":["x"]}"#,
+        ] {
+            let v = crate::util::json::parse(bad).unwrap();
+            assert!(JobSpec::from_json(&v).is_err(), "{bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn job_ids_are_content_derived_and_stable() {
+        let v = crate::util::json::parse(
+            r#"{"grid":"g:hindsight:8","model":"mlp","seeds":[1,2],"steps":6}"#,
+        )
+        .unwrap();
+        let a = JobSpec::from_json(&v).unwrap();
+        let b = JobSpec::from_json(&v).unwrap();
+        assert_eq!(a.id(), b.id());
+        assert_eq!(a.id().len(), 16);
+        let mut c = a.clone();
+        c.seeds = vec![1, 3];
+        assert_ne!(a.id(), c.id());
+        // round-trips through the job-file form
+        let back = JobSpec::from_json(&a.to_json()).unwrap();
+        assert_eq!(back, a);
+        assert_eq!(back.id(), a.id());
+    }
+
+    #[test]
+    fn job_spec_expands_through_the_grid_engine() {
+        let spec = JobSpec {
+            grid: "g:{hindsight,current,tqt}:8".into(),
+            model: "mlp".into(),
+            seeds: vec![1, 2],
+            steps: Some(6),
+        };
+        let cells = spec.expand().unwrap();
+        assert_eq!(cells.len(), 6);
+        assert!(cells.iter().all(|c| c.cfg.steps == 6));
+        assert!(cells.iter().all(|c| c.cfg.model == "mlp"));
+        // dense, stable indices — the shard contract
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+        }
+        let bad = JobSpec { grid: "g:{unclosed".into(), ..spec };
+        assert!(bad.expand().is_err());
+    }
+
+    #[test]
+    fn synthetic_records_match_the_executor_convention() {
+        let spec = JobSpec {
+            grid: "g:hindsight:8".into(),
+            model: "mlp".into(),
+            seeds: vec![1],
+            steps: Some(4),
+        };
+        let cells = spec.expand().unwrap();
+        let rec = synthetic_cell_record(&cells[0]);
+        assert_eq!(rec, RunRecord::synthetic(&cells[0].label, 4));
+    }
+}

@@ -1,0 +1,118 @@
+//! Deterministic grid sharding: `--shard i/N` claims every cell whose
+//! dense grid index is `i (mod N)`.
+//!
+//! [`GridSpec::expand`](crate::coordinator::GridSpec::expand) assigns
+//! each cell a dense, stable index (scheme-major, seed-minor), so N
+//! service processes pointed at the *same* grid and the *same* store
+//! directory split the work with zero coordination: the claimed sets
+//! are disjoint by construction and their union is the whole grid, and
+//! the shared run store merges the results.  A cell another shard owns
+//! is "foreign" to this process — it never executes it, but status and
+//! result endpoints observe its completion through the store.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::GridCell;
+
+/// Which slice of a grid this process executes: `index` of `count`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// this process's shard number, `0 <= index < count`
+    pub index: usize,
+    /// total number of shards splitting the grid
+    pub count: usize,
+}
+
+impl ShardSpec {
+    /// The un-sharded singleton: claims every cell.
+    pub fn solo() -> Self {
+        Self { index: 0, count: 1 }
+    }
+
+    /// Parse the CLI form `i/N` (e.g. `0/2`, `3/4`).
+    pub fn parse(s: &str) -> Result<Self> {
+        let Some((i, n)) = s.split_once('/') else {
+            bail!("shard spec '{s}' is not of the form i/N");
+        };
+        let index: usize = i.trim().parse().map_err(|_| {
+            anyhow::anyhow!("shard index '{i}' in '{s}' is not an integer")
+        })?;
+        let count: usize = n.trim().parse().map_err(|_| {
+            anyhow::anyhow!("shard count '{n}' in '{s}' is not an integer")
+        })?;
+        if count == 0 {
+            bail!("shard count must be >= 1 in '{s}'");
+        }
+        if index >= count {
+            bail!("shard index {index} out of range for {count} shards in '{s}'");
+        }
+        Ok(Self { index, count })
+    }
+
+    /// Does this shard own the cell at dense grid index `grid_index`?
+    pub fn claims(&self, grid_index: usize) -> bool {
+        grid_index % self.count == self.index
+    }
+
+    /// The subset of `cells` this shard owns (order preserved).
+    pub fn filter(&self, cells: &[GridCell]) -> Vec<GridCell> {
+        cells
+            .iter()
+            .filter(|c| self.claims(c.index))
+            .cloned()
+            .collect()
+    }
+}
+
+impl std::fmt::Display for ShardSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}", self.index, self.count)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::GridSpec;
+
+    #[test]
+    fn parse_accepts_valid_and_rejects_invalid() {
+        assert_eq!(ShardSpec::parse("0/1").unwrap(), ShardSpec::solo());
+        assert_eq!(ShardSpec::parse("1/3").unwrap(), ShardSpec { index: 1, count: 3 });
+        assert_eq!(ShardSpec::parse(" 2 / 4 ").unwrap(), ShardSpec { index: 2, count: 4 });
+        for bad in ["", "1", "a/2", "1/b", "1/0", "2/2", "5/3", "-1/2"] {
+            assert!(ShardSpec::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
+        assert_eq!(ShardSpec { index: 1, count: 3 }.to_string(), "1/3");
+    }
+
+    #[test]
+    fn shards_partition_the_grid_exactly() {
+        let spec = GridSpec::new("g:{hindsight,current,tqt,banner}:{4,8}", &[1, 2, 3]).unwrap();
+        let cells = spec.expand(&crate::coordinator::TrainConfig::new("mlp"));
+        assert!(cells.len() >= 8, "grid must be non-trivial");
+        for count in 1..=4 {
+            let shards: Vec<ShardSpec> =
+                (0..count).map(|index| ShardSpec { index, count }).collect();
+            let mut seen = vec![0usize; cells.len()];
+            for shard in &shards {
+                for cell in shard.filter(&cells) {
+                    seen[cell.index] += 1;
+                }
+            }
+            // every cell claimed by exactly one shard: disjoint + total
+            assert!(
+                seen.iter().all(|&n| n == 1),
+                "N={count}: claim counts {seen:?} must all be 1"
+            );
+        }
+    }
+
+    #[test]
+    fn solo_claims_everything() {
+        let solo = ShardSpec::solo();
+        for i in 0..64 {
+            assert!(solo.claims(i));
+        }
+    }
+}

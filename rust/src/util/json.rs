@@ -3,6 +3,11 @@
 //! Supports the full JSON grammar minus exotic number forms; preserves
 //! object key order (the manifest relies on positional marshalling, and
 //! ordered keys make diffs and round-trips deterministic).
+//!
+//! Hardened for untrusted input (the sweep service feeds network bytes
+//! straight in): nesting is bounded by [`MAX_DEPTH`] and input size by
+//! [`MAX_INPUT_BYTES`], both returning a clean [`ParseError`] instead
+//! of a stack overflow or an unbounded allocation.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -144,10 +149,28 @@ impl<T: Into<Value>> From<Vec<T>> for Value {
 // Parser
 // ---------------------------------------------------------------------------
 
+/// Maximum container nesting depth `parse` accepts.  The recursive
+/// descent uses one stack frame per level, so this bounds stack use on
+/// adversarial input like `"[".repeat(1 << 20)`; 128 levels is far
+/// beyond any document the crate produces or consumes.
+pub const MAX_DEPTH: usize = 128;
+
+/// Maximum input size `parse` accepts (64 MiB).  The parser is O(n) in
+/// time but can allocate a multiple of the input size for pathological
+/// documents; capping the input bounds both.
+pub const MAX_INPUT_BYTES: usize = 64 * 1024 * 1024;
+
 pub fn parse(text: &str) -> Result<Value, ParseError> {
+    if text.len() > MAX_INPUT_BYTES {
+        return Err(ParseError {
+            pos: 0,
+            msg: format!("input of {} bytes exceeds cap of {MAX_INPUT_BYTES}", text.len()),
+        });
+    }
     let mut p = Parser {
         b: text.as_bytes(),
         i: 0,
+        depth: 0,
     };
     p.ws();
     let v = p.value()?;
@@ -161,6 +184,8 @@ pub fn parse(text: &str) -> Result<Value, ParseError> {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    /// current container nesting level (bounded by [`MAX_DEPTH`])
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -201,8 +226,18 @@ impl<'a> Parser<'a> {
 
     fn value(&mut self) -> Result<Value, ParseError> {
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(b'{') => {
+                self.descend()?;
+                let v = self.object();
+                self.depth -= 1;
+                v
+            }
+            Some(b'[') => {
+                self.descend()?;
+                let v = self.array();
+                self.depth -= 1;
+                v
+            }
             Some(b'"') => Ok(Value::Str(self.string()?)),
             Some(b't') => self.lit("true", Value::Bool(true)),
             Some(b'f') => self.lit("false", Value::Bool(false)),
@@ -210,6 +245,14 @@ impl<'a> Parser<'a> {
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
             _ => Err(self.err("unexpected character")),
         }
+    }
+
+    fn descend(&mut self) -> Result<(), ParseError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err(&format!("nesting deeper than {MAX_DEPTH} levels")));
+        }
+        Ok(())
     }
 
     fn object(&mut self) -> Result<Value, ParseError> {
@@ -462,5 +505,97 @@ mod tests {
         let v = parse(r#"{"z":1,"a":2,"m":3}"#).unwrap();
         let keys: Vec<_> = v.as_object().unwrap().iter().map(|(k, _)| k.as_str()).collect();
         assert_eq!(keys, vec!["z", "a", "m"]);
+    }
+
+    fn nested(depth: usize) -> String {
+        let mut s = "[".repeat(depth);
+        s.push('0');
+        s.push_str(&"]".repeat(depth));
+        s
+    }
+
+    #[test]
+    fn depth_limit_boundary() {
+        assert!(parse(&nested(MAX_DEPTH)).is_ok(), "exactly MAX_DEPTH must parse");
+        let err = parse(&nested(MAX_DEPTH + 1)).unwrap_err();
+        assert!(err.msg.contains("nesting"), "{}", err.msg);
+        // mixed object/array nesting counts the same budget
+        let mut s = String::new();
+        for _ in 0..MAX_DEPTH / 2 {
+            s.push_str("{\"k\":[");
+        }
+        s.push('0');
+        for _ in 0..MAX_DEPTH / 2 {
+            s.push_str("]}");
+        }
+        assert!(parse(&s).is_ok());
+    }
+
+    #[test]
+    fn deep_nesting_errors_instead_of_overflowing_the_stack() {
+        // pre-hardening this recursed ~100k frames and crashed the
+        // process; now it must return a clean error
+        let bomb = "[".repeat(100_000);
+        let err = parse(&bomb).unwrap_err();
+        assert!(err.msg.contains("nesting"), "{}", err.msg);
+        let obj_bomb = "{\"a\":".repeat(100_000);
+        assert!(parse(&obj_bomb).is_err());
+    }
+
+    #[test]
+    fn oversized_input_is_rejected_up_front() {
+        let big = format!("\"{}\"", "a".repeat(MAX_INPUT_BYTES));
+        let err = parse(&big).unwrap_err();
+        assert!(err.msg.contains("exceeds cap"), "{}", err.msg);
+    }
+
+    #[test]
+    fn prop_nesting_parses_iff_within_depth_budget() {
+        use crate::util::testkit::forall;
+        forall(
+            crate::util::testkit::default_cases(),
+            "json_depth_budget",
+            |rng| 1 + rng.below(2 * MAX_DEPTH),
+            |&d| parse(&nested(d)).is_ok() == (d <= MAX_DEPTH),
+        );
+    }
+
+    #[test]
+    fn prop_finite_tensors_round_trip_through_display() {
+        use crate::util::testkit::{forall, gens};
+        forall(
+            crate::util::testkit::default_cases(),
+            "json_tensor_roundtrip",
+            |rng| gens::tensor(rng, 64),
+            |xs| {
+                let v = Value::Array(
+                    xs.iter()
+                        .map(|&x| Value::Num(if x.is_finite() { x as f64 } else { 0.0 }))
+                        .collect(),
+                );
+                parse(&v.to_string()).map(|back| back == v).unwrap_or(false)
+            },
+        );
+    }
+
+    #[test]
+    fn prop_garbage_never_panics() {
+        use crate::util::testkit::forall;
+        const CHARSET: &[u8] = b"{}[]\",:0123456789.eE+-\\ truefalsn\n\tu00\x7f";
+        forall(
+            crate::util::testkit::default_cases(),
+            "json_garbage_fuzz",
+            |rng| {
+                let len = rng.below(256);
+                (0..len)
+                    .map(|_| CHARSET[rng.below(CHARSET.len())] as char)
+                    .collect::<String>()
+            },
+            // the property is simply "parse returns" — ok or clean err
+            |s| {
+                let _ = parse(s);
+                true
+            },
+        );
     }
 }

@@ -1,0 +1,288 @@
+//! End-to-end sweep-service tests over real TCP.
+//!
+//! The service is exercised exactly as a client would: bind an
+//! ephemeral port, submit grids over a socket, poll status, fetch
+//! results — then pin the acceptance invariants: service results are
+//! bit-identical to a serial run of the same grid, resubmission serves
+//! 100% cached cells, and two shards over one store partition the grid
+//! disjointly while their merged results still match the serial run.
+//!
+//! Everything runs the synthetic cell runner (no artifacts needed);
+//! the synthetic record convention is shared with the server
+//! (`synthetic_cell_record`), which is what makes bit-identity
+//! checkable here.
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use hindsight::coordinator::executor::run_cells_serial_with;
+use hindsight::coordinator::{grid_rows, GridOptions, GridSpec, TrainConfig};
+use hindsight::service::protocol::read_response;
+use hindsight::service::{synthetic_cell_record, CellRunner, ServeOptions, Server, ShardSpec};
+use hindsight::util::json::{self, Value};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hindsight_serve_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// One HTTP request over a fresh connection; returns (status, JSON).
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, Value) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .expect("read timeout");
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .expect("request write");
+    let (status, bytes) = read_response(&mut stream).expect("response read");
+    let text = String::from_utf8(bytes).expect("utf8 body");
+    let value = json::parse(text.trim()).unwrap_or_else(|e| panic!("bad body '{text}': {e}"));
+    (status, value)
+}
+
+/// Bind a server on an ephemeral port and run it on its own thread.
+fn spawn_server(
+    store: &std::path::Path,
+    shard: ShardSpec,
+    poll_ms: u64,
+) -> (SocketAddr, std::thread::JoinHandle<()>) {
+    let server = Server::bind(ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        store_dir: store.to_path_buf(),
+        shard,
+        runner: CellRunner::Synthetic,
+        poll_ms,
+    })
+    .expect("bind");
+    let addr = server.local_addr().expect("local addr");
+    let handle = std::thread::spawn(move || server.run().expect("server run"));
+    (addr, handle)
+}
+
+/// Poll a job's status until `complete` (30s deadline).  A 404 is
+/// tolerated while polling: a sibling shard may not have discovered
+/// the job file yet (its poller runs on a cadence).
+fn wait_complete(addr: SocketAddr, job: &str) -> Value {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let (status, doc) = http(addr, "GET", &format!("/jobs/{job}"), "");
+        if status == 200 && doc.get("complete").and_then(|c| c.as_bool()) == Some(true) {
+            return doc;
+        }
+        assert!(
+            status == 200 || status == 404,
+            "status poll failed ({status}): {doc}"
+        );
+        assert!(
+            Instant::now() < deadline,
+            "job {job} did not complete in 30s: {doc}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+const GRID: &str = "g:{hindsight,current,tqt}:8";
+const SUBMIT: &str =
+    r#"{"grid":"g:{hindsight,current,tqt}:8","model":"mlp","seeds":[1,2],"steps":6}"#;
+
+/// The reference: the same grid run serially through the executor with
+/// the same synthetic runner, rows aggregated by `grid_rows`.
+fn serial_reference() -> (Vec<String>, Vec<String>) {
+    let mut base = TrainConfig::new("mlp");
+    base.steps = 6;
+    let cells = GridSpec::new(GRID, &[1, 2]).expect("grid").expand(&base);
+    let runs = run_cells_serial_with(&cells, &GridOptions::serial(), |cell| {
+        Ok(synthetic_cell_record(cell))
+    });
+    let rows = grid_rows(&runs)
+        .iter()
+        .map(|row| row.to_json().to_string())
+        .collect();
+    let records = runs
+        .iter()
+        .map(|run| run.outcome.record().expect("ran").to_json().to_string())
+        .collect();
+    (rows, records)
+}
+
+/// Pull `(rows, records)` out of a `/jobs/<id>/results` document in
+/// the serializer's canonical string form for bit-exact comparison.
+fn results_strings(doc: &Value) -> (Vec<String>, Vec<String>) {
+    let rows = doc
+        .get("rows")
+        .and_then(|r| r.as_array())
+        .expect("rows")
+        .iter()
+        .map(|r| r.to_string())
+        .collect();
+    let records = doc
+        .get("cells")
+        .and_then(|c| c.as_array())
+        .expect("cells")
+        .iter()
+        .map(|c| c.get("record").expect("record").to_string())
+        .collect();
+    (rows, records)
+}
+
+#[test]
+fn serve_end_to_end_matches_serial_and_resubmission_is_cached() {
+    let store = tmp_dir("e2e");
+    let (addr, handle) = spawn_server(&store, ShardSpec::solo(), 500);
+
+    let (status, health) = http(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200);
+    assert_eq!(health.get("status").and_then(|s| s.as_str()), Some("ok"));
+    assert_eq!(health.get("shard").and_then(|s| s.as_str()), Some("0/1"));
+
+    // submit: 202 on first sight, with the full status document
+    let (status, doc) = http(addr, "POST", "/jobs", SUBMIT);
+    assert_eq!(status, 202, "{doc}");
+    let job = doc.get("job").and_then(|j| j.as_str()).expect("job id").to_string();
+    assert_eq!(doc.get("total").and_then(|t| t.as_usize()), Some(6));
+
+    let done = wait_complete(addr, &job);
+    assert_eq!(done.get("done").and_then(|d| d.as_usize()), Some(6));
+    assert_eq!(done.get("failed").and_then(|f| f.as_usize()), Some(0));
+    assert_eq!(
+        done.get("executed").and_then(|e| e.as_usize()),
+        Some(6),
+        "all 6 cells must have been executed, none cache-served: {done}"
+    );
+
+    // results: bit-identical to the serial executor run of the grid
+    let (status, results) = http(addr, "GET", &format!("/jobs/{job}/results"), "");
+    assert_eq!(status, 200, "{results}");
+    let (rows, records) = results_strings(&results);
+    let (ref_rows, ref_records) = serial_reference();
+    assert_eq!(rows, ref_rows, "service rows must match the serial run bit-for-bit");
+    assert_eq!(records, ref_records, "per-cell records must match bit-for-bit");
+
+    // resubmission: same id (idempotent), 200, nothing new executed
+    let (status, doc) = http(addr, "POST", "/jobs", SUBMIT);
+    assert_eq!(status, 200, "known job resubmission: {doc}");
+    assert_eq!(doc.get("job").and_then(|j| j.as_str()), Some(job.as_str()));
+    assert_eq!(doc.get("executed").and_then(|e| e.as_usize()), Some(6));
+
+    // the cache surface: /cells lists all six store entries
+    let (status, cells) = http(addr, "GET", "/cells", "");
+    assert_eq!(status, 200);
+    assert_eq!(cells.get("count").and_then(|c| c.as_usize()), Some(6));
+
+    // graceful drain
+    let (status, bye) = http(addr, "POST", "/shutdown", "{}");
+    assert_eq!(status, 200);
+    assert_eq!(bye.get("drain").and_then(|d| d.as_bool()), Some(true));
+    handle.join().expect("server thread");
+
+    // a fresh server over the same store serves the whole job from
+    // cache: complete immediately, zero cells executed
+    let (addr, handle) = spawn_server(&store, ShardSpec::solo(), 500);
+    let (status, doc) = http(addr, "POST", "/jobs", SUBMIT);
+    assert!(status == 200 || status == 202, "{doc}");
+    let done = wait_complete(addr, &job);
+    assert_eq!(done.get("cached").and_then(|c| c.as_usize()), Some(6));
+    assert_eq!(
+        done.get("executed").and_then(|e| e.as_usize()),
+        Some(0),
+        "resubmission over a warm store must serve 100% cached cells: {done}"
+    );
+    let (_, results) = http(addr, "GET", &format!("/jobs/{job}/results"), "");
+    assert_eq!(results_strings(&results), serial_reference());
+    let _ = http(addr, "POST", "/shutdown", "{}");
+    handle.join().expect("second server thread");
+    let _ = std::fs::remove_dir_all(&store);
+}
+
+#[test]
+fn two_shards_partition_the_grid_and_merge_bit_identically() {
+    let store = tmp_dir("shards");
+    let shard0 = ShardSpec::parse("0/2").unwrap();
+    let shard1 = ShardSpec::parse("1/2").unwrap();
+    // fast polling so shard 1 discovers the job file promptly
+    let (addr0, handle0) = spawn_server(&store, shard0, 50);
+    let (addr1, handle1) = spawn_server(&store, shard1, 50);
+
+    // submit to shard 0 ONLY — shard 1 must pick the job up from the
+    // shared jobs directory with no further coordination
+    let (status, doc) = http(addr0, "POST", "/jobs", SUBMIT);
+    assert_eq!(status, 202, "{doc}");
+    let job = doc.get("job").and_then(|j| j.as_str()).expect("job id").to_string();
+
+    // both shards converge: claimed cells ran locally, foreign cells
+    // observed through the store
+    let done0 = wait_complete(addr0, &job);
+    let done1 = wait_complete(addr1, &job);
+
+    // the partition: 6 cells, indices 0,2,4 -> shard 0 and 1,3,5 ->
+    // shard 1 (index % 2); each shard executed exactly its claim and
+    // observed the other's cells as store completions
+    for (doc, shard) in [(&done0, shard0), (&done1, shard1)] {
+        let claimed = (0..6).filter(|&i| shard.claims(i)).count();
+        assert_eq!(doc.get("claimed").and_then(|c| c.as_usize()), Some(claimed), "{doc}");
+        assert_eq!(doc.get("ran").and_then(|r| r.as_usize()), Some(claimed), "{doc}");
+        assert_eq!(doc.get("stored").and_then(|s| s.as_usize()), Some(6 - claimed), "{doc}");
+        assert_eq!(doc.get("executed").and_then(|e| e.as_usize()), Some(claimed), "{doc}");
+        assert_eq!(doc.get("failed").and_then(|f| f.as_usize()), Some(0), "{doc}");
+    }
+    // disjoint + total: executed counts sum to the whole grid
+    let executed: usize = [&done0, &done1]
+        .iter()
+        .map(|d| d.get("executed").and_then(|e| e.as_usize()).unwrap())
+        .sum();
+    assert_eq!(executed, 6, "shards must split the grid without overlap");
+
+    // the acceptance pin: merged results from either shard are
+    // bit-identical to one serial run of the same grid
+    let reference = serial_reference();
+    for addr in [addr0, addr1] {
+        let (status, results) = http(addr, "GET", &format!("/jobs/{job}/results"), "");
+        assert_eq!(status, 200, "{results}");
+        assert_eq!(results_strings(&results), reference);
+    }
+
+    for addr in [addr0, addr1] {
+        let _ = http(addr, "POST", "/shutdown", "{}");
+    }
+    handle0.join().expect("shard 0");
+    handle1.join().expect("shard 1");
+    let _ = std::fs::remove_dir_all(&store);
+}
+
+#[test]
+fn protocol_errors_are_clean() {
+    let store = tmp_dir("errors");
+    let (addr, handle) = spawn_server(&store, ShardSpec::solo(), 500);
+
+    let (status, doc) = http(addr, "GET", "/nope", "");
+    assert_eq!(status, 404);
+    assert!(doc.get("error").is_some(), "{doc}");
+
+    let (status, doc) = http(addr, "POST", "/jobs", "{not json");
+    assert_eq!(status, 400);
+    assert!(doc.get("error").is_some(), "{doc}");
+
+    // a structurally-valid body with a broken grid template
+    let (status, doc) = http(addr, "POST", "/jobs", r#"{"grid":"g:{unclosed"}"#);
+    assert_eq!(status, 400, "{doc}");
+
+    // results for a submitted-but-incomplete job would be 409; for an
+    // unknown job it is a plain 404
+    let (status, _) = http(addr, "GET", "/jobs/does-not-exist/results", "");
+    assert_eq!(status, 404);
+
+    // abort shutdown: immediate, no drain
+    let (status, bye) = http(addr, "POST", "/shutdown", r#"{"drain":false}"#);
+    assert_eq!(status, 200);
+    assert_eq!(bye.get("drain").and_then(|d| d.as_bool()), Some(false));
+    handle.join().expect("server thread");
+    let _ = std::fs::remove_dir_all(&store);
+}
