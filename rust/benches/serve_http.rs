@@ -1,8 +1,13 @@
 //! Sweep-service smoke + throughput probe: bind `hindsight serve`'s
 //! [`Server`] on an ephemeral port with the synthetic runner, measure
-//! raw HTTP request overhead (`GET /healthz` round-trips), then drive a
-//! 16-cell grid submission end-to-end over real TCP and record the
-//! sweep wall time and the cache-hit behaviour of a resubmission.
+//! raw HTTP request overhead (`GET /healthz` round-trips), drive a
+//! 16-cell grid submission end-to-end over real TCP, then measure the
+//! parse-once/serve-many results path: one cold `GET /jobs/<id>/results`
+//! (parses every cell document, assembles and caches the body) against
+//! a stream of warm GETs (byte-identical `Arc`'d body, zero JSON work).
+//! The cold/warm speedup lands in BENCH_kernels.json as a
+//! `raw_doc_results` record, which CI gates with
+//! `bench-report --kernel raw_doc_results --floor 2.0`.
 //!
 //! No artifacts needed: cells produce deterministic synthetic records,
 //! so the bench exercises exactly the service plumbing (protocol, job
@@ -20,11 +25,21 @@ use hindsight::service::{CellRunner, ServeOptions, Server, ShardSpec};
 use hindsight::util::bench::{append_bench_record, quick};
 use hindsight::util::json::{self, Value};
 
+// 400 steps per cell makes each stored record a few KB, so the cold
+// path's per-document parse cost is well above HTTP round-trip noise
 const SUBMIT: &str =
-    r#"{"grid":"g:{hindsight,current,tqt,banner}:{4,8}","model":"mlp","seeds":[1,2],"steps":8}"#;
+    r#"{"grid":"g:{hindsight,current,tqt,banner}:{4,8}","model":"mlp","seeds":[1,2],"steps":400}"#;
 const CELLS: usize = 16;
 
 fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, Value) {
+    let (status, bytes) = http_bytes(addr, method, path, body);
+    let text = String::from_utf8(bytes).expect("utf8 body");
+    (status, json::parse(text.trim()).expect("json body"))
+}
+
+/// Like [`http`] but leaves the body unparsed — the warm-path timing
+/// loop must measure the server, not this client's JSON parser.
+fn http_bytes(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, Vec<u8>) {
     let mut stream = TcpStream::connect(addr).expect("connect");
     stream
         .set_read_timeout(Some(Duration::from_secs(10)))
@@ -35,9 +50,7 @@ fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, Value) 
         body.len()
     )
     .expect("request write");
-    let (status, bytes) = read_response(&mut stream).expect("response read");
-    let text = String::from_utf8(bytes).expect("utf8 body");
-    (status, json::parse(text.trim()).expect("json body"))
+    read_response(&mut stream).expect("response read")
 }
 
 fn get_usize(doc: &Value, key: &str) -> usize {
@@ -60,6 +73,8 @@ fn main() {
         shard: ShardSpec::solo(),
         runner: CellRunner::Synthetic,
         poll_ms: 500,
+        queue_cap: usize::MAX,
+        synthetic_delay_ms: 0,
     })
     .expect("bind");
     let addr = server.local_addr().expect("local addr");
@@ -94,11 +109,41 @@ fn main() {
     let sweep_ms = t0.elapsed().as_millis() as usize;
     assert_eq!(get_usize(&done, "executed"), CELLS, "fresh store: all cells execute");
     assert_eq!(get_usize(&done, "failed"), 0);
-    let (status, results) = http(addr, "GET", &format!("/jobs/{job}/results"), "");
+
+    // cold results GET: the first ever — every cell document parses
+    // (once, into the store's doc cache) and the body is assembled
+    let results_path = format!("/jobs/{job}/results");
+    let t0 = Instant::now();
+    let (status, cold) = http_bytes(addr, "GET", &results_path, "");
+    let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
     assert_eq!(status, 200);
+    let results = json::parse(std::str::from_utf8(&cold).expect("utf8").trim()).expect("results");
     let rows = results.get("rows").and_then(|r| r.as_array()).expect("rows").len();
     assert_eq!(rows, 8, "one aggregated row per scheme");
     println!("sweep: {CELLS} cells -> {rows} rows in {sweep_ms} ms");
+
+    // warm results GETs: served from the per-job cache as shared bytes
+    let warm_reqs = if quick() { 10 } else { 100 };
+    let t0 = Instant::now();
+    for _ in 0..warm_reqs {
+        let (status, warm) = http_bytes(addr, "GET", &results_path, "");
+        assert_eq!(status, 200);
+        assert_eq!(warm, cold, "warm results must be byte-identical to the cold assembly");
+    }
+    let warm_ms = t0.elapsed().as_secs_f64() * 1e3 / warm_reqs as f64;
+    let results_speedup = cold_ms / warm_ms;
+    println!(
+        "results: cold {cold_ms:.2} ms, warm {warm_ms:.2} ms over {warm_reqs} reqs \
+         ({} KB body) -> {results_speedup:.1}x",
+        cold.len() / 1024
+    );
+    // the server's instrumentation must agree: one cold assembly, all
+    // other GETs warm, and each of the 16 cell files parsed exactly once
+    let (status, health) = http(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200);
+    assert_eq!(get_usize(&health, "results_cold"), 1, "exactly one cold assembly: {health}");
+    assert_eq!(get_usize(&health, "results_warm"), warm_reqs, "{health}");
+    assert_eq!(get_usize(&health, "doc_parses"), CELLS, "parse-once violated: {health}");
 
     // resubmission: idempotent id, zero new executions
     let (status, doc) = http(addr, "POST", "/jobs", SUBMIT);
@@ -122,6 +167,24 @@ fn main() {
     ]);
     match append_bench_record(record) {
         Ok(path) => println!("recorded serve smoke to {}", path.display()),
+        Err(e) => eprintln!("warning: could not append bench record: {e}"),
+    }
+    // the results read path as a gateable kernel record: CI holds the
+    // warm/cold speedup to a floor via
+    //   bench-report --kernel raw_doc_results --floor 2.0
+    let record = Value::object(vec![
+        ("bench", Value::from("serve_http")),
+        ("kernel", Value::from("raw_doc_results")),
+        ("backend", Value::from("raw_doc")),
+        ("elems", Value::from(CELLS)),
+        ("cold_ms", Value::from(cold_ms)),
+        ("warm_ms", Value::from(warm_ms)),
+        ("warm_requests", Value::from(warm_reqs)),
+        ("body_bytes", Value::from(cold.len())),
+        ("speedup", Value::from(results_speedup)),
+    ]);
+    match append_bench_record(record) {
+        Ok(path) => println!("recorded raw_doc_results speedup to {}", path.display()),
         Err(e) => eprintln!("warning: could not append bench record: {e}"),
     }
 }

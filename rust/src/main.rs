@@ -116,9 +116,9 @@ fn run(mut args: Args) -> Result<()> {
                  --workers 4 [--store runs] [--no-cache]\n\
                  kernel backend: --kernel-backend scalar|simd|parallel|auto \
                  (default: auto; env HINDSIGHT_KERNEL_BACKEND; auto = measured per-site pick)\n\
-                 bench gate: bench-report [--json BENCH_kernels.json] [--floor 1.0]\n\
+                 bench gate: bench-report [--json BENCH_kernels.json] [--floor 1.0] [--kernel NAME]\n\
                  sweep service: serve [--addr 127.0.0.1:8080] [--workers 2] [--store runs] \
-                 [--shard i/N] [--synthetic] [--poll-ms 500]\n\
+                 [--shard i/N] [--synthetic] [--poll-ms 500] [--queue-cap N]\n\
                  store inspection: runs [--store runs] [--gc] [--verify]\n\
                  {}",
                 syntax_help()
@@ -570,6 +570,10 @@ fn cmd_bench_report(args: &mut Args) -> Result<()> {
             .map_err(|_| anyhow::anyhow!("--floor: not a number: '{s}'"))?,
         None => 1.0,
     };
+    // --kernel restricts both the tables and the gate to one kernel
+    // name, so CI can hold different record families to different
+    // floors (e.g. raw_doc_results at 2x, fused kernels at 0.8x)
+    let kernel_filter = args.get("kernel");
     args.finish().map_err(anyhow::Error::msg)?;
 
     let text = std::fs::read_to_string(&path)
@@ -596,6 +600,9 @@ fn cmd_bench_report(args: &mut Args) -> Result<()> {
             speedup,
             autotune: r.get("autotune").and_then(|v| v.as_bool()).unwrap_or(false),
         });
+    }
+    if let Some(k) = &kernel_filter {
+        recs.retain(|r| r.kernel == *k);
     }
     println!(
         "# Kernel bench report\n\n{} speedup record(s) in `{path}` ({} run entries total)\n",
@@ -710,6 +717,14 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
     // end on machines without compiled artifacts
     let synthetic = args.bool_or("synthetic", false);
     let poll_ms = args.u64_or("poll-ms", 500);
+    // --queue-cap bounds the pending-cell queue: submissions that would
+    // exceed it get 429 + Retry-After instead of queueing without limit
+    let queue_cap = match args.get("queue-cap") {
+        Some(s) => s
+            .parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("--queue-cap: not a count: '{s}'"))?,
+        None => usize::MAX,
+    };
     args.finish().map_err(anyhow::Error::msg)?;
     let runner = if synthetic {
         CellRunner::Synthetic
@@ -723,6 +738,8 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
         shard,
         runner,
         poll_ms,
+        queue_cap,
+        synthetic_delay_ms: 0,
     })?;
     println!(
         "serving on http://{} (shard {shard}, {workers} worker(s), store {store_dir}/, {} cells)",

@@ -7,7 +7,7 @@ use std::io::Write;
 
 use anyhow::{Context, Result};
 
-use crate::util::json::Value;
+use crate::util::json::{JsonView, RawRef, Value};
 use crate::util::stats;
 
 /// Metrics of a single training run (one seed, one configuration).
@@ -142,22 +142,36 @@ impl RunRecord {
 
     /// Parse the [`RunRecord::to_json`] form back.
     pub fn from_json(v: &Value) -> Result<Self> {
+        Self::from_view(v)
+    }
+
+    /// Decode straight from the zero-copy view — no owned `Value` tree
+    /// is built on the store's parse-once read path.
+    pub fn from_raw(v: RawRef<'_>) -> Result<Self> {
+        Self::from_view(v)
+    }
+
+    /// Decode the [`RunRecord::to_json`] form from either
+    /// representation (`&Value` or `RawRef`) via [`JsonView`].
+    pub fn from_view<'a, V: JsonView<'a>>(v: V) -> Result<Self> {
+        let req = |key: &str| -> Result<V> {
+            v.get(key).with_context(|| format!("missing key '{key}'"))
+        };
         let f32s = |key: &str| -> Result<Vec<f32>> {
-            v.req(key)?
-                .as_array()
+            req(key)?
+                .items()
                 .with_context(|| format!("record '{key}' is not an array"))?
-                .iter()
+                .into_iter()
                 .map(|x| x.as_f64().map(|f| f as f32))
                 .collect::<Option<Vec<f32>>>()
                 .with_context(|| format!("record '{key}' holds a non-number"))
         };
-        let evals = v
-            .req("evals")?
-            .as_array()
+        let evals = req("evals")?
+            .items()
             .context("record 'evals' is not an array")?
-            .iter()
+            .into_iter()
             .map(|e| {
-                let t = e.as_array()?;
+                let t = e.items()?;
                 if t.len() != 3 {
                     return None;
                 }
@@ -169,33 +183,29 @@ impl RunRecord {
             })
             .collect::<Option<Vec<_>>>()
             .context("record 'evals' holds a malformed triple")?;
-        let extra = v
-            .req("extra")?
-            .as_object()
+        let extra = req("extra")?
+            .entries()
             .context("record 'extra' is not an object")?
-            .iter()
-            .map(|(k, x)| x.as_f64().map(|f| (k.clone(), f)))
+            .into_iter()
+            .map(|(k, x)| x.as_f64().map(|f| (k.to_string(), f)))
             .collect::<Option<BTreeMap<String, f64>>>()
             .context("record 'extra' holds a non-number")?;
         Ok(Self {
-            name: v
-                .req("name")?
+            name: req("name")?
                 .as_str()
                 .context("record 'name' is not a string")?
                 .to_string(),
-            steps: v
-                .req("steps")?
-                .as_array()
+            steps: req("steps")?
+                .items()
                 .context("record 'steps' is not an array")?
-                .iter()
+                .into_iter()
                 .map(|x| x.as_f64().map(|f| f as u64))
                 .collect::<Option<Vec<u64>>>()
                 .context("record 'steps' holds a non-number")?,
             losses: f32s("losses")?,
             accs: f32s("accs")?,
             evals,
-            train_seconds: v
-                .req("train_seconds")?
+            train_seconds: req("train_seconds")?
                 .as_f64()
                 .context("record 'train_seconds' is not a number")?,
             extra,

@@ -19,6 +19,6 @@ pub mod queue;
 pub mod server;
 pub mod shard;
 
-pub use queue::{cell_cost, QueueItem, WorkQueue};
+pub use queue::{cell_cost, PushError, QueueItem, WorkQueue};
 pub use server::{synthetic_cell_record, CellRunner, JobSpec, ServeOptions, Server};
 pub use shard::ShardSpec;

@@ -157,12 +157,40 @@ fn percent_decode(s: &str) -> String {
     String::from_utf8_lossy(&out).into_owned()
 }
 
+/// A response body: owned bytes, or a shared slice (the results cache
+/// hands the same `Arc` to every warm GET — zero copies, zero
+/// serializations on the write path).
+#[derive(Debug, Clone)]
+pub enum Body {
+    Owned(Vec<u8>),
+    Shared(std::sync::Arc<[u8]>),
+}
+
+impl Body {
+    pub fn as_slice(&self) -> &[u8] {
+        match self {
+            Body::Owned(v) => v,
+            Body::Shared(a) => a,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.as_slice().is_empty()
+    }
+}
+
 /// One response, written with `Connection: close`.
 #[derive(Debug, Clone)]
 pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
-    pub body: Vec<u8>,
+    pub body: Body,
+    /// additional headers (e.g. `Retry-After` on 429), written verbatim
+    pub extra_headers: Vec<(&'static str, String)>,
 }
 
 impl Response {
@@ -170,7 +198,20 @@ impl Response {
         Self {
             status,
             content_type: "application/json",
-            body: format!("{v}\n").into_bytes(),
+            body: Body::Owned(format!("{v}\n").into_bytes()),
+            extra_headers: Vec::new(),
+        }
+    }
+
+    /// A JSON response over pre-assembled shared bytes (the caller owns
+    /// the framing contract: the slice must already end in `\n` like
+    /// [`Response::json`] output).
+    pub fn json_shared(status: u16, body: std::sync::Arc<[u8]>) -> Self {
+        Self {
+            status,
+            content_type: "application/json",
+            body: Body::Shared(body),
+            extra_headers: Vec::new(),
         }
     }
 
@@ -178,7 +219,8 @@ impl Response {
         Self {
             status,
             content_type: "text/plain; charset=utf-8",
-            body: body.as_bytes().to_vec(),
+            body: Body::Owned(body.as_bytes().to_vec()),
+            extra_headers: Vec::new(),
         }
     }
 
@@ -187,17 +229,27 @@ impl Response {
         Self::json(status, &Value::object(vec![("error", Value::from(msg))]))
     }
 
+    /// Attach an extra header (builder-style).
+    pub fn with_header(mut self, name: &'static str, value: impl Into<String>) -> Self {
+        self.extra_headers.push((name, value.into()));
+        self
+    }
+
     pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
         let reason = reason_phrase(self.status);
         write!(
             w,
-            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n",
             self.status,
             reason,
             self.content_type,
             self.body.len()
         )?;
-        w.write_all(&self.body)?;
+        for (name, value) in &self.extra_headers {
+            write!(w, "{name}: {value}\r\n")?;
+        }
+        write!(w, "Connection: close\r\n\r\n")?;
+        w.write_all(self.body.as_slice())?;
         w.flush()?;
         Ok(())
     }
@@ -212,6 +264,7 @@ fn reason_phrase(status: u16) -> &'static str {
         405 => "Method Not Allowed",
         409 => "Conflict",
         413 => "Payload Too Large",
+        429 => "Too Many Requests",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
         _ => "Status",
@@ -221,6 +274,13 @@ fn reason_phrase(status: u16) -> &'static str {
 /// Client-side helper (tests, smoke tools): read one full response,
 /// returning `(status, body)`.
 pub fn read_response<R: Read>(r: &mut R) -> Result<(u16, Vec<u8>)> {
+    let (status, _headers, body) = read_response_full(r)?;
+    Ok((status, body))
+}
+
+/// Like [`read_response`], but also returns the header `(name, value)`
+/// pairs (names lowercased) — the flood e2e inspects `Retry-After`.
+pub fn read_response_full<R: Read>(r: &mut R) -> Result<(u16, Vec<(String, String)>, Vec<u8>)> {
     let head = read_until_blank_line(r)?;
     let head = std::str::from_utf8(&head).context("response head is not UTF-8")?;
     let mut lines = head.split("\r\n");
@@ -230,14 +290,16 @@ pub fn read_response<R: Read>(r: &mut R) -> Result<(u16, Vec<u8>)> {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .with_context(|| format!("malformed status line '{status_line}'"))?;
-    let mut content_length = None;
+    let mut headers = Vec::new();
     for line in lines.filter(|l| !l.is_empty()) {
         if let Some((name, value)) = line.split_once(':') {
-            if name.trim().eq_ignore_ascii_case("content-length") {
-                content_length = value.trim().parse::<usize>().ok();
-            }
+            headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
         }
     }
+    let content_length = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .and_then(|(_, v)| v.parse::<usize>().ok());
     let mut body = Vec::new();
     match content_length {
         Some(n) => {
@@ -248,7 +310,7 @@ pub fn read_response<R: Read>(r: &mut R) -> Result<(u16, Vec<u8>)> {
             r.read_to_end(&mut body).context("reading response body")?;
         }
     }
-    Ok((status, body))
+    Ok((status, headers, body))
 }
 
 #[cfg(test)]
@@ -319,6 +381,29 @@ mod tests {
         let parsed = crate::util::json::parse(std::str::from_utf8(&body).unwrap().trim()).unwrap();
         assert_eq!(parsed.get("job").and_then(|j| j.as_str()), Some("abc"));
         assert_eq!(parsed.get("total").and_then(|t| t.as_usize()), Some(4));
+    }
+
+    #[test]
+    fn shared_bodies_and_extra_headers_round_trip() {
+        let bytes: std::sync::Arc<[u8]> = std::sync::Arc::from(&b"{\"x\":1}\n"[..]);
+        let resp = Response::json_shared(200, bytes.clone()).with_header("Retry-After", "1");
+        let mut wire = Vec::new();
+        resp.write_to(&mut wire).unwrap();
+        let text = String::from_utf8(wire.clone()).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Retry-After: 1\r\n"));
+        // extra headers sit inside the head, before the blank line
+        assert!(text.find("Retry-After").unwrap() < text.find("\r\n\r\n").unwrap());
+        let (status, headers, body) = read_response_full(&mut Cursor::new(&wire[..])).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body.as_slice(), &bytes[..]);
+        assert!(headers.iter().any(|(k, v)| k == "retry-after" && v == "1"));
+        // 429 carries a real reason phrase
+        let resp = Response::error(429, "queue full").with_header("Retry-After", "2");
+        let mut wire = Vec::new();
+        resp.write_to(&mut wire).unwrap();
+        let text = String::from_utf8(wire).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
     }
 
     #[test]

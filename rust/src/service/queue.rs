@@ -60,11 +60,26 @@ struct QueueState {
     open: bool,
 }
 
-/// A blocking, cost-prioritized multi-producer multi-consumer queue.
+/// Why [`WorkQueue::try_push`] refused a batch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PushError {
+    /// Admitting the batch would exceed the pending-cell capacity; the
+    /// batch was dropped whole (jobs are all-or-nothing).  Carries the
+    /// observed backlog so the service can shape its 429 answer.
+    Full { capacity: usize, pending: usize },
+    /// The queue is closed (shutdown).
+    Closed,
+}
+
+/// A blocking, cost-prioritized multi-producer multi-consumer queue,
+/// optionally bounded (backpressure: a full queue refuses whole
+/// batches instead of growing without limit under submission floods).
 #[derive(Debug)]
 pub struct WorkQueue {
     state: Mutex<QueueState>,
     ready: Condvar,
+    /// maximum pending items ([`usize::MAX`] = unbounded)
+    capacity: usize,
 }
 
 impl Default for WorkQueue {
@@ -75,22 +90,68 @@ impl Default for WorkQueue {
 
 impl WorkQueue {
     pub fn new() -> Self {
+        Self::bounded(usize::MAX)
+    }
+
+    /// A queue refusing batches that would push the pending count past
+    /// `capacity` (0 is clamped to 1 so a lone job can always queue).
+    pub fn bounded(capacity: usize) -> Self {
         Self {
             state: Mutex::new(QueueState { items: Vec::new(), open: true }),
             ready: Condvar::new(),
+            capacity: capacity.max(1),
         }
     }
 
+    /// Pending-cell capacity ([`usize::MAX`] = unbounded).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
     /// Enqueue items; returns `false` (dropping them) once closed.
+    /// Unbounded compatibility wrapper over [`WorkQueue::try_push`] —
+    /// capacity overflows are still refused, but indistinguishable
+    /// from a closed queue here.
     pub fn push(&self, items: Vec<QueueItem>) -> bool {
+        self.try_push(items).is_ok()
+    }
+
+    /// Enqueue a batch all-or-nothing: refused with
+    /// [`PushError::Full`] when it would exceed capacity, or
+    /// [`PushError::Closed`] after shutdown.
+    pub fn try_push(&self, items: Vec<QueueItem>) -> Result<(), PushError> {
         let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
         if !st.open {
-            return false;
+            return Err(PushError::Closed);
+        }
+        let pending = st.items.len();
+        if pending + items.len() > self.capacity {
+            return Err(PushError::Full { capacity: self.capacity, pending });
         }
         st.items.extend(items);
         drop(st);
         self.ready.notify_all();
-        true
+        Ok(())
+    }
+
+    /// Remove every still-queued item of `job` (cancellation: running
+    /// cells are unaffected) and return them.
+    pub fn remove_job(&self, job: &str) -> Vec<QueueItem> {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        let mut dropped = Vec::new();
+        let mut i = 0;
+        while i < st.items.len() {
+            if st.items[i].job == job {
+                dropped.push(st.items.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        drop(st);
+        // capacity may have freed up; nothing blocks on that today,
+        // but waking poppers keeps close() semantics prompt
+        self.ready.notify_all();
+        dropped
     }
 
     /// Block until an item is available (heaviest first; ties break by
@@ -240,6 +301,42 @@ mod tests {
         let got = h.join().unwrap();
         assert_eq!(got.len(), 2, "close must drain queued items first");
         assert!(!q.push(items("j", "g:tqt:8", 10)), "closed queue refuses pushes");
+    }
+
+    #[test]
+    fn bounded_queue_refuses_whole_batches_past_capacity() {
+        let q = WorkQueue::bounded(3);
+        assert_eq!(q.capacity(), 3);
+        // 2 cells fit
+        assert!(q.try_push(items("a", "g:{hindsight,current}:8", 10)).is_ok());
+        // 2 more would make 4 > 3: refused whole, nothing partial
+        let err = q.try_push(items("b", "g:{hindsight,current}:8", 10)).unwrap_err();
+        assert_eq!(err, PushError::Full { capacity: 3, pending: 2 });
+        assert_eq!(q.len(), 2, "refused batch must not partially enqueue");
+        // a 1-cell batch still fits
+        assert!(q.try_push(items("c", "g:tqt:8", 10)).is_ok());
+        assert_eq!(q.len(), 3);
+        // drained capacity admits new work again
+        let _ = q.pop().unwrap();
+        assert!(q.try_push(items("d", "g:tqt:8", 10)).is_ok());
+        q.close();
+        assert_eq!(q.try_push(items("e", "g:tqt:8", 10)).unwrap_err(), PushError::Closed);
+    }
+
+    #[test]
+    fn remove_job_drops_only_that_jobs_queued_cells() {
+        let q = WorkQueue::new();
+        q.push(items("keep", "g:{hindsight,current}:8", 10));
+        q.push(items("cancel", "g:{hindsight,current,tqt}:8", 10));
+        assert_eq!(q.len(), 5);
+        let dropped = q.remove_job("cancel");
+        assert_eq!(dropped.len(), 3);
+        assert!(dropped.iter().all(|it| it.job == "cancel"));
+        assert_eq!(q.len(), 2);
+        while !q.is_empty() {
+            assert_eq!(q.pop().unwrap().job, "keep");
+        }
+        assert_eq!(q.remove_job("cancel").len(), 0, "idempotent on empty");
     }
 
     #[test]

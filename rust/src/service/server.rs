@@ -16,20 +16,27 @@
 //! Endpoints (all JSON; see rust/README.md for curl examples):
 //!
 //! * `POST /jobs` — submit `{"grid", "model", "seeds", "steps"}`;
-//!   202 on first submission, 200 (same id) on resubmission.
+//!   202 on first submission, 200 (same id) on resubmission, 429 with
+//!   a `Retry-After` hint when the bounded pending-cell queue is full.
 //! * `GET /jobs` — all known jobs with progress counts.
 //! * `GET /jobs/<id>` — one job's progress.
 //! * `GET /jobs/<id>/results` — per-scheme `grid_rows` aggregation
 //!   plus per-cell records; 409 until every cell is in the store.
+//!   Served through the parse-once/serve-many path: cell documents
+//!   come from the store's doc cache and the assembled body is cached
+//!   per job, so a repeat GET over an unchanged store re-sends the
+//!   same shared bytes — zero JSON parses, zero tree serializations.
+//! * `POST /jobs/<id>/cancel` — drop the job's still-queued cells
+//!   (running cells finish; `cancelled` counts in the status doc).
 //! * `GET /cells` — the store's cell index (cache inspection).
-//! * `GET /healthz` — liveness + shard identity.
+//! * `GET /healthz` — liveness + shard identity + read-path counters.
 //! * `POST /shutdown` — `{"drain": true}` finishes queued work first;
 //!   `{"drain": false}` aborts queued cells.
 
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -44,9 +51,9 @@ use crate::coordinator::{
 use crate::metrics::RunRecord;
 use crate::runtime::engine::Engine;
 use crate::service::protocol::{read_request, Request, Response};
-use crate::service::queue::{cell_cost, QueueItem, WorkQueue};
+use crate::service::queue::{cell_cost, PushError, QueueItem, WorkQueue};
 use crate::service::shard::ShardSpec;
-use crate::util::json::Value;
+use crate::util::json::{self, Value};
 
 /// How a worker turns a claimed cell into a [`RunRecord`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -161,6 +168,8 @@ enum LocalState {
     Ran,
     /// served from the store (registration pre-pass or late check)
     Cached,
+    /// dropped from the queue by `POST /jobs/<id>/cancel` before running
+    Cancelled,
     Failed(String),
 }
 
@@ -172,6 +181,15 @@ struct JobState {
     local: Vec<LocalState>,
 }
 
+/// One job's cached `GET /jobs/<id>/results` body.  `sig` fingerprints
+/// the exact store state the bytes were assembled from (job id + every
+/// cell document's stat fingerprint): any rewrite of a cell file
+/// changes its fingerprint, so a stale body can never be replayed.
+struct CachedResults {
+    sig: u64,
+    body: Arc<[u8]>,
+}
+
 /// State shared between the accept loop, workers, poller and handlers.
 struct Shared {
     store: RunStore,
@@ -180,6 +198,13 @@ struct Shared {
     runner: CellRunner,
     queue: WorkQueue,
     jobs: Mutex<HashMap<String, JobState>>,
+    /// per-job results bodies for the serve-many path
+    results: Mutex<HashMap<String, CachedResults>>,
+    /// results GETs that assembled a fresh body / re-sent cached bytes
+    results_cold: AtomicU64,
+    results_warm: AtomicU64,
+    /// artificial per-cell latency for the synthetic runner (tests)
+    synthetic_delay_ms: u64,
     /// cells executed (not cache-served) by this process
     executed: AtomicUsize,
     /// workers currently inside a cell
@@ -188,16 +213,28 @@ struct Shared {
     stop: AtomicBool,
 }
 
+/// What `POST /jobs` resolved to.
+enum SubmitOutcome {
+    /// first registration of this id
+    Created(String),
+    /// idempotent re-submission of a known id
+    Known(String),
+    /// the bounded queue could not take the job's cells — nothing was
+    /// registered or persisted; the client should retry later
+    Busy { pending: usize, capacity: usize },
+}
+
 impl Shared {
     /// Register a job: expand, cache pre-pass over claimed cells,
-    /// queue the rest, persist the job file.  Returns `(id, created)`;
-    /// re-registration of a known id is a no-op.
-    fn register_job(&self, spec: JobSpec) -> Result<(String, bool)> {
+    /// queue the rest, persist the job file.  Re-registration of a
+    /// known id is a no-op; a full queue rejects the whole job
+    /// ([`SubmitOutcome::Busy`]) without registering or persisting it.
+    fn register_job(&self, spec: JobSpec) -> Result<SubmitOutcome> {
         let id = spec.id();
         {
             let jobs = self.jobs.lock().unwrap_or_else(|e| e.into_inner());
             if jobs.contains_key(&id) {
-                return Ok((id, false));
+                return Ok(SubmitOutcome::Known(id));
             }
         }
         let cells = spec.expand()?;
@@ -221,22 +258,34 @@ impl Shared {
             let mut jobs = self.jobs.lock().unwrap_or_else(|e| e.into_inner());
             // a concurrent submit of the same spec may have won the race
             if jobs.contains_key(&id) {
-                return Ok((id, false));
+                return Ok(SubmitOutcome::Known(id));
             }
             jobs.insert(id.clone(), JobState { spec: spec.clone(), cells, local });
         }
-        if !items.is_empty() && !self.queue.push(items) {
-            let mut jobs = self.jobs.lock().unwrap_or_else(|e| e.into_inner());
-            if let Some(job) = jobs.get_mut(&id) {
-                for st in job.local.iter_mut() {
-                    if *st == LocalState::Queued {
-                        *st = LocalState::Failed("queue closed".into());
+        if !items.is_empty() {
+            match self.queue.try_push(items) {
+                Ok(()) => {}
+                Err(PushError::Full { capacity, pending }) => {
+                    // all-or-nothing: none of the job's cells entered
+                    // the queue, so dropping the entry fully undoes the
+                    // registration (no worker can be holding a cell)
+                    self.jobs.lock().unwrap_or_else(|e| e.into_inner()).remove(&id);
+                    return Ok(SubmitOutcome::Busy { pending, capacity });
+                }
+                Err(PushError::Closed) => {
+                    let mut jobs = self.jobs.lock().unwrap_or_else(|e| e.into_inner());
+                    if let Some(job) = jobs.get_mut(&id) {
+                        for st in job.local.iter_mut() {
+                            if *st == LocalState::Queued {
+                                *st = LocalState::Failed("queue closed".into());
+                            }
+                        }
                     }
                 }
             }
         }
         self.persist_job_file(&id, &spec);
-        Ok((id, true))
+        Ok(SubmitOutcome::Created(id))
     }
 
     /// Write `job-<id>.json` (atomic tmp + rename) unless present.
@@ -282,13 +331,16 @@ impl Shared {
                         .map_err(anyhow::Error::from)
                         .and_then(|v| JobSpec::from_json(&v))
                 });
-            match spec {
-                Ok(spec) => {
-                    if let Err(err) = self.register_job(spec) {
-                        log::warn!("serve: job file {name} failed to register: {err:#}");
-                    }
+            match spec.and_then(|spec| self.register_job(spec)) {
+                // Busy: the job file stays put; the next poll retries
+                // once the queue has drained below its capacity
+                Ok(SubmitOutcome::Busy { pending, capacity }) => {
+                    log::debug!(
+                        "serve: job file {name} deferred: queue full ({pending}/{capacity})"
+                    );
                 }
-                Err(err) => log::warn!("serve: unreadable job file {name}: {err:#}"),
+                Ok(_) => {}
+                Err(err) => log::warn!("serve: job file {name} failed to register: {err:#}"),
             }
         }
     }
@@ -317,7 +369,7 @@ impl Shared {
             }
             self.set_state(&item.job, item.cell.index, LocalState::Running);
             let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                run_one_cell(self.runner, &mut engine, &item.cell)
+                run_one_cell(self.runner, &mut engine, &item.cell, self.synthetic_delay_ms)
             }));
             let state = match outcome {
                 Ok(Ok(record)) => {
@@ -341,9 +393,17 @@ fn run_one_cell(
     runner: CellRunner,
     engine: &mut Option<Engine>,
     cell: &GridCell,
+    synthetic_delay_ms: u64,
 ) -> Result<RunRecord> {
     match runner {
-        CellRunner::Synthetic => Ok(synthetic_cell_record(cell)),
+        CellRunner::Synthetic => {
+            // lets the cancellation/backpressure tests hold cells
+            // in-flight deterministically; 0 (the default) is free
+            if synthetic_delay_ms > 0 {
+                std::thread::sleep(Duration::from_millis(synthetic_delay_ms));
+            }
+            Ok(synthetic_cell_record(cell))
+        }
         CellRunner::Engine => {
             if engine.is_none() {
                 *engine = Some(Engine::new().context("creating worker engine")?);
@@ -366,6 +426,11 @@ pub struct ServeOptions {
     pub runner: CellRunner,
     /// job-directory poll cadence for cross-shard discovery
     pub poll_ms: u64,
+    /// pending-cell bound: a submission that would push past this many
+    /// queued cells gets 429 (`usize::MAX` = unbounded)
+    pub queue_cap: usize,
+    /// artificial synthetic-runner latency per cell (tests only)
+    pub synthetic_delay_ms: u64,
 }
 
 /// A bound (not yet running) service.
@@ -394,8 +459,12 @@ impl Server {
                 jobs_dir,
                 shard: opts.shard,
                 runner: opts.runner,
-                queue: WorkQueue::new(),
+                queue: WorkQueue::bounded(opts.queue_cap),
                 jobs: Mutex::new(HashMap::new()),
+                results: Mutex::new(HashMap::new()),
+                results_cold: AtomicU64::new(0),
+                results_warm: AtomicU64::new(0),
+                synthetic_delay_ms: opts.synthetic_delay_ms,
                 executed: AtomicUsize::new(0),
                 active: AtomicUsize::new(0),
                 draining: AtomicBool::new(false),
@@ -495,6 +564,7 @@ fn route(req: &Request, shared: &Shared) -> Response {
         ("GET", ["jobs"]) => list_jobs(shared),
         ("GET", ["jobs", id]) => job_status(shared, id),
         ("GET", ["jobs", id, "results"]) => job_results(shared, id),
+        ("POST", ["jobs", id, "cancel"]) => cancel_job(shared, id),
         ("GET", ["cells"]) => cells(shared),
         ("POST", ["shutdown"]) => shutdown(req, shared),
         ("GET", _) | ("POST", _) => Response::error(404, &format!("no route for {}", req.path)),
@@ -504,6 +574,8 @@ fn route(req: &Request, shared: &Shared) -> Response {
 
 fn healthz(shared: &Shared) -> Response {
     let jobs = shared.jobs.lock().unwrap_or_else(|e| e.into_inner()).len();
+    let cap = shared.queue.capacity();
+    let queue_cap = if cap == usize::MAX { Value::Null } else { Value::from(cap) };
     Response::json(
         200,
         &Value::object(vec![
@@ -511,9 +583,16 @@ fn healthz(shared: &Shared) -> Response {
             ("shard", Value::from(shared.shard.to_string())),
             ("jobs", Value::from(jobs)),
             ("queue", Value::from(shared.queue.len())),
+            ("queue_cap", queue_cap),
             ("active", Value::from(shared.active.load(Ordering::SeqCst))),
             ("executed", Value::from(shared.executed.load(Ordering::SeqCst))),
             ("draining", Value::from(shared.draining.load(Ordering::SeqCst))),
+            // read-path instrumentation: the parse-once/serve-many
+            // proof the e2e tests and serve_http bench assert against
+            ("doc_parses", Value::Num(shared.store.doc_parses() as f64)),
+            ("doc_hits", Value::Num(shared.store.doc_hits() as f64)),
+            ("results_cold", Value::Num(shared.results_cold.load(Ordering::SeqCst) as f64)),
+            ("results_warm", Value::Num(shared.results_warm.load(Ordering::SeqCst) as f64)),
         ]),
     )
 }
@@ -527,13 +606,19 @@ fn submit(req: &Request, shared: &Shared) -> Response {
         Err(e) => return Response::error(400, &format!("{e:#}")),
     };
     match shared.register_job(spec) {
-        Ok((id, created)) => {
-            let status = if created { 202 } else { 200 };
-            match status_doc(shared, &id) {
-                Some(doc) => Response::json(status, &doc),
-                None => Response::error(500, "job vanished during registration"),
-            }
-        }
+        Ok(SubmitOutcome::Created(id)) => match status_doc(shared, &id) {
+            Some(doc) => Response::json(202, &doc),
+            None => Response::error(500, "job vanished during registration"),
+        },
+        Ok(SubmitOutcome::Known(id)) => match status_doc(shared, &id) {
+            Some(doc) => Response::json(200, &doc),
+            None => Response::error(500, "job vanished during registration"),
+        },
+        Ok(SubmitOutcome::Busy { pending, capacity }) => Response::error(
+            429,
+            &format!("queue full ({pending}/{capacity} cells pending): retry later"),
+        )
+        .with_header("Retry-After", "1"),
         Err(e) => Response::error(400, &format!("{e:#}")),
     }
 }
@@ -571,13 +656,14 @@ fn status_doc(shared: &Shared, id: &str) -> Option<Value> {
     let job = jobs.get(id)?;
     let total = job.cells.len();
     let (mut queued, mut running, mut ran, mut cached, mut failed) = (0, 0, 0, 0, 0);
-    let (mut stored, mut pending) = (0, 0);
+    let (mut stored, mut pending, mut cancelled) = (0, 0, 0);
     for (cell, st) in job.cells.iter().zip(&job.local) {
         match st {
             LocalState::Queued => queued += 1,
             LocalState::Running => running += 1,
             LocalState::Ran => ran += 1,
             LocalState::Cached => cached += 1,
+            LocalState::Cancelled => cancelled += 1,
             LocalState::Failed(_) => failed += 1,
             LocalState::Foreign => {
                 if shared.store.get(&CellKey::of(&cell.cfg)).is_some() {
@@ -614,6 +700,7 @@ fn status_doc(shared: &Shared, id: &str) -> Option<Value> {
         ("cached", Value::from(cached)),
         ("stored", Value::from(stored)),
         ("pending", Value::from(pending)),
+        ("cancelled", Value::from(cancelled)),
         ("failed", Value::from(failed)),
         ("done", Value::from(done)),
         ("complete", Value::from(done == total)),
@@ -622,6 +709,18 @@ fn status_doc(shared: &Shared, id: &str) -> Option<Value> {
     ]))
 }
 
+/// `GET /jobs/<id>/results` — the parse-once/serve-many hot path.
+///
+/// Every cell document comes from the store's doc cache
+/// ([`RunStore::get_doc`]): a cell file is parsed at most once per
+/// process lifetime, and its canonical `record` serialization rides
+/// along as pre-rendered bytes.  The response body is assembled by
+/// concatenating those slices — byte-identical to serializing the
+/// equivalent `Value` tree, because the canonical serializer is
+/// compositional (no whitespace, insertion-order keys) — and cached
+/// per job under a signature of every document's stat fingerprint.
+/// A repeat GET over an unchanged store re-sends the same `Arc`'d
+/// bytes: zero JSON parses, zero tree serializations.
 fn job_results(shared: &Shared, id: &str) -> Response {
     shared.store.refresh();
     let cells: Vec<GridCell> = {
@@ -633,42 +732,94 @@ fn job_results(shared: &Shared, id: &str) -> Response {
     };
     // every cell must be servable from the shared store — the *merged*
     // result across shards, never just this process's slice
-    let mut runs: Vec<CellRun> = Vec::with_capacity(cells.len());
+    let mut docs = Vec::with_capacity(cells.len());
     for cell in &cells {
-        let key = CellKey::of(&cell.cfg);
-        match shared.store.get(&key) {
-            Some(record) => runs.push(CellRun {
-                index: cell.index,
-                label: cell.label.clone(),
-                key,
-                outcome: CellOutcome::Cached(record),
-            }),
+        match shared.store.get_doc(&CellKey::of(&cell.cfg)) {
+            Some(doc) => docs.push(doc),
             None => {
                 return Response::error(409, &format!("cell '{}' not complete yet", cell.label))
             }
         }
     }
-    let rows: Vec<Value> = grid_rows(&runs).iter().map(|row| row.to_json()).collect();
-    let records: Vec<Value> = runs
+    let mut sig_src = String::from(id);
+    for doc in &docs {
+        sig_src.push_str(&format!("|{:016x}", doc.fingerprint));
+    }
+    let sig = fnv1a64(sig_src.as_bytes());
+    {
+        let cache = shared.results.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(cached) = cache.get(id) {
+            if cached.sig == sig {
+                shared.results_warm.fetch_add(1, Ordering::SeqCst);
+                return Response::json_shared(200, cached.body.clone());
+            }
+        }
+    }
+    shared.results_cold.fetch_add(1, Ordering::SeqCst);
+    let runs: Vec<CellRun> = cells
         .iter()
-        .map(|run| {
-            Value::object(vec![
-                ("label", Value::from(run.label.clone())),
-                (
-                    "record",
-                    run.outcome.record().expect("cached outcome has a record").to_json(),
-                ),
-            ])
+        .zip(&docs)
+        .map(|(cell, doc)| CellRun {
+            index: cell.index,
+            label: cell.label.clone(),
+            key: doc.key.clone(),
+            outcome: CellOutcome::Cached(doc.record.clone()),
         })
         .collect();
-    Response::json(
-        200,
-        &Value::object(vec![
-            ("job", Value::from(id)),
-            ("rows", Value::Array(rows)),
-            ("cells", Value::Array(records)),
-        ]),
-    )
+    let rows: Vec<Value> = grid_rows(&runs).iter().map(|row| row.to_json()).collect();
+    let mut body = String::new();
+    body.push_str("{\"job\":");
+    json::escape_into(id, &mut body).expect("write to String");
+    body.push_str(",\"rows\":");
+    // one tree serialization on a cold assembly; the per-cell record
+    // bytes below are spliced from the doc cache, never re-rendered
+    body.push_str(&Value::Array(rows).to_string());
+    body.push_str(",\"cells\":[");
+    for (i, (cell, doc)) in cells.iter().zip(&docs).enumerate() {
+        if i > 0 {
+            body.push(',');
+        }
+        body.push_str("{\"label\":");
+        json::escape_into(&cell.label, &mut body).expect("write to String");
+        body.push_str(",\"record\":");
+        body.push_str(&doc.record_json);
+        body.push('}');
+    }
+    body.push_str("]}\n");
+    let body: Arc<[u8]> = Arc::from(body.into_bytes());
+    shared
+        .results
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .insert(id.to_string(), CachedResults { sig, body: body.clone() });
+    Response::json_shared(200, body)
+}
+
+/// `POST /jobs/<id>/cancel` — drop the job's still-queued cells.
+/// Running cells finish (their store writes stay valid for siblings);
+/// dropped cells report as `cancelled` in the status document, so a
+/// cancelled job never reaches `complete` and `/results` stays 409.
+/// The job file is removed so restarts and sibling shards don't
+/// resurrect the queued work.
+fn cancel_job(shared: &Shared, id: &str) -> Response {
+    let known = shared.jobs.lock().unwrap_or_else(|e| e.into_inner()).contains_key(id);
+    if !known {
+        return Response::error(404, &format!("no job '{id}'"));
+    }
+    let dropped = shared.queue.remove_job(id);
+    for item in &dropped {
+        shared.set_state(id, item.cell.index, LocalState::Cancelled);
+    }
+    let path = shared.jobs_dir.join(format!("job-{id}.json"));
+    if let Err(e) = std::fs::remove_file(&path) {
+        if e.kind() != std::io::ErrorKind::NotFound {
+            log::warn!("serve: could not remove job file {}: {e}", path.display());
+        }
+    }
+    match status_doc(shared, id) {
+        Some(doc) => Response::json(200, &doc),
+        None => Response::error(404, &format!("no job '{id}'")),
+    }
 }
 
 fn cells(shared: &Shared) -> Response {

@@ -8,9 +8,144 @@
 //! straight in): nesting is bounded by [`MAX_DEPTH`] and input size by
 //! [`MAX_INPUT_BYTES`], both returning a clean [`ParseError`] instead
 //! of a stack overflow or an unbounded allocation.
+//!
+//! Two representations share the grammar:
+//!
+//! * [`Value`] — the owned tree ([`parse`] / `Display`), used everywhere
+//!   a document is built or mutated.
+//! * [`raw::RawDoc`] — a bytes-backed lazy view over a shared
+//!   `Arc<[u8]>` buffer for the parse-once/serve-many read path.
+//!   Strings without escapes borrow straight from the buffer
+//!   (copy-on-escape); every node remembers its source span so
+//!   already-canonical subtrees can be spliced into responses without
+//!   re-serialization.  [`raw::RawRef`] and `&Value` expose the same
+//!   accessor surface through [`JsonView`].
 
 use std::collections::BTreeMap;
 use std::fmt;
+
+pub mod raw;
+
+pub use raw::{RawDoc, RawRef};
+
+/// Process-wide instrumentation for the parse-once/serve-many claim.
+///
+/// Every document parse ([`parse`] and [`raw::RawDoc`] construction)
+/// and every top-level tree serialization (`Value as Display`) bumps a
+/// counter.  The serve e2e tests and `benches/serve_http.rs` snapshot
+/// these around a warm results GET to prove the hot path does zero
+/// JSON work — instrumentation, not vibes.
+pub mod count {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static PARSES: AtomicU64 = AtomicU64::new(0);
+    static SERIALIZES: AtomicU64 = AtomicU64::new(0);
+
+    pub(super) fn record_parse() {
+        PARSES.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(super) fn record_serialize() {
+        SERIALIZES.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Documents parsed since process start (owned + raw).
+    pub fn parses() -> u64 {
+        PARSES.load(Ordering::Relaxed)
+    }
+
+    /// Top-level `Value` tree serializations since process start.
+    pub fn serializes() -> u64 {
+        SERIALIZES.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checked f64 -> integer conversion
+// ---------------------------------------------------------------------------
+
+/// `f64` -> `i64` only when the value is finite, integral, and in
+/// range.  `2^63` itself is exactly representable but one past
+/// `i64::MAX`, so the upper bound is exclusive; `-2^63` is `i64::MIN`
+/// exactly and allowed.
+pub fn f64_to_i64(f: f64) -> Option<i64> {
+    const LO: f64 = -9_223_372_036_854_775_808.0; // -2^63 == i64::MIN
+    const HI: f64 = 9_223_372_036_854_775_808.0; // 2^63 == i64::MAX + 1
+    if !f.is_finite() || f.fract() != 0.0 || f < LO || f >= HI {
+        return None;
+    }
+    Some(f as i64)
+}
+
+/// `f64` -> `usize` only when the value is finite, integral,
+/// non-negative, and fits the platform word.
+pub fn f64_to_usize(f: f64) -> Option<usize> {
+    const HI: f64 = 18_446_744_073_709_551_616.0; // 2^64 == u64::MAX + 1
+    if !f.is_finite() || f.fract() != 0.0 || f < 0.0 || f >= HI {
+        return None;
+    }
+    usize::try_from(f as u64).ok()
+}
+
+// ---------------------------------------------------------------------------
+// Uniform accessor surface over both representations
+// ---------------------------------------------------------------------------
+
+/// Read-only JSON accessors implemented by both `&Value` and
+/// [`raw::RawRef`], so decoders (e.g. `RunRecord::from_json`) can be
+/// written once and run against either the owned tree or the
+/// zero-copy view.
+pub trait JsonView<'a>: Sized + Copy {
+    fn get(self, key: &str) -> Option<Self>;
+    fn as_str(self) -> Option<&'a str>;
+    fn as_f64(self) -> Option<f64>;
+    fn as_bool(self) -> Option<bool>;
+    fn items(self) -> Option<Vec<Self>>;
+    fn entries(self) -> Option<Vec<(&'a str, Self)>>;
+
+    fn as_i64(self) -> Option<i64> {
+        self.as_f64().and_then(f64_to_i64)
+    }
+
+    fn as_usize(self) -> Option<usize> {
+        self.as_f64().and_then(f64_to_usize)
+    }
+}
+
+impl<'a> JsonView<'a> for &'a Value {
+    fn get(self, key: &str) -> Option<Self> {
+        Value::get(self, key)
+    }
+
+    fn as_str(self) -> Option<&'a str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    fn as_f64(self) -> Option<f64> {
+        Value::as_f64(self)
+    }
+
+    fn as_bool(self) -> Option<bool> {
+        Value::as_bool(self)
+    }
+
+    fn items(self) -> Option<Vec<Self>> {
+        match self {
+            Value::Array(a) => Some(a.iter().collect()),
+            _ => None,
+        }
+    }
+
+    fn entries(self) -> Option<Vec<(&'a str, Self)>> {
+        match self {
+            Value::Object(kv) => Some(kv.iter().map(|(k, v)| (k.as_str(), v)).collect()),
+            _ => None,
+        }
+    }
+}
 
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
@@ -64,12 +199,16 @@ impl Value {
         }
     }
 
+    /// Integral numbers only: non-integral, non-finite, or
+    /// out-of-range values return `None` (they used to silently
+    /// truncate through an `as` cast).
     pub fn as_i64(&self) -> Option<i64> {
-        self.as_f64().map(|f| f as i64)
+        self.as_f64().and_then(f64_to_i64)
     }
 
+    /// Integral non-negative numbers only; see [`Value::as_i64`].
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|f| f as usize)
+        self.as_f64().and_then(f64_to_usize)
     }
 
     pub fn as_bool(&self) -> Option<bool> {
@@ -161,6 +300,7 @@ pub const MAX_DEPTH: usize = 128;
 pub const MAX_INPUT_BYTES: usize = 64 * 1024 * 1024;
 
 pub fn parse(text: &str) -> Result<Value, ParseError> {
+    count::record_parse();
     if text.len() > MAX_INPUT_BYTES {
         return Err(ParseError {
             pos: 0,
@@ -395,6 +535,8 @@ impl<'a> Parser<'a> {
 
 impl fmt::Display for Value {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // one count per tree (nested nodes go through `write` directly)
+        count::record_serialize();
         write(self, f)
     }
 }
@@ -437,6 +579,13 @@ fn write(v: &Value, f: &mut fmt::Formatter<'_>) -> fmt::Result {
 }
 
 fn write_str(s: &str, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+    escape_into(s, f)
+}
+
+/// Write `s` as a quoted JSON string literal, byte-identical to how the
+/// `Value` serializer emits it.  Public so response assembly can escape
+/// individual strings without building a `Value` tree.
+pub fn escape_into<W: fmt::Write>(s: &str, f: &mut W) -> fmt::Result {
     f.write_str("\"")?;
     for c in s.chars() {
         match c {
@@ -446,7 +595,7 @@ fn write_str(s: &str, f: &mut fmt::Formatter<'_>) -> fmt::Result {
             '\t' => f.write_str("\\t")?,
             '\r' => f.write_str("\\r")?,
             c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
-            c => write!(f, "{c}")?,
+            c => f.write_char(c)?,
         }
     }
     f.write_str("\"")
@@ -576,6 +725,44 @@ mod tests {
                 parse(&v.to_string()).map(|back| back == v).unwrap_or(false)
             },
         );
+    }
+
+    #[test]
+    fn integer_accessors_reject_non_integral_and_out_of_range() {
+        // integral values in range pass, including 2^53 (the last
+        // contiguous f64 integer) and the exact i64::MIN
+        let p53 = 9_007_199_254_740_992.0_f64; // 2^53
+        assert_eq!(Value::Num(p53).as_i64(), Some(1_i64 << 53));
+        assert_eq!(Value::Num(p53).as_usize(), Some(1_usize << 53));
+        assert_eq!(Value::Num(-p53).as_i64(), Some(-(1_i64 << 53)));
+        assert_eq!(
+            Value::Num(-9_223_372_036_854_775_808.0).as_i64(),
+            Some(i64::MIN)
+        );
+        assert_eq!(Value::Num(0.0).as_usize(), Some(0));
+        assert_eq!(Value::Num(-0.0).as_usize(), Some(0));
+
+        // non-integral: used to truncate (1.9 -> 1), now None
+        assert_eq!(Value::Num(1.9).as_i64(), None);
+        assert_eq!(Value::Num(1.9).as_usize(), None);
+        assert_eq!(Value::Num(-0.5).as_i64(), None);
+
+        // negatives never fit usize
+        assert_eq!(Value::Num(-1.0).as_usize(), None);
+
+        // out of range: 2^63 is one past i64::MAX, 2^64 one past u64::MAX
+        assert_eq!(Value::Num(9_223_372_036_854_775_808.0).as_i64(), None);
+        assert_eq!(Value::Num(18_446_744_073_709_551_616.0).as_usize(), None);
+        assert_eq!(Value::Num(1e300).as_i64(), None);
+
+        // non-finite
+        assert_eq!(Value::Num(f64::NAN).as_i64(), None);
+        assert_eq!(Value::Num(f64::NAN).as_usize(), None);
+        assert_eq!(Value::Num(f64::INFINITY).as_i64(), None);
+        assert_eq!(Value::Num(f64::NEG_INFINITY).as_usize(), None);
+
+        // non-numbers unchanged
+        assert_eq!(Value::Str("3".into()).as_i64(), None);
     }
 
     #[test]

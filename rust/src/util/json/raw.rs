@@ -1,0 +1,597 @@
+//! Bytes-backed lazy JSON: the parse-once/serve-many read path.
+//!
+//! [`RawDoc`] parses a document once into a skeleton of spans over a
+//! shared `Arc<[u8]>` buffer.  Strings without escape sequences stay
+//! borrowed slices of the input (copy-on-escape: only strings
+//! containing `\` materialize an owned `String`); numbers are decoded
+//! eagerly (an `f64` is smaller than a span) but remember their source
+//! span like every other node, so any subtree's exact source bytes can
+//! be spliced into an outgoing response without re-serialization.
+//!
+//! The grammar, nesting/size caps, and every accepted/rejected input
+//! are identical to the owned [`parse`](super::parse) — pinned by the
+//! differential property tests in `tests/json_raw_conformance.rs`.
+
+use std::sync::Arc;
+
+use super::{
+    count, f64_to_i64, f64_to_usize, JsonView, ParseError, Value, MAX_DEPTH, MAX_INPUT_BYTES,
+};
+
+/// Byte range into a [`RawDoc`] buffer (`start..end`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    pub start: usize,
+    pub end: usize,
+}
+
+/// A string inside a [`RawDoc`]: borrowed from the buffer when the
+/// source literal had no escapes, owned (materialized once, at parse
+/// time) when it did.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RawStr {
+    /// Span of the string *contents* (between the quotes); escape-free.
+    Borrowed(Span),
+    /// The literal contained `\`-escapes; decoded at parse time.
+    Owned(String),
+}
+
+impl RawStr {
+    fn as_str<'a>(&'a self, buf: &'a [u8]) -> &'a str {
+        match self {
+            // the whole buffer is validated UTF-8 before parsing and
+            // span edges sit on ASCII quotes, so the slice is valid
+            RawStr::Borrowed(sp) => std::str::from_utf8(&buf[sp.start..sp.end])
+                .expect("RawDoc buffer validated as UTF-8 at parse"),
+            RawStr::Owned(s) => s,
+        }
+    }
+}
+
+/// One node of the parsed skeleton.  Every variant records the span of
+/// its source text so `raw_bytes` can splice canonical subtrees.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RawNode {
+    Null { span: Span },
+    Bool { value: bool, span: Span },
+    Num { value: f64, span: Span },
+    Str { value: RawStr, span: Span },
+    Array { items: Vec<RawNode>, span: Span },
+    Object { members: Vec<(RawStr, RawNode)>, span: Span },
+}
+
+impl RawNode {
+    fn span(&self) -> Span {
+        match self {
+            RawNode::Null { span }
+            | RawNode::Bool { span, .. }
+            | RawNode::Num { span, .. }
+            | RawNode::Str { span, .. }
+            | RawNode::Array { span, .. }
+            | RawNode::Object { span, .. } => *span,
+        }
+    }
+}
+
+/// A parsed document holding its input alive in a shared buffer.
+///
+/// Cheap to clone behind an `Arc`; the store's document cache hands out
+/// `Arc<RawDoc>`-backed views so one parse serves every subsequent
+/// request for the same cell file.
+#[derive(Debug, Clone)]
+pub struct RawDoc {
+    buf: Arc<[u8]>,
+    root: RawNode,
+}
+
+impl RawDoc {
+    /// Parse from a `&str` (copies the text into a fresh shared buffer).
+    pub fn parse(text: &str) -> Result<RawDoc, ParseError> {
+        Self::parse_arc(Arc::from(text.as_bytes()))
+    }
+
+    /// Parse from an already-shared buffer without copying it.  The
+    /// buffer must be UTF-8 (network/disk bytes are validated here).
+    pub fn parse_arc(buf: Arc<[u8]>) -> Result<RawDoc, ParseError> {
+        count::record_parse();
+        if buf.len() > MAX_INPUT_BYTES {
+            return Err(ParseError {
+                pos: 0,
+                msg: format!("input of {} bytes exceeds cap of {MAX_INPUT_BYTES}", buf.len()),
+            });
+        }
+        if let Err(e) = std::str::from_utf8(&buf) {
+            return Err(ParseError {
+                pos: e.valid_up_to(),
+                msg: "invalid utf8".to_string(),
+            });
+        }
+        let mut p = RawParser { b: &buf, i: 0, depth: 0 };
+        p.ws();
+        let root = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            return Err(p.err("trailing content"));
+        }
+        Ok(RawDoc { buf, root })
+    }
+
+    /// Root node view.
+    pub fn root(&self) -> RawRef<'_> {
+        RawRef { buf: &self.buf, node: &self.root }
+    }
+
+    /// The shared input buffer.
+    pub fn buf(&self) -> &Arc<[u8]> {
+        &self.buf
+    }
+
+    /// Deep-convert to the owned representation (differential tests,
+    /// escape hatch for mutation).
+    pub fn to_value(&self) -> Value {
+        self.root().to_value()
+    }
+}
+
+/// Copyable view of one node plus the buffer it points into — the
+/// zero-copy analog of `&Value`, sharing its accessor names (and the
+/// [`JsonView`] trait) so decoders work against either.
+#[derive(Debug, Clone, Copy)]
+pub struct RawRef<'a> {
+    buf: &'a [u8],
+    node: &'a RawNode,
+}
+
+impl<'a> RawRef<'a> {
+    fn at(&self, node: &'a RawNode) -> RawRef<'a> {
+        RawRef { buf: self.buf, node }
+    }
+
+    /// Source span of this node in the document buffer.
+    pub fn span(&self) -> Span {
+        self.node.span()
+    }
+
+    /// The exact source bytes of this node — already serialized JSON,
+    /// spliceable into a response when the source is canonical.
+    pub fn raw_bytes(&self) -> &'a [u8] {
+        let sp = self.node.span();
+        &self.buf[sp.start..sp.end]
+    }
+
+    pub fn get(&self, key: &str) -> Option<RawRef<'a>> {
+        match self.node {
+            RawNode::Object { members, .. } => members
+                .iter()
+                .find(|(k, _)| k.as_str(self.buf) == key)
+                .map(|(_, v)| self.at(v)),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&'a str> {
+        match self.node {
+            RawNode::Str { value, .. } => Some(value.as_str(self.buf)),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self.node {
+            RawNode::Num { value, .. } => Some(*value),
+            _ => None,
+        }
+    }
+
+    /// Checked like [`Value::as_i64`]: integral in-range numbers only.
+    pub fn as_i64(&self) -> Option<i64> {
+        self.as_f64().and_then(f64_to_i64)
+    }
+
+    /// Checked like [`Value::as_usize`].
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().and_then(f64_to_usize)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self.node {
+            RawNode::Bool { value, .. } => Some(*value),
+            _ => None,
+        }
+    }
+
+    /// Array element views, in order.
+    pub fn items(&self) -> Option<Vec<RawRef<'a>>> {
+        match self.node {
+            RawNode::Array { items, .. } => Some(items.iter().map(|n| self.at(n)).collect()),
+            _ => None,
+        }
+    }
+
+    /// Object member views, in key order.
+    pub fn entries(&self) -> Option<Vec<(&'a str, RawRef<'a>)>> {
+        match self.node {
+            RawNode::Object { members, .. } => Some(
+                members
+                    .iter()
+                    .map(|(k, v)| (k.as_str(self.buf), self.at(v)))
+                    .collect(),
+            ),
+            _ => None,
+        }
+    }
+
+    /// True when this node is a string borrowed straight from the
+    /// buffer (i.e. the copy-on-escape fast path applied).
+    pub fn is_borrowed_str(&self) -> bool {
+        matches!(
+            self.node,
+            RawNode::Str {
+                value: RawStr::Borrowed(_),
+                ..
+            }
+        )
+    }
+
+    /// Deep-convert this subtree to an owned [`Value`].
+    pub fn to_value(&self) -> Value {
+        match self.node {
+            RawNode::Null { .. } => Value::Null,
+            RawNode::Bool { value, .. } => Value::Bool(*value),
+            RawNode::Num { value, .. } => Value::Num(*value),
+            RawNode::Str { value, .. } => Value::Str(value.as_str(self.buf).to_string()),
+            RawNode::Array { items, .. } => {
+                Value::Array(items.iter().map(|n| self.at(n).to_value()).collect())
+            }
+            RawNode::Object { members, .. } => Value::Object(
+                members
+                    .iter()
+                    .map(|(k, v)| (k.as_str(self.buf).to_string(), self.at(v).to_value()))
+                    .collect(),
+            ),
+        }
+    }
+}
+
+impl<'a> JsonView<'a> for RawRef<'a> {
+    fn get(self, key: &str) -> Option<Self> {
+        RawRef::get(&self, key)
+    }
+
+    fn as_str(self) -> Option<&'a str> {
+        RawRef::as_str(&self)
+    }
+
+    fn as_f64(self) -> Option<f64> {
+        RawRef::as_f64(&self)
+    }
+
+    fn as_bool(self) -> Option<bool> {
+        RawRef::as_bool(&self)
+    }
+
+    fn items(self) -> Option<Vec<Self>> {
+        RawRef::items(&self)
+    }
+
+    fn entries(self) -> Option<Vec<(&'a str, Self)>> {
+        RawRef::entries(&self)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parser — mirrors super::Parser exactly (grammar, caps, error points)
+// ---------------------------------------------------------------------------
+
+struct RawParser<'a> {
+    b: &'a [u8],
+    i: usize,
+    depth: usize,
+}
+
+impl<'a> RawParser<'a> {
+    fn err(&self, msg: &str) -> ParseError {
+        ParseError {
+            pos: self.i,
+            msg: msg.to_string(),
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), ParseError> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", c as char)))
+        }
+    }
+
+    fn lit(&mut self, s: &str) -> Result<Span, ParseError> {
+        let start = self.i;
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(Span { start, end: self.i })
+        } else {
+            Err(self.err(&format!("expected '{s}'")))
+        }
+    }
+
+    fn value(&mut self) -> Result<RawNode, ParseError> {
+        match self.peek() {
+            Some(b'{') => {
+                self.descend()?;
+                let v = self.object();
+                self.depth -= 1;
+                v
+            }
+            Some(b'[') => {
+                self.descend()?;
+                let v = self.array();
+                self.depth -= 1;
+                v
+            }
+            Some(b'"') => {
+                let start = self.i;
+                let value = self.string()?;
+                Ok(RawNode::Str {
+                    value,
+                    span: Span { start, end: self.i },
+                })
+            }
+            Some(b't') => {
+                let span = self.lit("true")?;
+                Ok(RawNode::Bool { value: true, span })
+            }
+            Some(b'f') => {
+                let span = self.lit("false")?;
+                Ok(RawNode::Bool { value: false, span })
+            }
+            Some(b'n') => {
+                let span = self.lit("null")?;
+                Ok(RawNode::Null { span })
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(self.err("unexpected character")),
+        }
+    }
+
+    fn descend(&mut self) -> Result<(), ParseError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err(&format!("nesting deeper than {MAX_DEPTH} levels")));
+        }
+        Ok(())
+    }
+
+    fn object(&mut self) -> Result<RawNode, ParseError> {
+        let start = self.i;
+        self.eat(b'{')?;
+        let mut members = Vec::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(RawNode::Object {
+                members,
+                span: Span { start, end: self.i },
+            });
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.ws();
+            let v = self.value()?;
+            members.push((k, v));
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(RawNode::Object {
+                        members,
+                        span: Span { start, end: self.i },
+                    });
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<RawNode, ParseError> {
+        let start = self.i;
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(RawNode::Array {
+                items,
+                span: Span { start, end: self.i },
+            });
+        }
+        loop {
+            self.ws();
+            items.push(self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(RawNode::Array {
+                        items,
+                        span: Span { start, end: self.i },
+                    });
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<RawStr, ParseError> {
+        self.eat(b'"')?;
+        let content_start = self.i;
+        // fast path: no escapes -> borrow the contents span verbatim.
+        // UTF-8 validity of the whole buffer was checked up front, so
+        // skipping bytes until '"' or '\\' cannot split a scalar.
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    let span = Span { start: content_start, end: self.i };
+                    self.i += 1;
+                    return Ok(RawStr::Borrowed(span));
+                }
+                Some(b'\\') => break,
+                Some(_) => self.i += 1,
+            }
+        }
+        // copy-on-escape: rewind and materialize with the exact escape
+        // loop of the owned parser (same errors at the same offsets)
+        self.i = content_start;
+        let mut s = String::new();
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(RawStr::Owned(s));
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(b'"') => s.push('"'),
+                        Some(b'\\') => s.push('\\'),
+                        Some(b'/') => s.push('/'),
+                        Some(b'n') => s.push('\n'),
+                        Some(b't') => s.push('\t'),
+                        Some(b'r') => s.push('\r'),
+                        Some(b'b') => s.push('\u{8}'),
+                        Some(b'f') => s.push('\u{c}'),
+                        Some(b'u') => {
+                            if self.i + 4 >= self.b.len() {
+                                return Err(self.err("bad \\u escape"));
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                            self.i += 4;
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                    self.i += 1;
+                }
+                Some(_) => {
+                    let start = self.i;
+                    self.i += 1;
+                    while self.i < self.b.len() && (self.b[self.i] & 0xC0) == 0x80 {
+                        self.i += 1;
+                    }
+                    s.push_str(
+                        std::str::from_utf8(&self.b[start..self.i])
+                            .map_err(|_| self.err("invalid utf8"))?,
+                    );
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<RawNode, ParseError> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.i += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.i += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.i += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        let span = Span { start, end: self.i };
+        let txt = std::str::from_utf8(&self.b[span.start..span.end]).unwrap();
+        txt.parse::<f64>()
+            .map(|value| RawNode::Num { value, span })
+            .map_err(|_| self.err("invalid number"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn borrows_plain_strings_and_materializes_escaped_ones() {
+        let src = r#"{"plain":"abc米","esc":"a\nb"}"#;
+        let doc = RawDoc::parse(src).unwrap();
+        let plain = doc.root().get("plain").unwrap();
+        assert!(plain.is_borrowed_str());
+        assert_eq!(plain.as_str(), Some("abc米"));
+        // the borrowed &str points into the doc's own buffer
+        let s = plain.as_str().unwrap();
+        let base = doc.buf().as_ptr() as usize;
+        assert!((base..base + doc.buf().len()).contains(&(s.as_ptr() as usize)));
+        let esc = doc.root().get("esc").unwrap();
+        assert!(!esc.is_borrowed_str());
+        assert_eq!(esc.as_str(), Some("a\nb"));
+    }
+
+    #[test]
+    fn spans_cover_exact_source_bytes() {
+        let src = r#"  {"a": [1, 2.5], "b": "x"}  "#;
+        let doc = RawDoc::parse(src).unwrap();
+        assert_eq!(doc.root().raw_bytes(), br#"{"a": [1, 2.5], "b": "x"}"#);
+        let arr = doc.root().get("a").unwrap();
+        assert_eq!(arr.raw_bytes(), b"[1, 2.5]");
+        assert_eq!(arr.items().unwrap()[1].raw_bytes(), b"2.5");
+        assert_eq!(doc.root().get("b").unwrap().raw_bytes(), br#""x""#);
+    }
+
+    #[test]
+    fn matches_owned_parser_on_basics() {
+        for src in [
+            "null",
+            "true",
+            "-1.5e3",
+            r#""aAb""#,
+            r#"{"z":1,"a":[true,null,"s\"q"],"m":{"x":[]}}"#,
+        ] {
+            let owned = parse(src).unwrap();
+            let raw = RawDoc::parse(src).unwrap();
+            assert_eq!(raw.to_value(), owned, "src={src}");
+        }
+        for src in ["{", "[1,]", "01abc", "\"unterminated", "{\"a\":1} extra"] {
+            assert!(RawDoc::parse(src).is_err(), "src={src}");
+        }
+    }
+
+    #[test]
+    fn invalid_utf8_bytes_rejected() {
+        let buf: Arc<[u8]> = Arc::from(&b"\"ab\xff\""[..]);
+        assert!(RawDoc::parse_arc(buf).is_err());
+    }
+}

@@ -1,0 +1,204 @@
+//! Differential conformance: the bytes-backed lazy parser
+//! (`json::RawDoc`) against the owned tree parser (`json::parse`).
+//!
+//! The serve-many read path trusts `RawDoc` to be bit-compatible with
+//! the owned parser — same accepted grammar, same rejections (message
+//! and byte position), same decoded values, and source spans that
+//! re-parse to the exact subtree.  These properties pin that contract
+//! over adversarially generated documents and garbage.
+
+use hindsight::metrics::RunRecord;
+use hindsight::util::json::{self, RawDoc, RawRef, Value, MAX_DEPTH};
+use hindsight::util::rng::Pcg32;
+use hindsight::util::testkit::{default_cases, forall};
+
+/// Strings biased toward the serializer's escape set (backslashes,
+/// quotes, control bytes) plus multi-byte UTF-8, so both the borrowed
+/// and the copy-on-escape string paths are exercised.
+fn gen_string(rng: &mut Pcg32) -> String {
+    const PIECES: &[&str] = &[
+        "a", "cell", "0", " ", "β", "𝕏", "❤", "\"", "\\", "\n", "\t", "\r", "\u{1}", "\u{1f}",
+        "\u{7f}", "e+", "-", "ñ",
+    ];
+    let n = rng.below(8);
+    (0..n).map(|_| PIECES[rng.below(PIECES.len())]).collect()
+}
+
+/// Finite numbers across the serializer's regimes: integral shortening
+/// (|x| < 1e15), float `Display`, negative zero, subnormals, and the
+/// integer-accessor boundaries (2^53, 2^63 neighborhood).
+fn gen_num(rng: &mut Pcg32) -> f64 {
+    match rng.below(8) {
+        0 => 0.0,
+        1 => -0.0,
+        2 => rng.below(100_000) as f64,
+        3 => -(rng.below(1000) as f64) - 0.5,
+        4 => rng.below(1000) as f64 / 7.0,
+        5 => 1e15 + rng.below(100) as f64,
+        6 => 9_007_199_254_740_992.0 + rng.below(4) as f64, // 2^53..
+        _ => (rng.below(1_000_000) as f64) * 1e-300,        // subnormal-ish
+    }
+}
+
+fn gen_value(rng: &mut Pcg32, depth: usize) -> Value {
+    let pick = if depth == 0 { rng.below(4) } else { rng.below(6) };
+    match pick {
+        0 => Value::Null,
+        1 => Value::Bool(rng.below(2) == 0),
+        2 => Value::Num(gen_num(rng)),
+        3 => Value::Str(gen_string(rng)),
+        4 => Value::Array((0..rng.below(5)).map(|_| gen_value(rng, depth - 1)).collect()),
+        _ => Value::Object(
+            (0..rng.below(5))
+                .map(|i| (format!("{}k{i}", gen_string(rng)), gen_value(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+/// Walk both representations in lockstep: every accessor answer and
+/// every span's re-parse must agree with the owned subtree.
+fn agrees(raw: RawRef<'_>, owned: &Value) -> bool {
+    if raw.as_str() != owned.as_str()
+        || raw.as_bool() != owned.as_bool()
+        || raw.as_i64() != owned.as_i64()
+        || raw.as_usize() != owned.as_usize()
+    {
+        return false;
+    }
+    match (raw.as_f64(), owned.as_f64()) {
+        (Some(a), Some(b)) => {
+            if a.to_bits() != b.to_bits() {
+                return false;
+            }
+        }
+        (None, None) => {}
+        _ => return false,
+    }
+    // the span must cover a standalone re-parseable form of the node
+    let span_text = std::str::from_utf8(raw.raw_bytes()).expect("spans sit on char boundaries");
+    match json::parse(span_text) {
+        Ok(back) if back == *owned => {}
+        _ => return false,
+    }
+    match owned {
+        Value::Array(items) => {
+            let raw_items = match raw.items() {
+                Some(v) => v,
+                None => return false,
+            };
+            raw_items.len() == items.len()
+                && raw_items.iter().zip(items).all(|(r, o)| agrees(*r, o))
+        }
+        Value::Object(entries) => {
+            let raw_entries = match raw.entries() {
+                Some(v) => v,
+                None => return false,
+            };
+            raw_entries.len() == entries.len()
+                && raw_entries
+                    .iter()
+                    .zip(entries)
+                    .all(|((rk, rv), (ok, ov))| rk == ok && agrees(*rv, ov))
+        }
+        _ => raw.items().is_none() && raw.entries().is_none(),
+    }
+}
+
+#[test]
+fn prop_raw_doc_matches_owned_parser_on_generated_documents() {
+    forall(
+        default_cases(),
+        "raw_conformance_valid",
+        |rng| gen_value(rng, 4),
+        |tree| {
+            let text = tree.to_string();
+            let owned = json::parse(&text).expect("serializer output must re-parse");
+            let raw = RawDoc::parse(&text).expect("raw parser must accept the same text");
+            owned == *tree && raw.to_value() == owned && agrees(raw.root(), &owned)
+        },
+    );
+}
+
+#[test]
+fn prop_raw_doc_rejects_exactly_what_the_owned_parser_rejects() {
+    const CHARSET: &[u8] = b"{}[]\",:0123456789.eE+-\\ truefalsn\n\tu00\x7f";
+    forall(
+        default_cases(),
+        "raw_conformance_garbage",
+        |rng| {
+            let len = rng.below(256);
+            (0..len)
+                .map(|_| CHARSET[rng.below(CHARSET.len())] as char)
+                .collect::<String>()
+        },
+        |s| match (json::parse(s), RawDoc::parse(s)) {
+            (Ok(owned), Ok(raw)) => raw.to_value() == owned,
+            // the raw parser mirrors the owned one line for line: the
+            // rejection itself must be byte-identical too
+            (Err(a), Err(b)) => a.pos == b.pos && a.msg == b.msg,
+            _ => false,
+        },
+    );
+}
+
+#[test]
+fn copy_on_escape_borrows_plain_strings_only() {
+    let doc = RawDoc::parse(r#"{"plain":"cell-abc123","escaped":"a\nbA\\"}"#).unwrap();
+    let root = doc.root();
+    let plain = root.get("plain").unwrap();
+    assert!(plain.is_borrowed_str(), "escape-free strings must borrow from the buffer");
+    let s = plain.as_str().unwrap();
+    let base = doc.buf().as_ptr() as usize;
+    let addr = s.as_ptr() as usize;
+    assert!(
+        (base..base + doc.buf().len()).contains(&addr),
+        "borrowed strings must point into the shared buffer"
+    );
+    let escaped = root.get("escaped").unwrap();
+    assert!(!escaped.is_borrowed_str(), "escapes force materialization");
+    assert_eq!(escaped.as_str(), Some("a\nbA\\"));
+}
+
+#[test]
+fn depth_and_size_budgets_match_the_owned_parser() {
+    let nested = |d: usize| format!("{}1{}", "[".repeat(d), "]".repeat(d));
+    for d in [MAX_DEPTH - 1, MAX_DEPTH, MAX_DEPTH + 1, 2 * MAX_DEPTH] {
+        let text = nested(d);
+        assert_eq!(
+            json::parse(&text).is_ok(),
+            RawDoc::parse(&text).is_ok(),
+            "depth {d}: both parsers must agree on the budget"
+        );
+        assert_eq!(RawDoc::parse(&text).is_ok(), d <= MAX_DEPTH);
+    }
+}
+
+#[test]
+fn run_records_decode_identically_through_both_views() {
+    forall(
+        default_cases(),
+        "raw_conformance_records",
+        |rng| {
+            let name = format!("mlp-s{}-hindsight-w8a8g8", rng.below(1000));
+            RunRecord::synthetic(&name, 1 + rng.below(40) as u64)
+        },
+        |record| {
+            let text = record.to_json().to_string();
+            let owned = RunRecord::from_json(&json::parse(&text).unwrap()).unwrap();
+            let doc = RawDoc::parse(&text).unwrap();
+            let raw = RunRecord::from_raw(doc.root()).unwrap();
+            owned == *record && raw == *record
+        },
+    );
+}
+
+#[test]
+fn shared_buffer_documents_reuse_the_allocation() {
+    let record = RunRecord::synthetic("mlp-s1-hindsight-w8a8g8", 12);
+    let text = record.to_json().to_string();
+    let buf: std::sync::Arc<[u8]> = std::sync::Arc::from(text.as_bytes());
+    let doc = RawDoc::parse_arc(buf.clone()).unwrap();
+    assert!(std::sync::Arc::ptr_eq(doc.buf(), &buf), "parse_arc must not copy the input");
+    assert_eq!(RunRecord::from_raw(doc.root()).unwrap(), record);
+}

@@ -19,7 +19,7 @@ use std::time::{Duration, Instant};
 
 use hindsight::coordinator::executor::run_cells_serial_with;
 use hindsight::coordinator::{grid_rows, GridOptions, GridSpec, TrainConfig};
-use hindsight::service::protocol::read_response;
+use hindsight::service::protocol::{read_response, read_response_full};
 use hindsight::service::{synthetic_cell_record, CellRunner, ServeOptions, Server, ShardSpec};
 use hindsight::util::json::{self, Value};
 
@@ -27,6 +27,15 @@ fn tmp_dir(tag: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(format!("hindsight_serve_{tag}_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
     dir
+}
+
+/// The warm-path test snapshots the process-global `json::count`
+/// counters, which every other test in this binary would disturb from
+/// its client side — so the binary's tests run one at a time.
+static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 /// One HTTP request over a fresh connection; returns (status, JSON).
@@ -47,19 +56,55 @@ fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, Value) 
     (status, value)
 }
 
+/// Raw variant of [`http`]: status + headers + unparsed body bytes.
+/// The warm-path tests use this so the *client* does not touch the
+/// process-global JSON counters they are asserting on.
+fn http_raw(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> (u16, Vec<(String, String)>, Vec<u8>) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .expect("read timeout");
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .expect("request write");
+    read_response_full(&mut stream).expect("response read")
+}
+
 /// Bind a server on an ephemeral port and run it on its own thread.
 fn spawn_server(
     store: &std::path::Path,
     shard: ShardSpec,
     poll_ms: u64,
 ) -> (SocketAddr, std::thread::JoinHandle<()>) {
+    spawn_server_tuned(store, shard, poll_ms, 2, usize::MAX, 0)
+}
+
+/// [`spawn_server`] with the backpressure/cancellation knobs exposed.
+fn spawn_server_tuned(
+    store: &std::path::Path,
+    shard: ShardSpec,
+    poll_ms: u64,
+    workers: usize,
+    queue_cap: usize,
+    synthetic_delay_ms: u64,
+) -> (SocketAddr, std::thread::JoinHandle<()>) {
     let server = Server::bind(ServeOptions {
         addr: "127.0.0.1:0".into(),
-        workers: 2,
+        workers,
         store_dir: store.to_path_buf(),
         shard,
         runner: CellRunner::Synthetic,
         poll_ms,
+        queue_cap,
+        synthetic_delay_ms,
     })
     .expect("bind");
     let addr = server.local_addr().expect("local addr");
@@ -135,6 +180,7 @@ fn results_strings(doc: &Value) -> (Vec<String>, Vec<String>) {
 
 #[test]
 fn serve_end_to_end_matches_serial_and_resubmission_is_cached() {
+    let _serial = serial();
     let store = tmp_dir("e2e");
     let (addr, handle) = spawn_server(&store, ShardSpec::solo(), 500);
 
@@ -204,6 +250,7 @@ fn serve_end_to_end_matches_serial_and_resubmission_is_cached() {
 
 #[test]
 fn two_shards_partition_the_grid_and_merge_bit_identically() {
+    let _serial = serial();
     let store = tmp_dir("shards");
     let shard0 = ShardSpec::parse("0/2").unwrap();
     let shard1 = ShardSpec::parse("1/2").unwrap();
@@ -259,6 +306,7 @@ fn two_shards_partition_the_grid_and_merge_bit_identically() {
 
 #[test]
 fn protocol_errors_are_clean() {
+    let _serial = serial();
     let store = tmp_dir("errors");
     let (addr, handle) = spawn_server(&store, ShardSpec::solo(), 500);
 
@@ -283,6 +331,170 @@ fn protocol_errors_are_clean() {
     let (status, bye) = http(addr, "POST", "/shutdown", r#"{"drain":false}"#);
     assert_eq!(status, 200);
     assert_eq!(bye.get("drain").and_then(|d| d.as_bool()), Some(false));
+    handle.join().expect("server thread");
+    let _ = std::fs::remove_dir_all(&store);
+}
+
+#[test]
+fn warm_results_reuse_bytes_with_zero_json_work() {
+    let _serial = serial();
+    let store = tmp_dir("warm");
+    // short poll is fine: the poller does no JSON work for job ids it
+    // already knows, so it cannot disturb the counter snapshots below
+    let (addr, handle) = spawn_server(&store, ShardSpec::solo(), 100);
+    let (status, doc) = http(addr, "POST", "/jobs", SUBMIT);
+    assert_eq!(status, 202, "{doc}");
+    let job = doc.get("job").and_then(|j| j.as_str()).expect("job id").to_string();
+    wait_complete(addr, &job);
+
+    // cold GET: assembles the body (cell docs parse once, rows
+    // serialize once) and seeds the per-job results cache
+    let (status, _, cold) = http_raw(addr, "GET", &format!("/jobs/{job}/results"), "");
+    assert_eq!(status, 200);
+
+    // the assembled body is the canonical serialization: re-parsing
+    // and re-serializing it reproduces the exact bytes the old
+    // tree-building implementation would have sent
+    let cold_text = std::str::from_utf8(&cold).expect("utf8 body");
+    let reparsed = json::parse(cold_text.trim()).expect("cold body parses");
+    assert_eq!(
+        format!("{reparsed}\n").as_bytes(),
+        &cold[..],
+        "spliced body must equal the canonical tree serialization"
+    );
+    // ... and its rows/records still match the serial reference
+    assert_eq!(results_strings(&reparsed), serial_reference());
+
+    // warm GETs: identical bytes, zero JSON parses, zero tree
+    // serializations anywhere in the process (the client reads raw)
+    let parses = json::count::parses();
+    let serializes = json::count::serializes();
+    for _ in 0..3 {
+        let (status, _, warm) = http_raw(addr, "GET", &format!("/jobs/{job}/results"), "");
+        assert_eq!(status, 200);
+        assert_eq!(warm, cold, "warm results must be byte-identical to the cold assembly");
+    }
+    assert_eq!(json::count::parses(), parses, "warm GETs must parse nothing");
+    assert_eq!(json::count::serializes(), serializes, "warm GETs must serialize no tree");
+
+    // the instrumented server agrees: one cold assembly, three warm
+    // hits, six documents parsed (one per cell file), none re-parsed
+    let (status, health) = http(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200);
+    assert_eq!(health.get("results_cold").and_then(|v| v.as_usize()), Some(1), "{health}");
+    assert_eq!(health.get("results_warm").and_then(|v| v.as_usize()), Some(3), "{health}");
+    assert_eq!(health.get("doc_parses").and_then(|v| v.as_usize()), Some(6), "{health}");
+    assert!(
+        health.get("doc_hits").and_then(|v| v.as_usize()).unwrap_or(0) >= 6,
+        "warm GETs must be served from the doc cache: {health}"
+    );
+
+    let _ = http(addr, "POST", "/shutdown", "{}");
+    handle.join().expect("server thread");
+    let _ = std::fs::remove_dir_all(&store);
+}
+
+#[test]
+fn full_queue_rejects_submissions_with_429_and_retry_after() {
+    let _serial = serial();
+    let store = tmp_dir("flood");
+    // capacity 4 < the 6-cell grid: the submission can never queue
+    let (addr, handle) = spawn_server_tuned(&store, ShardSpec::solo(), 100, 2, 4, 0);
+
+    let (status, health) = http(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200);
+    assert_eq!(health.get("queue_cap").and_then(|v| v.as_usize()), Some(4), "{health}");
+
+    // flood: every oversized submission is refused, never queued
+    for _ in 0..5 {
+        let (status, headers, body) = http_raw(addr, "POST", "/jobs", SUBMIT);
+        assert_eq!(status, 429, "{}", String::from_utf8_lossy(&body));
+        assert!(
+            headers.iter().any(|(k, _)| k == "retry-after"),
+            "429 must carry Retry-After: {headers:?}"
+        );
+        let doc = json::parse(std::str::from_utf8(&body).unwrap().trim()).unwrap();
+        assert!(
+            doc.get("error").and_then(|e| e.as_str()).unwrap_or("").contains("queue full"),
+            "{doc}"
+        );
+    }
+    // a refused job leaves no trace: not registered, not persisted
+    let (status, jobs) = http(addr, "GET", "/jobs", "");
+    assert_eq!(status, 200);
+    assert_eq!(jobs.get("count").and_then(|c| c.as_usize()), Some(0), "{jobs}");
+    let job_files = std::fs::read_dir(store.join("jobs"))
+        .map(|rd| rd.filter_map(|e| e.ok()).count())
+        .unwrap_or(0);
+    assert_eq!(job_files, 0, "refused submissions must not persist job files");
+
+    // a job that fits the bound still sails through
+    let small = r#"{"grid":"g:{hindsight,current,tqt}:8","model":"mlp","seeds":[1],"steps":6}"#;
+    let (status, doc) = http(addr, "POST", "/jobs", small);
+    assert_eq!(status, 202, "{doc}");
+    let job = doc.get("job").and_then(|j| j.as_str()).expect("job id").to_string();
+    let done = wait_complete(addr, &job);
+    assert_eq!(done.get("done").and_then(|d| d.as_usize()), Some(3));
+
+    let _ = http(addr, "POST", "/shutdown", "{}");
+    handle.join().expect("server thread");
+    let _ = std::fs::remove_dir_all(&store);
+}
+
+#[test]
+fn cancel_drops_queued_cells_but_running_cells_finish() {
+    let _serial = serial();
+    let store = tmp_dir("cancel");
+    // one worker, 200ms per synthetic cell: at cancel time one cell is
+    // in flight and the rest are still queued
+    let (addr, handle) = spawn_server_tuned(&store, ShardSpec::solo(), 100, 1, usize::MAX, 200);
+
+    let (status, doc) = http(addr, "POST", "/jobs", SUBMIT);
+    assert_eq!(status, 202, "{doc}");
+    let job = doc.get("job").and_then(|j| j.as_str()).expect("job id").to_string();
+
+    let (status, doc) = http(addr, "POST", &format!("/jobs/{job}/cancel"), "");
+    assert_eq!(status, 200, "{doc}");
+    let cancelled = doc.get("cancelled").and_then(|c| c.as_usize()).expect("cancelled count");
+    assert!(cancelled >= 4, "most of the 6 cells must still be queued at cancel: {doc}");
+
+    // running cells finish; the job settles with nothing queued
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let settled = loop {
+        let (status, doc) = http(addr, "GET", &format!("/jobs/{job}"), "");
+        assert_eq!(status, 200, "{doc}");
+        let queued = doc.get("queued").and_then(|q| q.as_usize()).unwrap_or(9);
+        let running = doc.get("running").and_then(|r| r.as_usize()).unwrap_or(9);
+        if queued == 0 && running == 0 {
+            break doc;
+        }
+        assert!(Instant::now() < deadline, "cancelled job did not settle: {doc}");
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    let ran = settled.get("ran").and_then(|r| r.as_usize()).unwrap_or(0);
+    let cancelled = settled.get("cancelled").and_then(|c| c.as_usize()).unwrap_or(0);
+    assert_eq!(ran + cancelled, 6, "every cell ends ran-or-cancelled: {settled}");
+    assert!(cancelled >= 4, "{settled}");
+    assert_eq!(
+        settled.get("complete").and_then(|c| c.as_bool()),
+        Some(false),
+        "a cancelled job never reaches complete: {settled}"
+    );
+
+    // results stay 409 (incomplete), and the job file is gone so
+    // neither a restart nor a sibling shard resurrects the work
+    let (status, _, _) = http_raw(addr, "GET", &format!("/jobs/{job}/results"), "");
+    assert_eq!(status, 409);
+    assert!(
+        !store.join("jobs").join(format!("job-{job}.json")).exists(),
+        "cancel must remove the persisted job file"
+    );
+
+    // cancelling an unknown job is a clean 404
+    let (status, _) = http(addr, "POST", "/jobs/does-not-exist/cancel", "");
+    assert_eq!(status, 404);
+
+    let _ = http(addr, "POST", "/shutdown", "{}");
     handle.join().expect("server thread");
     let _ = std::fs::remove_dir_all(&store);
 }
