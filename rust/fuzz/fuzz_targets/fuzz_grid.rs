@@ -1,0 +1,10 @@
+//! Grid surface: brace templates and seed strings never panic and
+//! never expand past the MAX_EXPANSIONS / MAX_SEEDS / MAX_GRID_CELLS
+//! caps, no matter the input.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    hindsight::util::fuzzing::check_grid_expansion(data);
+});

@@ -1,0 +1,10 @@
+//! JSON differential: the owned parser and the bytes-backed RawDoc
+//! must agree on accept/reject, trees, and error position + message;
+//! accepted documents survive serialize -> reparse.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    hindsight::util::fuzzing::check_json_differential(data);
+});

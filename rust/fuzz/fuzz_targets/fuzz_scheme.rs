@@ -1,0 +1,10 @@
+//! Scheme grammar: parse -> canonicalize -> reparse is a fixpoint.
+//! The harness body lives in the main crate so `cargo test` replays
+//! the corpus through the exact same code on stable.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    hindsight::util::fuzzing::check_scheme_roundtrip(data);
+});

@@ -1,0 +1,9 @@
+//! Service request path: HTTP framing -> JSON body -> JobSpec ->
+//! grid expansion on arbitrary bytes, bounded end to end.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    hindsight::util::fuzzing::check_service_request(data);
+});

@@ -24,10 +24,36 @@
 //! granularity can be a grid axis (`@{pt,pc}`); it canonicalizes to the
 //! bare key.
 
+use std::collections::HashSet;
+
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::config::TrainConfig;
 use crate::scheme::QuantScheme;
+
+/// Hard cap on the total seed count a grid may carry.  `parse_seeds`
+/// checks it *before* materializing a range (`"0..4000000000"` must
+/// fail in O(1), not after a 32 GB allocation) and `validate_seeds`
+/// enforces it for explicit lists, so the CLI `--seeds` axis and the
+/// service `POST /jobs` body share one bound.
+pub const MAX_SEEDS: usize = 65_536;
+
+/// Hard cap on the brace-expansion cartesian product.  Checked from the
+/// alternation counts alone before any expansion string is allocated,
+/// so a brace bomb (ten 10-way alternations → 10^10 strings) is
+/// rejected without allocating.
+pub const MAX_EXPANSIONS: usize = 4_096;
+
+/// Hard cap on the total bytes brace expansion may produce
+/// (`expansions × template length`, an upper bound on the output).
+/// Guards the cap product itself: `MAX_EXPANSIONS` strings of a
+/// megabyte template would still be gigabytes.
+pub const MAX_EXPANSION_BYTES: usize = 16 * 1024 * 1024;
+
+/// Hard cap on the expanded cell count (`schemes × seeds`).  The other
+/// caps bound each axis; this bounds their product, which is what
+/// `GridSpec::expand` actually allocates (one `TrainConfig` per cell).
+pub const MAX_GRID_CELLS: usize = 65_536;
 
 /// One cell of an expanded grid: a full training configuration plus its
 /// dense grid index and unique label.
@@ -59,20 +85,27 @@ impl GridSpec {
         let seeds = validate_seeds(seeds)?;
         let expansions = expand_braces(template)?;
         let mut schemes: Vec<QuantScheme> = Vec::with_capacity(expansions.len());
-        let mut seen: Vec<String> = Vec::with_capacity(expansions.len());
+        let mut seen: HashSet<String> = HashSet::with_capacity(expansions.len());
         for exp in &expansions {
             let scheme = QuantScheme::parse(exp)
                 .with_context(|| format!("grid expansion '{exp}' of template '{template}'"))?;
-            let canon = scheme.to_string();
             // alternations may canonicalize onto each other (e.g. an
             // explicit `@pt` vs the bare key): keep first occurrence
-            if !seen.contains(&canon) {
-                seen.push(canon);
+            if seen.insert(scheme.to_string()) {
                 schemes.push(scheme);
             }
         }
         if schemes.is_empty() {
             bail!("grid template '{template}' expanded to no schemes");
+        }
+        let cells = schemes.len().saturating_mul(seeds.len());
+        if cells > MAX_GRID_CELLS {
+            bail!(
+                "grid expands to {cells} cells ({} schemes x {} seeds), over the \
+                 {MAX_GRID_CELLS}-cell cap (MAX_GRID_CELLS)",
+                schemes.len(),
+                seeds.len()
+            );
         }
         Ok(Self {
             template: template.to_string(),
@@ -153,6 +186,10 @@ pub fn seed_cells(base: &TrainConfig, seeds: &[u64]) -> Result<Vec<GridCell>> {
 
 /// Parse the CLI seed axis: comma-separated integers and/or inclusive
 /// `a..b` ranges (`"1..5"` → 1,2,3,4,5; `"1,2,7..9"` → 1,2,7,8,9).
+///
+/// Ranges are bounds-checked against [`MAX_SEEDS`] *before* they are
+/// materialized: `"0..4000000000"` fails with the cap named, it does
+/// not allocate 32 GB first.
 pub fn parse_seeds(s: &str) -> Result<Vec<u64>> {
     let mut seeds = Vec::new();
     for tok in s.split(',') {
@@ -172,8 +209,21 @@ pub fn parse_seeds(s: &str) -> Result<Vec<u64>> {
             if lo > hi {
                 bail!("seed range '{tok}' is empty (start > end; ranges are inclusive)");
             }
+            // span check before +1 so `0..u64::MAX` cannot overflow
+            let span = hi - lo;
+            if span >= MAX_SEEDS as u64
+                || seeds.len() as u64 + span + 1 > MAX_SEEDS as u64
+            {
+                bail!(
+                    "seed range '{tok}' would push the seed count over the \
+                     {MAX_SEEDS}-seed cap (MAX_SEEDS)"
+                );
+            }
             seeds.extend(lo..=hi);
         } else {
+            if seeds.len() >= MAX_SEEDS {
+                bail!("more than {MAX_SEEDS} seeds in '{s}' (cap MAX_SEEDS)");
+            }
             seeds.push(
                 tok.parse()
                     .with_context(|| format!("bad seed '{tok}' in '{s}'"))?,
@@ -183,15 +233,51 @@ pub fn parse_seeds(s: &str) -> Result<Vec<u64>> {
     validate_seeds(&seeds)
 }
 
-/// The one seed-list rule every grid surface shares: non-empty,
+/// Inverse of [`parse_seeds`]: render a seed list in the same grammar,
+/// compressing maximal consecutive ascending runs to `a..b` ranges.
+/// Exact for all of `u64` (no float hop), so it is the lossless
+/// serialization form for persisted job specs:
+/// `parse_seeds(&format_seeds(s)).unwrap() == s` for any valid list.
+pub fn format_seeds(seeds: &[u64]) -> String {
+    let mut out = String::new();
+    let mut i = 0;
+    while i < seeds.len() {
+        let start = seeds[i];
+        let mut end = start;
+        let mut j = i + 1;
+        while j < seeds.len() && end < u64::MAX && seeds[j] == end + 1 {
+            end = seeds[j];
+            j += 1;
+        }
+        if !out.is_empty() {
+            out.push(',');
+        }
+        if j - i >= 2 {
+            out.push_str(&format!("{start}..{end}"));
+        } else {
+            out.push_str(&format!("{start}"));
+        }
+        i = j;
+    }
+    out
+}
+
+/// The seed-list rules every grid surface shares: non-empty,
 /// duplicate-free (a duplicated seed would silently double-weight one
-/// run in every aggregate).
+/// run in every aggregate), and at most [`MAX_SEEDS`] entries.
 fn validate_seeds(seeds: &[u64]) -> Result<Vec<u64>> {
     if seeds.is_empty() {
         bail!("empty seed list — pass at least one seed");
     }
-    for (i, s) in seeds.iter().enumerate() {
-        if seeds[..i].contains(s) {
+    if seeds.len() > MAX_SEEDS {
+        bail!(
+            "{} seeds exceed the {MAX_SEEDS}-seed cap (MAX_SEEDS)",
+            seeds.len()
+        );
+    }
+    let mut seen = HashSet::with_capacity(seeds.len());
+    for s in seeds {
+        if !seen.insert(*s) {
             bail!("duplicate seed {s} — each seed may appear once per grid");
         }
     }
@@ -202,31 +288,96 @@ fn validate_seeds(seeds: &[u64]) -> Result<Vec<u64>> {
 /// the result set; the leftmost brace varies slowest.  Braces do not
 /// nest; an empty alternative (`{a,}`) is allowed (optional-suffix
 /// grids like `hindsight{,@pc}`).
+///
+/// The template is scanned twice.  The first pass validates structure
+/// and multiplies the alternation counts, so both the
+/// [`MAX_EXPANSIONS`] product cap and the [`MAX_EXPANSION_BYTES`]
+/// output-size cap are enforced *before* any expansion string is
+/// allocated — a brace bomb costs one arithmetic pass over the
+/// template, nothing more.  The second pass builds the product
+/// iteratively (no recursion: a template of thousands of groups must
+/// not overflow the stack).
 pub fn expand_braces(template: &str) -> Result<Vec<String>> {
-    let Some(open) = template.find('{') else {
-        if template.contains('}') {
+    // pass 1: locate groups, validate, and bound the product
+    let mut groups: Vec<(usize, usize)> = Vec::new(); // (open, close) offsets
+    let mut product = 1usize;
+    let mut rest = template;
+    let mut base = 0usize;
+    loop {
+        let Some(open) = rest.find('{') else {
+            if rest.contains('}') {
+                bail!("unmatched '}}' in '{template}'");
+            }
+            break;
+        };
+        if rest[..open].contains('}') {
             bail!("unmatched '}}' in '{template}'");
         }
-        return Ok(vec![template.to_string()]);
-    };
-    let rest = &template[open + 1..];
-    let close = rest
-        .find('}')
-        .with_context(|| format!("unmatched '{{' in '{template}'"))?;
-    let body = &rest[..close];
-    if body.contains('{') {
-        bail!("nested braces in '{template}' — alternations do not nest");
+        let after = &rest[open + 1..];
+        let close = after
+            .find('}')
+            .with_context(|| format!("unmatched '{{' in '{template}'"))?;
+        let body = &after[..close];
+        if body.contains('{') {
+            bail!("nested braces in '{template}' — alternations do not nest");
+        }
+        if body.is_empty() {
+            bail!("empty alternation '{{}}' in '{template}'");
+        }
+        product = product.saturating_mul(body.split(',').count());
+        if product > MAX_EXPANSIONS {
+            bail!(
+                "template '{template}' expands to more than {MAX_EXPANSIONS} \
+                 schemes (cap MAX_EXPANSIONS)"
+            );
+        }
+        groups.push((base + open, base + open + 1 + close));
+        let consumed = open + 1 + close + 1;
+        base += consumed;
+        rest = &rest[consumed..];
     }
-    if body.is_empty() {
-        bail!("empty alternation '{{}}' in '{template}'");
+    // `product × template length` over-counts (braces are dropped, one
+    // alternative replaces the whole group) so it upper-bounds output
+    if product.saturating_mul(template.len().max(1)) > MAX_EXPANSION_BYTES {
+        bail!(
+            "template '{template}' would expand to more than \
+             {MAX_EXPANSION_BYTES} bytes (cap MAX_EXPANSION_BYTES)"
+        );
     }
-    let prefix = &template[..open];
-    let tails = expand_braces(&rest[close + 1..])?;
-    let mut out = Vec::with_capacity(body.split(',').count() * tails.len());
-    for alt in body.split(',') {
-        let alt = alt.trim();
-        for tail in &tails {
-            out.push(format!("{prefix}{alt}{tail}"));
+
+    // pass 2: iterative product, leftmost group varying slowest
+    let mut out: Vec<String> = vec![String::with_capacity(template.len())];
+    let mut pos = 0usize;
+    for &(open, close) in &groups {
+        let lit = &template[pos..open];
+        if !lit.is_empty() {
+            for s in out.iter_mut() {
+                s.push_str(lit);
+            }
+        }
+        let alts: Vec<&str> = template[open + 1..close].split(',').map(str::trim).collect();
+        if alts.len() == 1 {
+            for s in out.iter_mut() {
+                s.push_str(alts[0]);
+            }
+        } else {
+            let mut next = Vec::with_capacity(out.len() * alts.len());
+            for s in &out {
+                for alt in &alts {
+                    let mut n = String::with_capacity(s.len() + alt.len());
+                    n.push_str(s);
+                    n.push_str(alt);
+                    next.push(n);
+                }
+            }
+            out = next;
+        }
+        pos = close + 1;
+    }
+    let tail = &template[pos..];
+    if !tail.is_empty() {
+        for s in out.iter_mut() {
+            s.push_str(tail);
         }
     }
     Ok(out)
@@ -413,6 +564,118 @@ mod tests {
         assert!(parse_seeds("x").is_err());
         assert!(parse_seeds("1,1").is_err());
         assert!(parse_seeds("1..3,2").is_err()); // overlapping range
+    }
+
+    /// Regression (fuzz finding, DoS): an adversarial seed range must
+    /// fail naming the cap without materializing the range.
+    #[test]
+    fn seed_range_bombs_are_rejected_without_allocating() {
+        for s in [
+            "0..4000000000",
+            "0..18446744073709551615",
+            &format!("0..{}", u64::MAX - 1),
+            "1..65538",
+            "0,1..65536",
+        ] {
+            let err = format!("{:#}", parse_seeds(s).unwrap_err());
+            assert!(err.contains("MAX_SEEDS"), "'{s}' must name the cap: {err}");
+        }
+        // the cap itself is inclusive: exactly MAX_SEEDS seeds pass
+        let seeds = parse_seeds(&format!("0..{}", MAX_SEEDS - 1)).unwrap();
+        assert_eq!(seeds.len(), MAX_SEEDS);
+        assert!(parse_seeds(&format!("0..{MAX_SEEDS}")).is_err());
+    }
+
+    /// Regression (fuzz finding, DoS): a brace bomb must fail from the
+    /// alternation counts alone, before any expansion is allocated.
+    #[test]
+    fn brace_bombs_are_rejected_before_allocation() {
+        // ten 10-way alternations → 10^10 expansions
+        let bomb = "{0,1,2,3,4,5,6,7,8,9}".repeat(10);
+        let err = format!("{:#}", expand_braces(&bomb).unwrap_err());
+        assert!(err.contains("MAX_EXPANSIONS"), "{err}");
+        // byte cap: few expansions of a huge template
+        let wide = format!("{}{{a,b}}", "x".repeat(9 * 1024 * 1024));
+        let err = format!("{:#}", expand_braces(&wide).unwrap_err());
+        assert!(err.contains("MAX_EXPANSION_BYTES"), "{err}");
+        // and the service-facing path surfaces the same failure
+        assert!(GridSpec::new(&bomb, &[1]).is_err());
+    }
+
+    /// Regression (fuzz finding): thousands of brace groups used to
+    /// recurse once per group and overflow the stack.
+    #[test]
+    fn many_brace_groups_expand_iteratively() {
+        let template = "{a}".repeat(10_000);
+        let out = expand_braces(&template).unwrap();
+        assert_eq!(out, vec!["a".repeat(10_000)]);
+        // alternating many groups still respects the product cap
+        let alt = "{a,b}".repeat(64);
+        let err = format!("{:#}", expand_braces(&alt).unwrap_err());
+        assert!(err.contains("MAX_EXPANSIONS"), "{err}");
+        // 2^12 == MAX_EXPANSIONS passes exactly
+        let edge = "{a,b}".repeat(12);
+        assert_eq!(expand_braces(&edge).unwrap().len(), MAX_EXPANSIONS);
+    }
+
+    #[test]
+    fn unmatched_close_before_a_group_is_rejected() {
+        // the old recursive expander silently passed a stray '}' that
+        // preceded a valid group; the scanner rejects it uniformly
+        assert!(expand_braces("a}b{c,d}").is_err());
+        assert!(expand_braces("{c,d}a}b").is_err());
+    }
+
+    #[test]
+    fn schemes_times_seeds_cell_cap_is_enforced() {
+        // 30 schemes × 4096 seeds = 122880 cells > MAX_GRID_CELLS,
+        // though each axis alone is under its own cap
+        let template = "g:hindsight@{pt,pc}:{2,3,4,5,6,7,8,9,10,11,12,13,14,15,16}";
+        let seeds: Vec<u64> = (0..4096).collect();
+        let err = format!("{:#}", GridSpec::new(template, &seeds).unwrap_err());
+        assert!(err.contains("MAX_GRID_CELLS"), "{err}");
+        // under the cap the same template works
+        assert!(GridSpec::new(template, &[1, 2]).is_ok());
+    }
+
+    #[test]
+    fn format_seeds_round_trips_exactly() {
+        assert_eq!(format_seeds(&[1, 2, 3, 4, 5]), "1..5");
+        assert_eq!(format_seeds(&[1, 2, 7, 8, 9]), "1..2,7..9");
+        assert_eq!(format_seeds(&[4]), "4");
+        assert_eq!(format_seeds(&[5, 3, 1]), "5,3,1");
+        assert_eq!(
+            format_seeds(&[9007199254740993, u64::MAX]),
+            "9007199254740993,18446744073709551615"
+        );
+        // u64::MAX terminates a run without overflowing
+        assert_eq!(
+            format_seeds(&[u64::MAX - 1, u64::MAX]),
+            format!("{}..{}", u64::MAX - 1, u64::MAX)
+        );
+        forall(
+            64,
+            "format-seeds-roundtrip",
+            |rng| {
+                let n = 1 + rng.below(20);
+                let mut seeds: Vec<u64> = Vec::with_capacity(n);
+                let mut next = rng.below(100) as u64;
+                for _ in 0..n {
+                    // mix of consecutive runs, gaps, and huge values
+                    next = match rng.below(4) {
+                        0 => next.wrapping_add(1),
+                        1 => next.wrapping_add(2 + rng.below(50) as u64),
+                        2 => next.wrapping_add(1) | (1u64 << 53),
+                        _ => u64::MAX - rng.below(3) as u64,
+                    };
+                    if !seeds.contains(&next) {
+                        seeds.push(next);
+                    }
+                }
+                seeds
+            },
+            |seeds| parse_seeds(&format_seeds(seeds)).map(|p| &p == seeds).unwrap_or(false),
+        );
     }
 
     #[test]

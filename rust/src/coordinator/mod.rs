@@ -30,7 +30,7 @@ pub mod trainer;
 
 pub use config::{Estimator, QuantScheme, QuantSpec, Schedule, TensorClass, TrainConfig};
 pub use executor::{grid_rows, run_cells_on, run_grid, CellOutcome, CellRun, GridOptions};
-pub use grid::{parse_seeds, GridCell, GridSpec};
+pub use grid::{format_seeds, parse_seeds, GridCell, GridSpec};
 pub use ranges::RangeManager;
 pub use store::{CellKey, RunStore};
 pub use sweep::{sweep_row, SweepOutcome};

@@ -396,8 +396,10 @@ impl RunStore {
         let stored = CellKey {
             model: v.get("model")?.as_str()?.to_string(),
             scheme: v.get("scheme")?.as_str()?.to_string(),
-            seed: v.get("seed")?.as_f64()? as u64,
-            steps: v.get("steps")?.as_f64()? as u64,
+            // dual-form (`json::u64_value`): seeds ≥ 2^53 persist as
+            // decimal strings so the in-document key verifies exactly
+            seed: json::lossless_u64(v.get("seed")?)?,
+            steps: json::lossless_u64(v.get("steps")?)?,
             config: v.get("config")?.as_str()?.to_string(),
         };
         if stored != *key {
@@ -423,8 +425,8 @@ impl RunStore {
             ("version", Value::Num(STORE_VERSION)),
             ("model", Value::from(key.model.clone())),
             ("scheme", Value::from(key.scheme.clone())),
-            ("seed", Value::Num(key.seed as f64)),
-            ("steps", Value::Num(key.steps as f64)),
+            ("seed", json::u64_value(key.seed)),
+            ("steps", json::u64_value(key.steps)),
             ("config", Value::from(key.config.clone())),
             ("record", record.to_json()),
         ]);
@@ -557,8 +559,8 @@ impl RunStore {
         let key = CellKey {
             model: field("model")?.as_str().unwrap_or_default().to_string(),
             scheme: field("scheme")?.as_str().unwrap_or_default().to_string(),
-            seed: field("seed")?.as_f64().unwrap_or_default() as u64,
-            steps: field("steps")?.as_f64().unwrap_or_default() as u64,
+            seed: json::lossless_u64(field("seed")?).unwrap_or_default(),
+            steps: json::lossless_u64(field("steps")?).unwrap_or_default(),
             config: field("config")?.as_str().unwrap_or_default().to_string(),
         };
         let record = RunRecord::from_json(field("record")?)
@@ -698,6 +700,45 @@ mod tests {
         store.put(&key, &rec2).unwrap();
         assert_eq!(store.get(&key).unwrap(), rec2);
         assert_eq!(store.len(), 1);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    /// Regression (satellite bugfix): a cell keyed by a seed ≥ 2^53
+    /// used to fail its own in-document key check forever (the stored
+    /// `Num(seed as f64)` had rounded) — a permanent cache miss.
+    #[test]
+    fn huge_seed_cells_round_trip_and_verify() {
+        let store = tmp_store("huge_seed");
+        let p53 = 1_u64 << 53;
+        for (i, seed) in [p53 - 1, p53 + 1, u64::MAX].into_iter().enumerate() {
+            let key = key("w:fp32:8 a:fp32:8 g:hindsight:8", seed, 10 + i as u64);
+            let rec = record(&format!("run-{i}"));
+            store.put(&key, &rec).unwrap();
+            assert_eq!(store.get(&key).unwrap(), rec, "seed {seed}");
+            // the document's stored key reads back exactly
+            let (stored, _) = store.read_cell_file(&key.file_name()).unwrap();
+            assert_eq!(stored, key);
+        }
+        // legacy form: seeds ≤ 2^53 written as plain numbers (every
+        // pre-dual-encoding document) must still decode
+        let legacy = key("w:fp32:8 a:fp32:8 g:current:8", 7, 10);
+        let doc = Value::object(vec![
+            ("version", Value::Num(STORE_VERSION)),
+            ("model", Value::from(legacy.model.clone())),
+            ("scheme", Value::from(legacy.scheme.clone())),
+            ("seed", Value::Num(legacy.seed as f64)),
+            ("steps", Value::Num(legacy.steps as f64)),
+            ("config", Value::from(legacy.config.clone())),
+            ("record", record("legacy").to_json()),
+        ]);
+        std::fs::write(store.dir().join(legacy.file_name()), doc.to_string()).unwrap();
+        store.refresh();
+        assert_eq!(store.get(&legacy).unwrap(), record("legacy"));
+        // and small seeds still *write* the plain number form
+        let small = key("w:fp32:8 a:fp32:8 g:hindsight:8", 3, 5);
+        store.put(&small, &record("small")).unwrap();
+        let text = std::fs::read_to_string(store.dir().join(small.file_name())).unwrap();
+        assert!(text.contains("\"seed\":3"), "{text}");
         let _ = std::fs::remove_dir_all(store.dir());
     }
 

@@ -367,6 +367,50 @@ mod tests {
         assert!(read_request(&mut Cursor::new(&raw[..])).is_err());
     }
 
+    /// Satellite coverage: percent-decoding at its edges — truncated
+    /// escapes at end-of-input, invalid hex, `+`, and `%2B`.
+    #[test]
+    fn percent_decode_adversarial_edges() {
+        // truncated escape at end-of-input passes through literally
+        // (the `i + 2 < len` guard; a fuzz target must never see an
+        // out-of-bounds slice here)
+        assert_eq!(percent_decode("%4"), "%4");
+        assert_eq!(percent_decode("%"), "%");
+        assert_eq!(percent_decode("abc%"), "abc%");
+        assert_eq!(percent_decode("abc%F"), "abc%F");
+        // invalid hex: the '%' passes through, the rest re-scans
+        assert_eq!(percent_decode("%GG"), "%GG");
+        assert_eq!(percent_decode("%zz41"), "%zz41");
+        // '%' then a valid escape right behind it
+        assert_eq!(percent_decode("%%41"), "%A");
+        // '+' is a space, '%2B' is a literal plus
+        assert_eq!(percent_decode("a+b"), "a b");
+        assert_eq!(percent_decode("a%2Bb"), "a+b");
+        assert_eq!(percent_decode("%2b%2B"), "++");
+        // NUL and high bytes decode; invalid UTF-8 is replacement-lossy
+        assert_eq!(percent_decode("%00"), "\0");
+        assert_eq!(percent_decode("%ff"), "\u{fffd}");
+        // multi-byte UTF-8 sequences reassemble
+        assert_eq!(percent_decode("%E7%B1%B3"), "米");
+        // and the request path exercises the same code
+        let raw = b"GET /jobs/a%2Bb?q=%4 HTTP/1.1\r\n\r\n";
+        let req = read_request(&mut Cursor::new(&raw[..])).unwrap();
+        assert_eq!(req.path, "/jobs/a+b");
+        assert_eq!(req.query_param("q"), Some("%4"));
+    }
+
+    #[test]
+    fn overflowing_content_length_is_a_clean_error() {
+        // usize overflow in the Content-Length parse must error, not
+        // panic or wrap into a tiny allocation
+        let raw =
+            b"POST / HTTP/1.1\r\nContent-Length: 99999999999999999999999999\r\n\r\n";
+        let err = read_request(&mut Cursor::new(&raw[..])).unwrap_err();
+        assert!(format!("{err:#}").contains("Content-Length"), "{err:#}");
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: -1\r\n\r\n";
+        assert!(read_request(&mut Cursor::new(&raw[..])).is_err());
+    }
+
     #[test]
     fn response_round_trips_through_the_client_reader() {
         let v = Value::object(vec![("job", Value::from("abc")), ("total", Value::from(4usize))]);

@@ -45,8 +45,8 @@ use anyhow::{bail, Context, Result};
 use crate::coordinator::executor::panic_message;
 use crate::coordinator::store::fnv1a64;
 use crate::coordinator::{
-    grid_rows, parse_seeds, CellKey, CellOutcome, CellRun, GridCell, GridSpec, RunStore,
-    TrainConfig, Trainer,
+    format_seeds, grid_rows, parse_seeds, CellKey, CellOutcome, CellRun, GridCell, GridSpec,
+    RunStore, TrainConfig, Trainer,
 };
 use crate::metrics::RunRecord;
 use crate::runtime::engine::Engine;
@@ -84,9 +84,42 @@ pub struct JobSpec {
     pub steps: Option<u64>,
 }
 
+/// 2^53, the first integer whose f64 neighborhood is ambiguous: the
+/// JSON number 2^53+1 rounds to exactly 2^53 in the f64 parse, so a
+/// numeric seed at or above this may already have lost precision and
+/// is rejected toward the exact string form (strictly below it, every
+/// integer is uniquely representable).
+const MAX_EXACT_SEED: f64 = 9_007_199_254_740_992.0;
+
+/// One seed or step count out of a submission body: a checked integral
+/// number (integral, non-negative, below 2^53) or an exact decimal
+/// string.
+fn job_u64(x: &Value, what: &str) -> Result<u64> {
+    if let Some(s) = x.as_str() {
+        return s
+            .trim()
+            .parse::<u64>()
+            .with_context(|| format!("bad {what} '{s}'"));
+    }
+    let f = x
+        .as_f64()
+        .with_context(|| format!("{what} must be an integer or a decimal string"))?;
+    let n = json::f64_to_u64(f)
+        .with_context(|| format!("{what} {f} is not a non-negative integer"))?;
+    if f >= MAX_EXACT_SEED {
+        bail!(
+            "numeric {what} {n} exceeds 2^53 and may have lost precision as a \
+             JSON number — pass it as a decimal string (\"{n}\") instead"
+        );
+    }
+    Ok(n)
+}
+
 impl JobSpec {
-    /// Parse a submission body.  `seeds` accepts both a JSON array
-    /// (`[1,2,3]`) and the CLI string form (`"1..5"`).
+    /// Parse a submission body.  `seeds` accepts a JSON array (numbers
+    /// below 2^53 or exact decimal strings) and the CLI string form
+    /// (`"1..5"`); non-integral or precision-losing numbers are
+    /// rejected rather than truncated.
     pub fn from_json(v: &Value) -> Result<Self> {
         let grid = v
             .get("grid")
@@ -102,27 +135,34 @@ impl JobSpec {
             None => vec![1],
             Some(Value::Str(s)) => parse_seeds(s)?,
             Some(Value::Array(a)) => {
-                let seeds: Option<Vec<u64>> =
-                    a.iter().map(|x| x.as_f64().map(|f| f as u64)).collect();
-                seeds.context("'seeds' array must be numeric")?
+                if a.is_empty() {
+                    bail!("'seeds' array is empty — pass at least one seed");
+                }
+                a.iter()
+                    .map(|x| job_u64(x, "seed"))
+                    .collect::<Result<Vec<u64>>>()?
             }
             Some(_) => bail!("'seeds' must be an array or a range string"),
         };
-        let steps = v.get("steps").and_then(|s| s.as_f64()).map(|f| f as u64);
+        let steps = match v.get("steps") {
+            None => None,
+            Some(x) => Some(job_u64(x, "steps")?),
+        };
         Ok(Self { grid, model, seeds, steps })
     }
 
+    /// The persisted `job-<id>.json` form.  Seeds serialize as the CLI
+    /// range string ([`format_seeds`]) — exact for all of `u64`, where
+    /// the old `Num(s as f64)` array rounded seeds ≥ 2^53 and sibling
+    /// shards re-expanded different cell keys.
     pub fn to_json(&self) -> Value {
         let mut kv = vec![
             ("grid", Value::from(self.grid.clone())),
             ("model", Value::from(self.model.clone())),
-            (
-                "seeds",
-                Value::Array(self.seeds.iter().map(|&s| Value::Num(s as f64)).collect()),
-            ),
+            ("seeds", Value::Str(format_seeds(&self.seeds))),
         ];
         if let Some(steps) = self.steps {
-            kv.push(("steps", Value::Num(steps as f64)));
+            kv.push(("steps", json::u64_value(steps)));
         }
         Value::object(kv)
     }
@@ -916,6 +956,75 @@ mod tests {
         let back = JobSpec::from_json(&a.to_json()).unwrap();
         assert_eq!(back, a);
         assert_eq!(back.id(), a.id());
+    }
+
+    /// Regression (satellite bugfix): seeds ≥ 2^53 must survive the
+    /// job-file round-trip exactly — the old `Num(s as f64)` form
+    /// rounded them and sibling shards expanded different cell keys.
+    #[test]
+    fn huge_seeds_round_trip_the_job_file_exactly() {
+        let p53 = 1_u64 << 53;
+        for seeds in [
+            vec![p53 - 1, p53 + 1, u64::MAX],
+            vec![u64::MAX],
+            vec![1, 2, 3, p53],
+        ] {
+            let spec = JobSpec {
+                grid: "g:hindsight:8".into(),
+                model: "mlp".into(),
+                seeds: seeds.clone(),
+                steps: Some(4),
+            };
+            let text = spec.to_json().to_string();
+            let v = crate::util::json::parse(&text).unwrap();
+            let back = JobSpec::from_json(&v).unwrap();
+            assert_eq!(back, spec, "file text: {text}");
+            assert_eq!(back.id(), spec.id());
+            // and the cells expand to the exact seeds
+            let cells = back.expand().unwrap();
+            let got: Vec<u64> = cells.iter().map(|c| c.cfg.seed).collect();
+            assert_eq!(got, seeds);
+        }
+    }
+
+    #[test]
+    fn lossy_or_bogus_numeric_seeds_are_rejected_not_truncated() {
+        for (body, needle) in [
+            // above 2^53 as a JSON number: precision is unprovable
+            (r#"{"grid":"g:hindsight:8","seeds":[9007199254740994]}"#, "2^53"),
+            (r#"{"grid":"g:hindsight:8","seeds":[1.5]}"#, "not a non-negative integer"),
+            (r#"{"grid":"g:hindsight:8","seeds":[-1]}"#, "not a non-negative integer"),
+            (r#"{"grid":"g:hindsight:8","seeds":[]}"#, "at least one seed"),
+            (r#"{"grid":"g:hindsight:8","steps":1.5}"#, "not a non-negative integer"),
+            (r#"{"grid":"g:hindsight:8","steps":[3]}"#, "integer or a decimal string"),
+            (r#"{"grid":"g:hindsight:8","seeds":["18446744073709551616"]}"#, "bad seed"),
+        ] {
+            let v = crate::util::json::parse(body).unwrap();
+            let err = format!("{:#}", JobSpec::from_json(&v).unwrap_err());
+            assert!(err.contains(needle), "{body} -> {err}");
+        }
+        // the exact string form accepts the full u64 range
+        let v = crate::util::json::parse(
+            r#"{"grid":"g:hindsight:8","seeds":["18446744073709551615",7],"steps":"12"}"#,
+        )
+        .unwrap();
+        let spec = JobSpec::from_json(&v).unwrap();
+        assert_eq!(spec.seeds, vec![u64::MAX, 7]);
+        assert_eq!(spec.steps, Some(12));
+        // the largest unambiguous numeric seed is 2^53 - 1 ...
+        let v = crate::util::json::parse(
+            r#"{"grid":"g:hindsight:8","seeds":[9007199254740991]}"#,
+        )
+        .unwrap();
+        assert_eq!(JobSpec::from_json(&v).unwrap().seeds, vec![(1u64 << 53) - 1]);
+        // ... while 2^53 itself is ambiguous (the JSON number 2^53+1
+        // rounds onto it in the f64 parse) and is rejected
+        let v = crate::util::json::parse(
+            r#"{"grid":"g:hindsight:8","seeds":[9007199254740992]}"#,
+        )
+        .unwrap();
+        let err = format!("{:#}", JobSpec::from_json(&v).unwrap_err());
+        assert!(err.contains("2^53"), "{err}");
     }
 
     #[test]

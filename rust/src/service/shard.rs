@@ -86,6 +86,29 @@ mod tests {
         assert_eq!(ShardSpec { index: 1, count: 3 }.to_string(), "1/3");
     }
 
+    /// Satellite coverage: whitespace forms and `usize` overflow — a
+    /// shard spec past the platform word errors cleanly, never panics
+    /// or wraps.
+    #[test]
+    fn parse_overflow_and_whitespace_edges() {
+        assert_eq!(ShardSpec::parse("0/1\n").unwrap(), ShardSpec::solo());
+        assert_eq!(ShardSpec::parse("\t1/2").unwrap(), ShardSpec { index: 1, count: 2 });
+        for bad in [
+            "99999999999999999999999999/2",
+            "0/99999999999999999999999999",
+            "18446744073709551616/18446744073709551617",
+            "1/ 2 3",
+            "1//2",
+            "/",
+            " / ",
+        ] {
+            assert!(ShardSpec::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
+        // Rust's usize parse accepts a leading '+': pinned here as
+        // accepted rather than silently depended upon
+        assert_eq!(ShardSpec::parse("+1/+2").unwrap(), ShardSpec { index: 1, count: 2 });
+    }
+
     #[test]
     fn shards_partition_the_grid_exactly() {
         let spec = GridSpec::new("g:{hindsight,current,tqt,banner}:{4,8}", &[1, 2, 3]).unwrap();

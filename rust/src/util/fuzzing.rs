@@ -1,0 +1,389 @@
+//! Fuzz-harness bodies for the four public parser surfaces.
+//!
+//! Each `check_*` function takes arbitrary bytes and panics only when a
+//! guarded property is violated — never on malformed input.  The
+//! `fuzz/` cargo-fuzz targets are one-line wrappers around these, and
+//! `tests/fuzz_regression.rs` replays the checked-in corpus through the
+//! same bodies on the stable toolchain, so every crash cargo-fuzz
+//! shrinks becomes a plain `cargo test` regression by dropping the
+//! input file into `fuzz/corpus/<target>/`.
+//!
+//! The properties, per surface:
+//!
+//! * **scheme** — `QuantScheme::parse` never panics; an accepted string
+//!   canonicalizes to a fixpoint (`parse(canon).to_string() == canon`)
+//!   and the reparsed scheme equals the original.
+//! * **grid** — `expand_braces` / `parse_seeds` / `GridSpec::new` never
+//!   panic and never return results over their caps
+//!   ([`MAX_EXPANSIONS`](crate::coordinator::grid::MAX_EXPANSIONS),
+//!   [`MAX_SEEDS`](crate::coordinator::grid::MAX_SEEDS),
+//!   [`MAX_GRID_CELLS`](crate::coordinator::grid::MAX_GRID_CELLS)) —
+//!   the DoS guards hold for *every* input, not just the known bombs.
+//! * **json** — the owned parser and the bytes-backed [`RawDoc`] agree:
+//!   same accept/reject decision, equal trees, equal error position and
+//!   message, and an accepted document survives serialize → reparse.
+//! * **service** — `read_request` over arbitrary bytes never panics and
+//!   never hands back a body over [`MAX_BODY_BYTES`]; a request that
+//!   parses all the way into a [`JobSpec`] expands to at most
+//!   `MAX_GRID_CELLS` cells.
+
+use std::io::Cursor;
+use std::sync::Arc;
+
+use crate::coordinator::grid::{
+    expand_braces, parse_seeds, GridSpec, MAX_EXPANSIONS, MAX_GRID_CELLS, MAX_SEEDS,
+};
+use crate::scheme::QuantScheme;
+use crate::service::protocol::{read_request, MAX_BODY_BYTES};
+use crate::service::server::JobSpec;
+use crate::util::json::{self, RawDoc};
+
+/// Scheme grammar: parse → canonicalize → reparse is a fixpoint.
+pub fn check_scheme_roundtrip(data: &[u8]) {
+    let Ok(text) = std::str::from_utf8(data) else {
+        return;
+    };
+    let Ok(scheme) = QuantScheme::parse(text) else {
+        return; // rejection is fine; panicking is not
+    };
+    let canon = scheme.to_string();
+    let reparsed = QuantScheme::parse(&canon).unwrap_or_else(|e| {
+        panic!("canonical form '{canon}' of '{text}' failed to reparse: {e:#}")
+    });
+    assert_eq!(
+        reparsed, scheme,
+        "reparsing canonical '{canon}' changed the scheme"
+    );
+    assert_eq!(
+        reparsed.to_string(),
+        canon,
+        "canonicalization of '{text}' is not a fixpoint"
+    );
+}
+
+/// Grid surface: templates and seed strings never panic and never
+/// produce results over the caps.  Input is `template[\n seeds]`.
+pub fn check_grid_expansion(data: &[u8]) {
+    let Ok(text) = std::str::from_utf8(data) else {
+        return;
+    };
+    let (template, seed_str) = match text.split_once('\n') {
+        Some((t, s)) => (t, s),
+        None => (text, "1..3"),
+    };
+    if let Ok(expansions) = expand_braces(template) {
+        assert!(
+            expansions.len() <= MAX_EXPANSIONS,
+            "expand_braces returned {} results, over the {MAX_EXPANSIONS} cap",
+            expansions.len()
+        );
+    }
+    let seeds = match parse_seeds(seed_str) {
+        Ok(seeds) => {
+            assert!(
+                seeds.len() <= MAX_SEEDS && !seeds.is_empty(),
+                "parse_seeds returned {} seeds (cap {MAX_SEEDS})",
+                seeds.len()
+            );
+            seeds
+        }
+        Err(_) => vec![1, 2, 3],
+    };
+    if let Ok(grid) = GridSpec::new(template, &seeds) {
+        assert!(
+            grid.n_cells() <= MAX_GRID_CELLS,
+            "grid expanded to {} cells, over the {MAX_GRID_CELLS} cap",
+            grid.n_cells()
+        );
+    }
+}
+
+/// JSON differential: the owned parser and the bytes-backed raw parser
+/// must agree on everything a caller can observe.
+pub fn check_json_differential(data: &[u8]) {
+    // the Arc entry point takes raw bytes (UTF-8 validation is part of
+    // the surface under test) — it must never panic
+    let _ = RawDoc::parse_arc(Arc::from(data));
+    let Ok(text) = std::str::from_utf8(data) else {
+        return;
+    };
+    let owned = json::parse(text);
+    let raw = RawDoc::parse(text);
+    match (owned, raw) {
+        (Ok(v), Ok(doc)) => {
+            assert_eq!(
+                doc.to_value(),
+                v,
+                "owned and raw parsers built different trees for {text:?}"
+            );
+            // serialize → reparse survives (Display is the serializer)
+            let ser = v.to_string();
+            let back = json::parse(&ser).unwrap_or_else(|e| {
+                panic!("serialized form {ser:?} of accepted {text:?} failed to reparse: {e}")
+            });
+            assert_eq!(back, v, "serialize -> reparse changed the tree for {text:?}");
+        }
+        (Err(a), Err(b)) => {
+            assert_eq!(
+                (a.pos, &a.msg),
+                (b.pos, &b.msg),
+                "parsers rejected {text:?} with different errors"
+            );
+        }
+        (Ok(_), Err(e)) => panic!("raw parser rejected {text:?} the owned parser accepts: {e}"),
+        (Err(e), Ok(_)) => panic!("owned parser rejected {text:?} the raw parser accepts: {e}"),
+    }
+}
+
+/// Service request path: framing → JSON body → job spec → expansion,
+/// end to end, on arbitrary bytes.
+pub fn check_service_request(data: &[u8]) {
+    let Ok(req) = read_request(&mut Cursor::new(data)) else {
+        return;
+    };
+    assert!(
+        req.body.len() <= MAX_BODY_BYTES,
+        "read_request returned a {}-byte body, over the {MAX_BODY_BYTES} cap",
+        req.body.len()
+    );
+    let Ok(body) = req.json() else {
+        return;
+    };
+    let Ok(spec) = JobSpec::from_json(&body) else {
+        return;
+    };
+    if let Ok(cells) = spec.expand() {
+        assert!(
+            cells.len() <= MAX_GRID_CELLS,
+            "job expanded to {} cells, over the {MAX_GRID_CELLS} cap",
+            cells.len()
+        );
+        // the persisted job file must round-trip to the same spec (the
+        // cross-shard contract: sibling shards re-expand from this)
+        let persisted = spec.to_json().to_string();
+        let reread = json::parse(&persisted).unwrap_or_else(|e| {
+            panic!("persisted job file {persisted:?} failed to reparse: {e}")
+        });
+        let respec = JobSpec::from_json(&reread).unwrap_or_else(|e| {
+            panic!("persisted job file {persisted:?} failed to re-spec: {e:#}")
+        });
+        assert_eq!(respec, spec, "job file round-trip changed the spec");
+    }
+}
+
+/// Structured-random generators over the same four surfaces, for the
+/// stable-toolchain property loops in `tests/fuzz_regression.rs`.
+/// libFuzzer explores byte-level mutations; these explore the
+/// grammar-shaped neighborhood (valid-ish inputs with adversarial
+/// edges) that random bytes rarely reach.
+pub mod gen {
+    use crate::util::rng::Pcg32;
+
+    const EST_KEYS: [&str; 7] =
+        ["hindsight", "current", "tqt", "banner", "sampled", "dsgc", "fp32"];
+
+    /// A scheme-grammar-shaped string: mostly valid clauses with
+    /// occasional junk (bad keys, out-of-range bits, stray separators).
+    pub fn scheme_string(rng: &mut Pcg32) -> String {
+        let mut out = String::new();
+        let clauses = 1 + rng.below(4);
+        for i in 0..clauses {
+            if i > 0 {
+                out.push(if rng.below(8) == 0 { ':' } else { ' ' });
+            }
+            let class = ["w", "a", "g", "q", ""][rng.below(5)];
+            let key = if rng.below(10) == 0 {
+                "bogus"
+            } else {
+                EST_KEYS[rng.below(EST_KEYS.len())]
+            };
+            let gran = ["", "@pt", "@pc", "@"][rng.below(4)];
+            out.push_str(class);
+            if !class.is_empty() {
+                out.push(':');
+            }
+            out.push_str(key);
+            out.push_str(gran);
+            match rng.below(4) {
+                0 => {}
+                1 => out.push_str(&format!(":{}", 2 + rng.below(20))),
+                2 => out.push_str(&format!(":{}:eta=0.{}", 2 + rng.below(15), rng.below(100))),
+                _ => out.push_str(&format!(":{}:sym", 2 + rng.below(15))),
+            }
+        }
+        out
+    }
+
+    /// A grid input (`template\nseeds`) with brace groups, ranges and
+    /// near-cap magnitudes.
+    pub fn grid_input(rng: &mut Pcg32) -> String {
+        let mut template = String::from("g:");
+        let groups = 1 + rng.below(3);
+        for _ in 0..groups {
+            match rng.below(5) {
+                0 => template.push_str("{hindsight,current,tqt}"),
+                1 => template.push_str("@{pt,pc}"),
+                2 => template.push_str(":{4,8}"),
+                3 => template.push_str("{a,"), // unterminated on purpose
+                _ => template.push_str(EST_KEYS[rng.below(EST_KEYS.len())]),
+            }
+        }
+        let seeds = match rng.below(5) {
+            0 => format!("{}..{}", rng.below(10), rng.below(100_000)),
+            1 => "0..4000000000".to_string(),
+            2 => format!("{}", u64::MAX),
+            3 => "1,2,3".to_string(),
+            _ => format!("{0}..{0}", rng.below(50)),
+        };
+        format!("{template}\n{seeds}")
+    }
+
+    /// A JSON-shaped document: nesting, escapes, big numbers, and the
+    /// job-file / store-cell vocabulary.
+    pub fn json_text(rng: &mut Pcg32) -> String {
+        fn val(rng: &mut Pcg32, depth: usize) -> String {
+            if depth == 0 {
+                return leaf(rng);
+            }
+            match rng.below(4) {
+                0 => {
+                    let n = rng.below(4);
+                    let items: Vec<String> = (0..n).map(|_| val(rng, depth - 1)).collect();
+                    format!("[{}]", items.join(","))
+                }
+                1 => {
+                    let keys = ["seed", "steps", "grid", "seeds", "x\\n", "米"];
+                    let n = rng.below(4);
+                    let items: Vec<String> = (0..n)
+                        .map(|_| {
+                            format!("\"{}\":{}", keys[rng.below(keys.len())], val(rng, depth - 1))
+                        })
+                        .collect();
+                    format!("{{{}}}", items.join(","))
+                }
+                _ => leaf(rng),
+            }
+        }
+        fn leaf(rng: &mut Pcg32) -> String {
+            match rng.below(8) {
+                0 => "null".into(),
+                1 => "true".into(),
+                2 => format!("{}", rng.below(1_000_000)),
+                3 => format!("{}.{}e{}", rng.below(10), rng.below(1000), rng.below(400)),
+                4 => "1e999".into(),
+                5 => format!("{}", u64::MAX),
+                6 => "\"a\\u00e9b\"".into(),
+                _ => "\"9007199254740993\"".into(),
+            }
+        }
+        val(rng, 1 + rng.below(3))
+    }
+
+    /// Raw HTTP request bytes around the `POST /jobs` shape: valid
+    /// submissions, truncations, header bombs and length lies.
+    pub fn http_request(rng: &mut Pcg32) -> Vec<u8> {
+        let body = match rng.below(5) {
+            0 => r#"{"grid":"g:hindsight:8","seeds":"1..3"}"#.to_string(),
+            1 => r#"{"grid":"g:hindsight:8","seeds":"0..4000000000"}"#.to_string(),
+            2 => format!(r#"{{"grid":"g:{}:8"}}"#, "{a,b}".repeat(rng.below(20))),
+            3 => r#"{"grid":"g:hindsight:8","seeds":[18446744073709551615]}"#.to_string(),
+            _ => "{not json".to_string(),
+        };
+        let declared = match rng.below(4) {
+            0 => body.len().to_string(),
+            1 => (body.len() + 1 + rng.below(50)).to_string(),
+            2 => "99999999999999999999999999".to_string(),
+            _ => body.len().to_string(),
+        };
+        let mut req = format!(
+            "POST /jobs{} HTTP/1.1\r\nContent-Length: {declared}\r\n\r\n{body}",
+            ["", "?q=%4", "/a%2Bb"][rng.below(3)]
+        )
+        .into_bytes();
+        // random truncation keeps the framing reader honest
+        if rng.below(4) == 0 {
+            let keep = rng.below(req.len().max(1));
+            req.truncate(keep);
+        }
+        req
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use crate::util::testkit::{default_cases, forall};
+
+    // The check functions are themselves exercised hard by
+    // tests/fuzz_regression.rs (corpus replay + property loops); here
+    // each one gets a smoke pass over its generator so `cargo test`
+    // on the library alone still covers every harness body.
+
+    #[test]
+    fn harness_bodies_never_panic_on_generated_input() {
+        forall(
+            default_cases(),
+            "fuzz-harness-smoke",
+            |rng| {
+                (
+                    gen::scheme_string(rng),
+                    gen::grid_input(rng),
+                    gen::json_text(rng),
+                    gen::http_request(rng),
+                )
+            },
+            |(scheme, grid, json, req)| {
+                check_scheme_roundtrip(scheme.as_bytes());
+                check_grid_expansion(grid.as_bytes());
+                check_json_differential(json.as_bytes());
+                check_service_request(req);
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn harness_bodies_accept_arbitrary_bytes() {
+        // non-UTF-8, empty, and control bytes flow through every body
+        for data in [
+            &b""[..],
+            &[0xff, 0xfe, 0x00][..],
+            &[b'{', 0x80][..],
+            &b"\r\n\r\n"[..],
+        ] {
+            check_scheme_roundtrip(data);
+            check_grid_expansion(data);
+            check_json_differential(data);
+            check_service_request(data);
+        }
+    }
+
+    #[test]
+    fn generators_reach_both_accept_and_reject() {
+        // the grammar-shaped generators must produce inputs on both
+        // sides of each parser, or the property loops test nothing
+        let mut scheme_ok = false;
+        let mut scheme_err = false;
+        let mut grid_ok = false;
+        let mut grid_err = false;
+        for i in 0..512 {
+            let mut rng = Pcg32::fold(11, "gen-cover", i);
+            let s = gen::scheme_string(&mut rng);
+            match crate::scheme::QuantScheme::parse(&s) {
+                Ok(_) => scheme_ok = true,
+                Err(_) => scheme_err = true,
+            }
+            let g = gen::grid_input(&mut rng);
+            let template = g.split('\n').next().unwrap();
+            match crate::coordinator::grid::expand_braces(template) {
+                Ok(_) => grid_ok = true,
+                Err(_) => grid_err = true,
+            }
+        }
+        assert!(
+            scheme_ok && scheme_err && grid_ok && grid_err,
+            "{scheme_ok} {scheme_err} {grid_ok} {grid_err}"
+        );
+    }
+}

@@ -77,14 +77,45 @@ pub fn f64_to_i64(f: f64) -> Option<i64> {
     Some(f as i64)
 }
 
-/// `f64` -> `usize` only when the value is finite, integral,
-/// non-negative, and fits the platform word.
-pub fn f64_to_usize(f: f64) -> Option<usize> {
+/// `f64` -> `u64` only when the value is finite, integral,
+/// non-negative, and below `2^64`.
+pub fn f64_to_u64(f: f64) -> Option<u64> {
     const HI: f64 = 18_446_744_073_709_551_616.0; // 2^64 == u64::MAX + 1
     if !f.is_finite() || f.fract() != 0.0 || f < 0.0 || f >= HI {
         return None;
     }
-    usize::try_from(f as u64).ok()
+    Some(f as u64)
+}
+
+/// `f64` -> `usize` only when the value is finite, integral,
+/// non-negative, and fits the platform word.
+pub fn f64_to_usize(f: f64) -> Option<usize> {
+    f64_to_u64(f).and_then(|n| usize::try_from(n).ok())
+}
+
+/// Lossless JSON encoding of a `u64`: values that survive the f64 hop
+/// exactly stay JSON numbers (byte-identical to every document written
+/// before this helper existed), anything that would round — odd values
+/// above 2^53, `u64::MAX` — is emitted as a decimal string, which
+/// [`lossless_u64`] reads back exactly.  This is how the run store and
+/// job files persist seeds without the `Num(s as f64)` precision bug.
+pub fn u64_value(n: u64) -> Value {
+    if f64_to_u64(n as f64) == Some(n) {
+        Value::Num(n as f64)
+    } else {
+        Value::Str(n.to_string())
+    }
+}
+
+/// Reader for [`u64_value`]'s dual encoding: a checked integral number
+/// or a canonical decimal string (leading zeros, signs, and whitespace
+/// are rejected — a seed either round-trips exactly or fails loud).
+pub fn lossless_u64<'a, V: JsonView<'a>>(v: V) -> Option<u64> {
+    if let Some(f) = v.as_f64() {
+        return f64_to_u64(f);
+    }
+    v.as_str()
+        .and_then(|s| s.parse::<u64>().ok().filter(|n| n.to_string() == s))
 }
 
 // ---------------------------------------------------------------------------
@@ -523,9 +554,14 @@ impl<'a> Parser<'a> {
             }
         }
         let txt = std::str::from_utf8(&self.b[start..self.i]).unwrap();
-        txt.parse::<f64>()
-            .map(Value::Num)
-            .map_err(|_| self.err("invalid number"))
+        match txt.parse::<f64>() {
+            // overflow to ±inf ("1e999") would serialize as "inf",
+            // which no JSON parser reads back: reject at the source so
+            // every accepted number survives a serialize -> parse trip
+            Ok(n) if n.is_finite() => Ok(Value::Num(n)),
+            Ok(_) => Err(self.err("number out of range")),
+            Err(_) => Err(self.err("invalid number")),
+        }
     }
 }
 
@@ -763,6 +799,58 @@ mod tests {
 
         // non-numbers unchanged
         assert_eq!(Value::Str("3".into()).as_i64(), None);
+    }
+
+    /// Regression (fuzz finding): `1e999` used to parse to `inf`,
+    /// whose serialization ("inf") no parser reads back.
+    #[test]
+    fn overflowing_numbers_are_rejected_not_infinity() {
+        for s in ["1e999", "-1e999", "1e308e", "123456789e400"] {
+            assert!(parse(s).is_err(), "'{s}' must not parse");
+        }
+        let err = parse("1e999").unwrap_err();
+        assert!(err.msg.contains("out of range"), "{}", err.msg);
+        // large-but-finite still parses; subnormal underflow is fine
+        assert_eq!(parse("1e308").unwrap(), Value::Num(1e308));
+        assert_eq!(parse("1e-999").unwrap(), Value::Num(0.0));
+    }
+
+    #[test]
+    fn u64_value_round_trips_every_magnitude() {
+        let p53 = 1_u64 << 53;
+        for n in [
+            0,
+            1,
+            p53 - 1,
+            p53,
+            p53 + 1,
+            p53 + 2,
+            1_u64 << 63,
+            u64::MAX - 1,
+            u64::MAX,
+        ] {
+            let v = u64_value(n);
+            assert_eq!(lossless_u64(&v), Some(n), "direct trip for {n}");
+            let text = Value::object(vec![("n", v)]).to_string();
+            let back = parse(&text).unwrap();
+            assert_eq!(
+                lossless_u64(back.get("n").unwrap()),
+                Some(n),
+                "serialized trip for {n}: {text}"
+            );
+        }
+        // values ≤ 2^53 keep the plain number form (back-compat with
+        // documents written before the dual encoding)
+        assert_eq!(u64_value(42), Value::Num(42.0));
+        assert_eq!(u64_value(p53), Value::Num(p53 as f64));
+        // u64::MAX rounds to 2^64 as f64 and must take the string form
+        assert!(matches!(u64_value(u64::MAX), Value::Str(_)));
+        // the reader rejects non-canonical strings
+        for s in ["+5", "05", " 5", "5 ", "-1", "1.0", ""] {
+            assert_eq!(lossless_u64(&Value::Str(s.into())), None, "'{s}'");
+        }
+        assert_eq!(lossless_u64(&Value::Num(1.5)), None);
+        assert_eq!(lossless_u64(&Value::Num(-1.0)), None);
     }
 
     #[test]

@@ -533,9 +533,13 @@ impl<'a> RawParser<'a> {
         }
         let span = Span { start, end: self.i };
         let txt = std::str::from_utf8(&self.b[span.start..span.end]).unwrap();
-        txt.parse::<f64>()
-            .map(|value| RawNode::Num { value, span })
-            .map_err(|_| self.err("invalid number"))
+        match txt.parse::<f64>() {
+            // mirror the owned parser exactly: overflow to ±inf is a
+            // parse error, not a Num that cannot round-trip
+            Ok(value) if value.is_finite() => Ok(RawNode::Num { value, span }),
+            Ok(_) => Err(self.err("number out of range")),
+            Err(_) => Err(self.err("invalid number")),
+        }
     }
 }
 
@@ -543,6 +547,19 @@ impl<'a> RawParser<'a> {
 mod tests {
     use super::*;
     use crate::util::json::parse;
+
+    /// Regression (fuzz finding): both parsers must reject `1e999`
+    /// identically — same error position, same message.
+    #[test]
+    fn overflowing_numbers_rejected_in_lockstep_with_owned_parser() {
+        for s in ["1e999", "[-1e999]", "{\"n\":2e400}"] {
+            let owned = parse(s).unwrap_err();
+            let raw = RawDoc::parse(s).unwrap_err();
+            assert_eq!(owned.pos, raw.pos, "pos for '{s}'");
+            assert_eq!(owned.msg, raw.msg, "msg for '{s}'");
+            assert!(raw.msg.contains("out of range"), "{}", raw.msg);
+        }
+    }
 
     #[test]
     fn borrows_plain_strings_and_materializes_escaped_ones() {

@@ -2,6 +2,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod fuzzing;
 pub mod json;
 pub mod logging;
 pub mod rng;

@@ -1,0 +1,146 @@
+//! Stable-toolchain replay of the fuzz surfaces.
+//!
+//! The cargo-fuzz targets in `fuzz/` are one-line wrappers around
+//! `util::fuzzing::check_*`; this test replays the checked-in corpus
+//! through the same bodies and runs bounded property loops over the
+//! grammar-shaped generators, so tier-1 CI exercises every harness
+//! without nightly or libFuzzer.  A crash cargo-fuzz shrinks becomes a
+//! permanent regression by dropping its input into
+//! `fuzz/corpus/<target>/` — this test picks it up automatically.
+
+use std::fs;
+use std::path::PathBuf;
+
+use hindsight::util::fuzzing::{
+    check_grid_expansion, check_json_differential, check_scheme_roundtrip,
+    check_service_request, gen,
+};
+use hindsight::util::testkit::{default_cases, forall};
+
+fn corpus_dir(target: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("fuzz/corpus")
+        .join(target)
+}
+
+/// Every file under `fuzz/corpus/<target>/`, with the acceptance floor
+/// of three seeds per target enforced.
+fn corpus(target: &str) -> Vec<(String, Vec<u8>)> {
+    let dir = corpus_dir(target);
+    let mut files: Vec<(String, Vec<u8>)> = fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("corpus dir {} unreadable: {e}", dir.display()))
+        .filter_map(|entry| {
+            let entry = entry.ok()?;
+            if !entry.file_type().ok()?.is_file() {
+                return None;
+            }
+            let name = entry.file_name().to_string_lossy().into_owned();
+            Some((name, fs::read(entry.path()).ok()?))
+        })
+        .collect();
+    files.sort_by(|a, b| a.0.cmp(&b.0));
+    assert!(
+        files.len() >= 3,
+        "target '{target}' needs at least 3 corpus seeds, found {}",
+        files.len()
+    );
+    files
+}
+
+#[test]
+fn corpus_replays_clean_through_every_harness() {
+    for (target, check) in [
+        ("fuzz_scheme", check_scheme_roundtrip as fn(&[u8])),
+        ("fuzz_grid", check_grid_expansion),
+        ("fuzz_json", check_json_differential),
+        ("fuzz_service", check_service_request),
+    ] {
+        for (name, bytes) in corpus(target) {
+            // a panic here names the corpus file that regressed
+            let caught = std::panic::catch_unwind(|| check(&bytes));
+            assert!(caught.is_ok(), "corpus file {target}/{name} regressed");
+        }
+    }
+}
+
+/// The shrunk originals of the fixed bugs, pinned inline so the history
+/// survives even if the corpus is re-seeded.
+#[test]
+fn shrunk_crash_inputs_stay_fixed() {
+    // DoS: unbounded seed-range materialization (grid + service)
+    check_grid_expansion(b"g:hindsight:8\n0..4000000000");
+    check_grid_expansion(b"g:hindsight:8\n0..18446744073709551615");
+    // DoS: brace-bomb cartesian product
+    let bomb = format!("{}\n1", "{0,1,2,3,4,5,6,7,8,9}".repeat(10));
+    check_grid_expansion(bomb.as_bytes());
+    // stack overflow: thousands of brace groups in the old recursive
+    // expander
+    let deep = format!("{}\n1", "{a}".repeat(10_000));
+    check_grid_expansion(deep.as_bytes());
+    // divergence: "1e999" parsed to inf, serialized to "inf", and the
+    // serialize -> reparse property broke
+    check_json_differential(b"[1e999]");
+    check_json_differential(b"{\"n\":2e400}");
+    // overflow: a Content-Length past usize
+    check_service_request(
+        b"POST / HTTP/1.1\r\nContent-Length: 99999999999999999999999999\r\n\r\n",
+    );
+    // precision loss: numeric seeds past 2^53 silently rounded through
+    // f64 in the job path
+    check_service_request(
+        b"POST /jobs HTTP/1.1\r\nContent-Length: 55\r\n\r\n\
+          {\"grid\":\"g:hindsight:8\",\"seeds\":[18446744073709551615]}",
+    );
+}
+
+#[test]
+fn scheme_property_loop() {
+    forall(
+        default_cases(),
+        "fuzz-scheme",
+        |rng| gen::scheme_string(rng),
+        |s| {
+            check_scheme_roundtrip(s.as_bytes());
+            true
+        },
+    );
+}
+
+#[test]
+fn grid_property_loop() {
+    forall(
+        default_cases(),
+        "fuzz-grid",
+        |rng| gen::grid_input(rng),
+        |s| {
+            check_grid_expansion(s.as_bytes());
+            true
+        },
+    );
+}
+
+#[test]
+fn json_property_loop() {
+    forall(
+        default_cases(),
+        "fuzz-json",
+        |rng| gen::json_text(rng),
+        |s| {
+            check_json_differential(s.as_bytes());
+            true
+        },
+    );
+}
+
+#[test]
+fn service_property_loop() {
+    forall(
+        default_cases(),
+        "fuzz-service",
+        |rng| gen::http_request(rng),
+        |req| {
+            check_service_request(req);
+            true
+        },
+    );
+}

@@ -441,6 +441,144 @@ fn full_queue_rejects_submissions_with_429_and_retry_after() {
     let _ = std::fs::remove_dir_all(&store);
 }
 
+/// Acceptance pin (fuzz PR): adversarial submissions — a seed-range
+/// bomb and a brace bomb — come back as clean 400s naming the cap.
+/// The memory bound itself is unit-tested at the cap checks
+/// (`grid::tests`): both rejections happen before any expansion
+/// allocation, so the server never holds the bomb in memory.
+#[test]
+fn adversarial_submissions_are_rejected_with_400() {
+    let _serial = serial();
+    let store = tmp_dir("advsubmit");
+    let (addr, handle) = spawn_server(&store, ShardSpec::solo(), 500);
+
+    // seed-range bomb: 4 billion seeds in one token
+    let (status, doc) = http(
+        addr,
+        "POST",
+        "/jobs",
+        r#"{"grid":"g:hindsight:8","seeds":"0..4000000000"}"#,
+    );
+    assert_eq!(status, 400, "{doc}");
+    let err = doc.get("error").and_then(|e| e.as_str()).unwrap_or("");
+    assert!(err.contains("MAX_SEEDS"), "error must name the cap: {doc}");
+
+    // brace bomb: ten 10-way alternations = 10^10 expansions
+    let bomb = format!(
+        r#"{{"grid":"g:{}:8"}}"#,
+        "{0,1,2,3,4,5,6,7,8,9}".repeat(10)
+    );
+    let (status, doc) = http(addr, "POST", "/jobs", &bomb);
+    assert_eq!(status, 400, "{doc}");
+    let err = doc.get("error").and_then(|e| e.as_str()).unwrap_or("");
+    assert!(err.contains("MAX_EXPANSIONS"), "error must name the cap: {doc}");
+
+    // numeric seeds past 2^53 are rejected toward the string form,
+    // not silently rounded
+    let (status, doc) = http(
+        addr,
+        "POST",
+        "/jobs",
+        r#"{"grid":"g:hindsight:8","seeds":[9007199254740993]}"#,
+    );
+    assert_eq!(status, 400, "{doc}");
+    let err = doc.get("error").and_then(|e| e.as_str()).unwrap_or("");
+    assert!(err.contains("2^53"), "error must explain the precision rule: {doc}");
+
+    // nothing registered, nothing persisted, server still healthy
+    let (status, jobs) = http(addr, "GET", "/jobs", "");
+    assert_eq!(status, 200);
+    assert_eq!(jobs.get("count").and_then(|c| c.as_usize()), Some(0), "{jobs}");
+    let (status, health) = http(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200);
+    assert_eq!(health.get("status").and_then(|s| s.as_str()), Some("ok"));
+
+    let _ = http(addr, "POST", "/shutdown", "{}");
+    handle.join().expect("server thread");
+    let _ = std::fs::remove_dir_all(&store);
+}
+
+/// Acceptance pin (fuzz PR): seeds past 2^53 survive the whole
+/// cross-shard path exactly — job file persisted by shard 0, picked up
+/// by shard 1, both expanding identical cell keys, store files keyed
+/// by the exact seed.  The old float-array job serialization rounded
+/// these and sibling shards re-expanded *different* grids.
+#[test]
+fn huge_seeds_cross_shards_exactly() {
+    let _serial = serial();
+    let store = tmp_dir("hugeseeds");
+    let shard0 = ShardSpec::parse("0/2").unwrap();
+    let shard1 = ShardSpec::parse("1/2").unwrap();
+    let (addr0, handle0) = spawn_server(&store, shard0, 50);
+    let (addr1, handle1) = spawn_server(&store, shard1, 50);
+
+    const P53P1: &str = "9007199254740993"; // 2^53 + 1
+    const UMAX: &str = "18446744073709551615"; // u64::MAX
+    let submit = format!(
+        r#"{{"grid":"g:hindsight:8","seeds":"{P53P1},{UMAX}","steps":6}}"#
+    );
+    // submit to shard 0 only; shard 1 must re-expand from the job file
+    let (status, doc) = http(addr0, "POST", "/jobs", &submit);
+    assert_eq!(status, 202, "{doc}");
+    let job = doc.get("job").and_then(|j| j.as_str()).expect("job id").to_string();
+    assert_eq!(doc.get("total").and_then(|t| t.as_usize()), Some(2), "{doc}");
+
+    // the persisted job file carries the seeds losslessly (the exact
+    // decimal strings, not a rounded float array)
+    let job_file = store.join("jobs").join(format!("job-{job}.json"));
+    let text = std::fs::read_to_string(&job_file).expect("job file");
+    assert!(text.contains(P53P1) && text.contains(UMAX), "{text}");
+    assert!(
+        !text.contains("9007199254740992"),
+        "rounded 2^53 neighbor must not appear: {text}"
+    );
+
+    // both shards converge on the same two cells: one ran locally on
+    // each, the other observed through the store
+    let done0 = wait_complete(addr0, &job);
+    let done1 = wait_complete(addr1, &job);
+    for doc in [&done0, &done1] {
+        assert_eq!(doc.get("done").and_then(|d| d.as_usize()), Some(2), "{doc}");
+        assert_eq!(doc.get("ran").and_then(|r| r.as_usize()), Some(1), "{doc}");
+        assert_eq!(doc.get("stored").and_then(|s| s.as_usize()), Some(1), "{doc}");
+        assert_eq!(doc.get("failed").and_then(|f| f.as_usize()), Some(0), "{doc}");
+    }
+
+    // results are served by both shards with the exact seed labels
+    for addr in [addr0, addr1] {
+        let (status, results) = http(addr, "GET", &format!("/jobs/{job}/results"), "");
+        assert_eq!(status, 200, "{results}");
+        let text = results.to_string();
+        assert!(text.contains(P53P1) && text.contains(UMAX), "{text}");
+    }
+
+    // the store keys the cells by the exact seeds: each appears in
+    // exactly one persisted cell file, in the lossless string form
+    let mut hits = (0usize, 0usize);
+    for entry in std::fs::read_dir(&store).expect("store dir") {
+        let path = entry.expect("entry").path();
+        let name = path.file_name().unwrap_or_default().to_string_lossy().into_owned();
+        if !(name.starts_with("cell-") && name.ends_with(".json")) {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path).unwrap_or_default();
+        if text.contains(P53P1) {
+            hits.0 += 1;
+        }
+        if text.contains(UMAX) {
+            hits.1 += 1;
+        }
+    }
+    assert_eq!(hits, (1, 1), "each huge seed keys exactly one cell file");
+
+    for addr in [addr0, addr1] {
+        let _ = http(addr, "POST", "/shutdown", "{}");
+    }
+    handle0.join().expect("shard 0");
+    handle1.join().expect("shard 1");
+    let _ = std::fs::remove_dir_all(&store);
+}
+
 #[test]
 fn cancel_drops_queued_cells_but_running_cells_finish() {
     let _serial = serial();
